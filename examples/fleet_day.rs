@@ -1,0 +1,94 @@
+//! Fleet-scale day-in-the-life: a multi-campus global fleet (five grid
+//! archetypes, 60 clusters) runs the complete daily cycle; prints the Fig
+//! 4/5 pipeline trace, the per-campus VCC behaviour, and the clusters
+//! X/Y/Z panels of Figs 9-11.
+//!
+//! Run: `cargo run --release --example fleet_day`
+
+use cics::config::{Archetype, CampusConfig, GridArchetype, ScenarioConfig};
+use cics::coordinator::Simulation;
+use cics::report;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses = GridArchetype::ALL
+        .iter()
+        .map(|&grid| CampusConfig {
+            name: format!("campus-{}", grid.name()),
+            grid,
+            clusters: 12,
+            contract_limit_kw: f64::INFINITY,
+            archetype_mix: (0.5, 0.3, 0.2),
+        })
+        .collect();
+    let _ = &cfg.campuses; // 5 campuses x 12 clusters = 60
+
+    let mut sim = Simulation::new(cfg);
+    println!(
+        "fleet: {} clusters / {} campuses; backend {}",
+        sim.fleet.clusters.len(),
+        sim.fleet.campuses.len(),
+        sim.backend_name()
+    );
+    let days = 35;
+    let t0 = std::time::Instant::now();
+    sim.run_days(days);
+    println!("{days} days simulated in {:.1?}\n", t0.elapsed());
+
+    // Figs 9-11: one cluster per archetype from the fossil-peaker campus.
+    let campus = sim
+        .fleet
+        .campuses
+        .iter()
+        .find(|c| c.grid == GridArchetype::FossilPeaker)
+        .unwrap();
+    for (label, arch) in [
+        ("cluster X (predictable flex, Fig 9)", Archetype::FlexPredictable),
+        ("cluster Y (noisy flex, Fig 10)", Archetype::FlexNoisy),
+        ("cluster Z (mostly inflexible, Fig 11)", Archetype::MostlyInflexible),
+    ] {
+        let cid = campus
+            .cluster_ids
+            .iter()
+            .copied()
+            .find(|&c| sim.fleet.clusters[c].archetype == arch)
+            .unwrap();
+        if let Some(s) = sim.metrics.summary(cid, days - 1) {
+            println!("{}", report::cluster_day_panel(label, s));
+            let vcc_mean = s.vcc.map(|v| v.iter().sum::<f64>() / 24.0).unwrap_or(f64::NAN);
+            let resv_mean = s.hourly_resv.iter().sum::<f64>() / 24.0;
+            println!(
+                "  VCC/demand headroom: {:.0}%  shaped: {}\n",
+                100.0 * (vcc_mean / resv_mean - 1.0),
+                s.shaped
+            );
+        }
+    }
+
+    // per-campus summary
+    println!("=== per-campus day {} summary ===", days - 1);
+    println!("{:<26} {:>10} {:>12} {:>10}", "campus", "power kW", "carbon kg", "unshaped");
+    for campus in &sim.fleet.campuses {
+        let mut power = 0.0;
+        let mut carbon = 0.0;
+        let mut unshaped = 0;
+        for &cid in &campus.cluster_ids {
+            if let Some(s) = sim.metrics.summary(cid, days - 1) {
+                power += s.hourly_power.iter().sum::<f64>() / 24.0;
+                carbon += s.daily_carbon_kg;
+                if !s.shaped {
+                    unshaped += 1;
+                }
+            }
+        }
+        println!(
+            "{:<26} {:>10.0} {:>12.0} {:>7}/{}",
+            campus.name,
+            power,
+            carbon,
+            unshaped,
+            campus.cluster_ids.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Internal perf probe: times the coordinator's phases over a fig7-like run.
+use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
+use cics::coordinator::Simulation;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses = vec![CampusConfig {
+        name: "perf".into(),
+        grid: GridArchetype::FossilPeaker,
+        clusters: 48,
+        contract_limit_kw: f64::INFINITY,
+        archetype_mix: (0.5, 0.3, 0.2),
+    }];
+    cfg.optimizer.use_artifact = false;
+    let mut sim = Simulation::new(cfg);
+    sim.shaping_enabled = false;
+    let t0 = Instant::now();
+    sim.run_days(30);
+    println!("48 clusters x 30 days unshaped: {:.2}s", t0.elapsed().as_secs_f64());
+    sim.shaping_enabled = true;
+    let t1 = Instant::now();
+    sim.run_days(10);
+    println!("48 clusters x 10 days shaped(native): {:.2}s", t1.elapsed().as_secs_f64());
+}

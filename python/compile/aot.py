@@ -1,0 +1,91 @@
+"""AOT: lower the L2 computations to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/load_hlo and its README.
+
+Artifacts (written to ``artifacts/``):
+  vcc_solver.hlo.txt  -- solve_vcc_entry on the fixed (64, 24, 8) block
+  power_eval.hlo.txt  -- power_eval on the same block
+  manifest.json       -- shapes + calling convention, read by rust runtime
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple calling conv)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_solver():
+    args = model.example_args()
+    return to_hlo_text(jax.jit(model.solve_vcc_entry).lower(*args))
+
+
+def lower_power_eval():
+    f32 = jax.numpy.float32
+    c, h, k = model.C_PAD, model.H, model.K
+    s = lambda *sh: jax.ShapeDtypeStruct(tuple(sh), f32)  # noqa: E731
+    return to_hlo_text(jax.jit(model.power_eval).lower(
+        s(c, h), s(c), s(c, k), s(c, k), s(c, k)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    solver = lower_solver()
+    with open(os.path.join(args.out_dir, "vcc_solver.hlo.txt"), "w") as f:
+        f.write(solver)
+    print(f"vcc_solver.hlo.txt: {len(solver)} chars")
+
+    pe = lower_power_eval()
+    with open(os.path.join(args.out_dir, "power_eval.hlo.txt"), "w") as f:
+        f.write(pe)
+    print(f"power_eval.hlo.txt: {len(pe)} chars")
+
+    manifest = {
+        "c_pad": model.C_PAD,
+        "h": model.H,
+        "k": model.K,
+        "iters": model.ITERS,
+        "lr0": model.LR0,
+        "beta0": model.BETA0,
+        "beta1": model.BETA1,
+        "solver": {
+            "file": "vcc_solver.hlo.txt",
+            "inputs": ["eta[c,h]", "u_if[c,h]", "tau[c]", "p0[c]",
+                       "xs[c,k]", "w[c,k]", "sl[c,k]", "lo[c,h]",
+                       "ub[c,h]", "lam_e[]", "lam_p[c]"],
+            "outputs": ["delta[c,h]", "y[c]"],
+        },
+        "power_eval": {
+            "file": "power_eval.hlo.txt",
+            "inputs": ["u[c,h]", "p0[c]", "xs[c,k]", "w[c,k]", "sl[c,k]"],
+            "outputs": ["pow[c,h]"],
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the CICS day-ahead optimizer.
+
+Two kernels:
+
+* :mod:`power_pwl` -- batched piecewise-linear power-model evaluation
+  ``pow(c, h) = p0_c + sum_k sl_{c,k} * clamp(u(c,h) - xs_{c,k}, 0, w_{c,k})``
+  used both standalone (the ``power_eval`` artifact) and inside the
+  optimizer step.
+
+* :mod:`vcc_step` -- one fused projected-gradient step of the risk-aware
+  VCC optimization (paper Sec. III-C): gradient of the smoothed
+  carbon + peak-power objective through the piecewise-linear power model,
+  followed by exact Euclidean projection onto
+  ``{sum_h delta = 0} /\\ [lo, ub]`` via bisection.
+
+Both are written shape-generically and lowered with ``interpret=True``
+(the CPU PJRT plugin cannot run Mosaic custom-calls); on TPU the whole
+(64 x 24) block is VMEM-resident -- see DESIGN.md Sec. Perf.
+"""
+
+from . import power_pwl, vcc_step, ref  # noqa: F401

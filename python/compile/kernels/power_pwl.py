@@ -1,0 +1,51 @@
+"""Pallas kernel: batched piecewise-linear power-model evaluation.
+
+Evaluates, for every (cluster, hour) cell of the block,
+
+    pow(c,h) = p0[c] + sum_k sl[c,k] * clamp(u[c,h] - xs[c,k], 0, w[c,k])
+
+This is the cluster-level power model of the paper's Section III-A
+(piecewise-linear CPU->power, [20]); the same routine is reused inside the
+optimizer step kernel.
+
+TPU mapping: the whole (C, H) block plus the (C, K) model parameters live
+in VMEM (a 64 x 24 block is ~6 KB of state + ~6 KB of parameters); a single
+grid point owns the block so there is no HBM traffic between the K-segment
+accumulation steps. The K loop is unrolled (K=8) into vector ops on the
+(C, H) tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, p0_ref, xs_ref, w_ref, sl_ref, out_ref, *, k_segments):
+    u = u_ref[...]  # [C, H]
+    acc = jnp.broadcast_to(p0_ref[...][:, None], u.shape)
+    # Unrolled accumulation over segments: each step is an elementwise
+    # clamp + fma on the full [C, H] tile (VPU-friendly; no gathers).
+    for k in range(k_segments):
+        xs_k = xs_ref[:, k][:, None]
+        w_k = w_ref[:, k][:, None]
+        sl_k = sl_ref[:, k][:, None]
+        acc = acc + sl_k * jnp.clip(u - xs_k, 0.0, w_k)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def power_pwl(u, p0, xs, w, sl, interpret=True):
+    """Batched piecewise-linear power evaluation via Pallas.
+
+    Args match :func:`..ref.power_pwl`. Shapes: u [C,H], p0 [C],
+    xs/w/sl [C,K]. Returns [C,H] power.
+    """
+    c, h = u.shape
+    k = xs.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, k_segments=k),
+        out_shape=jax.ShapeDtypeStruct((c, h), u.dtype),
+        interpret=interpret,
+    )(u, p0, xs, w, sl)

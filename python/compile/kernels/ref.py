@@ -1,0 +1,140 @@
+"""Pure-jnp oracle implementations for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels (interpret mode) match these to tight tolerances, and the
+rust-native solver in ``rust/src/optimizer/pgd.rs`` is cross-checked against
+the AOT artifact produced from :mod:`..model` (which calls the kernels).
+
+Everything here is written with plain ``jax.numpy`` broadcasting, no Pallas.
+"""
+
+import jax.numpy as jnp
+
+
+def power_pwl(u, p0, xs, w, sl):
+    """Piecewise-linear power model, batched over clusters and hours.
+
+    ``pow(c,h) = p0[c] + sum_k sl[c,k] * clamp(u[c,h] - xs[c,k], 0, w[c,k])``
+
+    Args:
+      u:  [C, H] CPU usage (GCU).
+      p0: [C]    idle power per cluster (kW).
+      xs: [C, K] ascending segment start usages.
+      w:  [C, K] segment widths (last may be +inf-ish large).
+      sl: [C, K] segment slopes (kW per GCU).
+
+    Returns:
+      [C, H] power (kW).
+    """
+    # [C, H, K] broadcast
+    seg = jnp.clip(u[:, :, None] - xs[:, None, :], 0.0, w[:, None, :])
+    return p0[:, None] + jnp.sum(sl[:, None, :] * seg, axis=-1)
+
+
+def power_slope(u, xs, w, sl):
+    """Derivative of :func:`power_pwl` w.r.t. usage (the paper's pi(c)).
+
+    At segment boundaries the subgradient from the left-open segment is
+    used; the optimizer only ever needs a valid subgradient.
+
+    Returns: [C, H] slope (kW per GCU).
+    """
+    inside = (u[:, :, None] > xs[:, None, :]) & (
+        u[:, :, None] < xs[:, None, :] + w[:, None, :]
+    )
+    return jnp.sum(jnp.where(inside, sl[:, None, :], 0.0), axis=-1)
+
+
+def project_sum_zero_box(z, lo, ub, iters=48):
+    """Euclidean projection of each row of ``z`` onto {sum_h x = 0, lo<=x<=ub}.
+
+    The projection is ``x = clip(z - nu, lo, ub)`` with the scalar shift
+    ``nu`` (per row) chosen so the row sums to zero; ``sum(clip(z-nu))`` is
+    nonincreasing in ``nu`` so bisection converges geometrically.
+    Feasibility requires ``sum(lo) <= 0 <= sum(ub)`` per row (the rust layer
+    guarantees lo <= 0 <= ub elementwise).
+
+    Args:
+      z:  [C, H] pre-projection point.
+      lo: [C, H] lower bounds (<= 0).
+      ub: [C, H] upper bounds (>= 0).
+      iters: fixed bisection iteration count (branch-free, TPU-friendly).
+
+    Returns: [C, H] projected point.
+    """
+    nu_lo = jnp.min(z - ub, axis=1, keepdims=True)  # sum == sum(ub) >= 0
+    nu_hi = jnp.max(z - lo, axis=1, keepdims=True)  # sum == sum(lo) <= 0
+    for _ in range(iters):
+        nu = 0.5 * (nu_lo + nu_hi)
+        s = jnp.sum(jnp.clip(z - nu, lo, ub), axis=1, keepdims=True)
+        nu_lo = jnp.where(s > 0.0, nu, nu_lo)
+        nu_hi = jnp.where(s > 0.0, nu_hi, nu)
+    nu = 0.5 * (nu_lo + nu_hi)
+    return jnp.clip(z - nu, lo, ub)
+
+
+def vcc_objective(delta, eta, u_if, tau, p0, xs, w, sl, lam_e, lam_p, beta):
+    """Smoothed objective of the day-ahead problem (paper eq. (4)).
+
+    f = lam_e * sum_{c,h} eta * pow(u_nom + delta*tau/24)
+      + sum_c lam_p[c] * (1/beta) * LSE_h(beta * pow)
+
+    Returns scalar.
+    """
+    u = u_if + (1.0 + delta) * (tau[:, None] / 24.0)
+    p = power_pwl(u, p0, xs, w, sl)
+    carbon = lam_e * jnp.sum(eta * p)
+    # logsumexp over hours, numerically stabilized
+    m = jnp.max(p, axis=1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(beta * (p - m)), axis=1)) / beta
+    peak = jnp.sum(lam_p * lse)
+    return carbon + peak
+
+
+def vcc_step(delta, eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+             lr, beta, proj_iters=48):
+    """One projected-gradient step on the smoothed objective. Oracle version.
+
+    grad_{delta(c,h)} = (tau_c/24) * pi_c(u(c,h)) *
+                        [lam_e * eta(c,h) + lam_p[c] * softmax_beta(pow(c,:))_h]
+
+    The step is *normalized per cluster* (divided by max_h |grad|) so delta
+    moves at most `lr` per hour per iteration regardless of the problem's
+    GCU/kW scaling, followed by projection onto
+    {sum_h delta = 0} /\\ [lo, ub].
+
+    All args as in :func:`vcc_objective`; ``lr`` and ``beta`` are scalars.
+    Returns the updated [C, H] delta.
+    """
+    scale = tau[:, None] / 24.0
+    u = u_if + (1.0 + delta) * scale
+    p = power_pwl(u, p0, xs, w, sl)
+    pi = power_slope(u, xs, w, sl)
+    # stabilized softmax over hours
+    m = jnp.max(p, axis=1, keepdims=True)
+    e = jnp.exp(beta * (p - m))
+    smax = e / jnp.sum(e, axis=1, keepdims=True)
+    g = scale * pi * (lam_e * eta + lam_p[:, None] * smax)
+    gmax = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+    z = delta - lr * g / (gmax + 1e-12)
+    return project_sum_zero_box(z, lo, ub, iters=proj_iters)
+
+
+def solve_vcc(eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+              lrs, betas, proj_iters=48):
+    """Full projected-gradient solve (oracle). Python loop over schedules.
+
+    Args:
+      lrs:   [T] per-iteration step sizes.
+      betas: [T] per-iteration LSE temperatures (ramped up).
+
+    Returns (delta [C,H], y [C]) where y is the exact hourly peak power at
+    the final iterate.
+    """
+    delta = jnp.zeros_like(eta)
+    for lr, beta in zip(lrs, betas):
+        delta = vcc_step(delta, eta, u_if, tau, p0, xs, w, sl, lo, ub,
+                         lam_e, lam_p, lr, beta, proj_iters=proj_iters)
+    u = u_if + (1.0 + delta) * (tau[:, None] / 24.0)
+    y = jnp.max(power_pwl(u, p0, xs, w, sl), axis=1)
+    return delta, y

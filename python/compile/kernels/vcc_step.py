@@ -1,0 +1,108 @@
+"""Pallas kernel: one fused projected-gradient step of the VCC optimizer.
+
+This is the hot spot of the paper's day-ahead pipeline (Section III-C).
+Per step, for the whole (C clusters x H hours) block:
+
+  1. usage        u     = u_if + (1 + delta) * tau/24
+  2. power        p     = pwl(u)              (piecewise-linear model, III-A)
+  3. slope        pi    = pwl'(u)             (the paper's pi(c))
+  4. peak softmax smax  = softmax_beta(p)     (smoothed max over hours)
+  5. gradient     g     = (tau/24) * pi * (lam_e * eta + lam_p * smax)
+  6. descent      z     = delta - lr * g
+  7. projection   delta = Proj_{sum_h = 0, [lo, ub]}(z)
+                  via fixed-count bisection on the per-cluster shift nu.
+
+Everything is fused into one kernel so that on TPU the state never leaves
+VMEM between the seven stages; the bisection is branch-free (fixed 48
+iterations of select/clip/reduce), which keeps the lowering a straight-line
+vector program. Scalars (lr, beta, lam_e) enter as (1,1) arrays in SMEM-like
+refs.
+
+Masked (padding) clusters must be passed with tau = 0 and lo = ub = 0:
+the gradient is then exactly zero and the projection pins delta to 0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(delta_ref, eta_ref, uif_ref, tau_ref, p0_ref, xs_ref, w_ref,
+            sl_ref, lo_ref, ub_ref, lamp_ref, scal_ref, out_ref, *,
+            k_segments, proj_iters):
+    delta = delta_ref[...]            # [C, H]
+    eta = eta_ref[...]                # [C, H]
+    u_if = uif_ref[...]               # [C, H]
+    tau = tau_ref[...]                # [C]
+    lo = lo_ref[...]                  # [C, H]
+    ub = ub_ref[...]                  # [C, H]
+    lam_p = lamp_ref[...]             # [C]
+    lam_e = scal_ref[0]
+    lr = scal_ref[1]
+    beta = scal_ref[2]
+
+    scale = (tau / 24.0)[:, None]     # [C, 1]
+    u = u_if + (1.0 + delta) * scale  # [C, H]
+
+    # --- stages 2+3: power and slope, unrolled over the K segments -------
+    p = jnp.broadcast_to(p0_ref[...][:, None], u.shape)
+    pi = jnp.zeros_like(u)
+    for k in range(k_segments):
+        xs_k = xs_ref[:, k][:, None]
+        w_k = w_ref[:, k][:, None]
+        sl_k = sl_ref[:, k][:, None]
+        p = p + sl_k * jnp.clip(u - xs_k, 0.0, w_k)
+        inside = (u > xs_k) & (u < xs_k + w_k)
+        pi = pi + jnp.where(inside, sl_k, 0.0)
+
+    # --- stage 4: stabilized softmax over the hour axis ------------------
+    m = jnp.max(p, axis=1, keepdims=True)
+    e = jnp.exp(beta * (p - m))
+    smax = e / jnp.sum(e, axis=1, keepdims=True)
+
+    # --- stages 5+6: normalized gradient step (scale-invariant: delta
+    # moves at most lr per hour per iteration; mirrors rust pgd.rs) -------
+    g = scale * pi * (lam_e * eta + lam_p[:, None] * smax)
+    gmax = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+    z = delta - lr * g / (gmax + 1e-12)
+
+    # --- stage 7: bisection projection onto {sum_h = 0} /\ [lo, ub] ------
+    # sum(clip(z - nu, lo, ub)) is nonincreasing in nu; bracket so the sum
+    # is >= 0 at nu_lo and <= 0 at nu_hi (requires lo <= 0 <= ub).
+    nu_lo = jnp.min(z - ub, axis=1, keepdims=True)
+    nu_hi = jnp.max(z - lo, axis=1, keepdims=True)
+
+    def body(_, carry):
+        nlo, nhi = carry
+        nu = 0.5 * (nlo + nhi)
+        s = jnp.sum(jnp.clip(z - nu, lo, ub), axis=1, keepdims=True)
+        nlo = jnp.where(s > 0.0, nu, nlo)
+        nhi = jnp.where(s > 0.0, nhi, nu)
+        return nlo, nhi
+
+    nu_lo, nu_hi = jax.lax.fori_loop(0, proj_iters, body, (nu_lo, nu_hi))
+    nu = 0.5 * (nu_lo + nu_hi)
+    out_ref[...] = jnp.clip(z - nu, lo, ub)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "proj_iters"))
+def vcc_step(delta, eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+             lr, beta, interpret=True, proj_iters=48):
+    """One fused projected-gradient step (Pallas). Args as in ref.vcc_step.
+
+    ``lam_e``, ``lr`` and ``beta`` are scalars (python or 0-d); they are
+    packed into a single length-3 f32 operand.
+    """
+    c, h = delta.shape
+    k = xs.shape[1]
+    scal = jnp.stack([jnp.asarray(lam_e, delta.dtype),
+                      jnp.asarray(lr, delta.dtype),
+                      jnp.asarray(beta, delta.dtype)])
+    return pl.pallas_call(
+        functools.partial(_kernel, k_segments=k, proj_iters=proj_iters),
+        out_shape=jax.ShapeDtypeStruct((c, h), delta.dtype),
+        interpret=interpret,
+    )(delta, eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_p, scal)

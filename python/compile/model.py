@@ -1,0 +1,97 @@
+"""Layer-2 JAX compute graphs for the CICS day-ahead optimizer.
+
+Two exported computations (AOT-lowered by :mod:`.aot` to HLO text):
+
+* :func:`solve_vcc` -- the full risk-aware day-ahead solve (paper eq. (4)):
+  a ``lax.scan`` over ``ITERS`` fused Pallas projected-gradient steps with a
+  ramped log-sum-exp temperature, returning the optimal hourly deviations
+  ``delta`` and per-cluster exact peak power ``y``.
+
+* :func:`power_eval` -- batched piecewise-linear power evaluation, used by
+  the rust coordinator to translate planned usage curves to power.
+
+Shapes are fixed at AOT time (C_PAD x H x K, see :data:`C_PAD`); the rust
+layer masks unused cluster rows with tau = 0 and lo = ub = 0, which makes
+them exact no-ops in both gradient and projection.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import power_pwl as pwl_kernel
+from .kernels import vcc_step as step_kernel
+
+# AOT block shape: rust pads the fleet onto C_PAD cluster rows and tiles
+# fleets larger than C_PAD across multiple executions.
+C_PAD = 64
+H = 24
+K = 8
+ITERS = 400
+
+# Step-size / temperature schedules are baked into the artifact as
+# constants. lr decays harmonically; beta ramps geometrically so the
+# smoothed peak converges to the exact max (see DESIGN.md decision 3).
+LR0 = 0.05
+BETA0 = 0.5
+BETA1 = 64.0
+
+
+def schedules(iters=ITERS, dtype=jnp.float32):
+    """(lrs [T], betas [T]) baked-in iteration schedules."""
+    t = jnp.arange(iters, dtype=dtype)
+    lrs = LR0 / (1.0 + t / 100.0)
+    betas = BETA0 * (BETA1 / BETA0) ** (t / max(iters - 1, 1))
+    return lrs, betas
+
+
+def solve_vcc(eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+              interpret=True, iters=ITERS, proj_iters=48):
+    """Full day-ahead VCC solve.
+
+    Args (f32):
+      eta   [C,H]  day-ahead carbon intensity forecast (kg CO2e / kWh)
+      u_if  [C,H]  predicted inflexible CPU usage (GCU)
+      tau   [C]    risk-aware daily flexible usage tau_U (GCU-h); 0 = masked
+      p0    [C]    power-model idle power (kW)
+      xs,w,sl [C,K] piecewise-linear power-model segments
+      lo,ub [C,H]  box bounds on delta (lo <= 0 <= ub elementwise)
+      lam_e []     $ / kg CO2e
+      lam_p [C]    $ / kW / day peak-power price (per cluster so the rust
+                   campus-contract dual sweep can re-weight rows)
+
+    Returns:
+      delta [C,H]  optimal hourly deviations of flexible usage from tau/24
+      y     [C]    exact peak power of the optimized profile (kW)
+    """
+    lrs, betas = schedules(iters, eta.dtype)
+    delta0 = jnp.zeros_like(eta)
+
+    def body(delta, sched):
+        lr, beta = sched
+        delta = step_kernel.vcc_step(
+            delta, eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+            lr, beta, interpret=interpret, proj_iters=proj_iters)
+        return delta, ()
+
+    delta, _ = jax.lax.scan(body, delta0, (lrs, betas))
+    u = u_if + (1.0 + delta) * (tau[:, None] / 24.0)
+    p = pwl_kernel.power_pwl(u, p0, xs, w, sl, interpret=interpret)
+    y = jnp.max(p, axis=1)
+    return delta, y
+
+
+def power_eval(u, p0, xs, w, sl, interpret=True):
+    """Batched power-model evaluation artifact. u [C,H] -> pow [C,H]."""
+    return (pwl_kernel.power_pwl(u, p0, xs, w, sl, interpret=interpret),)
+
+
+def solve_vcc_entry(eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p):
+    """jit entry with the AOT calling convention (tuple output)."""
+    return solve_vcc(eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p)
+
+
+def example_args(c=C_PAD, h=H, k=K, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of solve_vcc_entry."""
+    f = lambda *s: jax.ShapeDtypeStruct(tuple(s), dtype)  # noqa: E731
+    return (f(c, h), f(c, h), f(c), f(c), f(c, k), f(c, k), f(c, k),
+            f(c, h), f(c, h), f(), f(c))

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+Hypothesis sweeps block shapes and dtypes; every case asserts allclose
+against ref.py — the core correctness signal for the AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import power_pwl, ref, vcc_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, c, h, k, dtype=np.float32):
+    u = rng.uniform(0, 100, (c, h)).astype(dtype)
+    p0 = rng.uniform(10, 30, c).astype(dtype)
+    xs = np.sort(rng.uniform(0, 80, (c, k)), axis=1).astype(dtype)
+    w = rng.uniform(5, 30, (c, k)).astype(dtype)
+    sl = rng.uniform(0.05, 2.0, (c, k)).astype(dtype)
+    return u, p0, xs, w, sl
+
+
+def make_step_inputs(rng, c, h, k):
+    u, p0, xs, w, sl = make_inputs(rng, c, h, k)
+    eta = rng.uniform(0.1, 0.9, (c, h)).astype(np.float32)
+    tau = rng.uniform(0.0, 400.0, c).astype(np.float32)
+    delta = rng.uniform(-0.3, 0.3, (c, h)).astype(np.float32)
+    # feasible box around delta: lo <= 0 <= ub
+    lo = np.full((c, h), -1.0, np.float32)
+    ub = rng.uniform(0.5, 3.0, (c, h)).astype(np.float32)
+    delta = np.clip(delta, lo, ub)
+    # re-center rows so sum ~ 0 is reachable (projection fixes the rest)
+    lam_p = rng.uniform(0.05, 1.0, c).astype(np.float32)
+    return delta, eta, u, tau, p0, xs, w, sl, lo, ub, lam_p
+
+
+# ---------------------------------------------------------------------------
+# power_pwl kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 48),
+    h=st.integers(1, 32),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_power_pwl_matches_ref_shapes(c, h, k, seed):
+    rng = np.random.default_rng(seed)
+    u, p0, xs, w, sl = make_inputs(rng, c, h, k)
+    got = power_pwl.power_pwl(jnp.asarray(u), jnp.asarray(p0), jnp.asarray(xs),
+                              jnp.asarray(w), jnp.asarray(sl))
+    want = ref.power_pwl(jnp.asarray(u), jnp.asarray(p0), jnp.asarray(xs),
+                         jnp.asarray(w), jnp.asarray(sl))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6), (jnp.bfloat16, 2e-2)])
+def test_power_pwl_dtypes(dtype, tol):
+    rng = np.random.default_rng(0)
+    u, p0, xs, w, sl = make_inputs(rng, 8, 24, 4)
+    args = [jnp.asarray(a, dtype) for a in (u, p0, xs, w, sl)]
+    got = np.asarray(power_pwl.power_pwl(*args), np.float64)
+    want = np.asarray(ref.power_pwl(*args), np.float64)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 100)
+
+
+def test_power_pwl_monotone_in_usage():
+    rng = np.random.default_rng(1)
+    u, p0, xs, w, sl = make_inputs(rng, 4, 24, 8)
+    lo = power_pwl.power_pwl(jnp.asarray(u), jnp.asarray(p0), jnp.asarray(xs),
+                             jnp.asarray(w), jnp.asarray(sl))
+    hi = power_pwl.power_pwl(jnp.asarray(u + 5.0), jnp.asarray(p0), jnp.asarray(xs),
+                             jnp.asarray(w), jnp.asarray(sl))
+    assert np.all(np.asarray(hi) >= np.asarray(lo) - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vcc_step kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 32),
+    h=st.integers(2, 32),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+    lr=st.floats(0.005, 0.2),
+    beta=st.floats(0.2, 50.0),
+)
+def test_vcc_step_matches_ref(c, h, k, seed, lr, beta):
+    rng = np.random.default_rng(seed)
+    args = make_step_inputs(rng, c, h, k)
+    jargs = [jnp.asarray(a) for a in args]
+    got = vcc_step.vcc_step(*jargs[:10], 0.5, jargs[10], lr, beta)
+    want = ref.vcc_step(*jargs[:10], 0.5, jargs[10], lr, beta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-5)
+
+
+def test_vcc_step_output_feasible():
+    rng = np.random.default_rng(3)
+    args = make_step_inputs(rng, 16, 24, 8)
+    jargs = [jnp.asarray(a) for a in args]
+    out = np.asarray(vcc_step.vcc_step(*jargs[:10], 0.5, jargs[10], 0.05, 2.0))
+    lo, ub = args[8], args[9]
+    assert np.all(out >= lo - 1e-5) and np.all(out <= ub + 1e-5)
+    np.testing.assert_allclose(out.sum(axis=1), 0.0, atol=1e-4)
+
+
+def test_vcc_step_masked_rows_stay_zero():
+    rng = np.random.default_rng(4)
+    args = list(make_step_inputs(rng, 8, 24, 8))
+    delta, tau, lo, ub = args[0], args[3], args[8], args[9]
+    # mask rows 2 and 5 exactly as the rust runtime does
+    for r in (2, 5):
+        tau[r] = 0.0
+        lo[r, :] = 0.0
+        ub[r, :] = 0.0
+        delta[r, :] = 0.0
+    jargs = [jnp.asarray(a) for a in args]
+    out = np.asarray(vcc_step.vcc_step(*jargs[:10], 0.5, jargs[10], 0.05, 2.0))
+    assert np.all(out[2] == 0.0) and np.all(out[5] == 0.0)
+
+
+def test_projection_oracle_properties():
+    rng = np.random.default_rng(5)
+    z = jnp.asarray(rng.uniform(-3, 3, (32, 24)), jnp.float32)
+    lo = jnp.full((32, 24), -1.0, jnp.float32)
+    ub = jnp.full((32, 24), 2.0, jnp.float32)
+    x = ref.project_sum_zero_box(z, lo, ub)
+    np.testing.assert_allclose(np.asarray(x).sum(axis=1), 0.0, atol=1e-4)
+    assert np.all(np.asarray(x) >= -1.0 - 1e-6)
+    assert np.all(np.asarray(x) <= 2.0 + 1e-6)
+    # idempotent
+    x2 = ref.project_sum_zero_box(x, lo, ub)
+    np.testing.assert_allclose(x, x2, atol=1e-5)

@@ -1,0 +1,111 @@
+"""L2 correctness: the full solve_vcc scan — convergence, constraint
+satisfaction, shaping behaviour — plus AOT lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+C, H, K = model.C_PAD, model.H, model.K
+
+
+def toy_fleet(n_real=4, seed=0):
+    """Padded block with n_real live clusters, midday-peaking carbon."""
+    rng = np.random.default_rng(seed)
+    eta = np.full((C, H), 0.3, np.float32)
+    u_if = np.zeros((C, H), np.float32)
+    tau = np.zeros(C, np.float32)
+    p0 = np.full(C, 1.0, np.float32)
+    xs = np.tile((np.arange(K) * 500.0).astype(np.float32), (C, 1))
+    w = np.full((C, K), 500.0, np.float32)
+    w[:, -1] = 1e12
+    sl = np.full((C, K), 0.15, np.float32)
+    lo = np.zeros((C, H), np.float32)
+    ub = np.zeros((C, H), np.float32)
+    lam_p = np.zeros(C, np.float32)
+    for i in range(n_real):
+        hpeak = rng.uniform(11, 15)
+        x = (np.arange(H) - hpeak) / rng.uniform(3, 6)
+        eta[i] = 0.3 + 0.45 * np.exp(-0.5 * x * x)
+        base = rng.uniform(800, 1600)
+        u_if[i] = base * (1 + 0.15 * np.cos((np.arange(H) - 15) / 24 * 2 * np.pi))
+        tau[i] = rng.uniform(0.2, 0.35) * base * 24
+        p0[i] = rng.uniform(300, 500)
+        lo[i] = -1.0
+        ub[i] = 2.5
+        lam_p[i] = 0.25
+    return tuple(jnp.asarray(a) for a in (eta, u_if, tau, p0, xs, w, sl, lo, ub)) + (
+        jnp.float32(10.0), jnp.asarray(lam_p))
+
+
+def test_solver_constraints_and_shaping():
+    args = toy_fleet()
+    delta, y = model.solve_vcc(*args)
+    delta = np.asarray(delta)
+    # conservation + box on live rows, exact zeros on masked rows
+    np.testing.assert_allclose(delta.sum(axis=1), 0.0, atol=2e-3)
+    assert np.all(delta >= -1.0 - 1e-5) and np.all(delta <= 2.5 + 1e-5)
+    assert np.all(delta[4:] == 0.0), "masked rows must stay zero"
+    eta = np.asarray(args[0])
+    for i in range(4):
+        dirtiest = int(eta[i].argmax())
+        cleanest = int(eta[i].argmin())
+        assert delta[i, dirtiest] < -0.2, f"cluster {i} keeps load in dirtiest hour"
+        assert delta[i, cleanest] > 0.05, f"cluster {i} ignores cleanest hour"
+    assert np.all(np.asarray(y)[:4] > 0)
+
+
+def test_solver_improves_objective_vs_unshaped():
+    args = toy_fleet(seed=1)
+    delta, _ = model.solve_vcc(*args)
+    (eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p) = args
+    beta = 1e3  # ~exact max
+    f_shaped = ref.vcc_objective(jnp.asarray(delta), eta, u_if, tau, p0, xs, w, sl,
+                                 lam_e, lam_p, beta)
+    f_base = ref.vcc_objective(jnp.zeros_like(eta), eta, u_if, tau, p0, xs, w, sl,
+                               lam_e, lam_p, beta)
+    assert float(f_shaped) < float(f_base)
+
+
+def test_scan_matches_python_loop_reference():
+    """The lax.scan of Pallas steps == the oracle python loop (same
+    schedules) to f32 tolerance."""
+    args = toy_fleet(n_real=2, seed=2)
+    iters = 50  # keep the python loop cheap
+    delta, _ = model.solve_vcc(*args, iters=iters)
+    lrs, betas = model.schedules(iters)
+    (eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p) = args
+    want, _ = ref.solve_vcc(eta, u_if, tau, p0, xs, w, sl, lo, ub, lam_e, lam_p,
+                            np.asarray(lrs), np.asarray(betas))
+    np.testing.assert_allclose(np.asarray(delta)[:2], np.asarray(want)[:2],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_power_eval_entry():
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.uniform(0, 3000, (C, H)), jnp.float32)
+    p0 = jnp.full((C,), 400.0, jnp.float32)
+    xs = jnp.tile(jnp.arange(K, dtype=jnp.float32) * 500.0, (C, 1))
+    w = jnp.full((C, K), 500.0, jnp.float32).at[:, -1].set(1e12)
+    sl = jnp.full((C, K), 0.15, jnp.float32)
+    (pw,) = model.power_eval(u, p0, xs, w, sl)
+    want = ref.power_pwl(u, p0, xs, w, sl)
+    np.testing.assert_allclose(pw, want, rtol=1e-6)
+
+
+def test_aot_lowering_produces_hlo_text():
+    text = aot.lower_power_eval()
+    assert text.startswith("HloModule")
+    assert "f32[64,24]" in text
+
+
+def test_schedules_shapes_and_ramp():
+    lrs, betas = model.schedules(100)
+    assert lrs.shape == (100,) and betas.shape == (100,)
+    assert float(lrs[0]) > float(lrs[-1]) > 0
+    assert abs(float(betas[0]) - model.BETA0) < 1e-6
+    assert abs(float(betas[-1]) - model.BETA1) < 1e-3

@@ -1,0 +1,44 @@
+//! Shared bench harness (no criterion in the offline environment): wall
+//! timing, CSV emission into reports/, and standard scenario builders.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use cics::config::{GridArchetype, ScenarioConfig};
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run a closure `n` times and report mean/min seconds (micro-bench).
+pub fn bench_n(name: &str, n: usize, mut f: impl FnMut()) {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("  {name:<44} mean {:>9.3} ms   min {:>9.3} ms", mean * 1e3, min * 1e3);
+}
+
+/// The standard evaluation campus: mixed archetypes on a dirty grid.
+pub fn standard_campus(clusters: usize) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses[0].name = "bench-campus".into();
+    cfg.campuses[0].clusters = clusters;
+    cfg.campuses[0].grid = GridArchetype::FossilPeaker;
+    cfg.campuses[0].archetype_mix = (0.5, 0.3, 0.2);
+    cfg
+}
+
+pub fn section(title: &str) {
+    println!("\n==== {title} ====");
+}

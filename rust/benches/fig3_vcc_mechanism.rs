@@ -1,0 +1,121 @@
+//! Fig 3 + Fig 8 reproduction: the VCC load-shaping mechanism on one
+//! cluster — VCC lower at midday when carbon intensity peaks, flexible
+//! usage pushed to evenings/early mornings, daily peak usage reduced —
+//! and the optimal delta(c, .) profile that produces it.
+//!
+//! Run: `cargo bench --bench fig3_vcc_mechanism`
+
+mod common;
+
+use cics::config::GridArchetype;
+use cics::coordinator::Simulation;
+use cics::report;
+use cics::telemetry::ClusterDayRecord;
+use cics::util::ascii;
+
+fn main() {
+    let mut cfg = common::standard_campus(1);
+    cfg.campuses[0].archetype_mix = (1.0, 0.0, 0.0);
+    cfg.campuses[0].grid = GridArchetype::FossilPeaker;
+
+    common::section("Fig 3 — cluster day under CICS (shaped) vs counterfactual (unshaped)");
+    let days = 36;
+    // shaped run
+    let (sim, secs) = common::timed(|| {
+        let mut s = Simulation::new(cfg.clone());
+        s.run_days(days);
+        s
+    });
+    // counterfactual: identical seed/workload, shaping off
+    let mut off = Simulation::new(cfg);
+    off.shaping_enabled = false;
+    off.run_days(days);
+    println!("2 runs x {days} days in {secs:.1}s (+ counterfactual)");
+
+    // pick the last weekday whose shaped day really shaped
+    let day = (0..days)
+        .rev()
+        .find(|&d| {
+            !cics::timebase::is_weekend(d)
+                && sim.metrics.summary(0, d).map(|s| s.shaped).unwrap_or(false)
+        })
+        .expect("no shaped day found");
+    let s_on = sim.metrics.summary(0, day).unwrap();
+    let s_off = off.metrics.summary(0, day).unwrap();
+
+    println!("{}", report::cluster_day_panel(&format!("shaped day {day}"), s_on));
+    let flex_on: Vec<f64> = s_on.hourly_usage_flex.to_vec();
+    let flex_off: Vec<f64> = s_off.hourly_usage_flex.to_vec();
+    println!(
+        "{}",
+        ascii::line_chart(
+            "flexible usage (GCU): shaped vs unshaped",
+            &[("shaped", &flex_on), ("unshaped", &flex_off)],
+            12
+        )
+    );
+
+    // Fig 8: implied delta profile = shaped flexible / (tau/24) - 1
+    let tau_real: f64 = s_off.hourly_usage_flex.iter().sum::<f64>();
+    let delta: Vec<f64> =
+        s_on.hourly_usage_flex.iter().map(|&u| u / (tau_real / 24.0) - 1.0).collect();
+    println!(
+        "{}",
+        ascii::line_chart("Fig 8 — realized delta(c, h) profile", &[("delta", &delta)], 10)
+    );
+
+    // shape checks
+    let carbon = &s_on.carbon_intensity;
+    let mut hours: Vec<usize> = (0..24).collect();
+    hours.sort_by(|&a, &b| carbon[b].partial_cmp(&carbon[a]).unwrap());
+    let dirty6: f64 = hours[..6].iter().map(|&h| s_on.hourly_usage_flex[h]).sum();
+    let dirty6_off: f64 = hours[..6].iter().map(|&h| s_off.hourly_usage_flex[h]).sum();
+    println!(
+        "flexible usage in 6 dirtiest hours: shaped {dirty6:.0} vs unshaped {dirty6_off:.0} GCU  {}",
+        if dirty6 < dirty6_off { "OK (pushed out of dirty hours)" } else { "MISS" }
+    );
+    let peak_on = s_on
+        .hourly_usage_if
+        .iter()
+        .zip(&s_on.hourly_usage_flex)
+        .map(|(a, b)| a + b)
+        .fold(0.0, f64::max);
+    let peak_off = s_off
+        .hourly_usage_if
+        .iter()
+        .zip(&s_off.hourly_usage_flex)
+        .map(|(a, b)| a + b)
+        .fold(0.0, f64::max);
+    println!(
+        "daily peak CPU: shaped {peak_on:.0} vs unshaped {peak_off:.0} GCU  {}",
+        if peak_on <= peak_off * 1.02 { "OK (peak not increased)" } else { "MISS" }
+    );
+    // conservation: daily flexible compute preserved within forecastable noise
+    let tot_on: f64 = s_on.daily_flex_usage_gcuh;
+    let tot_off: f64 = s_off.daily_flex_usage_gcuh;
+    println!(
+        "daily flexible compute: shaped {tot_on:.0} vs unshaped {tot_off:.0} GCU-h ({:+.1}%) {}",
+        100.0 * (tot_on - tot_off) / tot_off,
+        if (tot_on - tot_off).abs() < 0.15 * tot_off { "OK (conserved)" } else { "MISS" }
+    );
+
+    report::write_csv(
+        std::path::Path::new("reports/fig3_cluster_day.csv"),
+        report::CLUSTER_DAY_HEADER,
+        &report::cluster_day_csv(s_on),
+    )
+    .unwrap();
+    println!("\nwrote reports/fig3_cluster_day.csv");
+
+    common::section("microbench — scheduler tick hot path");
+    let cluster = &sim.fleet.clusters[0];
+    let model = &sim.workloads[0];
+    common::bench_n("one full cluster-day (288 ticks)", 10, || {
+        let mut sched = cics::scheduler::ClusterScheduler::new(0);
+        let mut rec = ClusterDayRecord::new(cluster, 0);
+        let mut out = cics::scheduler::DayOutcome::default();
+        for tick in 0..cics::timebase::TICKS_PER_DAY {
+            sched.tick(cluster, model, None, cics::timebase::SimTime::new(0, tick), &mut rec, &mut out);
+        }
+    });
+}

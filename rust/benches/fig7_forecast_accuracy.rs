@@ -1,0 +1,101 @@
+//! Fig 7 reproduction: distribution over clusters of median / 75%-ile /
+//! 90%-ile day-ahead APE for the four forecast targets (hourly inflexible
+//! usage, daily flexible usage, daily reservations, hourly ratio).
+//!
+//! Paper claims: median APEs of U_IF, T_R and R below 10% for >90% of
+//! clusters; daily flexible usage visibly noisier; rare 50-100% outliers.
+//!
+//! Run: `cargo bench --bench fig7_forecast_accuracy`
+
+mod common;
+
+use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
+use cics::coordinator::Simulation;
+use cics::forecast::Target;
+use cics::report;
+use cics::util::stats;
+
+fn main() {
+    // A fleet large enough for a distribution: 4 campuses x 24 clusters.
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses = [
+        GridArchetype::FossilPeaker,
+        GridArchetype::SolarHeavy,
+        GridArchetype::WindHeavy,
+        GridArchetype::Mixed,
+    ]
+    .iter()
+    .map(|&grid| CampusConfig {
+        name: format!("fig7-{}", grid.name()),
+        grid,
+        clusters: 24,
+        contract_limit_kw: f64::INFINITY,
+        archetype_mix: (0.5, 0.3, 0.2),
+    })
+    .collect();
+    // Forecast evaluation only needs unshaped operation (shaping would
+    // change nothing about the predictions, but costs solver time).
+    cfg.optimizer.use_artifact = false;
+
+    common::section("Fig 7 — day-ahead load forecast accuracy (96 clusters)");
+    let days = 100; // ~3-month evaluation horizon like the paper
+    let (mut sim, secs) = common::timed(|| {
+        let mut sim = Simulation::new(cfg);
+        sim.shaping_enabled = false;
+        sim.run_days(days);
+        sim
+    });
+    let _ = &mut sim;
+    println!("simulated {days} days x 96 clusters in {secs:.1}s");
+
+    let mut rows = Vec::new();
+    for t in Target::ALL {
+        let pct = sim.ape.all_percentiles(t);
+        let med: Vec<f64> = pct.iter().map(|p| p.0).collect();
+        let (chart, trows) = report::fig7_panel(t.name(), &pct);
+        println!("{chart}");
+        rows.extend(trows);
+        let frac_under_10 = med.iter().filter(|&&m| m < 10.0).count() as f64 / med.len() as f64;
+        println!(
+            "[{}] clusters with median APE < 10%: {:.0}%  (median of medians {:.1}%)",
+            t.name(),
+            100.0 * frac_under_10,
+            stats::median(&med)
+        );
+    }
+
+    // paper-shape assertions (soft, printed)
+    let check = |t: Target, thresh: f64, want: f64| {
+        let med: Vec<f64> = sim.ape.all_percentiles(t).iter().map(|p| p.0).collect();
+        let frac = med.iter().filter(|&&m| m < thresh).count() as f64 / med.len() as f64;
+        println!(
+            "SHAPE CHECK [{}] median APE < {thresh}% for {:.0}% of clusters (paper: >{:.0}%) {}",
+            t.name(),
+            100.0 * frac,
+            100.0 * want,
+            if frac >= want { "OK" } else { "MISS" }
+        );
+    };
+    check(Target::HourlyInflexible, 10.0, 0.9);
+    check(Target::DailyReservations, 10.0, 0.9);
+    check(Target::HourlyRatio, 10.0, 0.9);
+    // flexible daily usage is noisier: medians spread wider
+    let flex: Vec<f64> =
+        sim.ape.all_percentiles(Target::DailyFlexUsage).iter().map(|p| p.0).collect();
+    let inflex: Vec<f64> =
+        sim.ape.all_percentiles(Target::HourlyInflexible).iter().map(|p| p.0).collect();
+    println!(
+        "SHAPE CHECK [T_UF noisier than U_IF] median-of-medians {:.1}% vs {:.1}% {}",
+        stats::median(&flex),
+        stats::median(&inflex),
+        if stats::median(&flex) > stats::median(&inflex) { "OK" } else { "MISS" }
+    );
+
+    report::write_csv(
+        std::path::Path::new("reports/fig7_forecast_ape.csv"),
+        report::FIG7_HEADER,
+        &rows,
+    )
+    .unwrap();
+    println!("\nwrote reports/fig7_forecast_ape.csv");
+}

@@ -1,0 +1,181 @@
+//! Figs 9–11 reproduction: three clusters on one campus on the same day —
+//! X (predictable flexible load): tight VCC headroom (paper ~18%), deep
+//!   (~50%) flexible drop and a sustained power drop at peak-carbon hours;
+//! Y (noisy flexible load): higher VCC headroom (paper ~33%), shorter
+//!   sustained drop;
+//! Z (mostly inflexible): no meaningful shaping.
+//!
+//! Drops are measured against a *paired counterfactual*: an identical
+//! (same-seed) simulation with shaping disabled, so the diurnal shape of
+//! the inflexible tier cancels out.
+//!
+//! Run: `cargo bench --bench fig9_11_cluster_shaping`
+
+mod common;
+
+use cics::config::Archetype;
+use cics::coordinator::Simulation;
+use cics::report;
+use cics::util::stats;
+
+struct Panel {
+    label: &'static str,
+    headroom_pct: f64,
+    flex_drop_pct: f64,
+    power_drop_pct: f64,
+    drop_hours: usize,
+    shaped_days: usize,
+}
+
+fn main() {
+    let mut cfg = common::standard_campus(12);
+    cfg.campuses[0].archetype_mix = (0.4, 0.3, 0.3);
+    // The paper's Figs 9-10 show deep (~50%) flexible drops; §IV explains
+    // such "larger and longer drops" are obtained "by increasing the cost
+    // associated with the carbon footprint, lambda_e" relative to the
+    // conservative fleet default used in the Fig 12 controlled experiment.
+    cfg.optimizer.lambda_e = 0.25;
+    common::section("Figs 9-11 — cluster X / Y / Z shaping on a fossil-peaker campus");
+    let days = 50;
+    let ((sim, ctrl), secs) = common::timed(|| {
+        let mut on = Simulation::new(cfg.clone());
+        on.run_days(days);
+        let mut off = Simulation::new(cfg.clone());
+        off.shaping_enabled = false;
+        off.run_days(days);
+        (on, off)
+    });
+    println!("paired runs, {days} days x 12 clusters, in {secs:.1}s\n");
+
+    let mut rows = Vec::new();
+    let mut panels = Vec::new();
+    for (label, arch) in [
+        ("cluster X (Fig 9)", Archetype::FlexPredictable),
+        ("cluster Y (Fig 10)", Archetype::FlexNoisy),
+        ("cluster Z (Fig 11)", Archetype::MostlyInflexible),
+    ] {
+        let cid = sim
+            .fleet
+            .clusters
+            .iter()
+            .position(|c| c.archetype == arch)
+            .expect("archetype present");
+        let window: Vec<usize> = (days - 14..days).filter(|&d| !cics::timebase::is_weekend(d)).collect();
+        let last_shaped = window
+            .iter()
+            .rev()
+            .find(|&&d| sim.metrics.summary(cid, d).map(|s| s.shaped).unwrap_or(false))
+            .copied()
+            .unwrap_or(days - 1);
+        let panel_day = sim.metrics.summary(cid, last_shaped).unwrap();
+        println!("{}", report::cluster_day_panel(label, panel_day));
+        rows.extend(report::cluster_day_csv(panel_day));
+
+        let mut headrooms = Vec::new();
+        let mut flex_drops = Vec::new();
+        let mut power_drops = Vec::new();
+        let mut drop_hours_all = Vec::new();
+        let mut shaped_days = 0;
+        for &d in &window {
+            let (Some(s_on), Some(s_off)) =
+                (sim.metrics.summary(cid, d), ctrl.metrics.summary(cid, d))
+            else {
+                continue;
+            };
+            if !s_on.shaped {
+                continue;
+            }
+            shaped_days += 1;
+            if let Some(vcc) = s_on.vcc {
+                let vcc_mean = vcc.iter().sum::<f64>() / 24.0;
+                let demand_mean = s_on.hourly_resv.iter().sum::<f64>() / 24.0;
+                headrooms.push(100.0 * (vcc_mean / demand_mean - 1.0));
+            }
+            // peak-carbon window = 6 dirtiest hours of the day
+            let mut hours: Vec<usize> = (0..24).collect();
+            hours.sort_by(|&a, &b| {
+                s_on.carbon_intensity[b].partial_cmp(&s_on.carbon_intensity[a]).unwrap()
+            });
+            let dirty = &hours[..6];
+            // flexible and power drops vs the paired counterfactual
+            let f_on: f64 = dirty.iter().map(|&h| s_on.hourly_usage_flex[h]).sum();
+            let f_off: f64 = dirty.iter().map(|&h| s_off.hourly_usage_flex[h]).sum();
+            if f_off > 1.0 {
+                flex_drops.push(100.0 * (1.0 - f_on / f_off));
+            }
+            let p_on: f64 = dirty.iter().map(|&h| s_on.hourly_power[h]).sum();
+            let p_off: f64 = dirty.iter().map(|&h| s_off.hourly_power[h]).sum();
+            power_drops.push(100.0 * (1.0 - p_on / p_off));
+            // sustained-drop duration: hours where shaped flexible < 70% of
+            // the counterfactual
+            drop_hours_all.push(
+                (0..24)
+                    .filter(|&h| {
+                        s_on.hourly_usage_flex[h] < 0.7 * s_off.hourly_usage_flex[h].max(1.0)
+                    })
+                    .count() as f64,
+            );
+        }
+        panels.push(Panel {
+            label,
+            headroom_pct: stats::mean(&headrooms),
+            flex_drop_pct: stats::mean(&flex_drops),
+            power_drop_pct: stats::mean(&power_drops),
+            drop_hours: stats::mean(&drop_hours_all).round() as usize,
+            shaped_days,
+        });
+    }
+
+    common::section("summary vs paper (drops vs paired unshaped counterfactual)");
+    println!(
+        "{:<20} {:>9} {:>10} {:>11} {:>10} {:>7}",
+        "cluster", "headroom", "flex drop", "power drop", "drop hrs", "shaped"
+    );
+    for p in &panels {
+        println!(
+            "{:<20} {:>8.1}% {:>9.1}% {:>10.2}% {:>10} {:>6}",
+            p.label, p.headroom_pct, p.flex_drop_pct, p.power_drop_pct, p.drop_hours, p.shaped_days
+        );
+    }
+    println!("\npaper: X headroom ~18%, flex drop ~50%, power drop ~8% over ~6h;");
+    println!("       Y headroom ~33% (noisier forecasts), shorter sustained drop (~3h);");
+    println!("       Z small flex share -> no meaningful shaping/power change.");
+    let x = &panels[0];
+    let y = &panels[1];
+    let z = &panels[2];
+    println!("\nSHAPE CHECKS:");
+    let ck = |name: &str, pass: bool| {
+        println!("  {name:<58} {}", if pass { "OK" } else { "MISS" });
+    };
+    ck(
+        &format!("X drops flexible load at dirty hours ({:.1}%)", x.flex_drop_pct),
+        x.flex_drop_pct > 25.0,
+    );
+    ck(
+        &format!("X drops power at dirty hours ({:.2}%)", x.power_drop_pct),
+        x.power_drop_pct > 1.0,
+    );
+    ck(
+        &format!("Y holds more headroom than X ({:.1}% vs {:.1}%)", y.headroom_pct, x.headroom_pct),
+        y.headroom_pct > x.headroom_pct,
+    );
+    ck(
+        &format!(
+            "Z's power change is smaller than X's ({:.2}% vs {:.2}%)",
+            z.power_drop_pct, x.power_drop_pct
+        ),
+        z.power_drop_pct < x.power_drop_pct,
+    );
+    ck(
+        &format!("X sustains the drop longer than Y ({} vs {} h)", x.drop_hours, y.drop_hours),
+        x.drop_hours >= y.drop_hours,
+    );
+
+    report::write_csv(
+        std::path::Path::new("reports/fig9_11_clusters.csv"),
+        report::CLUSTER_DAY_HEADER,
+        &rows,
+    )
+    .unwrap();
+    println!("\nwrote reports/fig9_11_clusters.csv");
+}

@@ -1,0 +1,146 @@
+//! Optimizer hot-path benchmark + ablations (EXPERIMENTS.md §Perf):
+//! artifact (JAX/Pallas via PJRT) vs rust-native PGD vs greedy baseline on
+//! the fleetwide day-ahead solve, solution-quality comparison, and an
+//! iteration-count ablation for the practical-roofline analysis.
+//!
+//! Run: `cargo bench --bench optimizer_hotpath`
+
+mod common;
+
+use cics::forecast::DayAheadForecast;
+use cics::optimizer::{assemble, baselines, pgd, ClusterProblem};
+use cics::power::PwlModel;
+use cics::runtime::Runtime;
+use cics::timebase::HOURS_PER_DAY;
+use cics::util::rng::Pcg;
+use cics::util::stats;
+
+fn random_problem(seed: u64) -> Option<ClusterProblem> {
+    let mut rng = Pcg::new(seed, 77);
+    let cap = rng.uniform(3000.0, 9000.0);
+    let if_level = rng.uniform(0.25, 0.45);
+    let mut u_if = [0.0; HOURS_PER_DAY];
+    for (h, u) in u_if.iter_mut().enumerate() {
+        let x = (h as f64 - 15.0) / 24.0 * std::f64::consts::TAU;
+        *u = cap * if_level * (1.0 + rng.uniform(0.05, 0.2) * x.cos());
+    }
+    let mut eta = [0.0; HOURS_PER_DAY];
+    let peak_h = rng.uniform(10.0, 16.0);
+    for (h, e) in eta.iter_mut().enumerate() {
+        let x = (h as f64 - peak_h) / rng.uniform(3.0, 6.0);
+        *e = rng.uniform(0.2, 0.4) + rng.uniform(0.2, 0.5) * (-0.5 * x * x).exp();
+    }
+    let tau = cap * rng.uniform(0.15, 0.3) * 24.0;
+    let fc = DayAheadForecast {
+        cluster_id: 0,
+        day: 1,
+        u_if_hat: u_if,
+        tuf_hat: tau,
+        tr_hat: tau * 3.0,
+        ratio_hat: [rng.uniform(1.1, 1.35); HOURS_PER_DAY],
+        u_if_upper: u_if.map(|u| u * 1.08),
+        mature: true,
+    };
+    assemble(
+        0,
+        &fc,
+        &eta,
+        tau,
+        PwlModel::linear_default(cap, cap * 0.1, cap * 0.28),
+        cap * 0.96,
+        cap,
+        0.25,
+        -1.0,
+        3.0,
+    )
+    .ok()
+}
+
+fn problems(n: usize) -> Vec<ClusterProblem> {
+    (0..).filter_map(|i| random_problem(3000 + i)).take(n).collect()
+}
+
+fn main() {
+    let lam_e = 10.0;
+    common::section("day-ahead solve latency: 64-cluster fleet block");
+    let ps = problems(64);
+
+    let rt = Runtime::load_default("artifacts");
+    match &rt {
+        Some(rt) => {
+            common::bench_n("AOT artifact via PJRT (400 iters, 64 clusters)", 5, || {
+                let _ = rt.solve(&ps, lam_e).unwrap();
+            });
+        }
+        None => println!("  (artifacts missing — run `make artifacts` for the PJRT numbers)"),
+    }
+    common::bench_n("rust-native PGD f64 (400 iters, 64 clusters)", 5, || {
+        let _: Vec<_> = ps.iter().map(|p| pgd::solve(p, lam_e, 400)).collect();
+    });
+    common::bench_n("greedy carbon baseline (64 clusters)", 20, || {
+        let _: Vec<_> = ps.iter().map(|p| baselines::greedy_carbon(p, &p.eta)).collect();
+    });
+
+    common::section("solution quality on the exact objective (lower is better)");
+    let qual = |name: &str, f: &dyn Fn(&ClusterProblem) -> [f64; HOURS_PER_DAY]| {
+        let objs: Vec<f64> = ps.iter().map(|p| p.objective(&f(p), lam_e)).collect();
+        let total: f64 = objs.iter().sum();
+        println!("  {name:<40} total objective {total:>14.1}");
+        total
+    };
+    let o_unshaped = qual("unshaped (delta = 0)", &|_p| [0.0; HOURS_PER_DAY]);
+    let o_greedy = qual("greedy carbon", &|p| baselines::greedy_carbon(p, &p.eta).delta);
+    let o_native = qual("rust PGD 400", &|p| pgd::solve(p, lam_e, 400).delta);
+    if let Some(rt) = &rt {
+        let sols = rt.solve(&ps, lam_e).unwrap();
+        let objs: Vec<f64> =
+            ps.iter().zip(&sols).map(|(p, s)| p.objective(&s.delta, lam_e)).collect();
+        let o_art: f64 = objs.iter().sum();
+        println!("  {:<40} total objective {:>14.1}", "AOT artifact", o_art);
+        println!(
+            "  artifact vs native objective gap: {:+.4}%",
+            100.0 * (o_art - o_native) / o_native.abs()
+        );
+    }
+    println!(
+        "  improvement over unshaped: greedy {:.2}%, pgd {:.2}%",
+        100.0 * (o_unshaped - o_greedy) / o_unshaped.abs(),
+        100.0 * (o_unshaped - o_native) / o_unshaped.abs()
+    );
+
+    common::section("iteration-count ablation (rust PGD, convergence)");
+    let p = &ps[0];
+    let ref_obj = p.objective(&pgd::solve(p, lam_e, 3200).delta, lam_e);
+    println!("  {:>7} {:>16} {:>12}", "iters", "objective", "gap to 3200");
+    for iters in [25, 50, 100, 200, 400, 800, 1600] {
+        let obj = p.objective(&pgd::solve(p, lam_e, iters).delta, lam_e);
+        println!(
+            "  {iters:>7} {obj:>16.2} {:>11.4}%",
+            100.0 * (obj - ref_obj) / ref_obj.abs()
+        );
+    }
+
+    common::section("projection microbench");
+    let mut rng = Pcg::new(5, 5);
+    let z: [f64; HOURS_PER_DAY] = std::array::from_fn(|_| rng.uniform(-2.0, 2.0));
+    let lo = [-1.0; HOURS_PER_DAY];
+    let ub = [3.0; HOURS_PER_DAY];
+    common::bench_n("project_sum_zero_box (48-iter bisection)", 2000, || {
+        let _ = pgd::project_sum_zero_box(&z, &lo, &ub);
+    });
+
+    // quality stats for EXPERIMENTS.md
+    let gaps: Vec<f64> = ps
+        .iter()
+        .map(|p| {
+            let g = p.objective(&baselines::greedy_carbon(p, &p.eta).delta, lam_e);
+            let n = p.objective(&pgd::solve(p, lam_e, 400).delta, lam_e);
+            100.0 * (g - n) / n.abs()
+        })
+        .collect();
+    println!(
+        "\nper-cluster greedy-vs-pgd objective gap: median {:.2}%, p90 {:.2}%",
+        stats::median(&gaps),
+        stats::quantile(&gaps, 0.9)
+    );
+}

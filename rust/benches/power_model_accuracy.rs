@@ -1,0 +1,99 @@
+//! §III-A reproduction: the power-models pipeline claims — daily MAPE of
+//! the piecewise-linear PD power model < 5% for > 95% of power domains,
+//! and PD usage-share (lambda) variation ~1% median — plus the §III-B3
+//! carbon-forecast MAPE band (0.4–26% across zones and horizons).
+//!
+//! Run: `cargo bench --bench power_model_accuracy`
+
+mod common;
+
+use cics::config::GridArchetype;
+use cics::coordinator::Simulation;
+use cics::grid::{CarbonForecaster, GridZone};
+use cics::power;
+use cics::report;
+use cics::util::ascii;
+use cics::util::stats;
+
+fn main() {
+    common::section("III-A — PD power-model accuracy (daily retrain, held-out day)");
+    let cfg = common::standard_campus(24);
+    let (sim, secs) = common::timed(|| {
+        let mut sim = Simulation::new(cfg);
+        sim.shaping_enabled = false;
+        sim.run_days(30);
+        sim
+    });
+    println!("30 days x 24 clusters simulated in {secs:.1}s");
+
+    // retrain on trailing 14 days, evaluate on the last recorded day
+    let end_day = 29;
+    let mut mapes = Vec::new();
+    for cluster in &sim.fleet.clusters {
+        for rep in power::train_cluster_models(cluster, &sim.store, end_day, 14) {
+            if rep.mape.is_finite() {
+                mapes.push(rep.mape);
+            }
+        }
+    }
+    println!("{}", ascii::histogram("PD daily MAPE (%)", &mapes, 0.0, 10.0, 20));
+    let under5 = mapes.iter().filter(|&&m| m < 5.0).count() as f64 / mapes.len() as f64;
+    println!(
+        "SHAPE CHECK: MAPE < 5% for {:.1}% of {} PDs (paper: >95%) {}",
+        100.0 * under5,
+        mapes.len(),
+        if under5 > 0.95 { "OK" } else { "MISS" }
+    );
+
+    common::section("III-A — lambda(PD) usage-share variation");
+    let mut variations = Vec::new();
+    for cluster in &sim.fleet.clusters {
+        variations.extend(power::lambda_variation(&sim.store, cluster, end_day, 14));
+    }
+    let median_var = stats::median(&variations) * 100.0;
+    println!(
+        "median relative share variation: {median_var:.2}% (paper: ~1%) {}",
+        if median_var < 3.0 { "OK" } else { "MISS" }
+    );
+
+    common::section("III-B3 — day-ahead carbon forecast MAPE across zones/horizons");
+    let fcster = CarbonForecaster::default();
+    let mut rows = Vec::new();
+    let mut all_mapes = Vec::new();
+    for (i, arche) in GridArchetype::ALL.iter().enumerate() {
+        for (j, skill) in [0.0, 0.5, 1.0].iter().enumerate() {
+            let z = GridZone::new(11, (i * 8 + j) as u64, &format!("z-{}-{j}", arche.name()), *arche, *skill);
+            let mut apes = Vec::new();
+            for d in 0..60 {
+                let fc = fcster.day_ahead(&z, d);
+                apes.extend(fcster.evaluate(&z, &fc));
+            }
+            let mape = stats::mean(&apes);
+            all_mapes.push(mape);
+            rows.push(format!("{},{skill},{mape:.3}", arche.name()));
+            println!("  {:<16} skill {:>3.1}: MAPE {:>6.2}%", arche.name(), skill, mape);
+        }
+    }
+    let lo = all_mapes.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all_mapes.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "range {lo:.2}% – {hi:.2}%  (paper: 0.4% – 26%) {}",
+        if lo < 3.0 && hi > 8.0 && hi < 35.0 { "OK" } else { "MISS" }
+    );
+    report::write_csv(
+        std::path::Path::new("reports/carbon_forecast_mape.csv"),
+        "zone,skill,mape_pct",
+        &rows,
+    )
+    .unwrap();
+
+    common::section("microbench — pipeline hot paths");
+    let cluster = &sim.fleet.clusters[0];
+    common::bench_n("train_cluster_models (4 PDs, 14 days)", 10, || {
+        let _ = power::train_cluster_models(cluster, &sim.store, end_day, 14);
+    });
+    let zone = GridZone::new(1, 1, "bench", GridArchetype::Mixed, 0.5);
+    common::bench_n("carbon day_ahead forecast (1 zone-day)", 50, || {
+        let _ = fcster.day_ahead(&zone, 30);
+    });
+}

@@ -1,0 +1,346 @@
+//! Scenario configuration: fleet topology, grid zones, workload archetypes,
+//! optimizer weights and SLO parameters.
+//!
+//! Configs are JSON files (see `configs/`); every field has a sensible
+//! default so a scenario can be described by deltas only. `ScenarioConfig`
+//! is the single source of truth handed to the builders in `fleet/`,
+//! `grid/` and `workload/`.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Cluster workload archetype (paper §IV clusters X / Y / Z).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Archetype {
+    /// Large, predictable flexible share (paper's cluster X).
+    FlexPredictable,
+    /// Large but noisy flexible share (cluster Y).
+    FlexNoisy,
+    /// Small flexible share relative to inflexible (cluster Z).
+    MostlyInflexible,
+}
+
+impl Archetype {
+    pub fn parse(s: &str) -> Option<Archetype> {
+        match s {
+            "flex_predictable" | "x" | "X" => Some(Archetype::FlexPredictable),
+            "flex_noisy" | "y" | "Y" => Some(Archetype::FlexNoisy),
+            "mostly_inflexible" | "z" | "Z" => Some(Archetype::MostlyInflexible),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Archetype::FlexPredictable => "flex_predictable",
+            Archetype::FlexNoisy => "flex_noisy",
+            Archetype::MostlyInflexible => "mostly_inflexible",
+        }
+    }
+}
+
+/// Grid generation archetype determining the intraday carbon shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridArchetype {
+    /// High solar share: deep midday carbon dip (duck curve).
+    SolarHeavy,
+    /// High wind share: stochastic, often lower at night.
+    WindHeavy,
+    /// Coal baseload + gas peakers: midday/evening carbon peak.
+    FossilPeaker,
+    /// Hydro/nuclear dominated: flat and low.
+    LowCarbonBase,
+    /// Mixed portfolio.
+    Mixed,
+}
+
+impl GridArchetype {
+    pub fn parse(s: &str) -> Option<GridArchetype> {
+        match s {
+            "solar_heavy" => Some(GridArchetype::SolarHeavy),
+            "wind_heavy" => Some(GridArchetype::WindHeavy),
+            "fossil_peaker" => Some(GridArchetype::FossilPeaker),
+            "low_carbon_base" => Some(GridArchetype::LowCarbonBase),
+            "mixed" => Some(GridArchetype::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridArchetype::SolarHeavy => "solar_heavy",
+            GridArchetype::WindHeavy => "wind_heavy",
+            GridArchetype::FossilPeaker => "fossil_peaker",
+            GridArchetype::LowCarbonBase => "low_carbon_base",
+            GridArchetype::Mixed => "mixed",
+        }
+    }
+
+    pub const ALL: [GridArchetype; 5] = [
+        GridArchetype::SolarHeavy,
+        GridArchetype::WindHeavy,
+        GridArchetype::FossilPeaker,
+        GridArchetype::LowCarbonBase,
+        GridArchetype::Mixed,
+    ];
+}
+
+/// One campus (datacenter site) in the scenario.
+#[derive(Clone, Debug)]
+pub struct CampusConfig {
+    pub name: String,
+    pub grid: GridArchetype,
+    /// Number of clusters on the campus.
+    pub clusters: usize,
+    /// Contractual power limit (kW); `f64::INFINITY` = uncapped.
+    pub contract_limit_kw: f64,
+    /// Archetype mix: fractions (X, Y, Z), normalized by the builder.
+    pub archetype_mix: (f64, f64, f64),
+}
+
+/// Optimizer weights and risk parameters (paper eq. (4) and §III-B2).
+#[derive(Clone, Debug)]
+pub struct OptimizerConfig {
+    /// $ / kg CO2e — weight on carbon footprint.
+    pub lambda_e: f64,
+    /// $ / kW / day — weight on cluster daily power peaks.
+    pub lambda_p: f64,
+    /// Power-capping exceedance probability gamma.
+    pub gamma: f64,
+    /// Daily-capacity SLO quantile (0.97 in the paper: <= ~1 violation/month).
+    pub slo_quantile: f64,
+    /// Lower bound for hourly flexible deviation delta (>= -1).
+    pub delta_min: f64,
+    /// Upper bound for hourly flexible deviation delta.
+    pub delta_max: f64,
+    /// Projected-gradient iterations for the rust-native solver.
+    pub iters: usize,
+    /// Use the AOT JAX artifact when available.
+    pub use_artifact: bool,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            lambda_e: 0.06,
+            lambda_p: 0.25,
+            gamma: 0.01,
+            slo_quantile: 0.97,
+            delta_min: -1.0,
+            delta_max: 3.0,
+            iters: 400,
+            use_artifact: true,
+        }
+    }
+}
+
+/// SLO guard / feedback-loop parameters (paper §III-B2).
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Consecutive near-violation days before shaping is paused.
+    pub trigger_days: usize,
+    /// Pause duration in days ("stop shaping for a week").
+    pub pause_days: usize,
+    /// Reservations within this fraction of the daily cap count as a
+    /// near-violation day.
+    pub near_fraction: f64,
+    /// Days of history required before a cluster becomes shapeable.
+    pub min_history_days: usize,
+    /// Floor on the relative risk buffer in Theta: even with a short or
+    /// benign error history, the daily capacity requirement is at least
+    /// `(1 + min_buffer) * T_R_hat`. The paper's shaped clusters carry
+    /// 18-33% headroom over average demand (Figs 9-10); the quantile term
+    /// alone underestimates that until ~90 days of errors accumulate.
+    pub min_buffer: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            trigger_days: 2,
+            pause_days: 7,
+            near_fraction: 0.995,
+            min_history_days: 21,
+            min_buffer: 0.06,
+        }
+    }
+}
+
+/// Top-level scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub seed: u64,
+    pub campuses: Vec<CampusConfig>,
+    pub optimizer: OptimizerConfig,
+    pub slo: SloConfig,
+    /// Power domains per cluster.
+    pub pds_per_cluster: usize,
+    /// Machines per power domain ("a single PD typically has a few
+    /// thousand machines").
+    pub machines_per_pd: usize,
+    /// Simulated days of warmup history generated before day 0.
+    pub history_days: usize,
+    /// Directory with AOT artifacts.
+    pub artifact_dir: String,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 20210212,
+            campuses: vec![CampusConfig {
+                name: "campus-a".into(),
+                grid: GridArchetype::FossilPeaker,
+                clusters: 12,
+                contract_limit_kw: f64::INFINITY,
+                archetype_mix: (0.5, 0.3, 0.2),
+            }],
+            optimizer: OptimizerConfig::default(),
+            slo: SloConfig::default(),
+            pds_per_cluster: 4,
+            machines_per_pd: 2000,
+            history_days: 35,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Parse a scenario from JSON text. Unknown fields are ignored;
+    /// missing fields take defaults.
+    pub fn from_json(text: &str) -> anyhow::Result<ScenarioConfig> {
+        let j = Json::parse(text)?;
+        let mut cfg = ScenarioConfig {
+            seed: j.f64_or("seed", 20210212.0) as u64,
+            ..ScenarioConfig::default()
+        };
+        cfg.pds_per_cluster = j.usize_or("pds_per_cluster", cfg.pds_per_cluster);
+        cfg.machines_per_pd = j.usize_or("machines_per_pd", cfg.machines_per_pd);
+        cfg.history_days = j.usize_or("history_days", cfg.history_days);
+        cfg.artifact_dir = j.str_or("artifact_dir", &cfg.artifact_dir).to_string();
+
+        if let Some(arr) = j.get("campuses").and_then(Json::as_arr) {
+            cfg.campuses = arr
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let mix = c.get("archetype_mix").and_then(Json::as_arr);
+                    let mixv = |k: usize, d: f64| {
+                        mix.and_then(|m| m.get(k)).and_then(Json::as_f64).unwrap_or(d)
+                    };
+                    CampusConfig {
+                        name: c.str_or("name", &format!("campus-{i}")).to_string(),
+                        grid: GridArchetype::parse(c.str_or("grid", "mixed"))
+                            .unwrap_or(GridArchetype::Mixed),
+                        clusters: c.usize_or("clusters", 8),
+                        contract_limit_kw: c.f64_or("contract_limit_kw", f64::INFINITY),
+                        archetype_mix: (mixv(0, 0.5), mixv(1, 0.3), mixv(2, 0.2)),
+                    }
+                })
+                .collect();
+        }
+        if let Some(o) = j.get("optimizer") {
+            cfg.optimizer.lambda_e = o.f64_or("lambda_e", cfg.optimizer.lambda_e);
+            cfg.optimizer.lambda_p = o.f64_or("lambda_p", cfg.optimizer.lambda_p);
+            cfg.optimizer.gamma = o.f64_or("gamma", cfg.optimizer.gamma);
+            cfg.optimizer.slo_quantile = o.f64_or("slo_quantile", cfg.optimizer.slo_quantile);
+            cfg.optimizer.delta_min = o.f64_or("delta_min", cfg.optimizer.delta_min);
+            cfg.optimizer.delta_max = o.f64_or("delta_max", cfg.optimizer.delta_max);
+            cfg.optimizer.iters = o.usize_or("iters", cfg.optimizer.iters);
+            cfg.optimizer.use_artifact = o.bool_or("use_artifact", cfg.optimizer.use_artifact);
+        }
+        if let Some(s) = j.get("slo") {
+            cfg.slo.trigger_days = s.usize_or("trigger_days", cfg.slo.trigger_days);
+            cfg.slo.pause_days = s.usize_or("pause_days", cfg.slo.pause_days);
+            cfg.slo.near_fraction = s.f64_or("near_fraction", cfg.slo.near_fraction);
+            cfg.slo.min_history_days = s.usize_or("min_history_days", cfg.slo.min_history_days);
+            cfg.slo.min_buffer = s.f64_or("min_buffer", cfg.slo.min_buffer);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> anyhow::Result<ScenarioConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.campuses.is_empty(), "at least one campus required");
+        anyhow::ensure!(self.optimizer.delta_min >= -1.0, "delta_min must be >= -1");
+        anyhow::ensure!(
+            self.optimizer.delta_min <= 0.0 && self.optimizer.delta_max >= 0.0,
+            "delta bounds must bracket 0 (delta = 0 must stay feasible)"
+        );
+        anyhow::ensure!(
+            (0.5..1.0).contains(&self.optimizer.slo_quantile),
+            "slo_quantile must be in [0.5, 1)"
+        );
+        anyhow::ensure!(self.optimizer.gamma > 0.0 && self.optimizer.gamma < 0.5, "gamma");
+        for c in &self.campuses {
+            anyhow::ensure!(c.clusters > 0, "campus {} has no clusters", c.name);
+        }
+        Ok(())
+    }
+
+    /// Total cluster count across campuses.
+    pub fn total_clusters(&self) -> usize {
+        self.campuses.iter().map(|c| c.clusters).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ScenarioConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ScenarioConfig::from_json(
+            r#"{
+              "seed": 7,
+              "pds_per_cluster": 3,
+              "campuses": [
+                {"name": "eu-west", "grid": "wind_heavy", "clusters": 5,
+                 "contract_limit_kw": 5000, "archetype_mix": [0.6, 0.2, 0.2]},
+                {"name": "us-central", "grid": "fossil_peaker", "clusters": 2}
+              ],
+              "optimizer": {"lambda_e": 0.1, "iters": 100},
+              "slo": {"pause_days": 5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.campuses.len(), 2);
+        assert_eq!(cfg.campuses[0].grid, GridArchetype::WindHeavy);
+        assert_eq!(cfg.campuses[0].contract_limit_kw, 5000.0);
+        assert_eq!(cfg.campuses[1].clusters, 2);
+        assert_eq!(cfg.optimizer.lambda_e, 0.1);
+        assert_eq!(cfg.optimizer.iters, 100);
+        assert_eq!(cfg.slo.pause_days, 5);
+        assert_eq!(cfg.total_clusters(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_delta_bounds() {
+        let bad = r#"{"optimizer": {"delta_min": -2.0}}"#;
+        assert!(ScenarioConfig::from_json(bad).is_err());
+        let bad2 = r#"{"optimizer": {"delta_min": 0.5}}"#;
+        assert!(ScenarioConfig::from_json(bad2).is_err());
+    }
+
+    #[test]
+    fn archetype_parsing() {
+        assert_eq!(Archetype::parse("X"), Some(Archetype::FlexPredictable));
+        assert_eq!(Archetype::parse("flex_noisy"), Some(Archetype::FlexNoisy));
+        assert_eq!(Archetype::parse("bogus"), None);
+        for g in GridArchetype::ALL {
+            assert_eq!(GridArchetype::parse(g.name()), Some(g));
+        }
+    }
+}

@@ -1,0 +1,568 @@
+//! The CICS coordinator: owns the fleet simulation loop and the daily
+//! analytics pipelines of Fig 4/5 — carbon fetching, power-model
+//! retraining, load forecasting, risk-aware optimization, SLO guard, and
+//! VCC distribution with safety checks.
+//!
+//! One `Simulation::run_day()` =
+//!   1. real-time day: every cluster's scheduler advances 288 ticks under
+//!      the VCC pushed *yesterday* (clusters fan out over threads);
+//!   2. telemetry lands in the store; forecasters and the SLO guard
+//!      observe the completed day;
+//!   3. the day-ahead cycle runs (paper Fig 5: pipelines by 13:00 PST,
+//!      optimizer at 14:00, distribution before midnight): forecasts →
+//!      problems → solve (AOT artifact via PJRT, or native fallback) →
+//!      campus contract sweep → safety-checked VCCs for tomorrow.
+
+pub mod summary;
+
+use crate::config::ScenarioConfig;
+use crate::fleet::Fleet;
+use crate::forecast::{ApeCollector, LoadForecaster};
+use crate::grid::{CarbonForecaster, GridZone};
+use crate::optimizer::{self, baselines, campus, pgd, ClusterProblem, ClusterSolution, Unshapeable};
+use crate::power::{self, ClusterPowerModel};
+use crate::runtime::Runtime;
+use crate::scheduler::{ClusterScheduler, DayOutcome};
+use crate::telemetry::{ClusterDayRecord, TelemetryStore};
+use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY};
+use crate::vcc::{Rollout, SloGuard, SloState, Vcc};
+use crate::workload::WorkloadModel;
+
+pub use summary::{DaySummary, FleetMetrics};
+
+/// Which solver backend executed the day-ahead optimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverBackend {
+    /// AOT JAX/Pallas artifact through PJRT.
+    Artifact,
+    /// Rust-native projected gradient.
+    Native,
+    /// Greedy carbon baseline (for ablation runs).
+    GreedyBaseline,
+}
+
+/// Per-cluster-day treatment decision for controlled experiments
+/// (Fig 12): `true` = receive shaping.
+pub type TreatmentFn = Box<dyn Fn(usize, usize) -> bool + Send + Sync>;
+
+/// Days of full telemetry kept for training windows.
+const RETAIN_DAYS: usize = 35;
+/// Trailing days used to train power models.
+const POWER_TRAIN_DAYS: usize = 14;
+
+pub struct Simulation {
+    pub cfg: ScenarioConfig,
+    pub fleet: Fleet,
+    pub zones: Vec<GridZone>, // indexed by campus id
+    pub workloads: Vec<WorkloadModel>,
+    pub schedulers: Vec<ClusterScheduler>,
+    pub forecasters: Vec<LoadForecaster>,
+    pub slo_guard: SloGuard,
+    pub slo_states: Vec<SloState>,
+    pub store: TelemetryStore,
+    pub ape: ApeCollector,
+    pub carbon_fc: CarbonForecaster,
+    pub runtime: Option<Runtime>,
+    pub rollout: Rollout,
+    pub backend: SolverBackend,
+    /// VCC to apply per cluster on the *current* day (computed yesterday).
+    pub today_vccs: Vec<Option<Vcc>>,
+    /// Optional per-(cluster, day) treatment gate (controlled experiment).
+    pub treatment: Option<TreatmentFn>,
+    /// Master switch: if false the whole system runs unshaped.
+    pub shaping_enabled: bool,
+    /// Spatial-shifting extension (paper §V): when Some(movable_fraction),
+    /// a day-ahead spatial pass moves that fraction of flexible demand
+    /// across campuses toward lower-carbon locations.
+    pub spatial_movable_fraction: Option<f64>,
+    /// Next-day flexible-demand scale per cluster realized by the spatial
+    /// plan (1.0 = no transfer).
+    spatial_scale: Vec<f64>,
+    /// Cumulative spatial stats: (moved GCU-h, expected saving kg).
+    pub spatial_totals: (f64, f64),
+    pub day: usize,
+    pub metrics: FleetMetrics,
+    /// Unshapeable-cause counters for the most recent planning cycle.
+    pub last_unshapeable: Vec<(usize, Unshapeable)>,
+    threads: usize,
+}
+
+impl Simulation {
+    /// Build a simulation from config. Attempts to load AOT artifacts from
+    /// `cfg.artifact_dir`; falls back to the native solver.
+    pub fn new(cfg: ScenarioConfig) -> Simulation {
+        let fleet = Fleet::build(&cfg);
+        let zones = fleet
+            .campuses
+            .iter()
+            .map(|c| GridZone::new(cfg.seed, c.id as u64, &c.name, c.grid, c.id as f64 * 0.23 % 1.0))
+            .collect();
+        let workloads =
+            fleet.clusters.iter().map(|c| WorkloadModel::for_cluster(cfg.seed, c)).collect();
+        let schedulers = fleet.clusters.iter().map(|c| ClusterScheduler::new(c.id)).collect();
+        let forecasters = fleet.clusters.iter().map(|c| LoadForecaster::new(c.id)).collect();
+        let slo_states = fleet.clusters.iter().map(|_| SloState::default()).collect();
+        let n = fleet.clusters.len();
+        let runtime = if cfg.optimizer.use_artifact {
+            Runtime::load_default(&cfg.artifact_dir)
+        } else {
+            None
+        };
+        let backend =
+            if runtime.is_some() { SolverBackend::Artifact } else { SolverBackend::Native };
+        let slo_guard = SloGuard::new(cfg.slo.clone(), cfg.optimizer.slo_quantile);
+        Simulation {
+            fleet,
+            zones,
+            workloads,
+            schedulers,
+            forecasters,
+            slo_guard,
+            slo_states,
+            store: TelemetryStore::new(n),
+            ape: ApeCollector::new(n),
+            carbon_fc: CarbonForecaster::default(),
+            runtime,
+            rollout: Rollout::immediate(),
+            backend,
+            today_vccs: vec![None; n],
+            treatment: None,
+            shaping_enabled: true,
+            spatial_movable_fraction: None,
+            spatial_scale: vec![1.0; n],
+            spatial_totals: (0.0, 0.0),
+            day: 0,
+            metrics: FleetMetrics::new(n),
+            last_unshapeable: Vec::new(),
+            threads: crate::util::threadpool::ThreadPool::default_size(),
+            cfg,
+        }
+    }
+
+    /// Which backend is live.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            SolverBackend::Artifact => "jax-pallas-artifact(pjrt)",
+            SolverBackend::Native => "rust-native-pgd",
+            SolverBackend::GreedyBaseline => "greedy-carbon",
+        }
+    }
+
+    /// Simulate one full day, then run the day-ahead cycle for tomorrow.
+    pub fn run_day(&mut self) {
+        let day = self.day;
+        // ---- 1. real-time day, clusters in parallel ------------------------
+        let fleet = &self.fleet;
+        let workloads = &self.workloads;
+        let vccs = &self.today_vccs;
+        let spatial_scale = &self.spatial_scale;
+        let seed = self.cfg.seed;
+        let results: Vec<(ClusterDayRecord, DayOutcome)> = {
+            let scheds = &mut self.schedulers;
+            let n = scheds.len();
+            let threads = self.threads.min(n.max(1));
+            let chunk = n.div_ceil(threads);
+            let mut out: Vec<Option<(ClusterDayRecord, DayOutcome)>> =
+                (0..n).map(|_| None).collect();
+            std::thread::scope(|s| {
+                for ((sched_chunk, out_chunk), base) in scheds
+                    .chunks_mut(chunk)
+                    .zip(out.chunks_mut(chunk))
+                    .zip((0..n).step_by(chunk))
+                {
+                    s.spawn(move || {
+                        for (i, (sched, slot)) in
+                            sched_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
+                        {
+                            let cid = base + i;
+                            let cluster = &fleet.clusters[cid];
+                            let model = &workloads[cid];
+                            let vcc = vccs[cid].as_ref();
+                            let mut rec = ClusterDayRecord::new(cluster, day);
+                            let mut outc = DayOutcome::default();
+                            let scale = spatial_scale[cid];
+                            for tick in 0..TICKS_PER_DAY {
+                                sched.tick_scaled(
+                                    cluster,
+                                    model,
+                                    vcc,
+                                    SimTime::new(day, tick),
+                                    &mut rec,
+                                    &mut outc,
+                                    scale,
+                                );
+                            }
+                            sched.end_day(&mut outc);
+                            rec.flex_backlog_gcuh = outc.queued_end_gcuh;
+                            rec.flex_done_gcuh = outc.completed_gcuh;
+                            rec.flex_submitted_gcuh = outc.submitted_gcuh;
+                            rec.shaped = vcc.map(|v| v.shaped).unwrap_or(false);
+                            let _ = seed;
+                            *slot = Some((rec, outc));
+                        }
+                    });
+                }
+            });
+            out.into_iter().map(|o| o.unwrap()).collect()
+        };
+
+        // ---- 2. carbon truth, metrics, forecaster + SLO observation --------
+        // carbon truth once per campus (weather unrolls an O(day) AR(1)
+        // chain — recomputing it per cluster dominated the serial phase)
+        let carbon_truth: Vec<[f64; HOURS_PER_DAY]> =
+            self.zones.iter().map(|z| z.intensity_day(day)).collect();
+        let mut recs = Vec::with_capacity(results.len());
+        for (mut rec, outcome) in results {
+            let cid = rec.cluster_id;
+            let campus = self.fleet.clusters[cid].campus_id;
+            rec.carbon_hourly = carbon_truth[campus];
+            // forecaster bookkeeping (APEs realized against yesterday's
+            // prediction for today)
+            if let Some(apes) = self.forecasters[cid].observe_day(&rec) {
+                self.ape.record(cid, &apes);
+            }
+            // SLO guard
+            let tr_actual = rec.daily_reservations();
+            let cap_daily = self.today_vccs[cid]
+                .as_ref()
+                .filter(|v| v.shaped)
+                .map(|v| v.daily_total())
+                .unwrap_or(f64::INFINITY);
+            // flexible work unmet if backlog exceeds half a nominal day
+            let flex_unmet = outcome.queued_end_gcuh
+                > 0.5 * self.workloads[cid].flex_level * self.workloads[cid].capacity_gcu * 24.0
+                && self.today_vccs[cid].as_ref().map(|v| v.shaped).unwrap_or(false);
+            let tr_hat_yesterday = self.metrics.tr_hat(cid, day);
+            self.slo_guard.observe_day(
+                &mut self.slo_states[cid],
+                day,
+                tr_hat_yesterday.unwrap_or(tr_actual),
+                tr_actual,
+                cap_daily,
+                flex_unmet,
+            );
+            self.metrics.record_day(&rec, &outcome, self.today_vccs[cid].as_ref());
+            recs.push(rec);
+        }
+        for rec in recs {
+            self.store.push(rec);
+        }
+        if day > RETAIN_DAYS {
+            self.store.prune_before(day - RETAIN_DAYS);
+        }
+
+        // ---- 3. day-ahead cycle for tomorrow -------------------------------
+        self.plan_next_day();
+        self.day += 1;
+    }
+
+    /// Run `n` consecutive days.
+    pub fn run_days(&mut self, n: usize) {
+        for _ in 0..n {
+            self.run_day();
+        }
+    }
+
+    /// The day-ahead cycle (Fig 5): produce `today_vccs` for day+1.
+    fn plan_next_day(&mut self) {
+        let next = self.day + 1;
+        let n = self.fleet.clusters.len();
+        self.last_unshapeable.clear();
+
+        // Carbon fetching pipeline: day-ahead forecast per campus zone.
+        let carbon: Vec<[f64; HOURS_PER_DAY]> = self
+            .zones
+            .iter()
+            .map(|z| self.carbon_fc.day_ahead(z, next).hourly)
+            .collect();
+
+        // Which clusters can possibly shape tomorrow? (master switch,
+        // rollout wave, SLO pause, forecaster maturity, treatment gate)
+        let shapeable: Vec<bool> = (0..n)
+            .map(|cid| {
+                self.shaping_enabled
+                    && self.rollout.enabled(cid, next)
+                    && self.slo_guard.shaping_allowed(
+                        &self.slo_states[cid],
+                        next,
+                        self.forecasters[cid].days_observed(),
+                    )
+                    && self.treatment.as_ref().map(|t| t(cid, next)).unwrap_or(true)
+            })
+            .collect();
+
+        // Power models pipeline: retrain per cluster (parallel fan-out).
+        // Perf: retraining is ~half the per-cluster-day cost, so skip it
+        // for clusters that cannot shape tomorrow — their VCC is the
+        // machine-capacity fallback and never consults the model.
+        let fleet = &self.fleet;
+        let store = &self.store;
+        let day = self.day;
+        let shapeable_ref = &shapeable;
+        let cluster_power: Vec<Option<ClusterPowerModel>> =
+            crate::util::threadpool::parallel_map(n, self.threads, |cid| {
+                if !shapeable_ref[cid] {
+                    return None;
+                }
+                let reports =
+                    power::train_cluster_models(&fleet.clusters[cid], store, day, POWER_TRAIN_DAYS);
+                Some(ClusterPowerModel::from_reports(&fleet.clusters[cid], &reports))
+            });
+
+        // Load forecasting pipeline.
+        let forecasts: Vec<crate::forecast::DayAheadForecast> = (0..n)
+            .map(|cid| self.forecasters[cid].predict(next, self.cfg.optimizer.gamma))
+            .collect();
+
+        // Spatial pass (paper §V extension): reassign movable flexible
+        // demand across campuses toward lower forecast carbon before the
+        // temporal optimization. Realized by scaling tomorrow's arrival
+        // rates (donors < 1, receivers > 1).
+        self.spatial_scale = vec![1.0; n];
+        if let Some(movable) = self.spatial_movable_fraction {
+            let views: Vec<crate::spatial::SpatialCluster> = (0..n)
+                .map(|cid| {
+                    let cluster = &self.fleet.clusters[cid];
+                    let fc = &forecasts[cid];
+                    let u_if_mean =
+                        fc.u_if_hat.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+                    let slope = cluster_power[cid]
+                        .as_ref()
+                        .map(|m| m.slope(u_if_mean + fc.tuf_hat / 24.0))
+                        .unwrap_or(0.15);
+                    crate::spatial::spatial_view(
+                        cid,
+                        cluster.campus_id,
+                        fc.tuf_hat,
+                        if shapeable[cid] { movable } else { 0.0 },
+                        &carbon[cluster.campus_id],
+                        cluster.capacity_gcu,
+                        u_if_mean,
+                        slope,
+                    )
+                })
+                .collect();
+            let plan = crate::spatial::plan_spatial(&views, 0.03);
+            for &(cid, delta) in &plan.delta_gcuh {
+                let base = forecasts[cid].tuf_hat;
+                if base > 1e-6 {
+                    self.spatial_scale[cid] = ((base + delta) / base).max(0.0);
+                }
+            }
+            self.spatial_totals.0 += plan.total_moved_gcuh;
+            self.spatial_totals.1 += plan.total_saving_kg;
+        }
+
+        // Problem assembly.
+        let mut problems: Vec<ClusterProblem> = Vec::new();
+        let mut vccs: Vec<Option<Vcc>> = vec![None; n];
+        for cid in 0..n {
+            let cluster = &self.fleet.clusters[cid];
+            let mut fc = forecasts[cid].clone();
+            // fold the spatial transfer into the temporal problem's demand
+            fc.tuf_hat *= self.spatial_scale[cid];
+            fc.tr_hat *= 0.5 + 0.5 * self.spatial_scale[cid]; // flexible ~half of resv
+            self.metrics.note_forecast(cid, next, fc.tr_hat);
+            if !shapeable[cid] {
+                let cause = if !self.slo_guard.shaping_allowed(
+                    &self.slo_states[cid],
+                    next,
+                    self.forecasters[cid].days_observed(),
+                ) {
+                    Unshapeable::SloPaused
+                } else {
+                    Unshapeable::RolloutPending
+                };
+                self.last_unshapeable.push((cid, cause));
+                vccs[cid] = Some(Vcc::unshaped(cid, next, cluster.capacity_gcu));
+                continue;
+            }
+            // Risk-aware daily flexible usage tau (Theta + alpha, eq. (3)).
+            let theta = self.slo_guard.theta(&self.slo_states[cid], fc.tr_hat);
+            let alpha =
+                self.slo_guard.alpha(theta, &fc.u_if_hat, fc.tuf_hat, &fc.ratio_hat);
+            let tau = match alpha {
+                Some(a) => a * fc.tuf_hat,
+                None => {
+                    self.last_unshapeable.push((cid, Unshapeable::NoRoom));
+                    vccs[cid] = Some(Vcc::unshaped(cid, next, cluster.capacity_gcu));
+                    continue;
+                }
+            };
+            match optimizer::assemble(
+                cid,
+                &fc,
+                &carbon[cluster.campus_id],
+                tau,
+                cluster_power[cid]
+                    .as_ref()
+                    .expect("shapeable cluster has a trained model")
+                    .to_single_pwl(cluster.capacity_gcu),
+                cluster.power_cap_gcu,
+                cluster.capacity_gcu,
+                self.cfg.optimizer.lambda_p,
+                self.cfg.optimizer.delta_min,
+                self.cfg.optimizer.delta_max,
+            ) {
+                Ok(p) => problems.push(p),
+                Err(cause) => {
+                    self.last_unshapeable.push((cid, cause));
+                    vccs[cid] = Some(Vcc::unshaped(cid, next, cluster.capacity_gcu));
+                }
+            }
+        }
+
+        // Optimization pipeline: per campus (contract coupling), using the
+        // artifact when loaded.
+        let lambda_e = self.cfg.optimizer.lambda_e;
+        let iters = self.cfg.optimizer.iters;
+        let solutions: Vec<ClusterSolution> = {
+            let mut all = Vec::new();
+            for campus_ref in &self.fleet.campuses {
+                let campus_problems: Vec<ClusterProblem> = problems
+                    .iter()
+                    .filter(|p| self.fleet.clusters[p.cluster_id].campus_id == campus_ref.id)
+                    .cloned()
+                    .collect();
+                if campus_problems.is_empty() {
+                    continue;
+                }
+                let runtime = &self.runtime;
+                let backend = self.backend;
+                let solve = |ps: &[ClusterProblem]| -> Vec<ClusterSolution> {
+                    match backend {
+                        SolverBackend::Artifact => match runtime.as_ref().unwrap().solve(ps, lambda_e)
+                        {
+                            Ok(s) => s,
+                            Err(e) => {
+                                eprintln!("artifact solve failed ({e:#}); native fallback");
+                                ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
+                            }
+                        },
+                        SolverBackend::Native => {
+                            ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
+                        }
+                        SolverBackend::GreedyBaseline => {
+                            ps.iter().map(|p| baselines::greedy_carbon(p, &p.eta)).collect()
+                        }
+                    }
+                };
+                let (sols, _mu) =
+                    campus::solve_with_contract(&campus_problems, campus_ref.contract_limit_kw, solve);
+                all.extend(sols);
+            }
+            all
+        };
+
+        // VCC construction + safety checks + distribution.
+        for (p, sol) in problems.iter().zip(solutions.iter()) {
+            debug_assert_eq!(p.cluster_id, sol.cluster_id);
+            let cluster = &self.fleet.clusters[p.cluster_id];
+            let mut delta = [0.0; HOURS_PER_DAY];
+            delta.copy_from_slice(&sol.delta);
+            let vcc = Vcc::from_deltas(
+                p.cluster_id,
+                next,
+                &p.u_if_hat,
+                p.tau,
+                &delta,
+                &p.ratio_hat,
+                cluster.capacity_gcu,
+            );
+            // Safety check: curve must carry at least the inflexible
+            // reservations plus the (non-inflated) flexible forecast.
+            let min_daily: f64 = p
+                .u_if_hat
+                .iter()
+                .zip(p.ratio_hat.iter())
+                .map(|(&u, &r)| u * r)
+                .sum::<f64>();
+            match vcc.safety_check(cluster.capacity_gcu, min_daily) {
+                Ok(()) => vccs[p.cluster_id] = Some(vcc),
+                Err(msg) => {
+                    eprintln!("cluster {}: VCC failed safety check ({msg}); unshaped", p.cluster_id);
+                    vccs[p.cluster_id] =
+                        Some(Vcc::unshaped(p.cluster_id, next, cluster.capacity_gcu));
+                }
+            }
+        }
+        self.today_vccs = vccs;
+    }
+
+    /// Fraction of clusters left unshaped in the last planning cycle.
+    pub fn unshaped_fraction(&self) -> f64 {
+        let unshaped = self
+            .today_vccs
+            .iter()
+            .filter(|v| v.as_ref().map(|v| !v.shaped).unwrap_or(true))
+            .count();
+        unshaped as f64 / self.today_vccs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::default();
+        cfg.campuses[0].clusters = 3;
+        cfg.optimizer.iters = 150;
+        cfg.optimizer.use_artifact = false; // unit tests: native solver
+        cfg
+    }
+
+    #[test]
+    fn warmup_days_run_unshaped_then_shaping_starts() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.run_days(10);
+        // before min history, everything is unshaped
+        assert!(sim.unshaped_fraction() > 0.99);
+        sim.run_days(20);
+        // after warmup most clusters shape (archetype Z may opt out)
+        assert!(
+            sim.unshaped_fraction() < 0.7,
+            "unshaped fraction {} after warmup",
+            sim.unshaped_fraction()
+        );
+        assert_eq!(sim.day, 30);
+    }
+
+    #[test]
+    fn shaped_vcc_respects_capacity_and_safety() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.run_days(30);
+        for (cid, v) in sim.today_vccs.iter().enumerate() {
+            let v = v.as_ref().unwrap();
+            let cap = sim.fleet.clusters[cid].capacity_gcu;
+            assert!(v.hourly.iter().all(|&x| x <= cap * 1.0001 && x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn master_switch_disables_shaping() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.shaping_enabled = false;
+        sim.run_days(30);
+        assert!(sim.unshaped_fraction() > 0.99);
+    }
+
+    #[test]
+    fn treatment_gate_controls_specific_clusters() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.treatment = Some(Box::new(|cid, _day| cid != 0));
+        sim.run_days(30);
+        let v0 = sim.today_vccs[0].as_ref().unwrap();
+        assert!(!v0.shaped, "cluster 0 must stay untreated");
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.run_days(5);
+        assert_eq!(sim.metrics.days(0), 5);
+        let s = sim.metrics.summary(0, 2).unwrap();
+        assert!(s.daily_carbon_kg > 0.0);
+        assert!(s.hourly_power.iter().all(|&p| p > 0.0));
+    }
+}

@@ -1,0 +1,163 @@
+//! Compact per-cluster-day summaries and fleet metrics — the durable
+//! record the benches and reports read (full 5-minute telemetry is pruned
+//! after the training window).
+
+use crate::scheduler::DayOutcome;
+use crate::telemetry::ClusterDayRecord;
+use crate::timebase::HOURS_PER_DAY;
+use crate::vcc::Vcc;
+
+/// Hourly-resolution summary of one cluster-day.
+#[derive(Clone, Debug)]
+pub struct DaySummary {
+    pub cluster_id: usize,
+    pub day: usize,
+    pub shaped: bool,
+    pub hourly_power: [f64; HOURS_PER_DAY],
+    pub hourly_resv: [f64; HOURS_PER_DAY],
+    pub hourly_usage_if: [f64; HOURS_PER_DAY],
+    pub hourly_usage_flex: [f64; HOURS_PER_DAY],
+    pub carbon_intensity: [f64; HOURS_PER_DAY],
+    pub vcc: Option<[f64; HOURS_PER_DAY]>,
+    pub daily_carbon_kg: f64,
+    pub daily_flex_usage_gcuh: f64,
+    pub daily_reservations_gcuh: f64,
+    pub flex_submitted_gcuh: f64,
+    pub flex_done_gcuh: f64,
+    pub flex_backlog_gcuh: f64,
+    pub jobs_paused: usize,
+    pub mean_start_delay_ticks: f64,
+}
+
+/// Fleetwide metrics store: summaries plus forecast bookkeeping.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    /// `per_cluster[cid]` — one summary per simulated day, in order.
+    per_cluster: Vec<Vec<DaySummary>>,
+    /// Day-ahead T_R predictions noted at planning time: (day, tr_hat).
+    tr_hats: Vec<Vec<(usize, f64)>>,
+}
+
+impl FleetMetrics {
+    pub fn new(n_clusters: usize) -> Self {
+        FleetMetrics {
+            per_cluster: vec![Vec::new(); n_clusters],
+            tr_hats: vec![Vec::new(); n_clusters],
+        }
+    }
+
+    pub fn record_day(&mut self, rec: &ClusterDayRecord, out: &DayOutcome, vcc: Option<&Vcc>) {
+        let flex_hourly = ClusterDayRecord::hourly(&rec.usage_flex);
+        let s = DaySummary {
+            cluster_id: rec.cluster_id,
+            day: rec.day,
+            shaped: rec.shaped,
+            hourly_power: rec.hourly_power(),
+            hourly_resv: rec.hourly_reservations(),
+            hourly_usage_if: rec.hourly_usage_if(),
+            hourly_usage_flex: flex_hourly,
+            carbon_intensity: rec.carbon_hourly,
+            vcc: vcc.map(|v| v.hourly),
+            daily_carbon_kg: rec.daily_carbon_kg(),
+            daily_flex_usage_gcuh: rec.daily_flex_usage(),
+            daily_reservations_gcuh: rec.daily_reservations(),
+            flex_submitted_gcuh: rec.flex_submitted_gcuh,
+            flex_done_gcuh: rec.flex_done_gcuh,
+            flex_backlog_gcuh: rec.flex_backlog_gcuh,
+            jobs_paused: out.jobs_paused,
+            mean_start_delay_ticks: out.mean_start_delay_ticks,
+        };
+        self.per_cluster[rec.cluster_id].push(s);
+    }
+
+    pub fn note_forecast(&mut self, cluster: usize, day: usize, tr_hat: f64) {
+        self.tr_hats[cluster].push((day, tr_hat));
+        if self.tr_hats[cluster].len() > 400 {
+            self.tr_hats[cluster].remove(0);
+        }
+    }
+
+    /// The T_R prediction that was issued for (cluster, day), if any.
+    pub fn tr_hat(&self, cluster: usize, day: usize) -> Option<f64> {
+        self.tr_hats[cluster].iter().rev().find(|(d, _)| *d == day).map(|(_, v)| *v)
+    }
+
+    pub fn days(&self, cluster: usize) -> usize {
+        self.per_cluster[cluster].len()
+    }
+
+    pub fn summary(&self, cluster: usize, day: usize) -> Option<&DaySummary> {
+        self.per_cluster[cluster].iter().find(|s| s.day == day)
+    }
+
+    pub fn all(&self, cluster: usize) -> &[DaySummary] {
+        &self.per_cluster[cluster]
+    }
+
+    /// Iterate over all summaries fleetwide.
+    pub fn iter(&self) -> impl Iterator<Item = &DaySummary> {
+        self.per_cluster.iter().flatten()
+    }
+
+    /// Fleet totals for a day: (total power kWh-ish by hour, total carbon kg).
+    pub fn fleet_day(&self, day: usize) -> Option<([f64; HOURS_PER_DAY], f64)> {
+        let mut power = [0.0; HOURS_PER_DAY];
+        let mut carbon = 0.0;
+        let mut found = false;
+        for pc in &self.per_cluster {
+            if let Some(s) = pc.iter().find(|s| s.day == day) {
+                found = true;
+                for h in 0..HOURS_PER_DAY {
+                    power[h] += s.hourly_power[h];
+                }
+                carbon += s.daily_carbon_kg;
+            }
+        }
+        if found {
+            Some((power, carbon))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::fleet::Fleet;
+    use crate::timebase::TICKS_PER_DAY;
+
+    #[test]
+    fn record_and_query() {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let mut m = FleetMetrics::new(fleet.clusters.len());
+        let c = &fleet.clusters[0];
+        let mut rec = ClusterDayRecord::new(c, 0);
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 1000.0, 500.0, 1200.0, 600.0);
+        }
+        rec.carbon_hourly = [0.4; HOURS_PER_DAY];
+        m.record_day(&rec, &DayOutcome::default(), None);
+        assert_eq!(m.days(0), 1);
+        let s = m.summary(0, 0).unwrap();
+        assert!(!s.shaped);
+        assert!(s.vcc.is_none());
+        assert!((s.daily_flex_usage_gcuh - 500.0 * 24.0).abs() < 1e-6);
+        let (power, carbon) = m.fleet_day(0).unwrap();
+        assert!(power.iter().all(|&p| p > 0.0));
+        assert!(carbon > 0.0);
+        assert!(m.fleet_day(3).is_none());
+    }
+
+    #[test]
+    fn forecast_notes() {
+        let mut m = FleetMetrics::new(1);
+        m.note_forecast(0, 5, 123.0);
+        m.note_forecast(0, 6, 456.0);
+        assert_eq!(m.tr_hat(0, 5), Some(123.0));
+        assert_eq!(m.tr_hat(0, 6), Some(456.0));
+        assert_eq!(m.tr_hat(0, 7), None);
+    }
+}

@@ -1,0 +1,158 @@
+//! Controlled experiment harness (paper §IV, Fig 12): every cluster-day is
+//! randomly assigned to treatment (carbon-aware shaping) or control
+//! (unshaped) with p = 0.5; normalized hourly power curves are averaged
+//! over clusters × days per arm, with 95% confidence bands, and compared
+//! against the grid's average hourly carbon intensity.
+
+use crate::config::ScenarioConfig;
+use crate::coordinator::Simulation;
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// Results of a controlled experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    /// Per-hour (mean, 95% CI half-width) normalized power — treated arm.
+    pub treated: [(f64, f64); HOURS_PER_DAY],
+    /// Per-hour (mean, ci95) normalized power — control arm.
+    pub control: [(f64, f64); HOURS_PER_DAY],
+    /// Average hourly carbon intensity over the window (kg/kWh).
+    pub carbon: [f64; HOURS_PER_DAY],
+    /// The top-carbon hours used for the headline drop metric.
+    pub peak_hours: Vec<usize>,
+    /// Mean power drop of treated vs control in the peak-carbon hours (%).
+    pub peak_drop_pct: f64,
+    /// Fraction of cluster-days that were unshapeable despite treatment.
+    pub unshapeable_fraction: f64,
+    pub treated_days: usize,
+    pub control_days: usize,
+}
+
+/// Run the Fig 12 experiment: `warmup` unshaped days to mature the
+/// pipelines, then `measure` days with randomized per-cluster-day
+/// treatment. Returns per-arm normalized power curves.
+pub fn run_controlled(cfg: ScenarioConfig, warmup: usize, measure: usize) -> ExperimentResult {
+    let seed = cfg.seed;
+    let mut sim = Simulation::new(cfg);
+    // Warmup: shaping disabled so the forecasters mature on natural load.
+    sim.shaping_enabled = false;
+    sim.run_days(warmup);
+    // Measurement: randomized treatment per (cluster, day).
+    sim.shaping_enabled = true;
+    sim.treatment = Some(Box::new(move |cid, day| {
+        let mut rng = Pcg::keyed(seed, 0x7EA7, cid as u64, day as u64);
+        rng.chance(0.5)
+    }));
+    sim.run_days(measure);
+    summarize(&sim, warmup + 1, warmup + measure)
+}
+
+/// Build the Fig 12 summary from a finished simulation over a day window.
+pub fn summarize(sim: &Simulation, day_lo: usize, day_hi: usize) -> ExperimentResult {
+    // Per-cluster mean power (for normalization, as the paper normalizes
+    // each cluster's power before averaging).
+    let n = sim.fleet.clusters.len();
+    let mut treated_by_hour: Vec<Vec<f64>> = vec![Vec::new(); HOURS_PER_DAY];
+    let mut control_by_hour: Vec<Vec<f64>> = vec![Vec::new(); HOURS_PER_DAY];
+    let mut carbon_acc = [0.0; HOURS_PER_DAY];
+    let mut carbon_n = 0usize;
+    let (mut treated_days, mut control_days, mut unshapeable) = (0usize, 0usize, 0usize);
+
+    for cid in 0..n {
+        // normalization constant: cluster's mean power over the window
+        let mut all_power = Vec::new();
+        for s in sim.metrics.all(cid) {
+            if s.day < day_lo || s.day > day_hi {
+                continue;
+            }
+            all_power.extend_from_slice(&s.hourly_power);
+        }
+        let norm = stats::mean(&all_power);
+        if norm <= 0.0 {
+            continue;
+        }
+        for s in sim.metrics.all(cid) {
+            if s.day < day_lo || s.day > day_hi {
+                continue;
+            }
+            let treated = sim
+                .treatment
+                .as_ref()
+                .map(|t| t(cid, s.day))
+                .unwrap_or(s.shaped);
+            if treated && !s.shaped {
+                unshapeable += 1;
+            }
+            let arm = if treated {
+                treated_days += 1;
+                &mut treated_by_hour
+            } else {
+                control_days += 1;
+                &mut control_by_hour
+            };
+            for h in 0..HOURS_PER_DAY {
+                arm[h].push(s.hourly_power[h] / norm);
+                carbon_acc[h] += s.carbon_intensity[h];
+            }
+            carbon_n += 1;
+        }
+    }
+
+    let mut treated = [(0.0, 0.0); HOURS_PER_DAY];
+    let mut control = [(0.0, 0.0); HOURS_PER_DAY];
+    let mut carbon = [0.0; HOURS_PER_DAY];
+    for h in 0..HOURS_PER_DAY {
+        treated[h] = stats::mean_ci95(&treated_by_hour[h]);
+        control[h] = stats::mean_ci95(&control_by_hour[h]);
+        carbon[h] = if carbon_n > 0 { carbon_acc[h] / carbon_n as f64 } else { 0.0 };
+    }
+
+    // headline: power drop in the top-quartile carbon hours
+    let mut order: Vec<usize> = (0..HOURS_PER_DAY).collect();
+    order.sort_by(|&a, &b| carbon[b].partial_cmp(&carbon[a]).unwrap());
+    let peak_hours: Vec<usize> = order[..6].to_vec();
+    let drop: Vec<f64> = peak_hours
+        .iter()
+        .map(|&h| 100.0 * (control[h].0 - treated[h].0) / control[h].0.max(1e-12))
+        .collect();
+    ExperimentResult {
+        treated,
+        control,
+        carbon,
+        peak_drop_pct: stats::mean(&drop),
+        peak_hours,
+        unshapeable_fraction: if treated_days > 0 {
+            unshapeable as f64 / treated_days as f64
+        } else {
+            0.0
+        },
+        treated_days,
+        control_days,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_controlled_experiment_shapes_treated_arm() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.campuses[0].clusters = 4;
+        cfg.campuses[0].archetype_mix = (1.0, 0.0, 0.0); // all predictable
+        cfg.optimizer.iters = 120;
+        cfg.optimizer.use_artifact = false;
+        let res = run_controlled(cfg, 25, 14);
+        assert!(res.treated_days > 10 && res.control_days > 10);
+        // both arms normalized around 1
+        let t_mean = stats::mean(&res.treated.iter().map(|x| x.0).collect::<Vec<_>>());
+        assert!((t_mean - 1.0).abs() < 0.1, "treated mean {t_mean}");
+        // treated power in peak-carbon hours should not exceed control
+        assert!(
+            res.peak_drop_pct > -0.5,
+            "peak drop {}% (treated should not be dirtier)",
+            res.peak_drop_pct
+        );
+    }
+}

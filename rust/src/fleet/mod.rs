@@ -1,0 +1,265 @@
+//! Fleet topology: campus → datacenter cluster → power domain → machines
+//! (paper §II-A, Fig 2).
+//!
+//! Each power domain (PD) is metered at a single PDU and has a *ground
+//! truth* power curve (used only by the telemetry simulator — the
+//! pipelines must re-learn it, like the paper's power-models pipeline
+//! does from PDU meter data). Clusters are the job-scheduling domain;
+//! campuses carry contractual power limits.
+
+use crate::config::{Archetype, CampusConfig, GridArchetype, ScenarioConfig};
+use crate::util::rng::Pcg;
+
+/// Ground-truth power curve of one power domain. Smooth saturating curve
+/// (NOT piecewise linear — the pipeline's piecewise-linear fit is an
+/// approximation, as in the paper's [20]):
+///
+///   P(u) = idle + span * s(u / cap),   s(x) = (1 - exp(-k x)) / (1 - exp(-k))
+///
+/// plus meter noise when sampled. `s` is concave: the marginal watt per
+/// GCU falls as the domain fills, matching measured server curves.
+#[derive(Clone, Debug)]
+pub struct PowerCurve {
+    /// Idle power of the domain, kW.
+    pub idle_kw: f64,
+    /// Dynamic range (P(cap) - P(0)), kW.
+    pub span_kw: f64,
+    /// Curvature; ~1.2-2.2 across hardware generations.
+    pub k: f64,
+    /// Usage capacity of the domain, GCU.
+    pub cap_gcu: f64,
+}
+
+impl PowerCurve {
+    /// Noiseless power at usage `u` GCU.
+    pub fn eval(&self, u: f64) -> f64 {
+        let x = (u / self.cap_gcu).clamp(0.0, 1.0);
+        let s = (1.0 - (-self.k * x).exp()) / (1.0 - (-self.k).exp());
+        self.idle_kw + self.span_kw * s
+    }
+
+    /// True local slope dP/du at `u` (kW per GCU).
+    pub fn slope(&self, u: f64) -> f64 {
+        let x = (u / self.cap_gcu).clamp(0.0, 1.0);
+        let ds = self.k * (-self.k * x).exp() / (1.0 - (-self.k).exp());
+        self.span_kw * ds / self.cap_gcu
+    }
+}
+
+/// A power domain: a few thousand machines metered at one PDU.
+#[derive(Clone, Debug)]
+pub struct PowerDomain {
+    pub id: usize,
+    pub cluster_id: usize,
+    pub machines: usize,
+    pub curve: PowerCurve,
+    /// Long-run share of the cluster's usage landing on this PD (the
+    /// paper's lambda^(PD); scheduler spreading keeps realized shares
+    /// within ~1% of this).
+    pub lambda: f64,
+    /// PDU meter noise (relative sd) when sampling power.
+    pub meter_noise: f64,
+}
+
+/// A cluster: the job-scheduling domain.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub id: usize,
+    pub name: String,
+    pub campus_id: usize,
+    pub archetype: Archetype,
+    pub pds: Vec<PowerDomain>,
+    /// Total machine capacity C(c), GCU.
+    pub capacity_gcu: f64,
+    /// Power-capping threshold: usage above this risks breaker trips
+    /// (paper's U-bar_pow); set below capacity.
+    pub power_cap_gcu: f64,
+}
+
+/// A campus: colocated clusters sharing one grid zone and power contract.
+#[derive(Clone, Debug)]
+pub struct Campus {
+    pub id: usize,
+    pub name: String,
+    pub grid: GridArchetype,
+    pub contract_limit_kw: f64,
+    pub cluster_ids: Vec<usize>,
+}
+
+/// The whole fleet.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub campuses: Vec<Campus>,
+    pub clusters: Vec<Cluster>,
+}
+
+impl Fleet {
+    /// Build the fleet from a scenario config, deterministically.
+    pub fn build(cfg: &ScenarioConfig) -> Fleet {
+        let mut clusters = Vec::new();
+        let mut campuses = Vec::new();
+        for (campus_id, cc) in cfg.campuses.iter().enumerate() {
+            let mut ids = Vec::new();
+            for i in 0..cc.clusters {
+                let cluster_id = clusters.len();
+                ids.push(cluster_id);
+                clusters.push(build_cluster(cfg, cc, campus_id, cluster_id, i));
+            }
+            campuses.push(Campus {
+                id: campus_id,
+                name: cc.name.clone(),
+                grid: cc.grid,
+                contract_limit_kw: cc.contract_limit_kw,
+                cluster_ids: ids,
+            });
+        }
+        Fleet { campuses, clusters }
+    }
+
+    pub fn cluster(&self, id: usize) -> &Cluster {
+        &self.clusters[id]
+    }
+
+    pub fn campus_of(&self, cluster_id: usize) -> &Campus {
+        &self.campuses[self.clusters[cluster_id].campus_id]
+    }
+}
+
+fn pick_archetype(mix: (f64, f64, f64), idx: usize, total: usize) -> Archetype {
+    // Deterministic proportional assignment (round-robin over the CDF)
+    let sum = mix.0 + mix.1 + mix.2;
+    let f = (idx as f64 + 0.5) / total as f64;
+    if f < mix.0 / sum {
+        Archetype::FlexPredictable
+    } else if f < (mix.0 + mix.1) / sum {
+        Archetype::FlexNoisy
+    } else {
+        Archetype::MostlyInflexible
+    }
+}
+
+fn build_cluster(
+    cfg: &ScenarioConfig,
+    cc: &CampusConfig,
+    campus_id: usize,
+    cluster_id: usize,
+    idx_in_campus: usize,
+) -> Cluster {
+    let mut rng = Pcg::keyed(cfg.seed, 0xF1EE7, cluster_id as u64, 0);
+    let archetype = pick_archetype(cc.archetype_mix, idx_in_campus, cc.clusters);
+    let n_pds = cfg.pds_per_cluster;
+    // Hardware heterogeneity across PDs: per-machine GCU and power vary by
+    // platform generation.
+    let mut pds = Vec::with_capacity(n_pds);
+    let mut total_cap = 0.0;
+    for pd in 0..n_pds {
+        let machines =
+            (cfg.machines_per_pd as f64 * rng.uniform(0.85, 1.15)).round() as usize;
+        let gcu_per_machine = rng.uniform(0.9, 1.3);
+        let cap_gcu = machines as f64 * gcu_per_machine;
+        let idle_per_machine_kw = rng.uniform(0.08, 0.13); // 80-130 W idle
+        let dyn_per_machine_kw = rng.uniform(0.10, 0.18); // dynamic range
+        pds.push(PowerDomain {
+            id: pd,
+            cluster_id,
+            machines,
+            curve: PowerCurve {
+                idle_kw: machines as f64 * idle_per_machine_kw,
+                span_kw: machines as f64 * dyn_per_machine_kw,
+                k: rng.uniform(1.2, 2.2),
+                cap_gcu,
+            },
+            lambda: 0.0, // normalized below
+            meter_noise: rng.uniform(0.004, 0.012),
+        });
+        total_cap += cap_gcu;
+    }
+    for pd in &mut pds {
+        pd.lambda = pd.curve.cap_gcu / total_cap;
+    }
+    Cluster {
+        id: cluster_id,
+        name: format!("{}-c{}", cc.name, idx_in_campus),
+        campus_id,
+        archetype,
+        pds,
+        capacity_gcu: total_cap,
+        power_cap_gcu: total_cap * 0.96,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> Fleet {
+        Fleet::build(&ScenarioConfig::default())
+    }
+
+    #[test]
+    fn build_counts_match_config() {
+        let cfg = ScenarioConfig::default();
+        let f = Fleet::build(&cfg);
+        assert_eq!(f.clusters.len(), cfg.total_clusters());
+        assert_eq!(f.campuses.len(), cfg.campuses.len());
+        for c in &f.clusters {
+            assert_eq!(c.pds.len(), cfg.pds_per_cluster);
+        }
+    }
+
+    #[test]
+    fn lambdas_sum_to_one() {
+        for c in &fleet().clusters {
+            let s: f64 = c.pds.iter().map(|p| p.lambda).sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn power_curve_monotone_concave() {
+        let c = &fleet().clusters[0].pds[0].curve;
+        let mut prev_p = c.eval(0.0);
+        let mut prev_slope = f64::INFINITY;
+        assert!((prev_p - c.idle_kw).abs() < 1e-9);
+        for i in 1..=20 {
+            let u = c.cap_gcu * i as f64 / 20.0;
+            let p = c.eval(u);
+            assert!(p > prev_p, "monotone");
+            let s = c.slope(u);
+            assert!(s <= prev_slope + 1e-9, "concave");
+            assert!(s > 0.0);
+            prev_p = p;
+            prev_slope = s;
+        }
+        // full-load power = idle + span
+        assert!((c.eval(c.cap_gcu) - c.idle_kw - c.span_kw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn archetype_mix_respected() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.campuses[0].clusters = 10;
+        cfg.campuses[0].archetype_mix = (0.5, 0.3, 0.2);
+        let f = Fleet::build(&cfg);
+        let n = |a: Archetype| f.clusters.iter().filter(|c| c.archetype == a).count();
+        assert_eq!(n(Archetype::FlexPredictable), 5);
+        assert_eq!(n(Archetype::FlexNoisy), 3);
+        assert_eq!(n(Archetype::MostlyInflexible), 2);
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let a = fleet();
+        let b = fleet();
+        assert_eq!(a.clusters[0].capacity_gcu, b.clusters[0].capacity_gcu);
+        assert_eq!(a.clusters[0].pds[1].curve.k, b.clusters[0].pds[1].curve.k);
+    }
+
+    #[test]
+    fn power_cap_below_capacity() {
+        for c in &fleet().clusters {
+            assert!(c.power_cap_gcu < c.capacity_gcu);
+            assert!(c.power_cap_gcu > 0.9 * c.capacity_gcu);
+        }
+    }
+}

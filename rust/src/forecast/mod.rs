@@ -1,0 +1,532 @@
+//! Day-ahead load forecasting pipeline (paper §III-B1).
+//!
+//! Per cluster, predicts for the next day:
+//!   (i)   hourly inflexible CPU usage  U_IF(h)
+//!   (ii)  daily flexible compute usage T_{U,F}(d)
+//!   (iii) daily total compute reservations T_R(d)
+//!   (iv)  hourly reservations-to-usage ratio R(h)
+//!
+//! using exactly the paper's two-step scheme: EWMA weekly means (half-life
+//! 0.5 weeks) x intra-week hourly/daily factors (EWMA half-life 4 weeks),
+//! then a linear previous-day deviation correction. The ratio model is
+//! linear in log usage. Trailing APE and per-hour error quantiles are
+//! tracked for the risk machinery (Theta, power capping) and for the
+//! Fig 7 evaluation.
+
+use crate::telemetry::ClusterDayRecord;
+use crate::timebase::{DAYS_PER_WEEK, HOURS_PER_DAY};
+use crate::util::stats::{self, Ewma};
+
+/// The four forecast targets (Fig 7 panels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Target {
+    HourlyInflexible,
+    DailyFlexUsage,
+    DailyReservations,
+    HourlyRatio,
+}
+
+impl Target {
+    pub const ALL: [Target; 4] = [
+        Target::HourlyInflexible,
+        Target::DailyFlexUsage,
+        Target::DailyReservations,
+        Target::HourlyRatio,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::HourlyInflexible => "U_IF(h)",
+            Target::DailyFlexUsage => "T_UF(d)",
+            Target::DailyReservations => "T_R(d)",
+            Target::HourlyRatio => "R(h)",
+        }
+    }
+}
+
+/// A complete day-ahead forecast for one cluster.
+#[derive(Clone, Debug)]
+pub struct DayAheadForecast {
+    pub cluster_id: usize,
+    /// The day being forecast.
+    pub day: usize,
+    pub u_if_hat: [f64; HOURS_PER_DAY],
+    pub tuf_hat: f64,
+    pub tr_hat: f64,
+    pub ratio_hat: [f64; HOURS_PER_DAY],
+    /// `(U_IF(h))_{1-gamma}` — upper quantile of hourly inflexible usage,
+    /// from trailing relative errors (power-capping constraint input).
+    pub u_if_upper: [f64; HOURS_PER_DAY],
+    /// True if enough history exists for a trustworthy forecast.
+    pub mature: bool,
+}
+
+/// EWMA-of-weekly-means + factor forecaster for one scalar daily series.
+#[derive(Clone, Debug)]
+struct WeeklyDailyModel {
+    weekly_mean: Ewma,
+    day_factors: [Ewma; DAYS_PER_WEEK],
+    // current (incomplete) week accumulator
+    week_vals: Vec<f64>,
+    // deviation model state: (prev_dev, dev) pairs
+    dev_pairs: Vec<(f64, f64)>,
+    last_dev: f64,
+    weeks_seen: usize,
+}
+
+impl WeeklyDailyModel {
+    fn new() -> Self {
+        WeeklyDailyModel {
+            weekly_mean: Ewma::with_half_life(0.5),
+            day_factors: std::array::from_fn(|_| Ewma::with_half_life(4.0)),
+            week_vals: Vec::new(),
+            dev_pairs: Vec::new(),
+            last_dev: 0.0,
+            weeks_seen: 0,
+        }
+    }
+
+    /// Prediction for day-of-week `dow` before observing it.
+    fn predict(&self, dow: usize) -> Option<f64> {
+        let wm = self.weekly_mean.value()?;
+        let f = self.day_factors[dow].value().unwrap_or(1.0);
+        let base = wm * f;
+        // previous-day deviation correction (linear model)
+        let (a, b) = stats::ols(
+            &self.dev_pairs.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &self.dev_pairs.iter().map(|p| p.1).collect::<Vec<_>>(),
+        );
+        let corr = if self.dev_pairs.len() >= 7 { a + b * self.last_dev } else { 0.0 };
+        Some((base + corr).max(0.0))
+    }
+
+    /// Observe the realized value for day `day` (its dow).
+    fn observe(&mut self, day: usize, value: f64) {
+        let dow = day % DAYS_PER_WEEK;
+        // deviation bookkeeping vs the pre-observation prediction
+        if let Some(pred) = {
+            let wm = self.weekly_mean.value();
+            let f = self.day_factors[dow].value().unwrap_or(1.0);
+            wm.map(|w| w * f)
+        } {
+            let dev = value - pred;
+            self.dev_pairs.push((self.last_dev, dev));
+            if self.dev_pairs.len() > 60 {
+                self.dev_pairs.remove(0);
+            }
+            self.last_dev = dev;
+        }
+        self.week_vals.push(value);
+        if dow == DAYS_PER_WEEK - 1 {
+            // week complete: fold into EWMAs
+            let wm = stats::mean(&self.week_vals);
+            if wm > 1e-12 {
+                self.weekly_mean.update(wm);
+                let start_dow = DAYS_PER_WEEK - self.week_vals.len();
+                for (i, &v) in self.week_vals.iter().enumerate() {
+                    self.day_factors[start_dow + i].update(v / wm);
+                }
+            }
+            self.week_vals.clear();
+            self.weeks_seen += 1;
+        }
+    }
+}
+
+/// Same scheme for the hourly inflexible profile: weekly mean over 168
+/// hourly values + 168 hour-of-week factors.
+#[derive(Clone, Debug)]
+struct WeeklyHourlyModel {
+    weekly_mean: Ewma,
+    hour_factors: Vec<Ewma>, // 168
+    week_hours: Vec<f64>,
+    dev_pairs: Vec<(f64, f64)>,
+    last_dev: f64,
+    weeks_seen: usize,
+}
+
+impl WeeklyHourlyModel {
+    fn new() -> Self {
+        WeeklyHourlyModel {
+            weekly_mean: Ewma::with_half_life(0.5),
+            hour_factors: (0..DAYS_PER_WEEK * HOURS_PER_DAY)
+                .map(|_| Ewma::with_half_life(4.0))
+                .collect(),
+            week_hours: Vec::new(),
+            dev_pairs: Vec::new(),
+            last_dev: 0.0,
+            weeks_seen: 0,
+        }
+    }
+
+    fn predict_day(&self, day: usize) -> Option<[f64; HOURS_PER_DAY]> {
+        let wm = self.weekly_mean.value()?;
+        let dow = day % DAYS_PER_WEEK;
+        let (a, b) = stats::ols(
+            &self.dev_pairs.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &self.dev_pairs.iter().map(|p| p.1).collect::<Vec<_>>(),
+        );
+        let corr = if self.dev_pairs.len() >= 7 { a + b * self.last_dev } else { 0.0 };
+        let mut out = [0.0; HOURS_PER_DAY];
+        for (h, o) in out.iter_mut().enumerate() {
+            let f = self.hour_factors[dow * HOURS_PER_DAY + h].value().unwrap_or(1.0);
+            *o = (wm * f + corr).max(0.0);
+        }
+        Some(out)
+    }
+
+    fn observe_day(&mut self, day: usize, hourly: &[f64; HOURS_PER_DAY]) {
+        // daily-mean deviation vs prediction (uniform additive correction)
+        if let Some(pred) = self.predict_day_base(day) {
+            let dev = stats::mean(hourly) - stats::mean(&pred);
+            self.dev_pairs.push((self.last_dev, dev));
+            if self.dev_pairs.len() > 60 {
+                self.dev_pairs.remove(0);
+            }
+            self.last_dev = dev;
+        }
+        self.week_hours.extend_from_slice(hourly);
+        if day % DAYS_PER_WEEK == DAYS_PER_WEEK - 1 {
+            let wm = stats::mean(&self.week_hours);
+            if wm > 1e-12 {
+                self.weekly_mean.update(wm);
+                let start = DAYS_PER_WEEK * HOURS_PER_DAY - self.week_hours.len();
+                for (i, &v) in self.week_hours.iter().enumerate() {
+                    self.hour_factors[start + i].update(v / wm);
+                }
+            }
+            self.week_hours.clear();
+            self.weeks_seen += 1;
+        }
+    }
+
+    /// prediction without the deviation correction (for dev bookkeeping)
+    fn predict_day_base(&self, day: usize) -> Option<[f64; HOURS_PER_DAY]> {
+        let wm = self.weekly_mean.value()?;
+        let dow = day % DAYS_PER_WEEK;
+        let mut out = [0.0; HOURS_PER_DAY];
+        for (h, o) in out.iter_mut().enumerate() {
+            let f = self.hour_factors[dow * HOURS_PER_DAY + h].value().unwrap_or(1.0);
+            *o = wm * f;
+        }
+        Some(out)
+    }
+}
+
+/// Per-cluster load forecaster. Feed one completed `ClusterDayRecord` per
+/// day via [`LoadForecaster::observe_day`], then ask for the next day with
+/// [`LoadForecaster::predict`].
+#[derive(Clone, Debug)]
+pub struct LoadForecaster {
+    pub cluster_id: usize,
+    if_model: WeeklyHourlyModel,
+    tuf_model: WeeklyDailyModel,
+    tr_model: WeeklyDailyModel,
+    /// (ln usage, ratio) samples for the ratio ~ log-usage OLS.
+    ratio_samples: Vec<(f64, f64)>,
+    /// Trailing relative errors of hourly U_IF predictions (pooled).
+    if_rel_errors: Vec<f64>,
+    /// Last issued prediction (for error bookkeeping).
+    last_pred: Option<DayAheadForecast>,
+    days_observed: usize,
+}
+
+impl LoadForecaster {
+    pub fn new(cluster_id: usize) -> Self {
+        LoadForecaster {
+            cluster_id,
+            if_model: WeeklyHourlyModel::new(),
+            tuf_model: WeeklyDailyModel::new(),
+            tr_model: WeeklyDailyModel::new(),
+            ratio_samples: Vec::new(),
+            if_rel_errors: Vec::new(),
+            last_pred: None,
+            days_observed: 0,
+        }
+    }
+
+    pub fn days_observed(&self) -> usize {
+        self.days_observed
+    }
+
+    /// Update all models with a completed day of telemetry. If a
+    /// prediction was issued for this day, also returns the realized APEs
+    /// per target (Fig 7 bookkeeping).
+    pub fn observe_day(&mut self, rec: &ClusterDayRecord) -> Option<Vec<(Target, f64)>> {
+        let hourly_if = rec.hourly_usage_if();
+        let tuf = rec.daily_flex_usage();
+        let tr = rec.daily_reservations();
+        let ratios = rec.hourly_ratio();
+
+        // ratio samples vs log total usage
+        for h in 0..HOURS_PER_DAY {
+            let a = h * crate::timebase::TICKS_PER_HOUR;
+            let usage: f64 = (a..a + crate::timebase::TICKS_PER_HOUR)
+                .map(|t| rec.usage_if[t] + rec.usage_flex[t])
+                .sum::<f64>()
+                / crate::timebase::TICKS_PER_HOUR as f64;
+            if usage > 1.0 {
+                self.ratio_samples.push((usage.ln(), ratios[h]));
+            }
+        }
+        let cap = 24 * 30;
+        if self.ratio_samples.len() > cap {
+            let excess = self.ratio_samples.len() - cap;
+            self.ratio_samples.drain(0..excess);
+        }
+
+        // realized APEs vs the forecast we issued for this day
+        let apes = self.last_pred.take().filter(|p| p.day == rec.day).map(|p| {
+            let mut v = Vec::new();
+            let hourly_apes: Vec<f64> = (0..HOURS_PER_DAY)
+                .filter_map(|h| stats::ape(hourly_if[h], p.u_if_hat[h]))
+                .collect();
+            if !hourly_apes.is_empty() {
+                v.push((Target::HourlyInflexible, stats::mean(&hourly_apes)));
+            }
+            if let Some(a) = stats::ape(tuf, p.tuf_hat) {
+                v.push((Target::DailyFlexUsage, a));
+            }
+            if let Some(a) = stats::ape(tr, p.tr_hat) {
+                v.push((Target::DailyReservations, a));
+            }
+            let ratio_apes: Vec<f64> = (0..HOURS_PER_DAY)
+                .filter_map(|h| stats::ape(ratios[h], p.ratio_hat[h]))
+                .collect();
+            if !ratio_apes.is_empty() {
+                v.push((Target::HourlyRatio, stats::mean(&ratio_apes)));
+            }
+            // pooled hourly relative errors for the power-capping quantile
+            for h in 0..HOURS_PER_DAY {
+                if p.u_if_hat[h] > 1e-9 {
+                    self.if_rel_errors.push((hourly_if[h] - p.u_if_hat[h]) / p.u_if_hat[h]);
+                }
+            }
+            let cap = 24 * 90;
+            if self.if_rel_errors.len() > cap {
+                let excess = self.if_rel_errors.len() - cap;
+                self.if_rel_errors.drain(0..excess);
+            }
+            v
+        });
+
+        self.if_model.observe_day(rec.day, &hourly_if);
+        self.tuf_model.observe(rec.day, tuf);
+        self.tr_model.observe(rec.day, tr);
+        self.days_observed += 1;
+        apes
+    }
+
+    /// Ratio prediction at a usage level: OLS of ratio on ln(usage),
+    /// clamped to >= 1.
+    fn predict_ratio(&self, usage: f64) -> f64 {
+        if self.ratio_samples.len() < 24 || usage <= 1.0 {
+            return 1.25;
+        }
+        let x: Vec<f64> = self.ratio_samples.iter().map(|s| s.0).collect();
+        let y: Vec<f64> = self.ratio_samples.iter().map(|s| s.1).collect();
+        let (a, b) = stats::ols(&x, &y);
+        (a + b * usage.ln()).max(1.0)
+    }
+
+    /// Issue the day-ahead forecast for `day` (must be called before that
+    /// day's telemetry is observed), `gamma` = power-capping exceedance.
+    pub fn predict(&mut self, day: usize, gamma: f64) -> DayAheadForecast {
+        let mature = self.if_model.weeks_seen >= 2 && self.tuf_model.weeks_seen >= 2;
+        let u_if_hat = self.if_model.predict_day(day).unwrap_or([0.0; HOURS_PER_DAY]);
+        let dow = day % DAYS_PER_WEEK;
+        let tuf_hat = self.tuf_model.predict(dow).unwrap_or(0.0);
+        let tr_hat = self.tr_model.predict(dow).unwrap_or(0.0);
+        // upper quantile of hourly inflexible usage
+        let q = if self.if_rel_errors.len() >= 48 {
+            stats::quantile(&self.if_rel_errors, 1.0 - gamma).max(0.0)
+        } else {
+            0.10
+        };
+        let mut ratio_hat = [1.25; HOURS_PER_DAY];
+        let mut u_if_upper = [0.0; HOURS_PER_DAY];
+        let nominal_flex = tuf_hat / 24.0;
+        for h in 0..HOURS_PER_DAY {
+            ratio_hat[h] = self.predict_ratio(u_if_hat[h] + nominal_flex);
+            u_if_upper[h] = u_if_hat[h] * (1.0 + q);
+        }
+        let fc = DayAheadForecast {
+            cluster_id: self.cluster_id,
+            day,
+            u_if_hat,
+            tuf_hat,
+            tr_hat,
+            ratio_hat,
+            u_if_upper,
+            mature,
+        };
+        self.last_pred = Some(fc.clone());
+        fc
+    }
+}
+
+/// Fleetwide APE collector for Fig 7: per cluster and target keeps all
+/// realized daily APEs; yields median/75/90 percentile per cluster.
+#[derive(Clone, Debug, Default)]
+pub struct ApeCollector {
+    /// `[cluster][target] -> Vec<APE>`
+    data: Vec<[Vec<f64>; 4]>,
+}
+
+impl ApeCollector {
+    pub fn new(n_clusters: usize) -> Self {
+        ApeCollector { data: (0..n_clusters).map(|_| Default::default()).collect() }
+    }
+
+    pub fn record(&mut self, cluster: usize, apes: &[(Target, f64)]) {
+        for (t, a) in apes {
+            let idx = Target::ALL.iter().position(|x| x == t).unwrap();
+            self.data[cluster][idx].push(*a);
+        }
+    }
+
+    /// Per-cluster (median, p75, p90) APE for a target; None if no data.
+    pub fn cluster_percentiles(&self, cluster: usize, t: Target) -> Option<(f64, f64, f64)> {
+        let idx = Target::ALL.iter().position(|x| *x == t).unwrap();
+        let v = &self.data[cluster][idx];
+        if v.is_empty() {
+            return None;
+        }
+        Some((
+            stats::quantile(v, 0.5),
+            stats::quantile(v, 0.75),
+            stats::quantile(v, 0.9),
+        ))
+    }
+
+    /// All clusters' percentile triples for a target.
+    pub fn all_percentiles(&self, t: Target) -> Vec<(f64, f64, f64)> {
+        (0..self.data.len())
+            .filter_map(|c| self.cluster_percentiles(c, t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::fleet::Fleet;
+    use crate::scheduler::{ClusterScheduler, DayOutcome};
+    use crate::timebase::{SimTime, TICKS_PER_DAY};
+    use crate::workload::WorkloadModel;
+
+    /// Simulate unshaped days and feed the forecaster.
+    fn run_forecaster(cluster_idx: usize, days: usize) -> (LoadForecaster, Vec<Vec<(Target, f64)>>) {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let c = &fleet.clusters[cluster_idx];
+        let model = WorkloadModel::for_cluster(cfg.seed, c);
+        let mut sched = ClusterScheduler::new(c.id);
+        let mut fc = LoadForecaster::new(c.id);
+        let mut apes_log = Vec::new();
+        for day in 0..days {
+            if day >= 14 {
+                fc.predict(day, 0.01);
+            }
+            let mut rec = crate::telemetry::ClusterDayRecord::new(c, day);
+            let mut out = DayOutcome::default();
+            for tick in 0..TICKS_PER_DAY {
+                sched.tick(c, &model, None, SimTime::new(day, tick), &mut rec, &mut out);
+            }
+            if let Some(apes) = fc.observe_day(&rec) {
+                apes_log.push(apes);
+            }
+        }
+        (fc, apes_log)
+    }
+
+    #[test]
+    fn predictable_cluster_forecasts_accurately() {
+        // archetype X (cluster 0 in default config)
+        let (_, apes) = run_forecaster(0, 49);
+        let if_apes: Vec<f64> = apes
+            .iter()
+            .flatten()
+            .filter(|(t, _)| *t == Target::HourlyInflexible)
+            .map(|(_, a)| *a)
+            .collect();
+        assert!(!if_apes.is_empty());
+        let med = stats::median(&if_apes);
+        assert!(med < 10.0, "median U_IF APE {med}% (paper: <10% for most clusters)");
+        let ratio_apes: Vec<f64> = apes
+            .iter()
+            .flatten()
+            .filter(|(t, _)| *t == Target::HourlyRatio)
+            .map(|(_, a)| *a)
+            .collect();
+        assert!(stats::median(&ratio_apes) < 10.0);
+    }
+
+    #[test]
+    fn noisy_cluster_has_larger_flex_errors() {
+        // cluster 0 is X (predictable); default config puts archetype Y
+        // in the middle of the campus list.
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let y_idx = fleet
+            .clusters
+            .iter()
+            .position(|c| c.archetype == crate::config::Archetype::FlexNoisy)
+            .unwrap();
+        let (_, apes_x) = run_forecaster(0, 49);
+        let (_, apes_y) = run_forecaster(y_idx, 49);
+        let flex = |apes: &Vec<Vec<(Target, f64)>>| {
+            let v: Vec<f64> = apes
+                .iter()
+                .flatten()
+                .filter(|(t, _)| *t == Target::DailyFlexUsage)
+                .map(|(_, a)| *a)
+                .collect();
+            stats::median(&v)
+        };
+        assert!(
+            flex(&apes_y) > flex(&apes_x),
+            "noisy cluster should forecast worse: Y {} X {}",
+            flex(&apes_y),
+            flex(&apes_x)
+        );
+    }
+
+    #[test]
+    fn maturity_gate() {
+        let (mut fc, _) = run_forecaster(0, 10);
+        assert!(!fc.predict(10, 0.01).mature);
+        let (mut fc2, _) = run_forecaster(0, 21);
+        assert!(fc2.predict(21, 0.01).mature);
+    }
+
+    #[test]
+    fn upper_quantile_above_point_forecast() {
+        let (mut fc, _) = run_forecaster(0, 40);
+        let f = fc.predict(40, 0.05);
+        for h in 0..HOURS_PER_DAY {
+            assert!(f.u_if_upper[h] >= f.u_if_hat[h]);
+        }
+    }
+
+    #[test]
+    fn ratio_prediction_at_least_one() {
+        let (mut fc, _) = run_forecaster(0, 30);
+        let f = fc.predict(30, 0.01);
+        assert!(f.ratio_hat.iter().all(|&r| r >= 1.0 && r < 3.0));
+    }
+
+    #[test]
+    fn ape_collector_percentiles() {
+        let mut col = ApeCollector::new(2);
+        for a in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            col.record(0, &[(Target::DailyFlexUsage, a)]);
+        }
+        let (med, p75, p90) = col.cluster_percentiles(0, Target::DailyFlexUsage).unwrap();
+        assert_eq!(med, 3.0);
+        assert!(p75 >= med && p90 >= p75);
+        assert!(col.cluster_percentiles(1, Target::DailyFlexUsage).is_none());
+        assert_eq!(col.all_percentiles(Target::DailyFlexUsage).len(), 1);
+    }
+}

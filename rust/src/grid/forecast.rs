@@ -1,0 +1,153 @@
+//! Day-ahead carbon-intensity forecasts — the simulator's stand-in for the
+//! paper's Tomorrow (electricityMap.org) feed (§III-B3).
+//!
+//! The forecast for day `d` is produced the afternoon of day `d-1` (Fig 5):
+//! it dispatches the zone's portfolio under the *forecast* weather draw
+//! rather than the truth, plus a small horizon-growing dispatch error.
+//! Realized MAPE spans the paper's reported 0.4–26 % band across zones and
+//! horizons (asserted by the `power_model_accuracy` bench's carbon section
+//! and by tests below).
+
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::rng::Pcg;
+
+use super::intensity::GridZone;
+
+/// A day-ahead forecast for one zone and day.
+#[derive(Clone, Debug)]
+pub struct CarbonForecast {
+    pub day: usize,
+    /// Forecast issue hour on day-1 (PST), e.g. 14:00 — hour `h` of the
+    /// target day is a `(24 - issue_hour) + h` hour-ahead forecast.
+    pub issue_hour: usize,
+    /// Forecast average carbon intensity per hour (kg CO2e / kWh).
+    pub hourly: [f64; HOURS_PER_DAY],
+}
+
+/// Forecast provider for a set of zones (the "carbon fetching pipeline").
+pub struct CarbonForecaster {
+    /// Per-hour dispatch-model error growth rate (per hour of horizon).
+    pub horizon_growth: f64,
+    pub issue_hour: usize,
+}
+
+impl Default for CarbonForecaster {
+    fn default() -> Self {
+        CarbonForecaster { horizon_growth: 0.0005, issue_hour: 14 }
+    }
+}
+
+impl CarbonForecaster {
+    /// Produce the day-ahead hourly forecast for `zone` covering `day`.
+    ///
+    /// Hour `h` of the target day is `(24 - issue_hour) + h` hours ahead
+    /// (8–32 h for a 14:00 issue). Skill decays with horizon two ways:
+    /// the weather estimate blends from truth toward the (noisy) forecast
+    /// draw, and a multiplicative dispatch-model error grows linearly.
+    pub fn day_ahead(&self, zone: &GridZone, day: usize) -> CarbonForecast {
+        let wt = zone.weather.truth(day);
+        let wf = zone.weather.forecast(day, zone.forecast_noise);
+        let mut hourly = [0.0; HOURS_PER_DAY];
+        let mut rng = Pcg::keyed(0xCAFE, zone.weather_key(), day as u64, 0xF04C);
+        for (h, out) in hourly.iter_mut().enumerate() {
+            let horizon = (HOURS_PER_DAY - self.issue_hour) + h;
+            let mix = (horizon as f64 / 32.0).clamp(0.0, 1.0);
+            let w = crate::grid::WeatherDay {
+                cloud: wt.cloud * (1.0 - mix) + wf.cloud * mix,
+                wind_state: wt.wind_state * (1.0 - mix) + wf.wind_state * mix,
+            };
+            let (intensity, _) = zone.dispatch(day, h, &w);
+            let sigma = zone.forecast_noise * 0.1 + self.horizon_growth * horizon as f64;
+            *out = (intensity * (1.0 + rng.normal_ms(0.0, sigma))).max(0.005);
+        }
+        CarbonForecast { day, issue_hour: self.issue_hour, hourly }
+    }
+
+    /// Realized APE (%) per hour of the forecast against the zone's truth.
+    pub fn evaluate(&self, zone: &GridZone, fc: &CarbonForecast) -> [f64; HOURS_PER_DAY] {
+        let truth = zone.intensity_day(fc.day);
+        let mut ape = [0.0; HOURS_PER_DAY];
+        for h in 0..HOURS_PER_DAY {
+            ape[h] = 100.0 * (fc.hourly[h] - truth[h]).abs() / truth[h];
+        }
+        ape
+    }
+}
+
+impl GridZone {
+    /// Stable key for RNG stream derivation (zone identity).
+    pub fn weather_key(&self) -> u64 {
+        // name hash, stable across runs
+        self.name.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridArchetype;
+    use crate::util::stats;
+
+    #[test]
+    fn forecast_mape_within_paper_band() {
+        // Across archetypes and skill levels, day-ahead MAPE must land in
+        // roughly the paper's 0.4–26% range (we allow a little slack).
+        let fcster = CarbonForecaster::default();
+        let mut mapes = Vec::new();
+        for (i, a) in GridArchetype::ALL.iter().enumerate() {
+            for (j, skill) in [0.0, 0.5, 1.0].iter().enumerate() {
+                let z = GridZone::new(5, (i * 10 + j) as u64, &format!("z{i}{j}"), *a, *skill);
+                let mut apes = Vec::new();
+                for d in 0..40 {
+                    let fc = fcster.day_ahead(&z, d);
+                    apes.extend(fcster.evaluate(&z, &fc));
+                }
+                mapes.push(stats::mean(&apes));
+            }
+        }
+        let lo = mapes.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = mapes.iter().cloned().fold(0.0, f64::max);
+        assert!(lo < 3.0, "best-zone MAPE should be small, got {lo:.2}%");
+        assert!(hi > 8.0 && hi < 40.0, "worst-zone MAPE ~paper range, got {hi:.2}%");
+    }
+
+    #[test]
+    fn error_grows_with_horizon() {
+        let fcster = CarbonForecaster::default();
+        let z = GridZone::new(6, 2, "zh", GridArchetype::Mixed, 0.6);
+        // average APE of early vs late hours of the target day
+        let (mut early, mut late) = (Vec::new(), Vec::new());
+        for d in 0..60 {
+            let fc = fcster.day_ahead(&z, d);
+            let ape = fcster.evaluate(&z, &fc);
+            early.extend_from_slice(&ape[0..8]);
+            late.extend_from_slice(&ape[16..24]);
+        }
+        assert!(
+            stats::mean(&late) > stats::mean(&early) * 0.9,
+            "late-hour horizon should not be easier: early {} late {}",
+            stats::mean(&early),
+            stats::mean(&late)
+        );
+    }
+
+    #[test]
+    fn forecast_is_deterministic() {
+        let fcster = CarbonForecaster::default();
+        let z = GridZone::new(7, 3, "zz", GridArchetype::SolarHeavy, 0.4);
+        let a = fcster.day_ahead(&z, 12);
+        let b = fcster.day_ahead(&z, 12);
+        assert_eq!(a.hourly, b.hourly);
+    }
+
+    #[test]
+    fn forecast_positive() {
+        let fcster = CarbonForecaster::default();
+        for a in GridArchetype::ALL {
+            let z = GridZone::new(8, 4, "zp", a, 1.0);
+            for d in 0..10 {
+                assert!(fcster.day_ahead(&z, d).hourly.iter().all(|&x| x > 0.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Generation source models: availability profiles and carbon intensities.
+//!
+//! Each grid zone owns a capacity portfolio over these sources; hourly
+//! dispatch (in `intensity.rs`) stacks them in merit order against a
+//! diurnal demand curve, which is what produces the intraday carbon
+//! intensity shapes the paper exploits (Fig 1, Fig 3).
+
+use crate::util::rng::Pcg;
+
+/// A generation technology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Source {
+    Solar,
+    Wind,
+    Hydro,
+    Nuclear,
+    Coal,
+    Gas,
+}
+
+impl Source {
+    /// Lifecycle-ish average carbon intensity of generation,
+    /// kg CO2e per kWh (IPCC median values, same order the paper's
+    /// Tomorrow/electricityMap signal uses).
+    pub fn intensity(&self) -> f64 {
+        match self {
+            Source::Solar => 0.045,
+            Source::Wind => 0.011,
+            Source::Hydro => 0.024,
+            Source::Nuclear => 0.012,
+            Source::Coal => 0.980,
+            Source::Gas => 0.430,
+        }
+    }
+
+    /// Dispatch merit order: lower = dispatched first (zero-marginal-cost
+    /// renewables, then must-run baseload, then fossil).
+    pub fn merit(&self) -> usize {
+        match self {
+            Source::Solar => 0,
+            Source::Wind => 0,
+            Source::Hydro => 1,
+            Source::Nuclear => 1,
+            Source::Coal => 2,
+            Source::Gas => 3,
+        }
+    }
+
+    pub const ALL: [Source; 6] =
+        [Source::Solar, Source::Wind, Source::Hydro, Source::Nuclear, Source::Coal, Source::Gas];
+}
+
+/// Hourly availability factor (fraction of nameplate capacity that can
+/// generate) for a source, given hour-of-day and a per-day weather state.
+///
+/// `cloud` in [0,1] scales solar; `wind_state` in [0,1] is the day's AR(1)
+/// wind level; both come from `WeatherDay`.
+pub fn availability(src: Source, hour: usize, weather: &WeatherDay) -> f64 {
+    match src {
+        Source::Solar => {
+            // Daylight bell centred on 13:00 local, zero at night.
+            let x = (hour as f64 - 13.0) / 4.5;
+            let bell = (-0.5 * x * x).exp();
+            let daylight = if (6..=20).contains(&hour) { bell } else { 0.0 };
+            daylight * (1.0 - 0.7 * weather.cloud)
+        }
+        Source::Wind => {
+            // Slowly varying within the day around the day's wind level;
+            // wind is often stronger at night.
+            let diurnal = 1.0 + 0.15 * ((hour as f64 - 3.0) / 24.0 * std::f64::consts::TAU).cos();
+            (weather.wind_state * diurnal).clamp(0.0, 1.0)
+        }
+        Source::Hydro => 0.85,
+        Source::Nuclear => 0.92,
+        Source::Coal => 0.90,
+        Source::Gas => 0.95,
+    }
+}
+
+/// Per-day weather state driving renewable availability. Generated with an
+/// AR(1) persistence so forecast errors are realistically correlated.
+#[derive(Clone, Copy, Debug)]
+pub struct WeatherDay {
+    /// Cloud cover fraction [0,1].
+    pub cloud: f64,
+    /// Wind resource level [0,1].
+    pub wind_state: f64,
+}
+
+/// AR(1) weather process across days for a zone.
+#[derive(Clone, Debug)]
+pub struct WeatherProcess {
+    seed: u64,
+    zone_id: u64,
+    /// Day-to-day persistence of the weather states.
+    pub persistence: f64,
+}
+
+impl WeatherProcess {
+    pub fn new(seed: u64, zone_id: u64) -> Self {
+        WeatherProcess { seed, zone_id, persistence: 0.6 }
+    }
+
+    /// The true weather on `day`. Computed by unrolling the AR(1) from a
+    /// deterministic start so that any day is reproducible in O(day) —
+    /// days are small in simulations, and results must not depend on query
+    /// order.
+    pub fn truth(&self, day: usize) -> WeatherDay {
+        let mut cloud = 0.45;
+        let mut wind = 0.55;
+        for d in 0..=day {
+            let mut rng = Pcg::keyed(self.seed, self.zone_id, d as u64, 0x77EA);
+            cloud = self.persistence * cloud
+                + (1.0 - self.persistence) * rng.uniform(0.0, 1.0);
+            wind = self.persistence * wind + (1.0 - self.persistence) * rng.uniform(0.1, 1.0);
+        }
+        WeatherDay { cloud: cloud.clamp(0.0, 1.0), wind_state: wind.clamp(0.0, 1.0) }
+    }
+
+    /// A *forecast* of day `day` made the day before: the truth perturbed
+    /// by forecast noise of magnitude `noise` (zone skill), correlated with
+    /// the truth — this is what the day-ahead carbon forecast sees.
+    pub fn forecast(&self, day: usize, noise: f64) -> WeatherDay {
+        let t = self.truth(day);
+        let mut rng = Pcg::keyed(self.seed, self.zone_id, day as u64, 0xF0CA);
+        WeatherDay {
+            cloud: (t.cloud + rng.normal_ms(0.0, noise)).clamp(0.0, 1.0),
+            wind_state: (t.wind_state + rng.normal_ms(0.0, noise)).clamp(0.0, 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solar_zero_at_night_peaks_midday() {
+        let w = WeatherDay { cloud: 0.0, wind_state: 0.5 };
+        assert_eq!(availability(Source::Solar, 0, &w), 0.0);
+        assert_eq!(availability(Source::Solar, 23, &w), 0.0);
+        let noon = availability(Source::Solar, 13, &w);
+        assert!(noon > availability(Source::Solar, 8, &w));
+        assert!(noon > 0.9);
+    }
+
+    #[test]
+    fn cloud_reduces_solar() {
+        let clear = WeatherDay { cloud: 0.0, wind_state: 0.5 };
+        let cloudy = WeatherDay { cloud: 1.0, wind_state: 0.5 };
+        assert!(
+            availability(Source::Solar, 12, &cloudy) < availability(Source::Solar, 12, &clear)
+        );
+    }
+
+    #[test]
+    fn weather_is_deterministic_and_persistent() {
+        let p = WeatherProcess::new(9, 3);
+        let a = p.truth(10);
+        let b = p.truth(10);
+        assert_eq!(a.cloud, b.cloud);
+        // persistence: consecutive days are closer on average than distant days
+        let mut near = 0.0;
+        let mut far = 0.0;
+        for d in 5..25 {
+            near += (p.truth(d).cloud - p.truth(d + 1).cloud).abs();
+            far += (p.truth(d).cloud - p.truth(d + 10).cloud).abs();
+        }
+        assert!(near < far, "near {near} far {far}");
+    }
+
+    #[test]
+    fn forecast_tracks_truth() {
+        let p = WeatherProcess::new(9, 3);
+        let mut err_small = 0.0;
+        let mut err_big = 0.0;
+        for d in 0..30 {
+            err_small += (p.forecast(d, 0.02).cloud - p.truth(d).cloud).abs();
+            err_big += (p.forecast(d, 0.3).cloud - p.truth(d).cloud).abs();
+        }
+        assert!(err_small < err_big);
+    }
+
+    #[test]
+    fn intensities_ordered() {
+        assert!(Source::Coal.intensity() > Source::Gas.intensity());
+        assert!(Source::Gas.intensity() > Source::Solar.intensity());
+        assert!(Source::Wind.intensity() < 0.02);
+    }
+}

@@ -1,0 +1,11 @@
+//! Electricity-grid substrate: generation portfolios, hourly dispatch,
+//! average carbon intensity, and the day-ahead forecast feed (the paper's
+//! Tomorrow/electricityMap dependency, simulated — DESIGN.md §Substitutions).
+
+pub mod forecast;
+pub mod generation;
+pub mod intensity;
+
+pub use forecast::{CarbonForecast, CarbonForecaster};
+pub use generation::{Source, WeatherDay, WeatherProcess};
+pub use intensity::GridZone;

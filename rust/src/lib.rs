@@ -1,0 +1,37 @@
+//! # CICS — Carbon-Intelligent Compute System
+//!
+//! A from-scratch reproduction of *"Carbon-Aware Computing for
+//! Datacenters"* (Radovanović et al., Google, 2021): the complete system
+//! that shifts temporally-flexible datacenter workloads toward
+//! low-carbon-intensity hours using day-ahead **Virtual Capacity Curves
+//! (VCCs)**, plus every substrate it depends on — a Borg-like cluster
+//! scheduler, a workload generator, a grid/carbon-intensity simulator, a
+//! power-modeling pipeline, day-ahead load forecasting, the SLO guard, and
+//! the risk-aware optimizer (AOT-compiled JAX/Pallas artifact executed via
+//! PJRT from the rust coordinator, with a native mirror).
+//!
+//! Layering (see DESIGN.md):
+//! * L3 (this crate) — coordination, simulation, pipelines, CLI, benches.
+//! * L2 (python/compile/model.py) — JAX optimizer graph, AOT → HLO text.
+//! * L1 (python/compile/kernels/) — fused Pallas projected-gradient step.
+//!
+//! Quickstart: see `examples/quickstart.rs`, or run
+//! `cargo run --release -- simulate --days 40`.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiment;
+pub mod fleet;
+pub mod forecast;
+pub mod grid;
+pub mod optimizer;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod spatial;
+pub mod telemetry;
+pub mod timebase;
+pub mod util;
+pub mod vcc;
+pub mod workload;

@@ -1,0 +1,299 @@
+//! `cics` — CLI launcher for the Carbon-Intelligent Compute System
+//! reproduction.
+//!
+//! Subcommands:
+//!   simulate    run the full system for N days and print fleet stats
+//!   experiment  run the Fig 12 controlled experiment
+//!   pipelines   run one day-ahead cycle and show the pipeline schedule
+//!   solve       solve a synthetic day-ahead problem (artifact vs native)
+//!   report      regenerate figure CSVs/charts into reports/
+//!
+//! (The offline build has no clap; argument parsing is a small hand-rolled
+//! substrate — see DESIGN.md §Substitutions.)
+
+use cics::config::ScenarioConfig;
+use cics::coordinator::Simulation;
+use cics::experiment;
+use cics::report;
+use cics::timebase::HOURS_PER_DAY;
+
+/// Minimal flag parser: `--key value` and `--flag` forms.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<ScenarioConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ScenarioConfig::from_file(path)?,
+        None => ScenarioConfig::default(),
+    };
+    if let Some(seed) = args.get("seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = seed;
+    }
+    if args.has("no-artifact") {
+        cfg.optimizer.use_artifact = false;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifact_dir = dir.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let days = args.usize("days", 40);
+    let mut sim = Simulation::new(cfg);
+    println!(
+        "cics simulate: {} clusters / {} campuses, {} days, solver = {}",
+        sim.fleet.clusters.len(),
+        sim.fleet.campuses.len(),
+        days,
+        sim.backend_name()
+    );
+    for d in 0..days {
+        sim.run_day();
+        if (d + 1) % 10 == 0 || d + 1 == days {
+            let (power, carbon) = sim.metrics.fleet_day(d).unwrap();
+            let total_kw: f64 = power.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+            println!(
+                "  day {:>3}: mean fleet power {:>9.1} kW, carbon {:>10.1} kg, unshaped {:>4.1}%",
+                d + 1,
+                total_kw,
+                carbon,
+                100.0 * sim.unshaped_fraction()
+            );
+        }
+    }
+    // headline: fleet carbon in shaped vs unshaped days per cluster
+    let mut shaped_carbon = Vec::new();
+    let mut unshaped_carbon = Vec::new();
+    for s in sim.metrics.iter() {
+        if s.day * 2 >= days {
+            if s.shaped {
+                shaped_carbon.push(s.daily_carbon_kg);
+            } else {
+                unshaped_carbon.push(s.daily_carbon_kg);
+            }
+        }
+    }
+    println!(
+        "second-half cluster-days: {} shaped / {} unshaped",
+        shaped_carbon.len(),
+        unshaped_carbon.len()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let warmup = args.usize("warmup", 30);
+    let measure = args.usize("measure", 30);
+    println!("cics experiment: warmup {warmup} days, measurement {measure} days");
+    let res = experiment::run_controlled(cfg, warmup, measure);
+    let (chart, rows) = report::experiment_panel(&res);
+    println!("{chart}");
+    println!(
+        "peak-carbon hours {:?}: treated power {:.2}% below control ({} treated / {} control cluster-days; {:.1}% of treated days unshapeable)",
+        res.peak_hours,
+        res.peak_drop_pct,
+        res.treated_days,
+        res.control_days,
+        100.0 * res.unshapeable_fraction
+    );
+    if let Some(dir) = args.get("out") {
+        let path = std::path::Path::new(dir).join("fig12_experiment.csv");
+        report::write_csv(&path, report::EXPERIMENT_HEADER, &rows)?;
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_pipelines(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let days = args.usize("days", 30);
+    let mut sim = Simulation::new(cfg);
+    sim.run_days(days);
+    println!("intraday pipeline schedule (paper Fig 5, times in PST):");
+    println!("  00:05  telemetry day-close: cluster-day records sealed");
+    println!("  06:00  power-models pipeline: retrain {} PD models", {
+        sim.fleet.clusters.iter().map(|c| c.pds.len()).sum::<usize>()
+    });
+    println!("  10:00  load-forecasting pipeline: 4 targets x {} clusters", sim.fleet.clusters.len());
+    println!("  13:00  carbon fetching pipeline: day-ahead intensities, {} zones", sim.zones.len());
+    println!("  14:00  optimization pipeline ({})", sim.backend_name());
+    println!("  16:00  SLO checks + gradual VCC distribution");
+    println!("  23:59  all clusters hold tomorrow's VCC");
+    println!();
+    println!("state after day {days}:");
+    println!("  unshaped fraction: {:.1}%", 100.0 * sim.unshaped_fraction());
+    for (cid, cause) in sim.last_unshapeable.iter().take(8) {
+        println!("    cluster {cid}: {cause:?}");
+    }
+    let pauses: usize = sim.slo_states.iter().map(|s| s.pauses_triggered).sum();
+    println!("  SLO pauses triggered so far: {pauses}");
+    if let Some(rt) = &sim.runtime {
+        println!("  artifact solver calls: {}", rt.solver_calls.get());
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    use cics::forecast::DayAheadForecast;
+    use cics::optimizer::{assemble, baselines, pgd};
+    use cics::power::PwlModel;
+
+    let cfg = load_config(args)?;
+    // synthetic single-cluster problem with a midday carbon peak
+    let mut eta = [0.35; HOURS_PER_DAY];
+    for (h, e) in eta.iter_mut().enumerate() {
+        let x = (h as f64 - 13.0) / 5.0;
+        *e = 0.35 + 0.4 * (-0.5 * x * x).exp();
+    }
+    let fc = DayAheadForecast {
+        cluster_id: 0,
+        day: 1,
+        u_if_hat: [1200.0; HOURS_PER_DAY],
+        tuf_hat: 16800.0,
+        tr_hat: 60000.0,
+        ratio_hat: [1.22; HOURS_PER_DAY],
+        u_if_upper: [1350.0; HOURS_PER_DAY],
+        mature: true,
+    };
+    let p = assemble(
+        0,
+        &fc,
+        &eta,
+        16800.0,
+        PwlModel::linear_default(4000.0, 400.0, 1100.0),
+        3840.0,
+        4000.0,
+        cfg.optimizer.lambda_p,
+        cfg.optimizer.delta_min,
+        cfg.optimizer.delta_max,
+    )
+    .map_err(|e| anyhow::anyhow!("assemble failed: {e:?}"))?;
+
+    let native = pgd::solve(&p, cfg.optimizer.lambda_e * 100.0, cfg.optimizer.iters);
+    println!("native PGD : carbon {:.2} kg, peak {:.2} kW", native.carbon_kg, native.peak_kw);
+    let greedy = baselines::greedy_carbon(&p, &eta);
+    println!("greedy     : carbon {:.2} kg, peak {:.2} kW", greedy.carbon_kg, greedy.peak_kw);
+    let base = baselines::unshaped(&p);
+    println!("unshaped   : carbon {:.2} kg, peak {:.2} kW", base.carbon_kg, base.peak_kw);
+    if let Some(rt) = cics::runtime::Runtime::load_default(&cfg.artifact_dir) {
+        let sols = rt.solve(std::slice::from_ref(&p), cfg.optimizer.lambda_e * 100.0)?;
+        println!(
+            "artifact   : carbon {:.2} kg, peak {:.2} kW (platform {})",
+            sols[0].carbon_kg,
+            sols[0].peak_kw,
+            rt.platform()
+        );
+        let max_dev = native
+            .delta
+            .iter()
+            .zip(&sols[0].delta)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        println!("max |delta_native - delta_artifact| = {max_dev:.4}");
+    } else {
+        println!("artifact   : not found (run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let out = args.get("out").unwrap_or("reports").to_string();
+    let days = args.usize("days", 45);
+    let mut sim = Simulation::new(cfg);
+    sim.run_days(days);
+    // Fig 7 CSVs
+    let mut rows = Vec::new();
+    for t in cics::forecast::Target::ALL {
+        let pct = sim.ape.all_percentiles(t);
+        let (chart, trows) = report::fig7_panel(t.name(), &pct);
+        println!("{chart}");
+        rows.extend(trows);
+    }
+    report::write_csv(
+        std::path::Path::new(&out).join("fig7_forecast_ape.csv").as_path(),
+        report::FIG7_HEADER,
+        &rows,
+    )?;
+    // cluster-day panels for the last day
+    let mut day_rows = Vec::new();
+    for cid in 0..sim.fleet.clusters.len() {
+        if let Some(s) = sim.metrics.summary(cid, days - 1) {
+            day_rows.extend(report::cluster_day_csv(s));
+        }
+    }
+    report::write_csv(
+        std::path::Path::new(&out).join("cluster_days.csv").as_path(),
+        report::CLUSTER_DAY_HEADER,
+        &day_rows,
+    )?;
+    println!("wrote reports into {out}/");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "experiment" => cmd_experiment(&args),
+        "pipelines" => cmd_pipelines(&args),
+        "solve" => cmd_solve(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            println!(
+                "cics — Carbon-Intelligent Compute System (paper reproduction)\n\
+                 usage: cics <simulate|experiment|pipelines|solve|report> [--days N]\n\
+                 \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
+                 \u{20}      [--warmup N] [--measure N]"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Baseline day-ahead policies for the evaluation benches.
+//!
+//! * `unshaped` — delta = 0 (no CICS; the control arm of Fig 12).
+//! * `greedy_carbon` — the academic prior (GreenSlot-like [16]-[18]):
+//!   rank hours by forecast carbon intensity and waterfill flexible work
+//!   into the greenest hours up to the box bounds, ignoring power peaks.
+//! * `peak_only` — lambda_e = 0: the pure infrastructure-efficiency
+//!   shaper (valley filling).
+//! * `oracle_carbon` — greedy with *actual* (not forecast) carbon
+//!   intensities; bounds the value of better carbon forecasts.
+
+use crate::timebase::HOURS_PER_DAY;
+
+use super::pgd;
+use super::problem::{ClusterProblem, ClusterSolution};
+
+/// No shaping: delta = 0.
+pub fn unshaped(p: &ClusterProblem) -> ClusterSolution {
+    p.solution([0.0; HOURS_PER_DAY])
+}
+
+/// Greedy carbon-ordered waterfill. Drains flexible usage from the
+/// dirtiest hours (toward `lo`) and pours it into the greenest hours
+/// (toward `ub`) until no transfer strictly helps, preserving
+/// `sum delta = 0`.
+pub fn greedy_carbon(p: &ClusterProblem, eta: &[f64; HOURS_PER_DAY]) -> ClusterSolution {
+    let mut delta = [0.0; HOURS_PER_DAY];
+    let mut order: Vec<usize> = (0..HOURS_PER_DAY).collect();
+    order.sort_by(|&a, &b| eta[a].partial_cmp(&eta[b]).unwrap());
+    // two-pointer transfer: greenest receives, dirtiest donates
+    let (mut gi, mut di) = (0usize, HOURS_PER_DAY - 1);
+    while gi < di {
+        let g = order[gi];
+        let d = order[di];
+        if eta[d] <= eta[g] {
+            break;
+        }
+        let room = p.ub[g] - delta[g];
+        let avail = delta[d] - p.lo[d];
+        let x = room.min(avail);
+        if x > 1e-12 {
+            delta[g] += x;
+            delta[d] -= x;
+        }
+        if p.ub[g] - delta[g] <= 1e-12 {
+            gi += 1;
+        }
+        if delta[d] - p.lo[d] <= 1e-12 {
+            di -= 1;
+        }
+        if x <= 1e-12 && p.ub[g] - delta[g] > 1e-12 && delta[d] - p.lo[d] > 1e-12 {
+            break; // no transfer possible
+        }
+    }
+    p.solution(delta)
+}
+
+/// Peak-only shaping: run the PGD solver with lambda_e = 0.
+pub fn peak_only(p: &ClusterProblem, iters: usize) -> ClusterSolution {
+    pgd::solve(p, 0.0, iters)
+}
+
+/// Greedy with oracle carbon intensities.
+pub fn oracle_carbon(p: &ClusterProblem, eta_true: &[f64; HOURS_PER_DAY]) -> ClusterSolution {
+    greedy_carbon(p, eta_true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::DayAheadForecast;
+    use crate::optimizer::problem::assemble;
+    use crate::power::PwlModel;
+
+    fn toy() -> (ClusterProblem, [f64; HOURS_PER_DAY]) {
+        let mut eta = [0.3; HOURS_PER_DAY];
+        for (h, e) in eta.iter_mut().enumerate() {
+            let x = (h as f64 - 13.0) / 5.0;
+            *e = 0.3 + 0.4 * (-0.5 * x * x).exp();
+        }
+        let fc = DayAheadForecast {
+            cluster_id: 0,
+            day: 30,
+            u_if_hat: [1200.0; HOURS_PER_DAY],
+            tuf_hat: 14400.0,
+            tr_hat: 55000.0,
+            ratio_hat: [1.2; HOURS_PER_DAY],
+            u_if_upper: [1300.0; HOURS_PER_DAY],
+            mature: true,
+        };
+        let p = assemble(
+            0,
+            &fc,
+            &eta,
+            14400.0,
+            PwlModel::linear_default(4000.0, 400.0, 1100.0),
+            3840.0,
+            4000.0,
+            0.25,
+            -1.0,
+            3.0,
+        )
+        .unwrap();
+        (p, eta)
+    }
+
+    #[test]
+    fn unshaped_is_zero_delta() {
+        let (p, _) = toy();
+        let s = unshaped(&p);
+        assert!(s.delta.iter().all(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn greedy_feasible_and_reduces_carbon() {
+        let (p, eta) = toy();
+        let s = greedy_carbon(&p, &eta);
+        assert!(p.feasible(&s.delta, 1e-6));
+        let base = unshaped(&p);
+        assert!(s.carbon_kg < base.carbon_kg, "{} vs {}", s.carbon_kg, base.carbon_kg);
+    }
+
+    #[test]
+    fn greedy_saturates_extremes() {
+        let (p, eta) = toy();
+        let s = greedy_carbon(&p, &eta);
+        // dirtiest hour should be at its lower bound
+        let dirtiest = (0..HOURS_PER_DAY)
+            .max_by(|&a, &b| eta[a].partial_cmp(&eta[b]).unwrap())
+            .unwrap();
+        assert!((s.delta[dirtiest] - p.lo[dirtiest]).abs() < 1e-6);
+        // greenest hour filled to its cap
+        let greenest = (0..HOURS_PER_DAY)
+            .min_by(|&a, &b| eta[a].partial_cmp(&eta[b]).unwrap())
+            .unwrap();
+        assert!((s.delta[greenest] - p.ub[greenest]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn greedy_ignores_peaks_pgd_does_not() {
+        // greedy piles everything into the few greenest hours, spiking the
+        // peak; the co-optimizer must hold a lower peak at similar carbon.
+        let (p, eta) = toy();
+        let g = greedy_carbon(&p, &eta);
+        let o = pgd::solve(&p, 10.0, 400);
+        assert!(o.peak_kw <= g.peak_kw + 1e-9, "pgd {} greedy {}", o.peak_kw, g.peak_kw);
+    }
+
+    #[test]
+    fn peak_only_flattens() {
+        let (mut p, _) = toy();
+        for (h, u) in p.u_if_hat.iter_mut().enumerate() {
+            let x = (h as f64 - 14.0) / 24.0 * std::f64::consts::TAU;
+            *u = 1200.0 * (1.0 + 0.3 * x.cos());
+        }
+        p.lambda_p = 10.0;
+        let s = peak_only(&p, 300);
+        let base = unshaped(&p);
+        assert!(s.peak_kw < base.peak_kw);
+    }
+}

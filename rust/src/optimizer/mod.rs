@@ -1,0 +1,12 @@
+//! Day-ahead risk-aware optimization (paper §III-C): problem assembly,
+//! the rust-native projected-gradient reference solver, baselines, and
+//! campus contract enforcement. The production solve path runs the AOT
+//! JAX/Pallas artifact through `crate::runtime`; `pgd` is its
+//! bit-independent mirror and fallback.
+
+pub mod baselines;
+pub mod campus;
+pub mod pgd;
+pub mod problem;
+
+pub use problem::{assemble, ClusterProblem, ClusterSolution, Unshapeable};

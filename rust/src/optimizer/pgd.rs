@@ -1,0 +1,272 @@
+//! Rust-native projected-gradient solver — the bit-independent reference
+//! implementation of the AOT JAX/Pallas artifact (same algorithm, same
+//! schedules; f64 here vs f32 there). Used to cross-check the artifact in
+//! integration tests, as the fallback when artifacts are absent, and as a
+//! subject for the optimizer benches.
+//!
+//! Algorithm (DESIGN.md decisions 2-3): minimize the smoothed objective
+//!   f(delta) = lam_e sum_h eta(h) P(u(h)) + lam_p * LSE_beta_h(P(u(h)))
+//! over {sum_h delta = 0} /\ [lo, ub] by projected gradient with an
+//! exact bisection projection; beta ramps geometrically so LSE -> max.
+
+use crate::timebase::HOURS_PER_DAY;
+
+use super::problem::{ClusterProblem, ClusterSolution};
+
+/// Iteration schedules — MUST match `python/compile/model.py` so the
+/// native solver is a faithful mirror of the artifact.
+pub const LR0: f64 = 0.05;
+pub const BETA0: f64 = 0.5;
+pub const BETA1: f64 = 64.0;
+
+/// (lr, beta) for iteration `t` of `iters`.
+pub fn schedule(t: usize, iters: usize) -> (f64, f64) {
+    let tf = t as f64;
+    let lr = LR0 / (1.0 + tf / 100.0);
+    let beta = BETA0 * (BETA1 / BETA0).powf(tf / (iters.max(2) - 1) as f64);
+    (lr, beta)
+}
+
+/// Euclidean projection of `z` onto {sum = 0} /\ [lo, ub] by bisection on
+/// the shift nu (48 fixed iterations, like the kernel).
+pub fn project_sum_zero_box(
+    z: &[f64; HOURS_PER_DAY],
+    lo: &[f64; HOURS_PER_DAY],
+    ub: &[f64; HOURS_PER_DAY],
+) -> [f64; HOURS_PER_DAY] {
+    let mut nu_lo = f64::INFINITY;
+    let mut nu_hi = f64::NEG_INFINITY;
+    for h in 0..HOURS_PER_DAY {
+        nu_lo = nu_lo.min(z[h] - ub[h]);
+        nu_hi = nu_hi.max(z[h] - lo[h]);
+    }
+    // Early exit once the bracket collapses to fp resolution (the kernel
+    // keeps a fixed 48 iterations to stay branch-free on TPU; the native
+    // mirror converges to the same nu and exits in ~30 iterations).
+    let tol = 1e-13 * (1.0 + nu_hi.abs().max(nu_lo.abs()));
+    for _ in 0..48 {
+        if nu_hi - nu_lo <= tol {
+            break;
+        }
+        let nu = 0.5 * (nu_lo + nu_hi);
+        let s: f64 = (0..HOURS_PER_DAY).map(|h| (z[h] - nu).clamp(lo[h], ub[h])).sum();
+        if s > 0.0 {
+            nu_lo = nu;
+        } else {
+            nu_hi = nu;
+        }
+    }
+    let nu = 0.5 * (nu_lo + nu_hi);
+    let mut out = [0.0; HOURS_PER_DAY];
+    for h in 0..HOURS_PER_DAY {
+        out[h] = (z[h] - nu).clamp(lo[h], ub[h]);
+    }
+    out
+}
+
+/// One projected-gradient step (mirror of the Pallas kernel).
+pub fn step(
+    p: &ClusterProblem,
+    delta: &[f64; HOURS_PER_DAY],
+    lambda_e: f64,
+    lr: f64,
+    beta: f64,
+) -> [f64; HOURS_PER_DAY] {
+    let scale = p.tau / 24.0;
+    let mut pw = [0.0; HOURS_PER_DAY];
+    let mut pi = [0.0; HOURS_PER_DAY];
+    let mut m = f64::NEG_INFINITY;
+    for h in 0..HOURS_PER_DAY {
+        let u = p.u_if_hat[h] + (1.0 + delta[h]) * scale;
+        pw[h] = p.power.eval(u);
+        pi[h] = p.power.slope(u);
+        m = m.max(pw[h]);
+    }
+    // stabilized softmax over hours
+    let mut exp = [0.0; HOURS_PER_DAY];
+    let mut sum = 0.0;
+    for h in 0..HOURS_PER_DAY {
+        exp[h] = (beta * (pw[h] - m)).exp();
+        sum += exp[h];
+    }
+    // Normalized gradient step: delta moves at most `lr` per hour per
+    // iteration regardless of problem scaling (GCU/kW magnitudes, lambda
+    // weights) — scale-invariance keeps one schedule good for every
+    // cluster. Mirrors the Pallas kernel exactly.
+    let mut g = [0.0; HOURS_PER_DAY];
+    let mut gmax: f64 = 0.0;
+    for h in 0..HOURS_PER_DAY {
+        let smax = exp[h] / sum;
+        g[h] = scale * pi[h] * (lambda_e * p.eta[h] + p.lambda_p * smax);
+        gmax = gmax.max(g[h].abs());
+    }
+    let mut z = [0.0; HOURS_PER_DAY];
+    for h in 0..HOURS_PER_DAY {
+        z[h] = delta[h] - lr * g[h] / (gmax + 1e-12);
+    }
+    project_sum_zero_box(&z, &p.lo, &p.ub)
+}
+
+/// Full solve for one cluster.
+pub fn solve(p: &ClusterProblem, lambda_e: f64, iters: usize) -> ClusterSolution {
+    let mut delta = [0.0; HOURS_PER_DAY];
+    for t in 0..iters {
+        let (lr, beta) = schedule(t, iters);
+        delta = step(p, &delta, lambda_e, lr, beta);
+    }
+    p.solution(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::DayAheadForecast;
+    use crate::optimizer::problem::assemble;
+    use crate::power::PwlModel;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn toy_problem(eta_shape: &str) -> ClusterProblem {
+        let mut eta = [0.4; HOURS_PER_DAY];
+        match eta_shape {
+            "midday_peak" => {
+                for (h, e) in eta.iter_mut().enumerate() {
+                    let x = (h as f64 - 13.0) / 5.0;
+                    *e = 0.35 + 0.35 * (-0.5 * x * x).exp();
+                }
+            }
+            "flat" => {}
+            _ => unreachable!(),
+        }
+        let fc = DayAheadForecast {
+            cluster_id: 0,
+            day: 30,
+            u_if_hat: [1200.0; HOURS_PER_DAY],
+            tuf_hat: 16800.0,
+            tr_hat: 60000.0,
+            ratio_hat: [1.22; HOURS_PER_DAY],
+            u_if_upper: [1350.0; HOURS_PER_DAY],
+            mature: true,
+        };
+        assemble(
+            0,
+            &fc,
+            &eta,
+            16800.0,
+            PwlModel::linear_default(4000.0, 400.0, 1100.0),
+            3840.0,
+            4000.0,
+            0.25,
+            -1.0,
+            3.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn projection_properties() {
+        // property: output sums to ~0, respects box, and is idempotent
+        prop::for_all(11, prop::array_uniform(-3.0, 3.0, HOURS_PER_DAY), |v: &Vec<f64>| {
+            let mut z = [0.0; HOURS_PER_DAY];
+            z.copy_from_slice(v);
+            let lo = [-1.0; HOURS_PER_DAY];
+            let ub = [2.5; HOURS_PER_DAY];
+            let x = project_sum_zero_box(&z, &lo, &ub);
+            let sum: f64 = x.iter().sum();
+            let in_box = x.iter().all(|&d| (-1.0 - 1e-9..=2.5 + 1e-9).contains(&d));
+            let x2 = project_sum_zero_box(&x, &lo, &ub);
+            let idem = x.iter().zip(&x2).all(|(a, b)| (a - b).abs() < 1e-6);
+            sum.abs() < 1e-6 && in_box && idem
+        });
+    }
+
+    #[test]
+    fn projection_is_noop_on_feasible_points() {
+        let mut rng = Pcg::new(3, 9);
+        for _ in 0..50 {
+            // construct a feasible point: antisymmetric pairs
+            let mut z = [0.0; HOURS_PER_DAY];
+            for h in 0..HOURS_PER_DAY / 2 {
+                let v = rng.uniform(-0.9, 0.9);
+                z[2 * h] = v;
+                z[2 * h + 1] = -v;
+            }
+            let lo = [-1.0; HOURS_PER_DAY];
+            let ub = [1.0; HOURS_PER_DAY];
+            let x = project_sum_zero_box(&z, &lo, &ub);
+            for h in 0..HOURS_PER_DAY {
+                assert!((x[h] - z[h]).abs() < 1e-6, "hour {h}: {} vs {}", x[h], z[h]);
+            }
+        }
+    }
+
+    #[test]
+    fn solver_moves_load_away_from_dirty_hours() {
+        let p = toy_problem("midday_peak");
+        let sol = solve(&p, 10.0, 400);
+        assert!(p.feasible(&sol.delta, 1e-5));
+        // midday deltas negative, night deltas positive
+        let midday: f64 = (11..16).map(|h| sol.delta[h]).sum();
+        let night: f64 = (0..5).map(|h| sol.delta[h]).sum();
+        assert!(midday < -0.3, "midday {midday}");
+        assert!(night > 0.2, "night {night}");
+        // objective improves on the unshaped profile
+        let base = p.objective(&[0.0; HOURS_PER_DAY], 10.0);
+        let shaped = p.objective(&sol.delta, 10.0);
+        assert!(shaped < base, "shaped {shaped} base {base}");
+    }
+
+    #[test]
+    fn flat_eta_keeps_profile_flat() {
+        // with flat carbon + flat inflexible + concave-free (linear) power,
+        // delta = 0 is optimal; solver should stay near it
+        let p = toy_problem("flat");
+        let sol = solve(&p, 10.0, 400);
+        for h in 0..HOURS_PER_DAY {
+            assert!(sol.delta[h].abs() < 0.05, "hour {h}: {}", sol.delta[h]);
+        }
+    }
+
+    #[test]
+    fn peak_weight_flattens_peaks() {
+        // strong peak pricing + diurnal inflexible usage: flexible should
+        // fill valleys (delta positive at night where inflexible is low)
+        let mut p = toy_problem("flat");
+        for (h, u) in p.u_if_hat.iter_mut().enumerate() {
+            let x = (h as f64 - 14.0) / 24.0 * std::f64::consts::TAU;
+            *u = 1200.0 * (1.0 + 0.25 * x.cos());
+        }
+        p.lambda_p = 50.0;
+        let sol = solve(&p, 0.01, 400);
+        assert!(p.feasible(&sol.delta, 1e-5));
+        // peak of shaped profile below unshaped peak
+        let base = p.solution([0.0; HOURS_PER_DAY]);
+        assert!(sol.peak_kw < base.peak_kw, "{} vs {}", sol.peak_kw, base.peak_kw);
+    }
+
+    #[test]
+    fn solutions_monotone_in_lambda_e() {
+        // more carbon pricing -> no more carbon than less pricing
+        let p = toy_problem("midday_peak");
+        let lo = solve(&p, 0.5, 300);
+        let hi = solve(&p, 50.0, 300);
+        assert!(hi.carbon_kg <= lo.carbon_kg + 1e-6);
+    }
+
+    #[test]
+    fn objective_descends_across_iterations() {
+        let p = toy_problem("midday_peak");
+        let mut delta = [0.0; HOURS_PER_DAY];
+        let mut last_obj = p.objective(&delta, 10.0);
+        let iters = 300;
+        for t in 0..iters {
+            let (lr, beta) = schedule(t, iters);
+            delta = step(&p, &delta, 10.0, lr, beta);
+            if t % 100 == 99 {
+                let obj = p.objective(&delta, 10.0);
+                assert!(obj <= last_obj + 1e-6, "iteration {t}: {obj} > {last_obj}");
+                last_obj = obj;
+            }
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Day-ahead optimization problem assembly (paper §III-C).
+//!
+//! Collects, per cluster: carbon forecast, inflexible usage forecast,
+//! risk-aware flexible usage tau, the learned power model, and the box
+//! bounds on hourly deviations delta implied by the power-capping chance
+//! constraint and machine capacity. The same `ClusterProblem` is consumed
+//! by the rust-native solver, by the baselines and (after f32 flattening)
+//! by the AOT JAX artifact.
+
+use crate::forecast::DayAheadForecast;
+use crate::power::{PwlModel, K_SEGMENTS};
+use crate::timebase::HOURS_PER_DAY;
+
+/// One cluster's slice of the fleetwide day-ahead problem.
+#[derive(Clone, Debug)]
+pub struct ClusterProblem {
+    pub cluster_id: usize,
+    /// Day-ahead carbon intensity forecast per hour (kg CO2e / kWh).
+    pub eta: [f64; HOURS_PER_DAY],
+    /// Predicted hourly inflexible usage (GCU).
+    pub u_if_hat: [f64; HOURS_PER_DAY],
+    /// Risk-aware daily flexible usage tau_U (GCU-h).
+    pub tau: f64,
+    /// Learned cluster-level piecewise-linear power model.
+    pub power: PwlModel,
+    /// Box bounds on delta (lo <= 0 <= ub).
+    pub lo: [f64; HOURS_PER_DAY],
+    pub ub: [f64; HOURS_PER_DAY],
+    /// Peak-power weight for this cluster ($ / kW / day); may be raised by
+    /// the campus contract dual sweep.
+    pub lambda_p: f64,
+    /// Predicted reservation/usage ratio per hour (for VCC construction).
+    pub ratio_hat: [f64; HOURS_PER_DAY],
+    /// Machine capacity (GCU).
+    pub capacity_gcu: f64,
+}
+
+/// Why a cluster is excluded from shaping on a given day (§IV: ~10% of
+/// cluster-days).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Unshapeable {
+    /// Not enough telemetry/history for forecasting or power modeling.
+    InsufficientData,
+    /// SLO guard pause in effect.
+    SloPaused,
+    /// Risk-aware demand exceeds machine capacity (cluster too full) or
+    /// the bounds leave no room (lo/ub collapse).
+    NoRoom,
+    /// Gradual-rollout wave not yet enabled.
+    RolloutPending,
+    /// Negligible flexible demand — nothing to shift.
+    NoFlex,
+}
+
+/// Assemble a `ClusterProblem` from pipeline outputs, or explain why the
+/// cluster is unshapeable today.
+#[allow(clippy::too_many_arguments)]
+pub fn assemble(
+    cluster_id: usize,
+    fc: &DayAheadForecast,
+    eta: &[f64; HOURS_PER_DAY],
+    tau: f64,
+    power: PwlModel,
+    power_cap_gcu: f64,
+    capacity_gcu: f64,
+    lambda_p: f64,
+    delta_min: f64,
+    delta_max: f64,
+) -> Result<ClusterProblem, Unshapeable> {
+    if !fc.mature {
+        return Err(Unshapeable::InsufficientData);
+    }
+    if tau <= 1e-6 || tau < 0.005 * capacity_gcu * 24.0 {
+        return Err(Unshapeable::NoFlex);
+    }
+    let mut lo = [0.0; HOURS_PER_DAY];
+    let mut ub = [0.0; HOURS_PER_DAY];
+    let flex_h = tau / 24.0;
+    for h in 0..HOURS_PER_DAY {
+        // Power-capping chance constraint (paper §III-C):
+        //   (U_IF)_{1-gamma}(h) + (1+delta) tau/24 <= U_pow
+        let cap_pow = (power_cap_gcu - fc.u_if_upper[h]) / flex_h - 1.0;
+        // Machine capacity through the reservation ratio:
+        //   (U_IF_hat + (1+delta) tau/24) * R_hat <= C
+        let cap_mach = (capacity_gcu / fc.ratio_hat[h] - fc.u_if_hat[h]) / flex_h - 1.0;
+        ub[h] = cap_pow.min(cap_mach).min(delta_max);
+        lo[h] = delta_min.max(-1.0);
+        if ub[h] < 0.0 {
+            // No headroom this hour even at delta = 0: the cluster cannot
+            // honor its nominal flexible rate — fall back to capacity.
+            return Err(Unshapeable::NoRoom);
+        }
+    }
+    // Daily conservation needs slack: sum(ub) must allow moving the work
+    // dropped at the dirtiest hours somewhere else.
+    let ub_sum: f64 = ub.iter().sum();
+    if ub_sum < 0.5 {
+        return Err(Unshapeable::NoRoom);
+    }
+    Ok(ClusterProblem {
+        cluster_id,
+        eta: *eta,
+        u_if_hat: fc.u_if_hat,
+        tau,
+        power,
+        lo,
+        ub,
+        lambda_p,
+        ratio_hat: fc.ratio_hat,
+        capacity_gcu,
+    })
+}
+
+/// Solution for one cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterSolution {
+    pub cluster_id: usize,
+    pub delta: [f64; HOURS_PER_DAY],
+    /// Exact peak power of the planned profile (kW).
+    pub peak_kw: f64,
+    /// Planned hourly usage (GCU).
+    pub usage: [f64; HOURS_PER_DAY],
+    /// Planned hourly power (kW).
+    pub power_kw: [f64; HOURS_PER_DAY],
+    /// Expected daily carbon (kg CO2e) of the planned profile.
+    pub carbon_kg: f64,
+}
+
+impl ClusterProblem {
+    /// Planned usage profile for a given delta.
+    pub fn usage_for(&self, delta: &[f64; HOURS_PER_DAY]) -> [f64; HOURS_PER_DAY] {
+        let mut u = [0.0; HOURS_PER_DAY];
+        for h in 0..HOURS_PER_DAY {
+            u[h] = self.u_if_hat[h] + (1.0 + delta[h]) * self.tau / 24.0;
+        }
+        u
+    }
+
+    /// Materialize a `ClusterSolution` from deltas.
+    pub fn solution(&self, delta: [f64; HOURS_PER_DAY]) -> ClusterSolution {
+        let usage = self.usage_for(&delta);
+        let mut power_kw = [0.0; HOURS_PER_DAY];
+        let mut carbon = 0.0;
+        let mut peak: f64 = 0.0;
+        for h in 0..HOURS_PER_DAY {
+            power_kw[h] = self.power.eval(usage[h]);
+            carbon += power_kw[h] * self.eta[h];
+            peak = peak.max(power_kw[h]);
+        }
+        ClusterSolution {
+            cluster_id: self.cluster_id,
+            delta,
+            peak_kw: peak,
+            usage,
+            power_kw,
+            carbon_kg: carbon,
+        }
+    }
+
+    /// Exact (non-smoothed) objective value of a delta profile:
+    /// `lam_e * sum_h eta * P(u) + lam_p * max_h P(u)`.
+    pub fn objective(&self, delta: &[f64; HOURS_PER_DAY], lambda_e: f64) -> f64 {
+        let usage = self.usage_for(delta);
+        let mut carbon = 0.0;
+        let mut peak: f64 = 0.0;
+        for h in 0..HOURS_PER_DAY {
+            let p = self.power.eval(usage[h]);
+            carbon += self.eta[h] * p;
+            peak = peak.max(p);
+        }
+        lambda_e * carbon + self.lambda_p * peak
+    }
+
+    /// Check a delta profile against all constraints (tolerance `tol`).
+    pub fn feasible(&self, delta: &[f64; HOURS_PER_DAY], tol: f64) -> bool {
+        let sum: f64 = delta.iter().sum();
+        if sum.abs() > tol * HOURS_PER_DAY as f64 {
+            return false;
+        }
+        for h in 0..HOURS_PER_DAY {
+            if delta[h] < self.lo[h] - tol || delta[h] > self.ub[h] + tol {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Flatten the power model for the f32 AOT artifact.
+    pub fn power_arrays(&self) -> ([f32; K_SEGMENTS], [f32; K_SEGMENTS], [f32; K_SEGMENTS], f32)
+    {
+        let mut xs = [0f32; K_SEGMENTS];
+        let mut w = [0f32; K_SEGMENTS];
+        let mut sl = [0f32; K_SEGMENTS];
+        for k in 0..K_SEGMENTS {
+            xs[k] = self.power.xs[k] as f32;
+            // clamp "infinite" widths to a large-but-f32-safe value
+            w[k] = self.power.w[k].min(1e12) as f32;
+            sl[k] = self.power.sl[k] as f32;
+        }
+        (xs, w, sl, self.power.p0 as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::PwlModel;
+
+    pub fn toy_forecast(mature: bool) -> DayAheadForecast {
+        DayAheadForecast {
+            cluster_id: 0,
+            day: 30,
+            u_if_hat: [1000.0; HOURS_PER_DAY],
+            tuf_hat: 12000.0,
+            tr_hat: 50000.0,
+            ratio_hat: [1.25; HOURS_PER_DAY],
+            u_if_upper: [1100.0; HOURS_PER_DAY],
+            mature,
+        }
+    }
+
+    fn toy_power() -> PwlModel {
+        PwlModel::linear_default(4000.0, 400.0, 1000.0)
+    }
+
+    #[test]
+    fn assemble_happy_path() {
+        let fc = toy_forecast(true);
+        let p = assemble(
+            0, &fc, &[0.5; HOURS_PER_DAY], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0,
+            3.0,
+        )
+        .unwrap();
+        // bounds bracket zero
+        for h in 0..HOURS_PER_DAY {
+            assert!(p.lo[h] <= 0.0 && p.ub[h] > 0.0);
+            assert!(p.ub[h] <= 3.0);
+        }
+        assert!(p.feasible(&[0.0; HOURS_PER_DAY], 1e-9));
+    }
+
+    #[test]
+    fn immature_and_tiny_flex_rejected() {
+        let fc = toy_forecast(false);
+        assert_eq!(
+            assemble(0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
+                .unwrap_err(),
+            Unshapeable::InsufficientData
+        );
+        let fc2 = toy_forecast(true);
+        assert_eq!(
+            assemble(0, &fc2, &[0.5; 24], 10.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
+                .unwrap_err(),
+            Unshapeable::NoFlex
+        );
+    }
+
+    #[test]
+    fn full_cluster_has_no_room() {
+        let mut fc = toy_forecast(true);
+        fc.u_if_upper = [3790.0; HOURS_PER_DAY]; // nearly at the power cap
+        assert_eq!(
+            assemble(0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
+                .unwrap_err(),
+            Unshapeable::NoRoom
+        );
+    }
+
+    #[test]
+    fn objective_and_solution_consistent() {
+        let fc = toy_forecast(true);
+        let p = assemble(
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0,
+        )
+        .unwrap();
+        let delta = [0.0; HOURS_PER_DAY];
+        let sol = p.solution(delta);
+        let obj = p.objective(&delta, 2.0);
+        let manual = 2.0 * sol.carbon_kg + 0.25 * sol.peak_kw;
+        assert!((obj - manual).abs() < 1e-9);
+        // flat eta + flat usage: power flat, peak == each hour's power
+        assert!((sol.peak_kw - sol.power_kw[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feasibility_checks() {
+        let fc = toy_forecast(true);
+        let p = assemble(
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0,
+        )
+        .unwrap();
+        let mut d = [0.0; HOURS_PER_DAY];
+        d[0] = 0.5;
+        assert!(!p.feasible(&d, 1e-6), "sum != 0");
+        d[1] = -0.5;
+        assert!(p.feasible(&d, 1e-6));
+        d[0] = 100.0;
+        d[1] = -100.0;
+        assert!(!p.feasible(&d, 1e-6), "box violated");
+    }
+}

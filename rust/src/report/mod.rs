@@ -1,0 +1,202 @@
+//! Report emission: CSV rows + ASCII charts for every paper figure. Used
+//! by the benches and the `cics report` subcommand. Output lands in
+//! `reports/` by default.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::coordinator::DaySummary;
+use crate::experiment::ExperimentResult;
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::ascii;
+
+/// Write CSV rows (with a header) to `path`, creating parent directories.
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+/// Fig 9/10/11-style single-cluster day panel: VCC vs reservations (top),
+/// normalized power vs carbon intensity (bottom).
+pub fn cluster_day_panel(title: &str, s: &DaySummary) -> String {
+    let mut out = String::new();
+    let resv: Vec<f64> = s.hourly_resv.to_vec();
+    let vcc: Vec<f64> = s.vcc.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; HOURS_PER_DAY]);
+    out.push_str(&ascii::line_chart(
+        &format!("{title} — compute reservations vs VCC (GCU)"),
+        &[("VCC", &vcc), ("reservations", &resv)],
+        12,
+    ));
+    let pmean = s.hourly_power.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+    let pnorm: Vec<f64> = s.hourly_power.iter().map(|p| p / pmean).collect();
+    let cmax = s.carbon_intensity.iter().cloned().fold(0.0, f64::max);
+    let cnorm: Vec<f64> = s.carbon_intensity.iter().map(|c| c / cmax).collect();
+    out.push_str(&ascii::line_chart(
+        &format!("{title} — normalized power vs carbon intensity"),
+        &[("power/mean", &pnorm), ("carbon/max", &cnorm)],
+        10,
+    ));
+    out
+}
+
+/// CSV rows for a cluster-day panel.
+pub fn cluster_day_csv(s: &DaySummary) -> Vec<String> {
+    (0..HOURS_PER_DAY)
+        .map(|h| {
+            format!(
+                "{},{},{},{:.3},{:.3},{:.3},{:.3},{:.5},{:.3}",
+                s.cluster_id,
+                s.day,
+                h,
+                s.vcc.map(|v| v[h]).unwrap_or(f64::NAN),
+                s.hourly_resv[h],
+                s.hourly_usage_if[h],
+                s.hourly_usage_flex[h],
+                s.carbon_intensity[h],
+                s.hourly_power[h],
+            )
+        })
+        .collect()
+}
+
+pub const CLUSTER_DAY_HEADER: &str =
+    "cluster,day,hour,vcc_gcu,resv_gcu,usage_if_gcu,usage_flex_gcu,carbon_kg_per_kwh,power_kw";
+
+/// Fig 12 panel: treated vs control normalized power with CI bands plus
+/// carbon intensity, as ASCII + CSV.
+pub fn experiment_panel(res: &ExperimentResult) -> (String, Vec<String>) {
+    let treated: Vec<f64> = res.treated.iter().map(|x| x.0).collect();
+    let control: Vec<f64> = res.control.iter().map(|x| x.0).collect();
+    let cmax = res.carbon.iter().cloned().fold(0.0, f64::max);
+    let base = (treated.iter().chain(control.iter()).cloned().fold(f64::INFINITY, f64::min)
+        * 0.98)
+        .max(0.0);
+    let span = treated
+        .iter()
+        .chain(control.iter())
+        .cloned()
+        .fold(0.0, f64::max)
+        - base;
+    let carbon_scaled: Vec<f64> =
+        res.carbon.iter().map(|c| base + span * c / cmax).collect();
+    let chart = ascii::line_chart(
+        "Fig 12 — mean normalized cluster power: shaped vs not shaped (carbon overlaid, rescaled)",
+        &[("shaped", &treated), ("not-shaped", &control), ("carbon", &carbon_scaled)],
+        14,
+    );
+    let rows: Vec<String> = (0..HOURS_PER_DAY)
+        .map(|h| {
+            format!(
+                "{},{:.5},{:.5},{:.5},{:.5},{:.5}",
+                h,
+                res.treated[h].0,
+                res.treated[h].1,
+                res.control[h].0,
+                res.control[h].1,
+                res.carbon[h]
+            )
+        })
+        .collect();
+    (chart, rows)
+}
+
+pub const EXPERIMENT_HEADER: &str =
+    "hour,shaped_mean,shaped_ci95,control_mean,control_ci95,carbon_kg_per_kwh";
+
+/// Fig 7 histogram set: distribution over clusters of APE percentiles.
+pub fn fig7_panel(
+    target_name: &str,
+    percentiles: &[(f64, f64, f64)],
+) -> (String, Vec<String>) {
+    let med: Vec<f64> = percentiles.iter().map(|p| p.0).collect();
+    let p90: Vec<f64> = percentiles.iter().map(|p| p.2).collect();
+    let mut chart = ascii::histogram(
+        &format!("Fig 7 [{target_name}] — median APE per cluster (%)"),
+        &med,
+        0.0,
+        51.0,
+        17,
+    );
+    chart.push_str(&ascii::histogram(
+        &format!("Fig 7 [{target_name}] — 90%-ile APE per cluster (%)"),
+        &p90,
+        0.0,
+        51.0,
+        17,
+    ));
+    let rows = percentiles
+        .iter()
+        .enumerate()
+        .map(|(i, (m, p75, p90))| format!("{target_name},{i},{m:.3},{p75:.3},{p90:.3}"))
+        .collect();
+    (chart, rows)
+}
+
+pub const FIG7_HEADER: &str = "target,cluster,ape_median,ape_p75,ape_p90";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_summary() -> DaySummary {
+        DaySummary {
+            cluster_id: 0,
+            day: 3,
+            shaped: true,
+            hourly_power: [100.0; HOURS_PER_DAY],
+            hourly_resv: [500.0; HOURS_PER_DAY],
+            hourly_usage_if: [300.0; HOURS_PER_DAY],
+            hourly_usage_flex: [100.0; HOURS_PER_DAY],
+            carbon_intensity: [0.4; HOURS_PER_DAY],
+            vcc: Some([600.0; HOURS_PER_DAY]),
+            daily_carbon_kg: 960.0,
+            daily_flex_usage_gcuh: 2400.0,
+            daily_reservations_gcuh: 12000.0,
+            flex_submitted_gcuh: 2400.0,
+            flex_done_gcuh: 2300.0,
+            flex_backlog_gcuh: 100.0,
+            jobs_paused: 2,
+            mean_start_delay_ticks: 5.0,
+        }
+    }
+
+    #[test]
+    fn panel_and_csv_render() {
+        let s = toy_summary();
+        let panel = cluster_day_panel("cluster X", &s);
+        assert!(panel.contains("VCC"));
+        let rows = cluster_day_csv(&s);
+        assert_eq!(rows.len(), HOURS_PER_DAY);
+        assert!(rows[0].starts_with("0,3,0,"));
+        assert_eq!(
+            rows[0].split(',').count(),
+            CLUSTER_DAY_HEADER.split(',').count()
+        );
+    }
+
+    #[test]
+    fn csv_writer_creates_dirs() {
+        let dir = std::env::temp_dir().join("cics_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.csv");
+        write_csv(&path, "a,b", &["1,2".into()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fig7_rows_match_header() {
+        let (chart, rows) = fig7_panel("U_IF(h)", &[(1.0, 2.0, 3.0), (4.0, 5.0, 6.0)]);
+        assert!(chart.contains("median APE"));
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].split(',').count(), FIG7_HEADER.split(',').count());
+    }
+}

@@ -1,0 +1,287 @@
+//! Spatial load shifting — the paper's announced extension (§V: "will
+//! soon also shift computing in space"; §IV: "future models will
+//! explicitly characterize spatially flexible demand and extend the
+//! proposed optimization framework").
+//!
+//! Model: a fraction of each cluster's daily flexible demand is
+//! *location-flexible* (the job's data is replicated; §II-B's globally
+//! connected fleet). Before the temporal optimizer runs, a day-ahead
+//! spatial pass reassigns movable GCU-hours across campuses to minimize
+//! forecast carbon, subject to:
+//!   * per-cluster headroom: receiving clusters must keep their power-cap
+//!     and machine-capacity slack (reusing the same bounds the temporal
+//!     problem uses);
+//!   * egress budget: at most `max_move_fraction` of a cluster's movable
+//!     work leaves its home campus (models transfer/locality costs);
+//!   * work conservation: total moved in == total moved out.
+//!
+//! The mechanism is a transport problem solved greedily on the
+//! (source, destination) carbon-differential ordering — provably optimal
+//! for this separable linear objective with independent box constraints.
+
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::stats;
+
+/// One cluster's spatial view for a day.
+#[derive(Clone, Debug)]
+pub struct SpatialCluster {
+    pub cluster_id: usize,
+    pub campus_id: usize,
+    /// Forecast daily flexible demand (GCU-h).
+    pub flex_daily_gcuh: f64,
+    /// Fraction of that demand that is location-flexible.
+    pub movable_fraction: f64,
+    /// Daily *mean* forecast carbon intensity at this cluster's campus
+    /// (kg CO2e/kWh) — spatial moves trade daily averages; intraday
+    /// shaping stays with the temporal optimizer.
+    pub carbon_mean: f64,
+    /// Spare daily capacity for imported work (GCU-h), from the same
+    /// power-cap / machine-capacity bounds the temporal problem uses.
+    pub import_headroom_gcuh: f64,
+    /// Marginal power per GCU (kW/GCU) at nominal usage — converts moved
+    /// compute to moved energy.
+    pub power_slope: f64,
+}
+
+/// A planned transfer of flexible work for one day.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transfer {
+    pub from_cluster: usize,
+    pub to_cluster: usize,
+    pub gcuh: f64,
+    /// Expected carbon saving (kg CO2e).
+    pub saving_kg: f64,
+}
+
+/// Result of the spatial pass.
+#[derive(Clone, Debug, Default)]
+pub struct SpatialPlan {
+    pub transfers: Vec<Transfer>,
+    /// Net change of daily flexible demand per cluster (GCU-h), indexed by
+    /// cluster id as supplied.
+    pub delta_gcuh: Vec<(usize, f64)>,
+    pub total_moved_gcuh: f64,
+    pub total_saving_kg: f64,
+}
+
+/// Plan one day of spatial shifts.
+///
+/// Greedy matching: sort donors by carbon descending, receivers by carbon
+/// ascending; move work along the largest positive carbon differential
+/// until budgets or headroom are exhausted or the differential falls
+/// below `min_differential` (kg/kWh) — a hysteresis band that prevents
+/// churn for negligible savings.
+pub fn plan_spatial(clusters: &[SpatialCluster], min_differential: f64) -> SpatialPlan {
+    let mut budget: Vec<f64> = clusters
+        .iter()
+        .map(|c| c.flex_daily_gcuh * c.movable_fraction)
+        .collect();
+    let mut headroom: Vec<f64> = clusters.iter().map(|c| c.import_headroom_gcuh).collect();
+
+    let mut donors: Vec<usize> = (0..clusters.len()).collect();
+    donors.sort_by(|&a, &b| clusters[b].carbon_mean.total_cmp(&clusters[a].carbon_mean));
+    let mut receivers: Vec<usize> = (0..clusters.len()).collect();
+    receivers.sort_by(|&a, &b| clusters[a].carbon_mean.total_cmp(&clusters[b].carbon_mean));
+
+    let mut plan = SpatialPlan {
+        delta_gcuh: clusters.iter().map(|c| (c.cluster_id, 0.0)).collect(),
+        ..Default::default()
+    };
+
+    let (mut di, mut ri) = (0usize, 0usize);
+    while di < donors.len() && ri < receivers.len() {
+        let d = donors[di];
+        let r = receivers[ri];
+        let cd = &clusters[d];
+        let cr = &clusters[r];
+        // same campus or differential below the band: no more useful moves
+        let diff = cd.carbon_mean - cr.carbon_mean;
+        if diff <= min_differential {
+            break;
+        }
+        if cd.campus_id == cr.campus_id {
+            // moving within a campus changes nothing; skip the pairing
+            // that would otherwise deadlock the two pointers
+            if budget[d] <= headroom[r] {
+                di += 1;
+            } else {
+                ri += 1;
+            }
+            continue;
+        }
+        let x = budget[d].min(headroom[r]);
+        if x > 1e-9 {
+            // saved energy: moved GCU-h x donor slope; spent at receiver
+            let saving =
+                x * (cd.power_slope * cd.carbon_mean - cr.power_slope * cr.carbon_mean);
+            plan.transfers.push(Transfer {
+                from_cluster: cd.cluster_id,
+                to_cluster: cr.cluster_id,
+                gcuh: x,
+                saving_kg: saving,
+            });
+            plan.delta_gcuh[d].1 -= x;
+            plan.delta_gcuh[r].1 += x;
+            plan.total_moved_gcuh += x;
+            plan.total_saving_kg += saving;
+            budget[d] -= x;
+            headroom[r] -= x;
+        }
+        if budget[d] <= 1e-9 {
+            di += 1;
+        }
+        if headroom[r] <= 1e-9 {
+            ri += 1;
+        }
+    }
+    plan
+}
+
+/// Build `SpatialCluster` views from forecasts + campus carbon means.
+pub fn spatial_view(
+    cluster_id: usize,
+    campus_id: usize,
+    tuf_hat: f64,
+    movable_fraction: f64,
+    eta: &[f64; HOURS_PER_DAY],
+    capacity_gcu: f64,
+    u_if_mean: f64,
+    power_slope: f64,
+) -> SpatialCluster {
+    let carbon_mean = stats::mean(eta);
+    // import headroom: spare average capacity after inflexible + current
+    // flexible, with a 10% guard band
+    let headroom =
+        ((capacity_gcu * 0.9 - u_if_mean) * 24.0 - tuf_hat).max(0.0);
+    SpatialCluster {
+        cluster_id,
+        campus_id,
+        flex_daily_gcuh: tuf_hat,
+        movable_fraction,
+        carbon_mean,
+        import_headroom_gcuh: headroom,
+        power_slope,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cid: usize, campus: usize, flex: f64, movable: f64, carbon: f64, head: f64)
+        -> SpatialCluster
+    {
+        SpatialCluster {
+            cluster_id: cid,
+            campus_id: campus,
+            flex_daily_gcuh: flex,
+            movable_fraction: movable,
+            carbon_mean: carbon,
+            import_headroom_gcuh: head,
+            power_slope: 0.15,
+        }
+    }
+
+    #[test]
+    fn moves_from_dirty_to_clean() {
+        let cs = vec![
+            mk(0, 0, 10_000.0, 0.3, 0.7, 1_000.0), // dirty donor
+            mk(1, 1, 10_000.0, 0.3, 0.1, 5_000.0), // clean receiver
+        ];
+        let plan = plan_spatial(&cs, 0.05);
+        assert_eq!(plan.transfers.len(), 1);
+        let t = &plan.transfers[0];
+        assert_eq!((t.from_cluster, t.to_cluster), (0, 1));
+        // moves min(budget 3000, headroom 5000) = 3000
+        assert!((t.gcuh - 3000.0).abs() < 1e-9);
+        assert!(plan.total_saving_kg > 0.0);
+        // conservation
+        let net: f64 = plan.delta_gcuh.iter().map(|(_, d)| d).sum();
+        assert!(net.abs() < 1e-9);
+    }
+
+    #[test]
+    fn headroom_limits_imports() {
+        let cs = vec![
+            mk(0, 0, 10_000.0, 0.5, 0.8, 0.0),
+            mk(1, 1, 10_000.0, 0.0, 0.1, 800.0), // can absorb only 800
+        ];
+        let plan = plan_spatial(&cs, 0.05);
+        assert!((plan.total_moved_gcuh - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_moves_within_band_or_same_campus() {
+        // differential below the band
+        let cs = vec![
+            mk(0, 0, 10_000.0, 0.5, 0.40, 1_000.0),
+            mk(1, 1, 10_000.0, 0.5, 0.38, 5_000.0),
+        ];
+        assert!(plan_spatial(&cs, 0.05).transfers.is_empty());
+        // same campus: identical carbon -> nothing to gain
+        let cs2 = vec![
+            mk(0, 0, 10_000.0, 0.5, 0.7, 5_000.0),
+            mk(1, 0, 10_000.0, 0.5, 0.1, 5_000.0),
+        ];
+        assert!(plan_spatial(&cs2, 0.05).transfers.is_empty());
+    }
+
+    #[test]
+    fn multi_cluster_cascade() {
+        let cs = vec![
+            mk(0, 0, 10_000.0, 0.4, 0.9, 0.0),     // dirtiest donor (4000 movable)
+            mk(1, 1, 10_000.0, 0.4, 0.6, 0.0),     // second donor
+            mk(2, 2, 10_000.0, 0.0, 0.15, 3_000.0), // cleanest receiver
+            mk(3, 3, 10_000.0, 0.0, 0.30, 2_500.0), // second receiver
+        ];
+        let plan = plan_spatial(&cs, 0.05);
+        // donor 0 fills receiver 2 (3000), then receiver 3 (1000);
+        // donor 1 continues into receiver 3 (1500)
+        assert_eq!(plan.transfers.len(), 3);
+        assert!((plan.total_moved_gcuh - 5_500.0).abs() < 1e-9);
+        // savings decrease along the cascade (greedy order)
+        let unit: Vec<f64> =
+            plan.transfers.iter().map(|t| t.saving_kg / t.gcuh).collect();
+        assert!(unit[0] >= unit[1] && unit[1] >= unit[2]);
+    }
+
+    #[test]
+    fn greedy_is_optimal_for_two_by_two() {
+        // brute-force check on a small instance: greedy matches the best
+        // of all feasible single-split allocations (linear objective)
+        let cs = vec![
+            mk(0, 0, 1_000.0, 1.0, 0.9, 0.0),
+            mk(1, 1, 1_000.0, 1.0, 0.5, 600.0),
+            mk(2, 2, 1_000.0, 0.0, 0.2, 700.0),
+        ];
+        let plan = plan_spatial(&cs, 0.0);
+        // brute force over donor-0 split (x to cluster 1, y to cluster 2)
+        let mut best = 0.0f64;
+        let slope = 0.15;
+        let n = 100;
+        for i in 0..=n {
+            let x = 600.0 * i as f64 / n as f64;
+            let y = (1000.0 - x).min(700.0);
+            let saving = x * slope * (0.9 - 0.5) + y * slope * (0.9 - 0.2);
+            best = best.max(saving);
+        }
+        assert!(
+            plan.total_saving_kg >= best - 1e-6,
+            "greedy {} vs brute {best}",
+            plan.total_saving_kg
+        );
+    }
+
+    #[test]
+    fn spatial_view_headroom() {
+        let eta = [0.5; HOURS_PER_DAY];
+        let v = spatial_view(3, 1, 20_000.0, 0.3, &eta, 8_000.0, 3_000.0, 0.14);
+        assert_eq!(v.cluster_id, 3);
+        assert!((v.carbon_mean - 0.5).abs() < 1e-12);
+        // (8000*0.9 - 3000)*24 - 20000 = 4200*24 - 20000 = 80800
+        assert!((v.import_headroom_gcuh - 80_800.0).abs() < 1e-6);
+        // full cluster -> zero headroom, never negative
+        let full = spatial_view(4, 1, 50_000.0, 0.3, &eta, 8_000.0, 7_900.0, 0.14);
+        assert_eq!(full.import_headroom_gcuh, 0.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Telemetry substrate: 5-minute usage/reservation/power time series per
+//! cluster, mirroring the paper's measurement granularity (§III-A uses
+//! 5-minute data; days are PST-aligned).
+//!
+//! The scheduler writes one `ClusterDayRecord` per cluster per simulated
+//! day; the daily pipelines (power models, load forecasting, SLO guard)
+//! read from the store. Power is "metered" here per power domain: cluster
+//! usage is spread across PDs with ~1% share variation (the paper's
+//! lambda^(PD) observation) and evaluated through each PD's ground-truth
+//! curve plus meter noise.
+
+use crate::fleet::Cluster;
+use crate::timebase::{HOURS_PER_DAY, TICKS_PER_DAY, TICKS_PER_HOUR};
+use crate::util::rng::Pcg;
+
+/// One cluster-day of 5-minute telemetry.
+#[derive(Clone, Debug)]
+pub struct ClusterDayRecord {
+    pub cluster_id: usize,
+    pub day: usize,
+    /// Actual CPU usage per tick, by tier (GCU).
+    pub usage_if: Vec<f64>,
+    pub usage_flex: Vec<f64>,
+    /// Reservations per tick, by tier (GCU).
+    pub resv_if: Vec<f64>,
+    pub resv_flex: Vec<f64>,
+    /// Metered power per PD per tick (kW): `pd_power[pd][tick]`.
+    pub pd_power: Vec<Vec<f64>>,
+    /// PD usage per tick (GCU), as allocated by the spreading model.
+    pub pd_usage: Vec<Vec<f64>>,
+    /// Grid average carbon intensity per hour (truth, for accounting).
+    pub carbon_hourly: [f64; HOURS_PER_DAY],
+    /// Flexible work left queued at end of day (GCU-h) — SLO signal.
+    pub flex_backlog_gcuh: f64,
+    /// Flexible work completed during the day (GCU-h).
+    pub flex_done_gcuh: f64,
+    /// Flexible work submitted during the day (GCU-h).
+    pub flex_submitted_gcuh: f64,
+    /// Whether shaping (a non-trivial VCC) was active this day.
+    pub shaped: bool,
+}
+
+impl ClusterDayRecord {
+    pub fn new(cluster: &Cluster, day: usize) -> Self {
+        ClusterDayRecord {
+            cluster_id: cluster.id,
+            day,
+            usage_if: vec![0.0; TICKS_PER_DAY],
+            usage_flex: vec![0.0; TICKS_PER_DAY],
+            resv_if: vec![0.0; TICKS_PER_DAY],
+            resv_flex: vec![0.0; TICKS_PER_DAY],
+            pd_power: vec![vec![0.0; TICKS_PER_DAY]; cluster.pds.len()],
+            pd_usage: vec![vec![0.0; TICKS_PER_DAY]; cluster.pds.len()],
+            carbon_hourly: [0.0; HOURS_PER_DAY],
+            flex_backlog_gcuh: 0.0,
+            flex_done_gcuh: 0.0,
+            flex_submitted_gcuh: 0.0,
+            shaped: false,
+        }
+    }
+
+    /// Record one tick of cluster state and meter the PDs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_tick(
+        &mut self,
+        cluster: &Cluster,
+        seed: u64,
+        tick: usize,
+        usage_if: f64,
+        usage_flex: f64,
+        resv_if: f64,
+        resv_flex: f64,
+    ) {
+        self.usage_if[tick] = usage_if;
+        self.usage_flex[tick] = usage_flex;
+        self.resv_if[tick] = resv_if;
+        self.resv_flex[tick] = resv_flex;
+        // Spread usage across PDs around lambda with ~1% noise, renormalized.
+        // (Stack buffer — this runs 288 times per cluster-day; heap
+        // allocation here was a measurable hot-loop cost.)
+        let total = usage_if + usage_flex;
+        let mut rng = Pcg::keyed(seed, 0x9D0 + cluster.id as u64, self.day as u64, tick as u64);
+        debug_assert!(cluster.pds.len() <= 16, "raise the share buffer size");
+        let mut shares = [0.0f64; 16];
+        let mut s = 0.0;
+        for (sh, pd) in shares.iter_mut().zip(cluster.pds.iter()) {
+            *sh = pd.lambda * (1.0 + rng.normal_ms(0.0, 0.01));
+            s += *sh;
+        }
+        for (i, pd) in cluster.pds.iter().enumerate() {
+            let u = total * shares[i] / s;
+            self.pd_usage[i][tick] = u;
+            let p = pd.curve.eval(u) * (1.0 + rng.normal_ms(0.0, pd.meter_noise));
+            self.pd_power[i][tick] = p;
+        }
+    }
+
+    /// Total cluster power at a tick (kW).
+    pub fn power_at(&self, tick: usize) -> f64 {
+        self.pd_power.iter().map(|pd| pd[tick]).sum()
+    }
+
+    /// Hourly mean of a per-tick series.
+    pub fn hourly(series: &[f64]) -> [f64; HOURS_PER_DAY] {
+        let mut out = [0.0; HOURS_PER_DAY];
+        for (h, o) in out.iter_mut().enumerate() {
+            let a = h * TICKS_PER_HOUR;
+            *o = series[a..a + TICKS_PER_HOUR].iter().sum::<f64>() / TICKS_PER_HOUR as f64;
+        }
+        out
+    }
+
+    /// Hourly mean cluster power (kW).
+    pub fn hourly_power(&self) -> [f64; HOURS_PER_DAY] {
+        let per_tick: Vec<f64> = (0..TICKS_PER_DAY).map(|t| self.power_at(t)).collect();
+        Self::hourly(&per_tick)
+    }
+
+    /// Hourly mean inflexible usage (GCU).
+    pub fn hourly_usage_if(&self) -> [f64; HOURS_PER_DAY] {
+        Self::hourly(&self.usage_if)
+    }
+
+    /// Hourly mean total reservations (GCU).
+    pub fn hourly_reservations(&self) -> [f64; HOURS_PER_DAY] {
+        let per_tick: Vec<f64> =
+            (0..TICKS_PER_DAY).map(|t| self.resv_if[t] + self.resv_flex[t]).collect();
+        Self::hourly(&per_tick)
+    }
+
+    /// Daily flexible usage T_{U,F}(d), GCU-h.
+    pub fn daily_flex_usage(&self) -> f64 {
+        self.usage_flex.iter().sum::<f64>() / TICKS_PER_HOUR as f64
+    }
+
+    /// Daily total reservations T_R(d), GCU-h.
+    pub fn daily_reservations(&self) -> f64 {
+        (self.resv_if.iter().sum::<f64>() + self.resv_flex.iter().sum::<f64>())
+            / TICKS_PER_HOUR as f64
+    }
+
+    /// Hourly reservation-to-usage ratio R(h) (>= 1 clamp for degenerate
+    /// hours with ~zero usage).
+    pub fn hourly_ratio(&self) -> [f64; HOURS_PER_DAY] {
+        let mut out = [1.0; HOURS_PER_DAY];
+        for h in 0..HOURS_PER_DAY {
+            let a = h * TICKS_PER_HOUR;
+            let usage: f64 = (a..a + TICKS_PER_HOUR)
+                .map(|t| self.usage_if[t] + self.usage_flex[t])
+                .sum();
+            let resv: f64 =
+                (a..a + TICKS_PER_HOUR).map(|t| self.resv_if[t] + self.resv_flex[t]).sum();
+            if usage > 1e-9 {
+                out[h] = (resv / usage).max(1.0);
+            }
+        }
+        out
+    }
+
+    /// Carbon footprint of the day (kg CO2e): hourly power x intensity.
+    pub fn daily_carbon_kg(&self) -> f64 {
+        self.hourly_power()
+            .iter()
+            .zip(self.carbon_hourly.iter())
+            .map(|(&p, &ci)| p * ci)
+            .sum()
+    }
+}
+
+/// Telemetry store for the whole fleet: `records[cluster][day]`.
+/// Full 5-minute records are memory-heavy (~27 KB per cluster-day), so the
+/// coordinator prunes records older than its training windows via
+/// [`TelemetryStore::prune_before`]; pruned slots stay `None`.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryStore {
+    records: Vec<Vec<Option<ClusterDayRecord>>>,
+}
+
+impl TelemetryStore {
+    pub fn new(n_clusters: usize) -> Self {
+        TelemetryStore { records: vec![Vec::new(); n_clusters] }
+    }
+
+    pub fn push(&mut self, rec: ClusterDayRecord) {
+        let c = rec.cluster_id;
+        debug_assert_eq!(rec.day, self.records[c].len(), "days must be pushed in order");
+        self.records[c].push(Some(rec));
+    }
+
+    pub fn day(&self, cluster: usize, day: usize) -> Option<&ClusterDayRecord> {
+        self.records[cluster].get(day).and_then(|r| r.as_ref())
+    }
+
+    pub fn days_recorded(&self, cluster: usize) -> usize {
+        self.records[cluster].len()
+    }
+
+    /// Trailing window of records, most recent `n` days ending at `end_day`
+    /// inclusive (skips missing/pruned).
+    pub fn trailing(&self, cluster: usize, end_day: usize, n: usize) -> Vec<&ClusterDayRecord> {
+        let start = end_day.saturating_sub(n.saturating_sub(1));
+        (start..=end_day).filter_map(|d| self.day(cluster, d)).collect()
+    }
+
+    /// Drop full records for days strictly before `day` (frees memory on
+    /// long runs; daily summaries live in the coordinator's history).
+    pub fn prune_before(&mut self, day: usize) {
+        for per_cluster in &mut self.records {
+            for (d, slot) in per_cluster.iter_mut().enumerate() {
+                if d < day {
+                    *slot = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::fleet::Fleet;
+
+    fn setup() -> (Fleet, ClusterDayRecord) {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let rec = ClusterDayRecord::new(&fleet.clusters[0], 0);
+        (fleet, rec)
+    }
+
+    #[test]
+    fn record_and_aggregate() {
+        let (fleet, mut rec) = setup();
+        let c = &fleet.clusters[0];
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 1000.0, 500.0, 1200.0, 650.0);
+        }
+        let h = rec.hourly_usage_if();
+        assert!(h.iter().all(|&x| (x - 1000.0).abs() < 1e-9));
+        assert!((rec.daily_flex_usage() - 500.0 * 24.0).abs() < 1e-6);
+        assert!((rec.daily_reservations() - 1850.0 * 24.0).abs() < 1e-6);
+        let r = rec.hourly_ratio();
+        assert!(r.iter().all(|&x| (x - 1850.0 / 1500.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn pd_split_tracks_lambda() {
+        let (fleet, mut rec) = setup();
+        let c = &fleet.clusters[0];
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 2000.0, 1000.0, 2400.0, 1300.0);
+        }
+        for (i, pd) in c.pds.iter().enumerate() {
+            let mean_u: f64 =
+                rec.pd_usage[i].iter().sum::<f64>() / TICKS_PER_DAY as f64;
+            let share = mean_u / 3000.0;
+            assert!(
+                (share - pd.lambda).abs() < 0.01,
+                "pd {i} share {share} lambda {}",
+                pd.lambda
+            );
+        }
+    }
+
+    #[test]
+    fn power_positive_and_within_curve_envelope() {
+        let (fleet, mut rec) = setup();
+        let c = &fleet.clusters[0];
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 1500.0, 800.0, 1800.0, 1000.0);
+        }
+        let p = rec.power_at(100);
+        let idle: f64 = c.pds.iter().map(|pd| pd.curve.idle_kw).sum();
+        let max: f64 = c.pds.iter().map(|pd| pd.curve.idle_kw + pd.curve.span_kw).sum();
+        assert!(p > idle && p < max * 1.05, "p={p} idle={idle} max={max}");
+    }
+
+    #[test]
+    fn store_trailing_window() {
+        let (fleet, _) = setup();
+        let mut store = TelemetryStore::new(fleet.clusters.len());
+        for d in 0..10 {
+            store.push(ClusterDayRecord::new(&fleet.clusters[0], d));
+        }
+        assert_eq!(store.days_recorded(0), 10);
+        assert_eq!(store.trailing(0, 9, 3).len(), 3);
+        assert_eq!(store.trailing(0, 9, 3)[0].day, 7);
+        assert_eq!(store.trailing(0, 1, 5).len(), 2);
+        assert_eq!(store.days_recorded(1), 0);
+        store.prune_before(5);
+        assert!(store.day(0, 4).is_none());
+        assert!(store.day(0, 5).is_some());
+        assert_eq!(store.trailing(0, 9, 8).len(), 5);
+    }
+
+    #[test]
+    fn carbon_accounting() {
+        let (fleet, mut rec) = setup();
+        let c = &fleet.clusters[0];
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 1000.0, 0.0, 1000.0, 0.0);
+        }
+        rec.carbon_hourly = [0.5; HOURS_PER_DAY];
+        let kg = rec.daily_carbon_kg();
+        let power_sum: f64 = rec.hourly_power().iter().sum();
+        assert!((kg - 0.5 * power_sum).abs() < 1e-6);
+    }
+}

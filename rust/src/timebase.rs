@@ -1,0 +1,117 @@
+//! Simulation time base.
+//!
+//! All usage data at Google is timestamped in PST and the VCCs span 24-hour
+//! PST days (paper §III, Fig 5). The simulator mirrors that: time advances
+//! in 5-minute ticks (the paper's telemetry granularity), 288 ticks per
+//! day, 24 hours per day, 7-day weeks.
+
+/// Ticks per hour at 5-minute telemetry granularity.
+pub const TICKS_PER_HOUR: usize = 12;
+/// Hours per (PST) day.
+pub const HOURS_PER_DAY: usize = 24;
+/// Ticks per day.
+pub const TICKS_PER_DAY: usize = TICKS_PER_HOUR * HOURS_PER_DAY;
+/// Days per week.
+pub const DAYS_PER_WEEK: usize = 7;
+
+/// A point in simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SimTime {
+    /// Day index since simulation start (day 0 = a Monday by convention).
+    pub day: usize,
+    /// Tick within the day, `0..TICKS_PER_DAY`.
+    pub tick: usize,
+}
+
+impl SimTime {
+    pub fn new(day: usize, tick: usize) -> Self {
+        assert!(tick < TICKS_PER_DAY);
+        SimTime { day, tick }
+    }
+
+    /// Hour of day, `0..24`.
+    #[inline]
+    pub fn hour(&self) -> usize {
+        self.tick / TICKS_PER_HOUR
+    }
+
+    /// Day of week, `0..7` (0 = Monday).
+    #[inline]
+    pub fn day_of_week(&self) -> usize {
+        self.day % DAYS_PER_WEEK
+    }
+
+    /// Hour-of-week index, `0..168` — the key for the paper's intra-week
+    /// hourly factors.
+    #[inline]
+    pub fn hour_of_week(&self) -> usize {
+        self.day_of_week() * HOURS_PER_DAY + self.hour()
+    }
+
+    /// Fractional hour within the day, e.g. tick 18 -> 1.5.
+    #[inline]
+    pub fn frac_hour(&self) -> f64 {
+        self.tick as f64 / TICKS_PER_HOUR as f64
+    }
+
+    /// Absolute tick count since day 0 tick 0.
+    #[inline]
+    pub fn abs_tick(&self) -> usize {
+        self.day * TICKS_PER_DAY + self.tick
+    }
+
+    /// The next tick (possibly rolling over to the next day).
+    pub fn next(&self) -> SimTime {
+        if self.tick + 1 == TICKS_PER_DAY {
+            SimTime { day: self.day + 1, tick: 0 }
+        } else {
+            SimTime { day: self.day, tick: self.tick + 1 }
+        }
+    }
+}
+
+/// Is this day a weekend day? (0 = Monday.)
+pub fn is_weekend(day: usize) -> bool {
+    day % DAYS_PER_WEEK >= 5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hour_and_week_indexing() {
+        let t = SimTime::new(8, 150); // day 8 = Tuesday, tick 150 = 12:30
+        assert_eq!(t.hour(), 12);
+        assert_eq!(t.day_of_week(), 1);
+        assert_eq!(t.hour_of_week(), 24 + 12);
+        assert!((t.frac_hour() - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn next_rolls_over() {
+        let t = SimTime::new(3, TICKS_PER_DAY - 1);
+        assert_eq!(t.next(), SimTime::new(4, 0));
+        assert_eq!(SimTime::new(0, 0).next(), SimTime::new(0, 1));
+    }
+
+    #[test]
+    fn weekend() {
+        assert!(!is_weekend(0)); // Mon
+        assert!(!is_weekend(4)); // Fri
+        assert!(is_weekend(5)); // Sat
+        assert!(is_weekend(6)); // Sun
+        assert!(!is_weekend(7)); // Mon again
+    }
+
+    #[test]
+    fn abs_tick_monotone() {
+        let mut t = SimTime::new(0, 0);
+        let mut prev = t.abs_tick();
+        for _ in 0..1000 {
+            t = t.next();
+            assert_eq!(t.abs_tick(), prev + 1);
+            prev = t.abs_tick();
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! ASCII chart rendering for figure regeneration in a terminal.
+//!
+//! Every bench prints both machine-readable CSV rows and a quick ASCII
+//! rendering of the figure so the "shape" claims (who wins, where the
+//! crossover falls) are eyeballable straight from `cargo bench` output.
+
+/// Render one or more named series (equal length) as a line chart.
+/// Each series gets a distinct glyph; y-axis is auto-scaled.
+pub fn line_chart(title: &str, series: &[(&str, &[f64])], height: usize) -> String {
+    let width = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    if width == 0 {
+        return format!("{title}\n(empty)\n");
+    }
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let lo = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let hi = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = if (hi - lo).abs() < 1e-12 { 1.0 } else { hi - lo };
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (x, &v) in s.iter().enumerate() {
+            let yf = (v - lo) / span;
+            let y = ((1.0 - yf) * (height - 1) as f64).round() as usize;
+            grid[y.min(height - 1)][x] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let yval = hi - span * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>10.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{}={}", glyphs[i % glyphs.len()], name))
+        .collect();
+    out.push_str(&format!("{:>11}{}\n", "", legend.join("  ")));
+    out
+}
+
+/// Render a histogram of `values` bucketed into `bins` equal-width bins
+/// over [lo, hi); used for the Fig 7 APE distributions.
+pub fn histogram(title: &str, values: &[f64], lo: f64, hi: f64, bins: usize) -> String {
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        if v < lo || !v.is_finite() {
+            continue;
+        }
+        let b = (((v - lo) / (hi - lo)) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let maxc = counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = format!("{title}  (n={})\n", values.len());
+    for (i, &c) in counts.iter().enumerate() {
+        let b_lo = lo + (hi - lo) * i as f64 / bins as f64;
+        let b_hi = lo + (hi - lo) * (i + 1) as f64 / bins as f64;
+        let bar = "#".repeat(c * 50 / maxc);
+        out.push_str(&format!("{b_lo:>7.1}-{b_hi:<7.1} |{bar} {c}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_contains_series_glyphs_and_title() {
+        let a = [0.0, 1.0, 2.0, 3.0];
+        let b = [3.0, 2.0, 1.0, 0.0];
+        let s = line_chart("t", &[("up", &a), ("down", &b)], 5);
+        assert!(s.contains('t'));
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("*=up") && s.contains("o=down"));
+    }
+
+    #[test]
+    fn chart_handles_flat_and_empty() {
+        let flat = [5.0; 4];
+        let s = line_chart("flat", &[("f", &flat)], 3);
+        assert!(s.contains('*'));
+        let e = line_chart("e", &[("x", &[][..])], 3);
+        assert!(e.contains("empty"));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let v = [0.5, 1.5, 1.6, 9.9];
+        let h = histogram("h", &v, 0.0, 10.0, 10);
+        assert!(h.contains("n=4"));
+        // bucket 1..2 holds two values
+        assert!(h.lines().any(|l| l.contains("## 2") || l.ends_with("2")));
+    }
+}

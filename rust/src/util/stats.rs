@@ -1,0 +1,237 @@
+//! Statistical primitives used across pipelines: summary statistics,
+//! quantiles, EWMA, ordinary least squares, error metrics, and confidence
+//! intervals. All operate on `f64` slices; no external crates.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 for len < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0,1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile on an already ascending-sorted slice.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (v.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < v.len() {
+        v[i] * (1.0 - frac) + v[i + 1] * frac
+    } else {
+        v[v.len() - 1]
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Absolute percent error of a prediction vs an actual, in percent.
+/// Returns `None` when the actual is ~0 (undefined APE), matching the
+/// paper's practice of omitting such cluster-days.
+pub fn ape(actual: f64, predicted: f64) -> Option<f64> {
+    if actual.abs() < 1e-9 {
+        return None;
+    }
+    Some(100.0 * (predicted - actual).abs() / actual.abs())
+}
+
+/// Mean absolute percent error over paired slices, skipping ~0 actuals.
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let apes: Vec<f64> = actual
+        .iter()
+        .zip(predicted)
+        .filter_map(|(&a, &p)| ape(a, p))
+        .collect();
+    mean(&apes)
+}
+
+/// Exponentially weighted moving average with a half-life expressed in
+/// samples. `half_life = 0.5` gives the paper's weekly-mean decay
+/// (decay factor per step ≈ 0.25 weight retained ⇒ alpha ≈ 0.75); the
+/// hourly-factor model uses `half_life = 4`.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn with_half_life(half_life: f64) -> Self {
+        assert!(half_life > 0.0);
+        // weight of an observation decays by 1/2 every `half_life` steps:
+        // (1 - alpha)^half_life = 1/2
+        let alpha = 1.0 - (0.5f64).powf(1.0 / half_life);
+        Ewma { alpha, value: None }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Simple ordinary least squares for `y = a + b x`.
+/// Returns (intercept a, slope b). Degenerate inputs give (mean(y), 0).
+pub fn ols(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return (mean(y), 0.0);
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for i in 0..x.len() {
+        sxx += (x[i] - mx) * (x[i] - mx);
+        sxy += (x[i] - mx) * (y[i] - my);
+    }
+    if sxx / n < 1e-12 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// 95% confidence interval of the mean (normal approximation):
+/// `(mean, half_width)`.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let se = std_dev(xs) / (xs.len() as f64).sqrt();
+    (m, 1.96 * se)
+}
+
+/// Pearson correlation; 0 on degenerate input.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(x), mean(y));
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for i in 0..x.len() {
+        sxy += (x[i] - mx) * (y[i] - my);
+        sxx += (x[i] - mx) * (x[i] - mx);
+        syy += (y[i] - my) * (y[i] - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_quantile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((quantile(&xs, 0.97) - 9.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ape_skips_zero_actual() {
+        assert_eq!(ape(0.0, 5.0), None);
+        assert!((ape(10.0, 11.0).unwrap() - 10.0).abs() < 1e-12);
+        assert!((mape(&[10.0, 0.0, 20.0], &[11.0, 5.0, 18.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_half_life() {
+        let mut e = Ewma::with_half_life(1.0);
+        assert!((e.alpha() - 0.5).abs() < 1e-12);
+        e.update(0.0);
+        e.update(1.0);
+        assert!((e.value().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::with_half_life(4.0);
+        for _ in 0..200 {
+            e.update(42.0);
+        }
+        assert!((e.value().unwrap() - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 + 2.0 * v).collect();
+        let (a, b) = ols(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_degenerate_x() {
+        let (a, b) = ols(&[1.0, 1.0, 1.0], &[3.0, 4.0, 5.0]);
+        assert!((a - 4.0).abs() < 1e-12);
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn ci_width_shrinks_with_n() {
+        let small: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let large: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        assert!(mean_ci95(&large).1 < mean_ci95(&small).1);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &y) + 1.0).abs() < 1e-12);
+        assert!((pearson(&x, &x) - 1.0).abs() < 1e-12);
+    }
+}

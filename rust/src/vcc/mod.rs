@@ -1,0 +1,159 @@
+//! Virtual Capacity Curves: construction, safety checks, SLO guard and
+//! feedback loop (paper §II-C, §III-B2).
+
+pub mod slo;
+
+use crate::timebase::HOURS_PER_DAY;
+
+pub use slo::{SloGuard, SloState};
+
+/// One cluster-day Virtual Capacity Curve: hourly limits on *total*
+/// compute reservations (GCU). Pushed to the cluster before the day starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vcc {
+    pub cluster_id: usize,
+    pub day: usize,
+    pub hourly: [f64; HOURS_PER_DAY],
+    /// false = the curve is the machine-capacity fallback (unshaped day:
+    /// cluster too full, insufficient data, or SLO pause — §IV notes ~10%
+    /// of cluster-days fall here).
+    pub shaped: bool,
+}
+
+impl Vcc {
+    /// The capacity fallback ("VCC is set to cluster total machine
+    /// capacity when a cluster is too full to allow for shaping").
+    pub fn unshaped(cluster_id: usize, day: usize, capacity_gcu: f64) -> Vcc {
+        Vcc { cluster_id, day, hourly: [capacity_gcu; HOURS_PER_DAY], shaped: false }
+    }
+
+    /// Build a shaped VCC from the optimizer's deviations:
+    /// `VCC(h) = (U_IF_hat(h) + (1 + delta(h)) * tau/24) * R_hat(h)`,
+    /// clamped to machine capacity (paper §III-C).
+    pub fn from_deltas(
+        cluster_id: usize,
+        day: usize,
+        u_if_hat: &[f64; HOURS_PER_DAY],
+        tau: f64,
+        delta: &[f64; HOURS_PER_DAY],
+        ratio_hat: &[f64; HOURS_PER_DAY],
+        capacity_gcu: f64,
+    ) -> Vcc {
+        let mut hourly = [0.0; HOURS_PER_DAY];
+        for h in 0..HOURS_PER_DAY {
+            let usage = u_if_hat[h] + (1.0 + delta[h]) * tau / 24.0;
+            hourly[h] = (usage * ratio_hat[h]).min(capacity_gcu).max(0.0);
+        }
+        Vcc { cluster_id, day, hourly, shaped: true }
+    }
+
+    /// Daily capacity requirement carried by this curve (GCU-h):
+    /// `sum_h VCC(h)` — must equal Theta(c,d) for shaped curves (eq. (2)).
+    pub fn daily_total(&self) -> f64 {
+        self.hourly.iter().sum()
+    }
+
+    /// Sanity/safety checks run by the cluster operating system before a
+    /// pushed curve is accepted (paper §II-C "Safety"). Returns an error
+    /// string describing the first violated check.
+    pub fn safety_check(
+        &self,
+        capacity_gcu: f64,
+        min_daily_gcuh: f64,
+    ) -> Result<(), String> {
+        for (h, &v) in self.hourly.iter().enumerate() {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("hour {h}: non-finite or negative cap {v}"));
+            }
+            if v > capacity_gcu * 1.0001 {
+                return Err(format!("hour {h}: cap {v} above machine capacity {capacity_gcu}"));
+            }
+        }
+        if self.daily_total() < min_daily_gcuh {
+            return Err(format!(
+                "daily capacity {} below required minimum {min_daily_gcuh}",
+                self.daily_total()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Gradual fleetwide rollout of newly computed VCCs (paper §II-C
+/// "Reliability"): clusters are split into waves; wave `w` receives shaped
+/// curves only from day `w * wave_gap_days` after shaping is first enabled.
+#[derive(Clone, Debug)]
+pub struct Rollout {
+    pub waves: usize,
+    pub wave_gap_days: usize,
+    pub start_day: usize,
+}
+
+impl Rollout {
+    pub fn immediate() -> Rollout {
+        Rollout { waves: 1, wave_gap_days: 0, start_day: 0 }
+    }
+
+    /// Is `cluster_id` enabled for shaping on `day`?
+    pub fn enabled(&self, cluster_id: usize, day: usize) -> bool {
+        if day < self.start_day {
+            return false;
+        }
+        let wave = cluster_id % self.waves;
+        day >= self.start_day + wave * self.wave_gap_days
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_deltas_matches_formula_and_clamps() {
+        let u_if = [100.0; HOURS_PER_DAY];
+        let mut delta = [0.0; HOURS_PER_DAY];
+        delta[0] = -1.0; // flexible fully pushed out of hour 0
+        delta[1] = 2.0;
+        let ratio = [1.2; HOURS_PER_DAY];
+        let vcc = Vcc::from_deltas(0, 1, &u_if, 240.0, &delta, &ratio, 200.0);
+        // h0: (100 + 0*10)*1.2 = 120
+        assert!((vcc.hourly[0] - 120.0).abs() < 1e-9);
+        // h1: (100 + 3*10)*1.2 = 156
+        assert!((vcc.hourly[1] - 156.0).abs() < 1e-9);
+        // h2: (100+10)*1.2 = 132
+        assert!((vcc.hourly[2] - 132.0).abs() < 1e-9);
+        // clamp check
+        let vcc2 = Vcc::from_deltas(0, 1, &[500.0; 24], 240.0, &delta, &ratio, 200.0);
+        assert!(vcc2.hourly.iter().all(|&v| v <= 200.0));
+    }
+
+    #[test]
+    fn safety_checks() {
+        let ok = Vcc::unshaped(0, 0, 100.0);
+        assert!(ok.safety_check(100.0, 0.0).is_ok());
+        let mut neg = ok.clone();
+        neg.hourly[3] = -1.0;
+        assert!(neg.safety_check(100.0, 0.0).is_err());
+        let mut over = ok.clone();
+        over.hourly[5] = 150.0;
+        assert!(over.safety_check(100.0, 0.0).is_err());
+        // daily minimum
+        assert!(ok.safety_check(100.0, 100.0 * 24.0 + 1.0).is_err());
+        let mut nan = ok.clone();
+        nan.hourly[0] = f64::NAN;
+        assert!(nan.safety_check(100.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn rollout_waves() {
+        let r = Rollout { waves: 3, wave_gap_days: 2, start_day: 10 };
+        assert!(!r.enabled(0, 9));
+        assert!(r.enabled(0, 10)); // wave 0
+        assert!(!r.enabled(1, 10)); // wave 1 starts day 12
+        assert!(r.enabled(1, 12));
+        assert!(!r.enabled(2, 13)); // wave 2 starts day 14
+        assert!(r.enabled(2, 14));
+        let imm = Rollout::immediate();
+        assert!(imm.enabled(7, 0));
+    }
+}

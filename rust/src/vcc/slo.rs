@@ -1,0 +1,246 @@
+//! SLO guard and feedback loop (paper §III-B2).
+//!
+//! The load-shaping SLO: a cluster's daily flexible compute demand may be
+//! violated at most ~one day per month (violation probability ≤ 0.03).
+//! The guard enforces it two ways:
+//!
+//! 1. **Risk-aware sizing**: each day's total virtual capacity is set to
+//!    the 97th percentile of predicted total daily reservations,
+//!    `Theta(c,d) = T_R_hat(d) * (1 + q97(trailing 90-day relative
+//!    errors))`, and the whole buffer is attributed to flexible usage via
+//!    the inflation factor `alpha` of eq. (3).
+//! 2. **Violation detection**: if measured daily reservations press
+//!    against the cap (or flexible work goes unmet) for `trigger_days`
+//!    consecutive days, shaping is paused for `pause_days` so the
+//!    forecasting models can adapt.
+
+use crate::config::SloConfig;
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::stats;
+
+/// Per-cluster SLO guard state.
+#[derive(Clone, Debug)]
+pub struct SloState {
+    /// Trailing relative errors of the day-ahead T_R prediction
+    /// (`(actual - predicted) / predicted`), newest last, capped at 90.
+    pub tr_rel_errors: Vec<f64>,
+    /// Consecutive near-violation days so far.
+    pub near_violation_streak: usize,
+    /// Shaping paused until this day (exclusive).
+    pub paused_until: usize,
+    /// Total shaping pauses triggered (monitoring).
+    pub pauses_triggered: usize,
+}
+
+impl Default for SloState {
+    fn default() -> Self {
+        SloState {
+            tr_rel_errors: Vec::new(),
+            near_violation_streak: 0,
+            paused_until: 0,
+            pauses_triggered: 0,
+        }
+    }
+}
+
+/// The guard: pure functions over `SloState` + config.
+#[derive(Clone, Debug)]
+pub struct SloGuard {
+    pub cfg: SloConfig,
+    /// SLO quantile for Theta (0.97 in the paper).
+    pub quantile: f64,
+}
+
+impl SloGuard {
+    pub fn new(cfg: SloConfig, quantile: f64) -> Self {
+        SloGuard { cfg, quantile }
+    }
+
+    /// Risk-aware daily capacity requirement Theta(c,d) given the day-ahead
+    /// prediction `tr_hat` of total daily reservations (GCU-h). The error
+    /// quantile is floored at `min_buffer` (see SloConfig) — with a short
+    /// history the raw quantile badly underestimates tail risk.
+    pub fn theta(&self, state: &SloState, tr_hat: f64) -> f64 {
+        if state.tr_rel_errors.is_empty() {
+            // No history: conservative +15% buffer.
+            return tr_hat * 1.15;
+        }
+        let q = stats::quantile(&state.tr_rel_errors, self.quantile);
+        tr_hat * (1.0 + q.max(self.cfg.min_buffer))
+    }
+
+    /// The inflation factor alpha(c,d) of eq. (3): attribute all capacity
+    /// headroom above predicted inflexible reservations to flexible usage.
+    ///
+    ///   sum_h (U_IF_hat(h) + alpha * T_UF_hat/24) * R_hat(h) = Theta
+    ///
+    /// Returns None when the equation has no meaningful solution (tiny
+    /// flexible demand -> cluster is unshapeable that day).
+    pub fn alpha(
+        &self,
+        theta: f64,
+        u_if_hat: &[f64; HOURS_PER_DAY],
+        tuf_hat: f64,
+        ratio_hat: &[f64; HOURS_PER_DAY],
+    ) -> Option<f64> {
+        if tuf_hat <= 1e-9 {
+            return None;
+        }
+        let base: f64 = u_if_hat.iter().zip(ratio_hat).map(|(&u, &r)| u * r).sum();
+        let flex_coeff: f64 = ratio_hat.iter().map(|&r| r * tuf_hat / 24.0).sum();
+        if flex_coeff <= 1e-9 {
+            return None;
+        }
+        let alpha = (theta - base) / flex_coeff;
+        if !(alpha.is_finite() && alpha > 0.0) {
+            return None;
+        }
+        Some(alpha)
+    }
+
+    /// Record the realized day: update error history and the violation
+    /// streak; trigger a pause when warranted.
+    ///
+    /// `tr_hat`/`tr_actual`: predicted and measured total daily
+    /// reservations (GCU-h); `cap_daily`: the pushed curve's daily total;
+    /// `flex_unmet`: flexible work submitted but neither completed nor
+    /// carried with headroom (backlog beyond one day's tolerance).
+    pub fn observe_day(
+        &self,
+        state: &mut SloState,
+        day: usize,
+        tr_hat: f64,
+        tr_actual: f64,
+        cap_daily: f64,
+        flex_unmet: bool,
+    ) {
+        if tr_hat > 1e-9 {
+            state.tr_rel_errors.push((tr_actual - tr_hat) / tr_hat);
+            if state.tr_rel_errors.len() > 90 {
+                state.tr_rel_errors.remove(0);
+            }
+        }
+        let near_cap = tr_actual >= self.cfg.near_fraction * cap_daily;
+        if near_cap || flex_unmet {
+            state.near_violation_streak += 1;
+        } else {
+            state.near_violation_streak = 0;
+        }
+        if state.near_violation_streak >= self.cfg.trigger_days {
+            state.paused_until = day + 1 + self.cfg.pause_days;
+            state.near_violation_streak = 0;
+            state.pauses_triggered += 1;
+        }
+    }
+
+    /// Is shaping allowed on `day`?
+    pub fn shaping_allowed(&self, state: &SloState, day: usize, history_days: usize) -> bool {
+        day >= state.paused_until && history_days >= self.cfg.min_history_days
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard() -> SloGuard {
+        SloGuard::new(SloConfig::default(), 0.97)
+    }
+
+    #[test]
+    fn theta_without_history_buffers() {
+        let g = guard();
+        let s = SloState::default();
+        assert!((g.theta(&s, 1000.0) - 1150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theta_uses_error_quantile() {
+        let g = guard();
+        let mut s = SloState::default();
+        // errors mostly small, a few large positive
+        s.tr_rel_errors = vec![0.0; 95];
+        s.tr_rel_errors.extend([0.2; 5]);
+        let th = g.theta(&s, 1000.0);
+        assert!(th > 1000.0 && th <= 1200.0, "theta {th}");
+        // negative-error history floors at the configured minimum buffer
+        s.tr_rel_errors = vec![-0.1; 90];
+        let floor = 1000.0 * (1.0 + g.cfg.min_buffer);
+        assert!((g.theta(&s, 1000.0) - floor).abs() < 1e-9);
+        // a large-error history dominates the floor
+        s.tr_rel_errors = vec![0.2; 90];
+        assert!((g.theta(&s, 1000.0) - 1200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alpha_closed_form() {
+        let g = guard();
+        let u_if = [100.0; HOURS_PER_DAY];
+        let ratio = [1.25; HOURS_PER_DAY];
+        let tuf = 480.0; // 20 GCU avg/hour
+        // theta exactly at nominal => alpha = 1
+        let theta_nom: f64 = (0..24).map(|_| (100.0 + 20.0) * 1.25).sum();
+        let a = g.alpha(theta_nom, &u_if, tuf, &ratio).unwrap();
+        assert!((a - 1.0).abs() < 1e-9);
+        // larger theta inflates alpha
+        let a2 = g.alpha(theta_nom * 1.1, &u_if, tuf, &ratio).unwrap();
+        assert!(a2 > 1.0);
+        // theta below inflexible-only is infeasible
+        assert!(g.alpha(1000.0, &u_if, tuf, &ratio).is_none());
+        // no flexible demand -> unshapeable
+        assert!(g.alpha(theta_nom, &u_if, 0.0, &ratio).is_none());
+    }
+
+    #[test]
+    fn two_day_trigger_pauses_a_week() {
+        let g = guard();
+        let mut s = SloState::default();
+        g.observe_day(&mut s, 10, 1000.0, 999.0, 1000.0, false); // near cap
+        assert_eq!(s.near_violation_streak, 1);
+        assert!(g.shaping_allowed(&s, 11, 100));
+        g.observe_day(&mut s, 11, 1000.0, 1000.0, 1000.0, false); // 2nd day
+        assert_eq!(s.pauses_triggered, 1);
+        assert!(!g.shaping_allowed(&s, 12, 100));
+        assert!(!g.shaping_allowed(&s, 18, 100));
+        assert!(g.shaping_allowed(&s, 19, 100)); // 11 + 1 + 7
+    }
+
+    #[test]
+    fn streak_resets_on_clean_day() {
+        let g = guard();
+        let mut s = SloState::default();
+        g.observe_day(&mut s, 1, 1000.0, 995.0, 1000.0, false);
+        g.observe_day(&mut s, 2, 1000.0, 700.0, 1000.0, false); // clean
+        g.observe_day(&mut s, 3, 1000.0, 995.0, 1000.0, false);
+        assert_eq!(s.pauses_triggered, 0);
+    }
+
+    #[test]
+    fn flex_unmet_counts_toward_trigger() {
+        let g = guard();
+        let mut s = SloState::default();
+        g.observe_day(&mut s, 1, 1000.0, 500.0, 1000.0, true);
+        g.observe_day(&mut s, 2, 1000.0, 500.0, 1000.0, true);
+        assert_eq!(s.pauses_triggered, 1);
+    }
+
+    #[test]
+    fn min_history_gates_shaping() {
+        let g = guard();
+        let s = SloState::default();
+        assert!(!g.shaping_allowed(&s, 5, 5));
+        assert!(g.shaping_allowed(&s, 50, g.cfg.min_history_days));
+    }
+
+    #[test]
+    fn error_window_caps_at_90() {
+        let g = guard();
+        let mut s = SloState::default();
+        for d in 0..200 {
+            g.observe_day(&mut s, d, 1000.0, 1000.0 + d as f64, 5000.0, false);
+        }
+        assert_eq!(s.tr_rel_errors.len(), 90);
+        // oldest retained error corresponds to day 110
+        assert!((s.tr_rel_errors[0] - 110.0 / 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,71 @@
+//! Flexible (lower-tier batch) job model.
+
+use crate::timebase::{SimTime, TICKS_PER_HOUR};
+
+/// One temporally-flexible batch job. Tolerates queueing delay as long as
+/// its work completes within ~24h of submission (paper §I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlexJob {
+    pub id: u64,
+    pub cluster_id: usize,
+    /// Actual CPU usage while running (GCU).
+    pub demand_gcu: f64,
+    /// Scheduler reservation (>= demand; the "usage upper bound" of §II-B).
+    pub reservation_gcu: f64,
+    /// Total runtime in 5-minute ticks.
+    pub duration_ticks: usize,
+    pub submit: SimTime,
+    /// Ticks of work left (decremented while running).
+    pub remaining_ticks: usize,
+}
+
+impl FlexJob {
+    /// Total work of the job in GCU-hours (usage integral).
+    pub fn work_gcuh(&self) -> f64 {
+        self.demand_gcu * self.duration_ticks as f64 / TICKS_PER_HOUR as f64
+    }
+
+    /// Work remaining in GCU-hours.
+    pub fn remaining_gcuh(&self) -> f64 {
+        self.demand_gcu * self.remaining_ticks as f64 / TICKS_PER_HOUR as f64
+    }
+
+    /// Queueing delay experienced if the job starts at `start`.
+    pub fn delay_ticks(&self, start: SimTime) -> usize {
+        start.abs_tick().saturating_sub(self.submit.abs_tick())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> FlexJob {
+        FlexJob {
+            id: 1,
+            cluster_id: 0,
+            demand_gcu: 24.0,
+            reservation_gcu: 30.0,
+            duration_ticks: 36, // 3 hours
+            submit: SimTime::new(1, 100),
+            remaining_ticks: 36,
+        }
+    }
+
+    #[test]
+    fn work_integrals() {
+        let j = job();
+        assert!((j.work_gcuh() - 72.0).abs() < 1e-9);
+        let mut j2 = j.clone();
+        j2.remaining_ticks = 12;
+        assert!((j2.remaining_gcuh() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delay() {
+        let j = job();
+        assert_eq!(j.delay_ticks(SimTime::new(1, 150)), 50);
+        assert_eq!(j.delay_ticks(SimTime::new(2, 0)), 188);
+        assert_eq!(j.delay_ticks(SimTime::new(1, 50)), 0); // clamped
+    }
+}

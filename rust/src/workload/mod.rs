@@ -1,0 +1,346 @@
+//! Workload substrate: the statistical stand-in for Google's jobs
+//! (paper §II-B). Two tiers:
+//!
+//! * **Inflexible** (higher tiers; serving, cloud VMs) — modeled as an
+//!   aggregate cluster-level usage process with weekly/diurnal seasonality
+//!   and archetype-dependent noise. Never shaped, never queued.
+//! * **Flexible** (lower-tier batch) — discrete jobs with Poisson arrivals,
+//!   log-normal CPU demand and duration, and per-job reservation headroom.
+//!   These are what the scheduler queues when the VCC binds.
+//!
+//! Cluster archetypes X/Y/Z (paper §IV, Figs 9-11) differ in flexible
+//! share and predictability. Ground-truth reservation-to-usage behaviour
+//! follows the paper's observation that the ratio falls with log usage.
+
+pub mod job;
+
+use crate::config::Archetype;
+use crate::fleet::Cluster;
+use crate::timebase::{SimTime, TICKS_PER_DAY, TICKS_PER_HOUR};
+#[cfg(test)]
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::rng::Pcg;
+
+pub use job::FlexJob;
+
+/// Per-cluster workload process parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadModel {
+    pub cluster_id: usize,
+    pub seed: u64,
+    /// Mean inflexible usage as a fraction of cluster capacity.
+    pub if_level: f64,
+    /// Diurnal amplitude of inflexible usage.
+    pub if_diurnal_amp: f64,
+    /// Weekend multiplier for inflexible usage.
+    pub if_weekend: f64,
+    /// Relative day-level noise of inflexible usage.
+    pub if_day_noise: f64,
+    /// Relative tick-level noise of inflexible usage.
+    pub if_tick_noise: f64,
+    /// Target *daily* flexible compute usage as a fraction of capacity*24.
+    pub flex_level: f64,
+    /// Relative day-to-day noise of the daily flexible demand.
+    pub flex_day_noise: f64,
+    /// Weekend multiplier for flexible demand.
+    pub flex_weekend: f64,
+    /// Slow growth of both tiers, fraction per day.
+    pub growth_per_day: f64,
+    /// Optional demand surge: from this day, flexible demand is multiplied
+    /// by `surge_factor` (models the paper's "transient increase ... due to
+    /// infrastructure upgrades" that trips the SLO guard).
+    pub surge_day: Option<usize>,
+    pub surge_factor: f64,
+    /// Median per-job CPU demand (GCU) and log-sd.
+    pub job_gcu_median: f64,
+    pub job_gcu_sigma: f64,
+    /// Median per-job duration (ticks) and log-sd.
+    pub job_ticks_median: f64,
+    pub job_ticks_sigma: f64,
+    /// Cluster capacity (GCU), copied from the fleet.
+    pub capacity_gcu: f64,
+}
+
+impl WorkloadModel {
+    /// Archetype-calibrated model for a cluster.
+    pub fn for_cluster(seed: u64, cluster: &Cluster) -> WorkloadModel {
+        let mut rng = Pcg::keyed(seed, 0x30B5, cluster.id as u64, 0);
+        let base = WorkloadModel {
+            cluster_id: cluster.id,
+            seed,
+            if_level: 0.0,
+            if_diurnal_amp: rng.uniform(0.10, 0.18),
+            if_weekend: rng.uniform(0.88, 0.96),
+            if_day_noise: 0.0,
+            if_tick_noise: 0.006,
+            flex_level: 0.0,
+            flex_day_noise: 0.0,
+            flex_weekend: rng.uniform(0.9, 1.05),
+            growth_per_day: rng.uniform(-0.0002, 0.0008),
+            surge_day: None,
+            surge_factor: 1.0,
+            job_gcu_median: rng.uniform(12.0, 22.0),
+            job_gcu_sigma: 0.7,
+            job_ticks_median: rng.uniform(18.0, 30.0),
+            job_ticks_sigma: 0.6,
+            capacity_gcu: cluster.capacity_gcu,
+        };
+        match cluster.archetype {
+            // X: large, *predictable* flexible share.
+            Archetype::FlexPredictable => WorkloadModel {
+                if_level: rng.uniform(0.30, 0.38),
+                if_day_noise: rng.uniform(0.008, 0.018),
+                flex_level: rng.uniform(0.26, 0.34),
+                flex_day_noise: rng.uniform(0.015, 0.035),
+                ..base
+            },
+            // Y: similar share, noisy demand → wider forecast errors.
+            Archetype::FlexNoisy => WorkloadModel {
+                if_level: rng.uniform(0.30, 0.38),
+                if_day_noise: rng.uniform(0.035, 0.06),
+                flex_level: rng.uniform(0.22, 0.32),
+                flex_day_noise: rng.uniform(0.10, 0.18),
+                ..base
+            },
+            // Z: small flexible share dominated by inflexible load.
+            Archetype::MostlyInflexible => WorkloadModel {
+                if_level: rng.uniform(0.50, 0.60),
+                if_day_noise: rng.uniform(0.012, 0.025),
+                flex_level: rng.uniform(0.04, 0.08),
+                flex_day_noise: rng.uniform(0.05, 0.10),
+                ..base
+            },
+        }
+    }
+
+    // ---- inflexible tier --------------------------------------------------
+
+    /// Diurnal shape factor (mean ≈ 1 over the day), peaking mid-afternoon.
+    fn diurnal(&self, frac_hour: f64) -> f64 {
+        let x = (frac_hour - 15.0) / 24.0 * std::f64::consts::TAU;
+        1.0 + self.if_diurnal_amp * x.cos()
+    }
+
+    /// Day-level multiplicative factor: weekly seasonality, growth trend,
+    /// and a persistent day-level noise draw (keyed by day).
+    fn if_day_factor(&self, day: usize) -> f64 {
+        let weekend = if crate::timebase::is_weekend(day) { self.if_weekend } else { 1.0 };
+        let trend = 1.0 + self.growth_per_day * day as f64;
+        let mut rng = Pcg::keyed(self.seed, 0x1F0A + self.cluster_id as u64, day as u64, 1);
+        weekend * trend * (1.0 + rng.normal_ms(0.0, self.if_day_noise))
+    }
+
+    /// True inflexible usage (GCU) at a tick. Deterministic per (day,tick).
+    pub fn inflexible_usage(&self, t: SimTime) -> f64 {
+        let base = self.if_level * self.capacity_gcu;
+        let mut rng =
+            Pcg::keyed(self.seed, 0x11CF + self.cluster_id as u64, t.day as u64, t.tick as u64);
+        let u = base
+            * self.if_day_factor(t.day)
+            * self.diurnal(t.frac_hour())
+            * (1.0 + rng.normal_ms(0.0, self.if_tick_noise));
+        u.clamp(0.0, self.capacity_gcu)
+    }
+
+    /// Ground-truth reservation-to-usage ratio for the inflexible tier:
+    /// decreasing in log utilization (paper §III-B1's observed trend).
+    pub fn inflexible_ratio(&self, usage: f64) -> f64 {
+        let frac = (usage / self.capacity_gcu).clamp(0.01, 1.0);
+        (1.06 - 0.11 * frac.ln()).clamp(1.02, 1.9)
+    }
+
+    // ---- flexible tier ----------------------------------------------------
+
+    /// True total flexible demand (GCU-h) submitted on `day`.
+    pub fn flex_daily_demand(&self, day: usize) -> f64 {
+        let weekend = if crate::timebase::is_weekend(day) { self.flex_weekend } else { 1.0 };
+        let trend = 1.0 + self.growth_per_day * day as f64;
+        let surge = match self.surge_day {
+            Some(d) if day >= d => self.surge_factor,
+            _ => 1.0,
+        };
+        let mut rng = Pcg::keyed(self.seed, 0xF1E8 + self.cluster_id as u64, day as u64, 2);
+        let noise = (rng.normal_ms(0.0, self.flex_day_noise)).exp()
+            / (0.5 * self.flex_day_noise * self.flex_day_noise).exp();
+        self.flex_level * self.capacity_gcu * 24.0 * weekend * trend * surge * noise
+    }
+
+    /// Submission-time profile over the day (mean 1): flexible work is
+    /// submitted mostly during working hours — which is exactly when the
+    /// fossil-peaker grids are dirtiest, creating the shifting opportunity.
+    pub fn submit_profile(&self, hour: usize) -> f64 {
+        let x = (hour as f64 - 14.0) / 24.0 * std::f64::consts::TAU;
+        1.0 + 0.55 * x.cos()
+    }
+
+    /// Expected per-job work (GCU-h): E[gcu] * E[hours] for the two
+    /// independent log-normals.
+    pub fn mean_job_work(&self) -> f64 {
+        let eg = self.job_gcu_median * (0.5 * self.job_gcu_sigma * self.job_gcu_sigma).exp();
+        let et = self.job_ticks_median * (0.5 * self.job_ticks_sigma * self.job_ticks_sigma).exp()
+            / TICKS_PER_HOUR as f64;
+        eg * et
+    }
+
+    /// Flexible job arrivals during one tick. Poisson with rate calibrated
+    /// so the expected submitted work matches `flex_daily_demand(day)`.
+    pub fn flex_arrivals(&self, t: SimTime, next_job_id: &mut u64) -> Vec<FlexJob> {
+        self.flex_arrivals_scaled(t, next_job_id, 1.0)
+    }
+
+    /// Arrivals with the demand rate scaled by `scale` — the hook the
+    /// spatial-shifting extension uses to realize cross-campus transfers
+    /// (donor clusters submit less, receivers more, next day).
+    pub fn flex_arrivals_scaled(
+        &self,
+        t: SimTime,
+        next_job_id: &mut u64,
+        scale: f64,
+    ) -> Vec<FlexJob> {
+        let daily = self.flex_daily_demand(t.day) * scale;
+        let jobs_per_day = daily / self.mean_job_work();
+        let rate = jobs_per_day / TICKS_PER_DAY as f64 * self.submit_profile(t.hour());
+        let mut rng =
+            Pcg::keyed(self.seed, 0xA881 + self.cluster_id as u64, t.day as u64, t.tick as u64);
+        let n = rng.poisson(rate);
+        (0..n)
+            .map(|_| {
+                let gcu = rng
+                    .lognormal(self.job_gcu_median, self.job_gcu_sigma)
+                    .min(self.capacity_gcu * 0.05);
+                let ticks = (rng.lognormal(self.job_ticks_median, self.job_ticks_sigma).round()
+                    as usize)
+                    .clamp(1, TICKS_PER_DAY / 2);
+                let headroom = rng.uniform(0.10, 0.40);
+                let id = *next_job_id;
+                *next_job_id += 1;
+                FlexJob {
+                    id,
+                    cluster_id: self.cluster_id,
+                    demand_gcu: gcu,
+                    reservation_gcu: gcu * (1.0 + headroom),
+                    duration_ticks: ticks,
+                    submit: t,
+                    remaining_ticks: ticks,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::fleet::Fleet;
+    use crate::util::stats;
+
+    fn models() -> Vec<WorkloadModel> {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        fleet.clusters.iter().map(|c| WorkloadModel::for_cluster(cfg.seed, c)).collect()
+    }
+
+    #[test]
+    fn inflexible_in_range_and_diurnal() {
+        for m in models() {
+            let mut by_hour = vec![Vec::new(); HOURS_PER_DAY];
+            for day in 0..3 {
+                for tick in 0..TICKS_PER_DAY {
+                    let t = SimTime::new(day, tick);
+                    let u = m.inflexible_usage(t);
+                    assert!(u > 0.0 && u <= m.capacity_gcu);
+                    by_hour[t.hour()].push(u);
+                }
+            }
+            let afternoon = stats::mean(&by_hour[15]);
+            let night = stats::mean(&by_hour[3]);
+            assert!(afternoon > night, "cluster {} diurnal", m.cluster_id);
+        }
+    }
+
+    #[test]
+    fn flex_daily_demand_hits_target_in_expectation() {
+        for m in models() {
+            let days: Vec<f64> = (0..40).filter(|d| !crate::timebase::is_weekend(*d))
+                .map(|d| m.flex_daily_demand(d)).collect();
+            let target = m.flex_level * m.capacity_gcu * 24.0;
+            let mean = stats::mean(&days);
+            assert!(
+                (mean / target - 1.0).abs() < 0.15,
+                "cluster {}: mean {mean} target {target}",
+                m.cluster_id
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_calibrated_to_daily_demand() {
+        let m = &models()[0]; // archetype X
+        let mut id = 0;
+        let mut submitted = 0.0;
+        let days = 5;
+        for day in 0..days {
+            for tick in 0..TICKS_PER_DAY {
+                for j in m.flex_arrivals(SimTime::new(day, tick), &mut id) {
+                    submitted += j.work_gcuh();
+                }
+            }
+        }
+        let expected: f64 = (0..days).map(|d| m.flex_daily_demand(d)).sum();
+        assert!(
+            (submitted / expected - 1.0).abs() < 0.15,
+            "submitted {submitted} expected {expected}"
+        );
+    }
+
+    #[test]
+    fn ratio_decreasing_in_usage() {
+        let m = &models()[0];
+        let r_low = m.inflexible_ratio(0.1 * m.capacity_gcu);
+        let r_high = m.inflexible_ratio(0.9 * m.capacity_gcu);
+        assert!(r_low > r_high);
+        assert!(r_high >= 1.0);
+    }
+
+    #[test]
+    fn archetype_flex_share_ordering() {
+        let ms = models();
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let share = |a: Archetype| {
+            let v: Vec<f64> = ms
+                .iter()
+                .zip(&fleet.clusters)
+                .filter(|(_, c)| c.archetype == a)
+                .map(|(m, _)| m.flex_level)
+                .collect();
+            stats::mean(&v)
+        };
+        assert!(share(Archetype::FlexPredictable) > 3.0 * share(Archetype::MostlyInflexible));
+    }
+
+    #[test]
+    fn surge_multiplies_demand() {
+        let mut m = models()[0].clone();
+        m.surge_day = Some(10);
+        m.surge_factor = 1.5;
+        let before = m.flex_daily_demand(9);
+        let after = m.flex_daily_demand(10);
+        // same-day noise differs, but 1.5x should dominate
+        assert!(after > before * 1.2);
+    }
+
+    #[test]
+    fn deterministic_arrivals() {
+        let m = &models()[1];
+        let mut id1 = 0;
+        let mut id2 = 0;
+        let a = m.flex_arrivals(SimTime::new(2, 100), &mut id1);
+        let b = m.flex_arrivals(SimTime::new(2, 100), &mut id2);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.demand_gcu, y.demand_gcu);
+        }
+    }
+}

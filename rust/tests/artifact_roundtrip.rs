@@ -1,0 +1,161 @@
+//! Integration: the AOT JAX/Pallas artifact (executed via PJRT) must agree
+//! with the rust-native PGD mirror on the same problems, and both must
+//! satisfy the optimization's constraints. Requires `make artifacts`.
+
+use cics::forecast::DayAheadForecast;
+use cics::optimizer::{assemble, pgd, ClusterProblem};
+use cics::power::PwlModel;
+use cics::runtime::Runtime;
+use cics::timebase::HOURS_PER_DAY;
+use cics::util::rng::Pcg;
+
+fn runtime() -> Runtime {
+    Runtime::load(std::path::Path::new("artifacts"))
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+/// A randomized but well-conditioned cluster problem (retries seeds that
+/// land on an unshapeable draw).
+fn random_problem(seed: u64) -> ClusterProblem {
+    for attempt in 0..20 {
+        if let Some(p) = try_random_problem(seed.wrapping_add(attempt * 7919)) {
+            return p;
+        }
+    }
+    panic!("no shapeable random problem near seed {seed}");
+}
+
+fn try_random_problem(seed: u64) -> Option<ClusterProblem> {
+    let mut rng = Pcg::new(seed, 77);
+    let cap = rng.uniform(3000.0, 9000.0);
+    let if_level = rng.uniform(0.25, 0.5);
+    let mut u_if = [0.0; HOURS_PER_DAY];
+    for (h, u) in u_if.iter_mut().enumerate() {
+        let x = (h as f64 - 15.0) / 24.0 * std::f64::consts::TAU;
+        *u = cap * if_level * (1.0 + rng.uniform(0.05, 0.2) * x.cos());
+    }
+    let mut eta = [0.0; HOURS_PER_DAY];
+    let peak_h = rng.uniform(10.0, 16.0);
+    for (h, e) in eta.iter_mut().enumerate() {
+        let x = (h as f64 - peak_h) / rng.uniform(3.0, 6.0);
+        *e = rng.uniform(0.2, 0.4) + rng.uniform(0.2, 0.5) * (-0.5 * x * x).exp();
+    }
+    let tau = cap * rng.uniform(0.15, 0.3) * 24.0;
+    let fc = DayAheadForecast {
+        cluster_id: 0,
+        day: 1,
+        u_if_hat: u_if,
+        tuf_hat: tau,
+        tr_hat: tau * 3.0,
+        ratio_hat: [rng.uniform(1.1, 1.35); HOURS_PER_DAY],
+        u_if_upper: u_if.map(|u| u * 1.08),
+        mature: true,
+    };
+    assemble(
+        0,
+        &fc,
+        &eta,
+        tau,
+        PwlModel::linear_default(cap, cap * 0.1, cap * 0.28),
+        cap * 0.96,
+        cap,
+        0.25,
+        -1.0,
+        3.0,
+    )
+    .ok()
+}
+
+#[test]
+fn artifact_loads_and_reports_platform() {
+    let rt = runtime();
+    assert_eq!(rt.manifest.h, 24);
+    assert_eq!(rt.manifest.k, 8);
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn artifact_matches_native_solver() {
+    let rt = runtime();
+    let problems: Vec<ClusterProblem> = (0..6).map(|i| random_problem(100 + i)).collect();
+    let art = rt.solve(&problems, 10.0).unwrap();
+    for (p, a) in problems.iter().zip(&art) {
+        let n = pgd::solve(p, 10.0, rt.manifest.iters);
+        // Same algorithm in f32 vs f64: deltas agree to a loose tolerance,
+        // objectives agree tightly.
+        let obj_a = p.objective(&a.delta, 10.0);
+        let obj_n = p.objective(&n.delta, 10.0);
+        let rel = (obj_a - obj_n).abs() / obj_n.abs();
+        assert!(rel < 5e-3, "objective gap {rel} (artifact {obj_a}, native {obj_n})");
+        assert!(p.feasible(&a.delta, 1e-4), "artifact solution infeasible");
+        assert!(p.feasible(&n.delta, 1e-6), "native solution infeasible");
+        // both shift work away from the dirtiest hour
+        let dirtiest = (0..HOURS_PER_DAY)
+            .max_by(|&x, &y| p.eta[x].partial_cmp(&p.eta[y]).unwrap())
+            .unwrap();
+        assert!(a.delta[dirtiest] < 0.0, "artifact keeps load in dirtiest hour");
+        assert!(n.delta[dirtiest] < 0.0, "native keeps load in dirtiest hour");
+    }
+}
+
+#[test]
+fn artifact_beats_unshaped_on_the_exact_objective() {
+    let rt = runtime();
+    let problems: Vec<ClusterProblem> = (0..4).map(|i| random_problem(500 + i)).collect();
+    let art = rt.solve(&problems, 10.0).unwrap();
+    for (p, a) in problems.iter().zip(&art) {
+        let base = p.objective(&[0.0; HOURS_PER_DAY], 10.0);
+        let shaped = p.objective(&a.delta, 10.0);
+        assert!(shaped < base, "artifact must improve on unshaped: {shaped} vs {base}");
+    }
+}
+
+#[test]
+fn block_padding_is_inert() {
+    // Solving [p] alone and [p, q] together must give the same answer for
+    // p: masked rows and co-resident problems cannot interact.
+    let rt = runtime();
+    let p = random_problem(900);
+    let q = random_problem(901);
+    let solo = rt.solve(std::slice::from_ref(&p), 10.0).unwrap();
+    let pair = rt.solve(&[p.clone(), q], 10.0).unwrap();
+    for h in 0..HOURS_PER_DAY {
+        assert!(
+            (solo[0].delta[h] - pair[0].delta[h]).abs() < 1e-6,
+            "hour {h}: {} vs {}",
+            solo[0].delta[h],
+            pair[0].delta[h]
+        );
+    }
+}
+
+#[test]
+fn tiling_handles_more_than_one_block() {
+    let rt = runtime();
+    let n = rt.manifest.c_pad + 3; // forces two executions
+    let problems: Vec<ClusterProblem> = (0..n).map(|i| random_problem(2000 + i as u64)).collect();
+    let sols = rt.solve(&problems, 5.0).unwrap();
+    assert_eq!(sols.len(), n);
+    for (p, s) in problems.iter().zip(&sols) {
+        assert!(p.feasible(&s.delta, 1e-4));
+    }
+}
+
+#[test]
+fn power_eval_artifact_matches_rust_model() {
+    let rt = runtime();
+    let mut rng = Pcg::new(7, 3);
+    let models: Vec<PwlModel> =
+        (0..5).map(|i| PwlModel::linear_default(4000.0 + 100.0 * i as f64, 350.0, 980.0)).collect();
+    let usage: Vec<[f64; HOURS_PER_DAY]> = (0..5)
+        .map(|_| std::array::from_fn(|_| rng.uniform(100.0, 3900.0)))
+        .collect();
+    let got = rt.power_eval(&usage, &models).unwrap();
+    for i in 0..5 {
+        for h in 0..HOURS_PER_DAY {
+            let want = models[i].eval(usage[i][h]);
+            let rel = (got[i][h] - want).abs() / want;
+            assert!(rel < 1e-4, "row {i} hour {h}: {} vs {want}", got[i][h]);
+        }
+    }
+}

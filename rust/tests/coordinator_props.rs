@@ -1,0 +1,166 @@
+//! Property-based integration tests on coordinator invariants: routing of
+//! jobs (admission/queueing), batching of work across hours, and state
+//! management across the day boundary — under randomized workloads, VCCs
+//! and grid conditions (mini property-test kit; no proptest offline).
+
+use cics::config::ScenarioConfig;
+use cics::fleet::Fleet;
+use cics::optimizer::{assemble, pgd};
+use cics::power::PwlModel;
+use cics::scheduler::{ClusterScheduler, DayOutcome};
+use cics::telemetry::ClusterDayRecord;
+use cics::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY, TICKS_PER_HOUR};
+use cics::util::prop;
+use cics::util::rng::Pcg;
+use cics::vcc::Vcc;
+use cics::workload::WorkloadModel;
+
+fn fleet() -> Fleet {
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses[0].clusters = 3;
+    Fleet::build(&cfg)
+}
+
+/// Work conservation: across any random feasible VCC sequence, submitted
+/// work == completed + still-running + queued (GCU-h), exactly.
+#[test]
+fn prop_scheduler_conserves_work() {
+    let fleet = fleet();
+    let c = &fleet.clusters[0];
+    let model = WorkloadModel::for_cluster(7, c);
+    prop::for_all_cases(21, 12, prop::array_uniform(0.3, 1.0, HOURS_PER_DAY), |fracs: &Vec<f64>| {
+        let mut hourly = [0.0; HOURS_PER_DAY];
+        for h in 0..HOURS_PER_DAY {
+            hourly[h] = c.capacity_gcu * fracs[h];
+        }
+        let vcc = Vcc { cluster_id: c.id, day: 0, hourly, shaped: true };
+        let mut s = ClusterScheduler::new(c.id);
+        let mut submitted = 0.0;
+        let mut completed = 0.0;
+        for day in 0..2 {
+            let mut rec = ClusterDayRecord::new(c, day);
+            let mut out = DayOutcome::default();
+            for tick in 0..TICKS_PER_DAY {
+                s.tick(c, &model, Some(&vcc), SimTime::new(day, tick), &mut rec, &mut out);
+            }
+            submitted += out.submitted_gcuh;
+            completed += out.completed_gcuh;
+        }
+        let outstanding = s.backlog_gcuh() + s.running_remaining_gcuh();
+        prop::close(submitted, completed + outstanding, 1e-6, 1e-9)
+    });
+}
+
+/// Cap monotonicity: a uniformly lower VCC can never complete *more*
+/// flexible work.
+#[test]
+fn prop_lower_cap_never_completes_more() {
+    let fleet = fleet();
+    let c = &fleet.clusters[0];
+    let model = WorkloadModel::for_cluster(9, c);
+    let run = |frac: f64| {
+        let vcc = Vcc {
+            cluster_id: c.id,
+            day: 0,
+            hourly: [c.capacity_gcu * frac; HOURS_PER_DAY],
+            shaped: true,
+        };
+        let mut s = ClusterScheduler::new(c.id);
+        let mut done = 0.0;
+        for day in 0..2 {
+            let mut rec = ClusterDayRecord::new(c, day);
+            let mut out = DayOutcome::default();
+            for tick in 0..TICKS_PER_DAY {
+                s.tick(c, &model, Some(&vcc), SimTime::new(day, tick), &mut rec, &mut out);
+            }
+            done += out.completed_gcuh;
+        }
+        done
+    };
+    prop::for_all_cases(33, 10, prop::array_uniform(0.35, 0.95, 2), |fr: &Vec<f64>| {
+        let (lo, hi) = (fr[0].min(fr[1]), fr[0].max(fr[1]));
+        run(lo) <= run(hi) + 1e-6
+    });
+}
+
+/// The optimizer's batching across hours: for random problems, the PGD
+/// solution is feasible and no worse than both the unshaped profile and
+/// the greedy baseline on the exact objective.
+#[test]
+fn prop_pgd_dominates_unshaped_and_not_worse_than_greedy() {
+    prop::for_all_cases(55, 24, |rng: &mut Pcg| rng.next_u64(), |&seed: &u64| {
+        let mut rng = Pcg::new(seed, 3);
+        let cap = rng.uniform(2000.0, 8000.0);
+        let mut u_if = [0.0; HOURS_PER_DAY];
+        for (h, u) in u_if.iter_mut().enumerate() {
+            let x = (h as f64 - 14.0) / 24.0 * std::f64::consts::TAU;
+            *u = cap * rng.uniform(0.25, 0.45) * (1.0 + 0.15 * x.cos());
+        }
+        let mut eta = [0.0; HOURS_PER_DAY];
+        for e in eta.iter_mut() {
+            *e = rng.uniform(0.1, 0.9);
+        }
+        let tau = cap * rng.uniform(0.1, 0.3) * 24.0;
+        let fc = cics::forecast::DayAheadForecast {
+            cluster_id: 0,
+            day: 1,
+            u_if_hat: u_if,
+            tuf_hat: tau,
+            tr_hat: tau * 3.0,
+            ratio_hat: [1.2; HOURS_PER_DAY],
+            u_if_upper: u_if.map(|u| u * 1.05),
+            mature: true,
+        };
+        let p = match assemble(
+            0,
+            &fc,
+            &eta,
+            tau,
+            PwlModel::linear_default(cap, cap * 0.1, cap * 0.3),
+            cap * 0.97,
+            cap,
+            rng.uniform(0.05, 1.0),
+            -1.0,
+            3.0,
+        ) {
+            Ok(p) => p,
+            Err(_) => return true, // unshapeable draws are out of scope
+        };
+        let lam_e = rng.uniform(1.0, 20.0);
+        let sol = pgd::solve(&p, lam_e, 250);
+        if !p.feasible(&sol.delta, 1e-5) {
+            return false;
+        }
+        let f_pgd = p.objective(&sol.delta, lam_e);
+        let f_zero = p.objective(&[0.0; HOURS_PER_DAY], lam_e);
+        let greedy = cics::optimizer::baselines::greedy_carbon(&p, &eta);
+        let f_greedy = p.objective(&greedy.delta, lam_e);
+        f_pgd <= f_zero + 1e-9 && f_pgd <= f_greedy + f_greedy.abs() * 0.02
+    });
+}
+
+/// VCC construction state: for any solved problem, the resulting curve is
+/// within machine capacity and carries the full Theta-equivalent total.
+#[test]
+fn prop_vcc_construction_sound() {
+    prop::for_all_cases(77, 20, |rng: &mut Pcg| rng.next_u64(), |&seed: &u64| {
+        let mut rng = Pcg::new(seed, 5);
+        let cap = rng.uniform(2000.0, 8000.0);
+        let u_if = [cap * rng.uniform(0.2, 0.4); HOURS_PER_DAY];
+        let tau = cap * rng.uniform(0.05, 0.3) * 24.0;
+        let ratio = [rng.uniform(1.05, 1.4); HOURS_PER_DAY];
+        let mut delta = [0.0; HOURS_PER_DAY];
+        for h in 0..12 {
+            let v = rng.uniform(0.0, 0.8);
+            delta[h] = v;
+            delta[23 - h] = -v;
+        }
+        let vcc = Vcc::from_deltas(0, 1, &u_if, tau, &delta, &ratio, cap);
+        let within = vcc.hourly.iter().all(|&v| v >= 0.0 && v <= cap + 1e-9);
+        // un-clamped expected total
+        let expect: f64 = (0..HOURS_PER_DAY)
+            .map(|h| ((u_if[h] + (1.0 + delta[h]) * tau / 24.0) * ratio[h]).min(cap))
+            .sum();
+        within && prop::close(vcc.daily_total(), expect, 1e-6, 1e-12)
+    });
+}

@@ -1,0 +1,214 @@
+//! End-to-end integration: the full system — workload → scheduler →
+//! telemetry → pipelines → AOT artifact solve (PJRT) → VCC → scheduler —
+//! over multiple simulated weeks. Requires `make artifacts`.
+
+use cics::config::{GridArchetype, ScenarioConfig};
+use cics::coordinator::{Simulation, SolverBackend};
+use cics::util::stats;
+
+fn cfg(clusters: usize) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses[0].clusters = clusters;
+    cfg.campuses[0].grid = GridArchetype::FossilPeaker;
+    cfg.campuses[0].archetype_mix = (0.6, 0.2, 0.2);
+    cfg.optimizer.iters = 200;
+    cfg
+}
+
+#[test]
+fn full_stack_with_artifact_shapes_load_and_meets_slo() {
+    let mut sim = Simulation::new(cfg(4));
+    assert_eq!(
+        sim.backend,
+        SolverBackend::Artifact,
+        "artifacts must be present for the end-to-end test (make artifacts)"
+    );
+    sim.run_days(38);
+
+    // 1. shaping actually happened after warmup
+    let shaped_days: usize = sim.metrics.iter().filter(|s| s.shaped).count();
+    assert!(shaped_days > 20, "only {shaped_days} shaped cluster-days");
+
+    // 2. on shaped days, reservations respect the VCC
+    for s in sim.metrics.iter().filter(|s| s.shaped) {
+        let vcc = s.vcc.unwrap();
+        for h in 0..24 {
+            assert!(
+                s.hourly_resv[h] <= vcc[h] * 1.03 + 1.0,
+                "cluster {} day {} hour {h}: resv {} over cap {}",
+                s.cluster_id,
+                s.day,
+                s.hourly_resv[h],
+                vcc[h]
+            );
+        }
+    }
+
+    // 3. SLO: flexible work completes (backlog does not grow unboundedly)
+    for cid in 0..sim.fleet.clusters.len() {
+        let sums: Vec<f64> =
+            sim.metrics.all(cid).iter().rev().take(7).map(|s| s.flex_backlog_gcuh).collect();
+        let daily = sim.workloads[cid].flex_level * sim.workloads[cid].capacity_gcu * 24.0;
+        assert!(
+            stats::mean(&sums) < daily,
+            "cluster {cid}: backlog {} vs daily {daily}",
+            stats::mean(&sums)
+        );
+    }
+
+    // 4. the artifact solver was exercised
+    assert!(sim.runtime.as_ref().unwrap().solver_calls.get() > 10);
+}
+
+#[test]
+fn shaped_days_move_power_to_greener_hours() {
+    let mut sim = Simulation::new(cfg(4));
+    // deterministic per-cluster-day coin for treatment
+    let seed = sim.cfg.seed;
+    sim.treatment = Some(Box::new(move |cid, day| {
+        let mut r = cics::util::rng::Pcg::keyed(seed, 0xAB, cid as u64, day as u64);
+        r.chance(0.5)
+    }));
+    sim.run_days(45);
+    let res = cics::experiment::summarize(&sim, 30, 44);
+    assert!(res.treated_days > 10 && res.control_days > 10);
+    // treated power must be lower during the peak-carbon hours
+    assert!(
+        res.peak_drop_pct > 0.2,
+        "expected a positive power drop in peak-carbon hours, got {:.3}%",
+        res.peak_drop_pct
+    );
+    // daily flexible compute is conserved: treated clusters still complete
+    // within ~1 day (compare flex done vs submitted over the window)
+    let mut done = 0.0;
+    let mut submitted = 0.0;
+    for s in sim.metrics.iter().filter(|s| s.day >= 30) {
+        done += s.flex_done_gcuh;
+        submitted += s.flex_submitted_gcuh;
+    }
+    assert!(
+        done > 0.9 * submitted,
+        "flexible work must still complete: done {done} submitted {submitted}"
+    );
+}
+
+#[test]
+fn surge_trips_slo_guard_and_pauses_shaping() {
+    let mut sim = Simulation::new(cfg(2));
+    // inject a 1.8x flexible-demand surge at day 30 on cluster 0
+    sim.workloads[0].surge_day = Some(30);
+    sim.workloads[0].surge_factor = 1.8;
+    sim.run_days(44);
+    assert!(
+        sim.slo_states[0].pauses_triggered >= 1,
+        "surge should trigger the SLO feedback loop"
+    );
+    // cluster 1 (no surge) should not accumulate pauses at the same rate
+    assert!(sim.slo_states[1].pauses_triggered <= sim.slo_states[0].pauses_triggered);
+}
+
+#[test]
+fn campus_contract_limits_fleet_peak() {
+    let mut base = cfg(3);
+    base.optimizer.iters = 150;
+    // First run unconstrained to learn the natural peak.
+    let mut free = Simulation::new(base.clone());
+    free.run_days(34);
+    let mut peaks = Vec::new();
+    for d in 28..34 {
+        let (power, _) = free.metrics.fleet_day(d).unwrap();
+        peaks.push(power.iter().cloned().fold(0.0, f64::max));
+    }
+    let natural = stats::mean(&peaks);
+    // Now constrain the campus to 97% of that.
+    let mut capped_cfg = base;
+    capped_cfg.campuses[0].contract_limit_kw = natural * 0.97;
+    let mut capped = Simulation::new(capped_cfg);
+    capped.run_days(34);
+    let mut capped_peaks = Vec::new();
+    for d in 28..34 {
+        let (power, _) = capped.metrics.fleet_day(d).unwrap();
+        capped_peaks.push(power.iter().cloned().fold(0.0, f64::max));
+    }
+    // The dual mechanism is verified exactly in optimizer::campus unit
+    // tests; end-to-end, realized power carries meter/demand noise on top
+    // of the *planned* peaks the contract actually binds, so assert the
+    // capped run does not exceed the natural peak beyond noise and that
+    // flexible work still completes.
+    assert!(
+        stats::mean(&capped_peaks) < natural * 1.015,
+        "capped realized fleet peak should not exceed natural + noise: {} vs {natural}",
+        stats::mean(&capped_peaks)
+    );
+    let mut done = 0.0;
+    let mut submitted = 0.0;
+    for s in capped.metrics.iter().filter(|s| s.day >= 25) {
+        done += s.flex_done_gcuh;
+        submitted += s.flex_submitted_gcuh;
+    }
+    assert!(done > 0.85 * submitted, "work must complete under contract: {done}/{submitted}");
+}
+
+#[test]
+fn spatial_shifting_moves_work_to_cleaner_campuses() {
+    // two campuses: dirty fossil-peaker vs clean hydro/nuclear base —
+    // the §V extension should move flexible GCU-h toward the clean one
+    // and save carbon vs the temporal-only run.
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses = vec![
+        cics::config::CampusConfig {
+            name: "dirty".into(),
+            grid: GridArchetype::FossilPeaker,
+            clusters: 3,
+            contract_limit_kw: f64::INFINITY,
+            archetype_mix: (1.0, 0.0, 0.0),
+        },
+        cics::config::CampusConfig {
+            name: "clean".into(),
+            grid: GridArchetype::LowCarbonBase,
+            clusters: 3,
+            contract_limit_kw: f64::INFINITY,
+            archetype_mix: (1.0, 0.0, 0.0),
+        },
+    ];
+    cfg.optimizer.iters = 150;
+    let days = 40;
+    let mut temporal_only = Simulation::new(cfg.clone());
+    temporal_only.run_days(days);
+    let mut spatial = Simulation::new(cfg);
+    spatial.spatial_movable_fraction = Some(0.3);
+    spatial.run_days(days);
+
+    let (moved, saved) = spatial.spatial_totals;
+    assert!(moved > 0.0, "spatial plan should move work");
+    assert!(saved > 0.0, "moves should have positive expected savings");
+
+    // realized: clean-campus clusters carry more flexible usage than in
+    // the temporal-only world over the last 10 days
+    let flex_on_campus = |sim: &Simulation, campus: usize| -> f64 {
+        sim.fleet.campuses[campus]
+            .cluster_ids
+            .iter()
+            .flat_map(|&cid| sim.metrics.all(cid))
+            .filter(|s| s.day >= days - 10)
+            .map(|s| s.daily_flex_usage_gcuh)
+            .sum()
+    };
+    let clean_gain =
+        flex_on_campus(&spatial, 1) - flex_on_campus(&temporal_only, 1);
+    let dirty_loss =
+        flex_on_campus(&temporal_only, 0) - flex_on_campus(&spatial, 0);
+    assert!(clean_gain > 0.0, "clean campus should gain flexible work: {clean_gain}");
+    assert!(dirty_loss > 0.0, "dirty campus should shed flexible work: {dirty_loss}");
+
+    // fleetwide realized carbon improves
+    let carbon = |sim: &Simulation| -> f64 {
+        (days - 10..days).filter_map(|d| sim.metrics.fleet_day(d)).map(|(_, kg)| kg).sum()
+    };
+    let kg_temporal = carbon(&temporal_only);
+    let kg_spatial = carbon(&spatial);
+    assert!(
+        kg_spatial < kg_temporal,
+        "spatial should reduce fleet carbon: {kg_spatial} vs {kg_temporal}"
+    );
+}
