@@ -12,7 +12,7 @@ use cics::config::{GridArchetype, ScenarioConfig};
 use cics::experiment;
 use cics::report;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cics::util::error::Result<()> {
     let mut cfg = ScenarioConfig::default();
     cfg.campuses[0].name = "us-central-sim".into();
     cfg.campuses[0].clusters = 24;

@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --release --example carbon_scenarios`
 
-use cics::config::{GridArchetype, ScenarioConfig};
+use cics::config::{GridArchetype, ScenarioConfig, SweepMatrix};
 use cics::coordinator::Simulation;
 use cics::util::stats;
 
@@ -36,20 +36,20 @@ fn run(grid: GridArchetype, lambda_e: f64, lambda_p: f64, shaped: bool) -> (f64,
 }
 
 fn main() {
-    println!("=== carbon savings by grid archetype (shaped vs unshaped, 14-day mean) ===");
-    println!("(aggressive shaping regime, lambda_e = 0.25 — paper §IV's 'larger and longer drops')");
-    println!("{:<16} {:>12} {:>12} {:>9} {:>10}", "grid", "kg/day off", "kg/day on", "saving", "peak delta");
-    for grid in GridArchetype::ALL {
-        let (off_kg, off_peak) = run(grid, 0.25, 0.25, false);
-        let (on_kg, on_peak) = run(grid, 0.25, 0.25, true);
-        println!(
-            "{:<16} {:>12.0} {:>12.0} {:>8.2}% {:>9.2}%",
-            grid.name(),
-            off_kg,
-            on_kg,
-            100.0 * (off_kg - on_kg) / off_kg,
-            100.0 * (on_peak - off_peak) / off_peak,
-        );
+    println!("=== carbon savings by grid archetype (scenario-sweep engine, 14-day window) ===");
+    let matrix = SweepMatrix {
+        grids: GridArchetype::ALL.iter().map(|g| g.name().to_string()).collect(),
+        fleet_sizes: vec![6],
+        flex_shares: vec![0.7],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 31,
+        ..SweepMatrix::default()
+    };
+    let threads = cics::util::threadpool::ThreadPool::default_size();
+    match cics::sweep::run_sweep(&matrix, 14, threads) {
+        Ok(rep) => println!("{}", rep.ascii_table()),
+        Err(e) => eprintln!("sweep failed: {e}"),
     }
 
     println!();

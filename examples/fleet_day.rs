@@ -9,7 +9,7 @@ use cics::config::{Archetype, CampusConfig, GridArchetype, ScenarioConfig};
 use cics::coordinator::Simulation;
 use cics::report;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cics::util::error::Result<()> {
     let mut cfg = ScenarioConfig::default();
     cfg.campuses = GridArchetype::ALL
         .iter()

@@ -8,7 +8,7 @@ use cics::coordinator::Simulation;
 use cics::report;
 use cics::timebase::HOURS_PER_DAY;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cics::util::error::Result<()> {
     // A single campus on a fossil-peaker grid (dirty midday), one
     // predictable cluster — the cleanest demonstration of the mechanism.
     let mut cfg = ScenarioConfig::default();

@@ -6,6 +6,7 @@
 //! is the single source of truth handed to the builders in `fleet/`,
 //! `grid/` and `workload/`.
 
+use crate::util::error::Result;
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -208,7 +209,7 @@ impl Default for ScenarioConfig {
 impl ScenarioConfig {
     /// Parse a scenario from JSON text. Unknown fields are ignored;
     /// missing fields take defaults.
-    pub fn from_json(text: &str) -> anyhow::Result<ScenarioConfig> {
+    pub fn from_json(text: &str) -> Result<ScenarioConfig> {
         let j = Json::parse(text)?;
         let mut cfg = ScenarioConfig {
             seed: j.f64_or("seed", 20210212.0) as u64,
@@ -260,26 +261,26 @@ impl ScenarioConfig {
         Ok(cfg)
     }
 
-    pub fn from_file<P: AsRef<Path>>(path: P) -> anyhow::Result<ScenarioConfig> {
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<ScenarioConfig> {
         let text = std::fs::read_to_string(path.as_ref())
-            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", path.as_ref()))?;
+            .map_err(|e| crate::err!("reading {:?}: {e}", path.as_ref()))?;
         Self::from_json(&text)
     }
 
-    pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(!self.campuses.is_empty(), "at least one campus required");
-        anyhow::ensure!(self.optimizer.delta_min >= -1.0, "delta_min must be >= -1");
-        anyhow::ensure!(
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.campuses.is_empty(), "at least one campus required");
+        crate::ensure!(self.optimizer.delta_min >= -1.0, "delta_min must be >= -1");
+        crate::ensure!(
             self.optimizer.delta_min <= 0.0 && self.optimizer.delta_max >= 0.0,
             "delta bounds must bracket 0 (delta = 0 must stay feasible)"
         );
-        anyhow::ensure!(
+        crate::ensure!(
             (0.5..1.0).contains(&self.optimizer.slo_quantile),
             "slo_quantile must be in [0.5, 1)"
         );
-        anyhow::ensure!(self.optimizer.gamma > 0.0 && self.optimizer.gamma < 0.5, "gamma");
+        crate::ensure!(self.optimizer.gamma > 0.0 && self.optimizer.gamma < 0.5, "gamma");
         for c in &self.campuses {
-            anyhow::ensure!(c.clusters > 0, "campus {} has no clusters", c.name);
+            crate::ensure!(c.clusters > 0, "campus {} has no clusters", c.name);
         }
         Ok(())
     }
@@ -287,6 +288,148 @@ impl ScenarioConfig {
     /// Total cluster count across campuses.
     pub fn total_clusters(&self) -> usize {
         self.campuses.iter().map(|c| c.clusters).sum()
+    }
+}
+
+/// Declarative scenario-sweep matrix: the axes the sweep engine expands
+/// into a cartesian product of [`ScenarioConfig`]s (see `crate::sweep`).
+/// Parsed from JSON (`--matrix FILE`) or assembled from CLI flags; every
+/// axis has a default so a matrix can be described by deltas only.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepMatrix {
+    /// Base seed; per-cell seeds are derived deterministically from the
+    /// cell's *physical* axis values (grid, fleet size, flex share — not
+    /// its position), so reordering or extending an axis never changes
+    /// the results of existing cells, and cells differing only in solver
+    /// or spatial shifting compare policies on the same random draw.
+    pub seed: u64,
+    /// Grid-mix preset codes (see `sweep::grid_preset`): FR, CA, DE, PL,
+    /// MIX, or any raw `GridArchetype` name.
+    pub grids: Vec<String>,
+    /// Clusters per (single-campus) scenario.
+    pub fleet_sizes: Vec<usize>,
+    /// Fraction of clusters carrying a large flexible share (archetype X);
+    /// the remainder are mostly-inflexible (archetype Z).
+    pub flex_shares: Vec<f64>,
+    /// Solver backends per cell: "native", "greedy" or "artifact".
+    pub solvers: Vec<String>,
+    /// Spatial-shifting variants (on/off) to sweep.
+    pub spatial: Vec<bool>,
+    /// Warmup days simulated before the measurement window opens (the
+    /// forecasters need ~3 weeks of history before shaping starts).
+    pub warmup_days: usize,
+}
+
+impl Default for SweepMatrix {
+    fn default() -> Self {
+        SweepMatrix {
+            seed: 20210212,
+            grids: vec!["FR".into(), "CA".into(), "DE".into(), "PL".into()],
+            fleet_sizes: vec![4],
+            flex_shares: vec![0.5],
+            solvers: vec!["native".into(), "greedy".into()],
+            spatial: vec![false],
+            warmup_days: 25,
+        }
+    }
+}
+
+impl SweepMatrix {
+    /// Parse a matrix from JSON text. Missing axes take defaults; empty
+    /// arrays and malformed entries are rejected (a mistyped entry must
+    /// fail loudly, not silently shrink the sweep).
+    pub fn from_json(text: &str) -> Result<SweepMatrix> {
+        fn axis<T>(
+            j: &Json,
+            key: &str,
+            get: impl Fn(&Json) -> Option<T>,
+        ) -> Result<Option<Vec<T>>> {
+            let Some(arr) = j.get(key).and_then(Json::as_arr) else {
+                return Ok(None);
+            };
+            let mut out = Vec::with_capacity(arr.len());
+            for v in arr {
+                out.push(
+                    get(v).ok_or_else(|| crate::err!("sweep matrix: bad entry {v} in {key:?}"))?,
+                );
+            }
+            Ok(Some(out))
+        }
+
+        // Exact non-negative integer, rejecting 4.5-style values that
+        // `Json::as_usize` would silently truncate.
+        fn exact_usize(v: &Json) -> Option<usize> {
+            v.as_f64().filter(|n| n.fract() == 0.0 && (0.0..9.0e15).contains(n)).map(|n| n as usize)
+        }
+
+        let j = Json::parse(text)?;
+        let mut m = SweepMatrix::default();
+        if let Some(v) = j.get("seed") {
+            // Derived cell seeds exceed f64's 2^53 integer range, so a
+            // seed copied back from sweep.json arrives as a string;
+            // in-range JSON numbers are accepted too.
+            m.seed = match v {
+                Json::Str(s) => s
+                    .parse()
+                    .map_err(|_| crate::err!("sweep matrix: bad seed string {s:?}"))?,
+                _ => exact_usize(v)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| crate::err!("sweep matrix: bad seed {v}"))?,
+            };
+        }
+        if let Some(v) = j.get("warmup_days") {
+            m.warmup_days = exact_usize(v)
+                .ok_or_else(|| crate::err!("sweep matrix: bad warmup_days {v}"))?;
+        }
+        if let Some(v) = axis(&j, "grids", |v| v.as_str().map(str::to_string))? {
+            m.grids = v;
+        }
+        if let Some(v) = axis(&j, "fleet_sizes", exact_usize)? {
+            m.fleet_sizes = v;
+        }
+        if let Some(v) = axis(&j, "flex_shares", Json::as_f64)? {
+            m.flex_shares = v;
+        }
+        if let Some(v) = axis(&j, "solvers", |v| v.as_str().map(str::to_string))? {
+            m.solvers = v;
+        }
+        if let Some(v) = axis(&j, "spatial", Json::as_bool)? {
+            m.spatial = v;
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SweepMatrix> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| crate::err!("reading {:?}: {e}", path.as_ref()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.grids.is_empty(), "sweep matrix: no grids");
+        crate::ensure!(!self.fleet_sizes.is_empty(), "sweep matrix: no fleet sizes");
+        crate::ensure!(!self.flex_shares.is_empty(), "sweep matrix: no flex shares");
+        crate::ensure!(!self.solvers.is_empty(), "sweep matrix: no solvers");
+        crate::ensure!(!self.spatial.is_empty(), "sweep matrix: no spatial variants");
+        crate::ensure!(
+            self.fleet_sizes.iter().all(|&n| n > 0),
+            "sweep matrix: fleet sizes must be positive"
+        );
+        crate::ensure!(
+            self.flex_shares.iter().all(|&f| (0.0..=1.0).contains(&f)),
+            "sweep matrix: flex shares must be in [0, 1]"
+        );
+        Ok(())
+    }
+
+    /// Number of cells the matrix expands to.
+    pub fn n_cells(&self) -> usize {
+        self.grids.len()
+            * self.fleet_sizes.len()
+            * self.flex_shares.len()
+            * self.solvers.len()
+            * self.spatial.len()
     }
 }
 
@@ -332,6 +475,60 @@ mod tests {
         assert!(ScenarioConfig::from_json(bad).is_err());
         let bad2 = r#"{"optimizer": {"delta_min": 0.5}}"#;
         assert!(ScenarioConfig::from_json(bad2).is_err());
+    }
+
+    #[test]
+    fn sweep_matrix_defaults_and_json() {
+        let d = SweepMatrix::default();
+        d.validate().unwrap();
+        assert_eq!(d.n_cells(), 8); // 4 grids x 2 solvers
+        let m = SweepMatrix::from_json(
+            r#"{
+              "seed": 3,
+              "grids": ["PL", "FR"],
+              "fleet_sizes": [2, 6],
+              "flex_shares": [0.25, 0.75],
+              "solvers": ["native"],
+              "spatial": [false, true],
+              "warmup_days": 22
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(m.seed, 3);
+        assert_eq!(m.grids, vec!["PL".to_string(), "FR".to_string()]);
+        assert_eq!(m.fleet_sizes, vec![2, 6]);
+        assert_eq!(m.spatial, vec![false, true]);
+        assert_eq!(m.warmup_days, 22);
+        assert_eq!(m.n_cells(), 16);
+    }
+
+    #[test]
+    fn sweep_matrix_rejects_bad_axes() {
+        assert!(SweepMatrix::from_json(r#"{"grids": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"flex_shares": [1.5]}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"fleet_sizes": [0]}"#).is_err());
+        // malformed entries must fail loudly, not silently shrink the axis
+        assert!(SweepMatrix::from_json(r#"{"fleet_sizes": [4, "8"]}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"grids": ["PL", 3]}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"spatial": [false, "on"]}"#).is_err());
+        // fractional/negative integers must not truncate silently
+        assert!(SweepMatrix::from_json(r#"{"fleet_sizes": [4.5]}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"warmup_days": -1}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"warmup_days": 2.5}"#).is_err());
+    }
+
+    #[test]
+    fn sweep_matrix_seed_roundtrips_beyond_f64() {
+        // seeds recorded in sweep.json are strings because splitmix64
+        // outputs exceed 2^53; the matrix parser must take them back
+        let big = u64::MAX - 12345;
+        let m =
+            SweepMatrix::from_json(&format!(r#"{{"seed": "{big}"}}"#)).unwrap();
+        assert_eq!(m.seed, big);
+        // in-range numeric seeds still work; out-of-precision ones error
+        assert_eq!(SweepMatrix::from_json(r#"{"seed": 42}"#).unwrap().seed, 42);
+        assert!(SweepMatrix::from_json(r#"{"seed": 1.5}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"seed": "abc"}"#).is_err());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY};
 use crate::vcc::{Rollout, SloGuard, SloState, Vcc};
 use crate::workload::WorkloadModel;
 
-pub use summary::{DaySummary, FleetMetrics};
+pub use summary::{DaySummary, FleetMetrics, WindowAggregate};
 
 /// Which solver backend executed the day-ahead optimization.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,6 +44,27 @@ pub enum SolverBackend {
 /// Per-cluster-day treatment decision for controlled experiments
 /// (Fig 12): `true` = receive shaping.
 pub type TreatmentFn = Box<dyn Fn(usize, usize) -> bool + Send + Sync>;
+
+/// Construction options for headless runs — everything the CLI and the
+/// sweep engine need to set up a scenario without poking `Simulation`
+/// fields after the fact. `Simulation::new` is `with_options(cfg,
+/// SimOptions::default())`.
+#[derive(Clone, Debug, Default)]
+pub struct SimOptions {
+    /// Force a solver backend. `None` (and `Some(Artifact)`) try the AOT
+    /// artifact when `cfg.optimizer.use_artifact` holds, then fall back to
+    /// the native PGD mirror; `Native`/`GreedyBaseline` skip the artifact
+    /// load entirely.
+    pub backend: Option<SolverBackend>,
+    /// Worker threads for the per-cluster fan-outs (`None` = machine
+    /// size). Results never depend on this — all randomness is keyed by
+    /// entity and day, not by scheduling.
+    pub threads: Option<usize>,
+    /// Start with the master shaping switch off (warmup/control runs).
+    pub shaping_disabled: bool,
+    /// Spatial-shifting extension: movable fraction of flexible demand.
+    pub spatial_movable_fraction: Option<f64>,
+}
 
 /// Days of full telemetry kept for training windows.
 const RETAIN_DAYS: usize = 35;
@@ -91,6 +112,13 @@ impl Simulation {
     /// Build a simulation from config. Attempts to load AOT artifacts from
     /// `cfg.artifact_dir`; falls back to the native solver.
     pub fn new(cfg: ScenarioConfig) -> Simulation {
+        Simulation::with_options(cfg, SimOptions::default())
+    }
+
+    /// Build a simulation headlessly with explicit [`SimOptions`] — the
+    /// constructor the sweep engine, tests and benches use to pin the
+    /// backend and thread budget without any CLI plumbing.
+    pub fn with_options(cfg: ScenarioConfig, opts: SimOptions) -> Simulation {
         let fleet = Fleet::build(&cfg);
         let zones = fleet
             .campuses
@@ -103,14 +131,33 @@ impl Simulation {
         let forecasters = fleet.clusters.iter().map(|c| LoadForecaster::new(c.id)).collect();
         let slo_states = fleet.clusters.iter().map(|_| SloState::default()).collect();
         let n = fleet.clusters.len();
-        let runtime = if cfg.optimizer.use_artifact {
-            Runtime::load_default(&cfg.artifact_dir)
-        } else {
-            None
+        let runtime = match opts.backend {
+            Some(SolverBackend::Native) | Some(SolverBackend::GreedyBaseline) => None,
+            Some(SolverBackend::Artifact) | None => {
+                if cfg.optimizer.use_artifact {
+                    Runtime::load_default(&cfg.artifact_dir)
+                } else {
+                    None
+                }
+            }
         };
-        let backend =
-            if runtime.is_some() { SolverBackend::Artifact } else { SolverBackend::Native };
+        let backend = match opts.backend {
+            Some(SolverBackend::GreedyBaseline) => SolverBackend::GreedyBaseline,
+            Some(SolverBackend::Native) => SolverBackend::Native,
+            // Artifact only when it actually loaded; else native mirror.
+            Some(SolverBackend::Artifact) | None => {
+                if runtime.is_some() {
+                    SolverBackend::Artifact
+                } else {
+                    SolverBackend::Native
+                }
+            }
+        };
         let slo_guard = SloGuard::new(cfg.slo.clone(), cfg.optimizer.slo_quantile);
+        let threads = opts
+            .threads
+            .unwrap_or_else(crate::util::threadpool::ThreadPool::default_size)
+            .max(1);
         Simulation {
             fleet,
             zones,
@@ -127,16 +174,26 @@ impl Simulation {
             backend,
             today_vccs: vec![None; n],
             treatment: None,
-            shaping_enabled: true,
-            spatial_movable_fraction: None,
+            shaping_enabled: !opts.shaping_disabled,
+            spatial_movable_fraction: opts.spatial_movable_fraction,
             spatial_scale: vec![1.0; n],
             spatial_totals: (0.0, 0.0),
             day: 0,
             metrics: FleetMetrics::new(n),
             last_unshapeable: Vec::new(),
-            threads: crate::util::threadpool::ThreadPool::default_size(),
+            threads,
             cfg,
         }
+    }
+
+    /// Cap the worker threads used by the per-cluster fan-outs.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// Current worker-thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Which backend is live.

@@ -99,6 +99,37 @@ impl FleetMetrics {
         self.per_cluster.iter().flatten()
     }
 
+    /// Peak hourly fleet power on `day` (kW), if any summary was recorded.
+    pub fn fleet_peak_kw(&self, day: usize) -> Option<f64> {
+        self.fleet_day(day).map(|(power, _)| daily_peak(&power))
+    }
+
+    /// Aggregate fleet metrics over a window of days — the per-cell
+    /// summary the scenario-sweep engine compares across scenarios.
+    pub fn window_aggregate(&self, days: std::ops::Range<usize>) -> WindowAggregate {
+        let mut agg = WindowAggregate::default();
+        let mut peaks = Vec::new();
+        for d in days.clone() {
+            if let Some((power, kg)) = self.fleet_day(d) {
+                agg.days += 1;
+                agg.carbon_kg += kg;
+                peaks.push(daily_peak(&power));
+            }
+        }
+        agg.mean_daily_peak_kw = crate::util::stats::mean(&peaks);
+        for s in self.iter() {
+            if days.contains(&s.day) {
+                agg.cluster_days += 1;
+                if s.shaped {
+                    agg.shaped_cluster_days += 1;
+                }
+                agg.flex_done_gcuh += s.flex_done_gcuh;
+                agg.flex_submitted_gcuh += s.flex_submitted_gcuh;
+            }
+        }
+        agg
+    }
+
     /// Fleet totals for a day: (total power kWh-ish by hour, total carbon kg).
     pub fn fleet_day(&self, day: usize) -> Option<([f64; HOURS_PER_DAY], f64)> {
         let mut power = [0.0; HOURS_PER_DAY];
@@ -117,6 +148,50 @@ impl FleetMetrics {
             Some((power, carbon))
         } else {
             None
+        }
+    }
+}
+
+/// Peak of an hourly power profile (kW) — the single definition of
+/// "daily peak" the report and aggregates share.
+fn daily_peak(power: &[f64; HOURS_PER_DAY]) -> f64 {
+    power.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Cross-day aggregate of fleet metrics over a day window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowAggregate {
+    /// Days in the window with at least one recorded summary.
+    pub days: usize,
+    /// Total fleet carbon over the window (kg CO2e).
+    pub carbon_kg: f64,
+    /// Mean over window days of the daily fleet peak power (kW).
+    pub mean_daily_peak_kw: f64,
+    /// Flexible work completed / submitted over the window (GCU-h).
+    pub flex_done_gcuh: f64,
+    pub flex_submitted_gcuh: f64,
+    /// Shaped cluster-days vs all cluster-days in the window.
+    pub shaped_cluster_days: usize,
+    pub cluster_days: usize,
+}
+
+impl WindowAggregate {
+    /// Fraction of submitted flexible work completed in-window (1.0 when
+    /// nothing was submitted).
+    pub fn flex_completion(&self) -> f64 {
+        if self.flex_submitted_gcuh > 1e-9 {
+            self.flex_done_gcuh / self.flex_submitted_gcuh
+        } else {
+            1.0
+        }
+    }
+
+    /// Fraction of cluster-days that were shaped.
+    pub fn shaped_fraction(&self) -> f64 {
+        if self.cluster_days > 0 {
+            self.shaped_cluster_days as f64 / self.cluster_days as f64
+        } else {
+            0.0
         }
     }
 }
@@ -149,6 +224,37 @@ mod tests {
         assert!(power.iter().all(|&p| p > 0.0));
         assert!(carbon > 0.0);
         assert!(m.fleet_day(3).is_none());
+    }
+
+    #[test]
+    fn window_aggregate_totals() {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        let mut m = FleetMetrics::new(fleet.clusters.len());
+        let c = &fleet.clusters[0];
+        for day in 0..4 {
+            let mut rec = ClusterDayRecord::new(c, day);
+            for t in 0..TICKS_PER_DAY {
+                rec.record_tick(c, 1, t, 1000.0, 500.0, 1200.0, 600.0);
+            }
+            rec.carbon_hourly = [0.4; crate::timebase::HOURS_PER_DAY];
+            rec.flex_done_gcuh = 100.0;
+            rec.flex_submitted_gcuh = 110.0;
+            rec.shaped = day >= 2;
+            m.record_day(&rec, &DayOutcome::default(), None);
+        }
+        let agg = m.window_aggregate(1..4);
+        assert_eq!(agg.days, 3);
+        assert_eq!(agg.cluster_days, 3);
+        assert_eq!(agg.shaped_cluster_days, 2);
+        assert!(agg.carbon_kg > 0.0);
+        assert!(agg.mean_daily_peak_kw > 0.0);
+        assert!((agg.flex_completion() - 100.0 / 110.0).abs() < 1e-9);
+        assert!((agg.shaped_fraction() - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.fleet_peak_kw(5), None);
+        assert!(m.fleet_peak_kw(0).unwrap() > 0.0);
+        // empty window is all-default
+        assert_eq!(m.window_aggregate(10..12), WindowAggregate::default());
     }
 
     #[test]

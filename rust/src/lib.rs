@@ -30,6 +30,7 @@ pub mod report;
 pub mod runtime;
 pub mod scheduler;
 pub mod spatial;
+pub mod sweep;
 pub mod telemetry;
 pub mod timebase;
 pub mod util;

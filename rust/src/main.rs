@@ -7,6 +7,8 @@
 //!   pipelines   run one day-ahead cycle and show the pipeline schedule
 //!   solve       solve a synthetic day-ahead problem (artifact vs native)
 //!   report      regenerate figure CSVs/charts into reports/
+//!   sweep       expand a scenario matrix and run every cell in parallel,
+//!               emitting a cross-scenario JSON + ASCII report
 //!
 //! (The offline build has no clap; argument parsing is a small hand-rolled
 //! substrate — see DESIGN.md §Substitutions.)
@@ -16,6 +18,7 @@ use cics::coordinator::Simulation;
 use cics::experiment;
 use cics::report;
 use cics::timebase::HOURS_PER_DAY;
+use cics::util::error::Result;
 
 /// Minimal flag parser: `--key value` and `--flag` forms.
 struct Args {
@@ -59,7 +62,7 @@ impl Args {
     }
 }
 
-fn load_config(args: &Args) -> anyhow::Result<ScenarioConfig> {
+fn load_config(args: &Args) -> Result<ScenarioConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => ScenarioConfig::from_file(path)?,
         None => ScenarioConfig::default(),
@@ -76,7 +79,7 @@ fn load_config(args: &Args) -> anyhow::Result<ScenarioConfig> {
     Ok(cfg)
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let days = args.usize("days", 40);
     let mut sim = Simulation::new(cfg);
@@ -121,7 +124,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+fn cmd_experiment(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let warmup = args.usize("warmup", 30);
     let measure = args.usize("measure", 30);
@@ -145,7 +148,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_pipelines(args: &Args) -> anyhow::Result<()> {
+fn cmd_pipelines(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let days = args.usize("days", 30);
     let mut sim = Simulation::new(cfg);
@@ -174,7 +177,7 @@ fn cmd_pipelines(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+fn cmd_solve(args: &Args) -> Result<()> {
     use cics::forecast::DayAheadForecast;
     use cics::optimizer::{assemble, baselines, pgd};
     use cics::power::PwlModel;
@@ -208,7 +211,7 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
         cfg.optimizer.delta_min,
         cfg.optimizer.delta_max,
     )
-    .map_err(|e| anyhow::anyhow!("assemble failed: {e:?}"))?;
+    .map_err(|e| cics::err!("assemble failed: {e:?}"))?;
 
     let native = pgd::solve(&p, cfg.optimizer.lambda_e * 100.0, cfg.optimizer.iters);
     println!("native PGD : carbon {:.2} kg, peak {:.2} kW", native.carbon_kg, native.peak_kw);
@@ -237,7 +240,7 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(args: &Args) -> anyhow::Result<()> {
+fn cmd_report(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let out = args.get("out").unwrap_or("reports").to_string();
     let days = args.usize("days", 45);
@@ -272,6 +275,82 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated list with a per-item parser, erroring on any
+/// malformed item.
+fn parse_list<T>(flag: &str, raw: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Vec<T>> {
+    raw.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| parse(s).ok_or_else(|| cics::err!("--{flag}: cannot parse {s:?}")))
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use cics::config::SweepMatrix;
+
+    let mut m = match args.get("matrix") {
+        Some(path) => SweepMatrix::from_file(path)?,
+        None => SweepMatrix::default(),
+    };
+    if let Some(s) = args.get("seed") {
+        // the sweep's whole contract is seed-determinism: a typo'd seed
+        // must fail loudly, not silently fall back to the default
+        m.seed = s.parse().map_err(|_| cics::err!("--seed: cannot parse {s:?}"))?;
+    }
+    if let Some(s) = args.get("grids") {
+        m.grids = parse_list("grids", s, |x| Some(x.to_string()))?;
+    }
+    if let Some(s) = args.get("fleets") {
+        m.fleet_sizes = parse_list("fleets", s, |x| x.parse().ok())?;
+    }
+    if let Some(s) = args.get("flex") {
+        m.flex_shares = parse_list("flex", s, |x| x.parse().ok())?;
+    }
+    if let Some(s) = args.get("solvers") {
+        m.solvers = parse_list("solvers", s, |x| Some(x.to_string()))?;
+    }
+    if let Some(s) = args.get("spatial") {
+        m.spatial = parse_list("spatial", s, |x| match x {
+            "on" | "true" | "1" => Some(true),
+            "off" | "false" | "0" => Some(false),
+            _ => None,
+        })?;
+    }
+    m.warmup_days = args.usize("warmup", m.warmup_days);
+    m.validate()?;
+    let days = args.usize("days", 20);
+    let threads =
+        args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
+
+    println!(
+        "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} solvers x {} spatial), \
+         {} warmup + {} measured days, {} worker threads",
+        m.n_cells(),
+        m.grids.len(),
+        m.fleet_sizes.len(),
+        m.flex_shares.len(),
+        m.solvers.len(),
+        m.spatial.len(),
+        m.warmup_days,
+        days,
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let report = cics::sweep::run_sweep(&m, days, threads)?;
+    println!();
+    println!("{}", report.ascii_table());
+    println!("(swept {} cells in {:.1?})", report.cells.len(), t0.elapsed());
+
+    let out = args.get("out").unwrap_or("reports");
+    let path = std::path::Path::new(out).join("sweep.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, report.to_json().to_string())?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
@@ -282,12 +361,15 @@ fn main() {
         "pipelines" => cmd_pipelines(&args),
         "solve" => cmd_solve(&args),
         "report" => cmd_report(&args),
+        "sweep" => cmd_sweep(&args),
         _ => {
             println!(
                 "cics — Carbon-Intelligent Compute System (paper reproduction)\n\
-                 usage: cics <simulate|experiment|pipelines|solve|report> [--days N]\n\
+                 usage: cics <simulate|experiment|pipelines|solve|report|sweep> [--days N]\n\
                  \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
-                 \u{20}      [--warmup N] [--measure N]"
+                 \u{20}      [--warmup N] [--measure N]\n\
+                 sweep:  [--matrix FILE] [--grids FR,CA,DE,PL] [--fleets 4,8] [--flex 0.3,0.6]\n\
+                 \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]"
             );
             Ok(())
         }

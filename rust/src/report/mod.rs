@@ -9,9 +9,10 @@ use crate::coordinator::DaySummary;
 use crate::experiment::ExperimentResult;
 use crate::timebase::HOURS_PER_DAY;
 use crate::util::ascii;
+use crate::util::error::Result;
 
 /// Write CSV rows (with a header) to `path`, creating parent directories.
-pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> anyhow::Result<()> {
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }

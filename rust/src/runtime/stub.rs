@@ -1,0 +1,97 @@
+//! Offline stand-in for the PJRT runtime (built when the `xla-pjrt`
+//! feature is off). Carries the full `Runtime` surface so call sites
+//! compile unchanged, but [`Runtime::load`] always fails: without the
+//! `xla` crate there is nothing to execute artifacts on, and the
+//! coordinator falls back to the rust-native PGD solver.
+
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+
+use crate::optimizer::{ClusterProblem, ClusterSolution};
+use crate::power::{PwlModel, K_SEGMENTS};
+use crate::timebase::HOURS_PER_DAY;
+use crate::util::error::Result;
+
+use super::Manifest;
+
+/// A compiled artifact set plus its PJRT client (stub: never constructed).
+pub struct Runtime {
+    pub manifest: Manifest,
+    /// Running count of artifact executions (metrics).
+    pub solver_calls: Cell<u64>,
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from `dir`. In the offline build the
+    /// manifest is still validated (so misconfiguration surfaces early),
+    /// but execution is unavailable and this always returns an error.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        crate::ensure!(
+            manifest.h == HOURS_PER_DAY && manifest.k == K_SEGMENTS,
+            "artifact block shape {}x{} incompatible with runtime ({}x{})",
+            manifest.h,
+            manifest.k,
+            HOURS_PER_DAY,
+            K_SEGMENTS
+        );
+        crate::bail!(
+            "PJRT execution unavailable: this binary was built without the \
+             `xla-pjrt` feature (offline build); using the native solver"
+        );
+    }
+
+    /// Try the conventional artifact directory; None if artifacts missing
+    /// or (in this build) unexecutable.
+    pub fn load_default(dir: &str) -> Option<Runtime> {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            match Runtime::load(&p) {
+                Ok(r) => Some(r),
+                Err(e) => {
+                    eprintln!("warning: artifacts unusable ({e:#}); using native solver");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        "stub(no-xla)".to_string()
+    }
+
+    /// Solve a batch of up to `c_pad` cluster problems on the artifact.
+    pub fn solve_block(
+        &self,
+        problems: &[ClusterProblem],
+        _lambda_e: f64,
+    ) -> Result<Vec<ClusterSolution>> {
+        crate::ensure!(problems.len() <= self.manifest.c_pad, "block too large");
+        crate::bail!("PJRT execution unavailable in this build (no `xla-pjrt` feature)");
+    }
+
+    /// Solve any number of problems, tiling across `c_pad` blocks.
+    pub fn solve(
+        &self,
+        problems: &[ClusterProblem],
+        lambda_e: f64,
+    ) -> Result<Vec<ClusterSolution>> {
+        let mut out = Vec::with_capacity(problems.len());
+        for chunk in problems.chunks(self.manifest.c_pad.max(1)) {
+            out.extend(self.solve_block(chunk, lambda_e)?);
+        }
+        Ok(out)
+    }
+
+    /// Batched power-model evaluation on the artifact.
+    pub fn power_eval(
+        &self,
+        usage: &[[f64; HOURS_PER_DAY]],
+        models: &[PwlModel],
+    ) -> Result<Vec<[f64; HOURS_PER_DAY]>> {
+        crate::ensure!(usage.len() == models.len());
+        crate::bail!("PJRT execution unavailable in this build (no `xla-pjrt` feature)");
+    }
+}

@@ -1,0 +1,258 @@
+//! Matrix expansion: turn a declarative [`SweepMatrix`] into concrete,
+//! independently-runnable [`SweepCell`]s with deterministic per-cell
+//! seeds.
+//!
+//! Seeds are derived from the cell's *axis values* (via a stable string
+//! key), not from its position in the expansion, so adding a grid or
+//! reordering an axis never perturbs the results of pre-existing cells —
+//! sweeps stay comparable across PRs.
+
+use crate::config::{CampusConfig, GridArchetype, ScenarioConfig, SweepMatrix};
+use crate::util::error::Result;
+use crate::util::rng::splitmix64;
+
+/// Solver backend choice for one cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Rust-native projected gradient (the artifact's f64 mirror).
+    Native,
+    /// Greedy carbon-ordered waterfill (the academic-prior baseline).
+    Greedy,
+    /// AOT JAX/Pallas artifact via PJRT when loadable; falls back to
+    /// native in the offline build.
+    Artifact,
+}
+
+impl SolverChoice {
+    pub fn parse(s: &str) -> Option<SolverChoice> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "pgd" => Some(SolverChoice::Native),
+            "greedy" => Some(SolverChoice::Greedy),
+            "artifact" | "pjrt" => Some(SolverChoice::Artifact),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverChoice::Native => "native",
+            SolverChoice::Greedy => "greedy",
+            SolverChoice::Artifact => "artifact",
+        }
+    }
+}
+
+/// Map a region-style grid-mix preset code to a grid archetype. The four
+/// named presets mirror the canonical regions of the temporal-shifting
+/// literature ("Let's Wait Awhile", Wiesner et al.): nuclear-dominated
+/// France, California's solar duck curve, Germany's wind volatility, and
+/// Poland's coal baseload. Raw `GridArchetype` names are also accepted,
+/// so a matrix can reference any portfolio directly.
+pub fn grid_preset(code: &str) -> Option<GridArchetype> {
+    match code.to_ascii_uppercase().as_str() {
+        "FR" => Some(GridArchetype::LowCarbonBase),
+        "CA" => Some(GridArchetype::SolarHeavy),
+        "DE" => Some(GridArchetype::WindHeavy),
+        "PL" => Some(GridArchetype::FossilPeaker),
+        "MIX" | "GLOBAL" => Some(GridArchetype::Mixed),
+        _ => GridArchetype::parse(&code.to_ascii_lowercase()),
+    }
+}
+
+/// One expanded cell: a concrete scenario plus the axis values that
+/// produced it.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in the expansion (row id in reports).
+    pub index: usize,
+    /// Stable human-readable key, e.g. `"PL f4 x0.5 native sp-off"`
+    /// (the flex share is printed at full precision, so distinct axis
+    /// values always yield distinct labels).
+    pub label: String,
+    pub grid_code: String,
+    pub fleet_size: usize,
+    pub flex_share: f64,
+    pub solver: SolverChoice,
+    pub spatial: bool,
+    /// Per-cell seed, derived from the *physical* scenario axes only
+    /// (grid, fleet size, flex share — not solver or spatial, and not the
+    /// cell's position): cells that differ only in solver backend or
+    /// spatial shifting simulate the exact same workload and weather, so
+    /// comparing them compares the policies, not the random draw.
+    pub seed: u64,
+    pub cfg: ScenarioConfig,
+}
+
+/// Derive a well-separated seed from the base seed and the physical
+/// scenario key (exact flex bits — no decimal rounding, no collisions).
+fn cell_seed(base: u64, grid_code: &str, fleet_size: usize, flex_share: f64) -> u64 {
+    let mut h = grid_code
+        .to_ascii_uppercase()
+        .bytes()
+        .fold(0xC1C5u64, |a, b| splitmix64(a ^ b as u64));
+    h = splitmix64(h ^ fleet_size as u64);
+    h = splitmix64(h ^ flex_share.to_bits());
+    splitmix64(base ^ h)
+}
+
+/// Expand the matrix into cells (cartesian product, fixed axis order:
+/// grids, fleet sizes, flex shares, solvers, spatial).
+pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
+    matrix.validate()?;
+    let mut cells = Vec::with_capacity(matrix.n_cells());
+    for grid_code in &matrix.grids {
+        let grid = grid_preset(grid_code)
+            .ok_or_else(|| crate::err!("unknown grid preset {grid_code:?}"))?;
+        for &fleet_size in &matrix.fleet_sizes {
+            for &flex_share in &matrix.flex_shares {
+                for solver_name in &matrix.solvers {
+                    let solver = SolverChoice::parse(solver_name)
+                        .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
+                    for &spatial in &matrix.spatial {
+                        let label = format!(
+                            "{} f{} x{} {} sp-{}",
+                            grid_code.to_ascii_uppercase(),
+                            fleet_size,
+                            flex_share,
+                            solver.name(),
+                            if spatial { "on" } else { "off" }
+                        );
+                        let seed =
+                            cell_seed(matrix.seed, grid_code, fleet_size, flex_share);
+                        let mut cfg = ScenarioConfig {
+                            seed,
+                            campuses: vec![CampusConfig {
+                                name: format!("sweep-{}", grid_code.to_ascii_lowercase()),
+                                grid,
+                                clusters: fleet_size,
+                                contract_limit_kw: f64::INFINITY,
+                                // flex_share of clusters are archetype X
+                                // (large flexible share); the rest are Z.
+                                archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
+                            }],
+                            ..ScenarioConfig::default()
+                        };
+                        // Sweeps run many scenarios: trimmed solver budget
+                        // (quality plateaus well before 400 iterations —
+                        // see the optimizer_hotpath ablation) and no
+                        // artifact probing unless the cell asks for it.
+                        cfg.optimizer.iters = 200;
+                        cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
+                        cells.push(SweepCell {
+                            index: cells.len(),
+                            label,
+                            grid_code: grid_code.to_ascii_uppercase(),
+                            fleet_size,
+                            flex_share,
+                            solver,
+                            spatial,
+                            seed,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_regions_and_raw_names() {
+        assert_eq!(grid_preset("FR"), Some(GridArchetype::LowCarbonBase));
+        assert_eq!(grid_preset("ca"), Some(GridArchetype::SolarHeavy));
+        assert_eq!(grid_preset("DE"), Some(GridArchetype::WindHeavy));
+        assert_eq!(grid_preset("PL"), Some(GridArchetype::FossilPeaker));
+        assert_eq!(grid_preset("mix"), Some(GridArchetype::Mixed));
+        assert_eq!(grid_preset("wind_heavy"), Some(GridArchetype::WindHeavy));
+        assert_eq!(grid_preset("atlantis"), None);
+    }
+
+    #[test]
+    fn expansion_is_cartesian_and_deterministic() {
+        let m = SweepMatrix::default();
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), m.n_cells());
+        let again = expand(&m).unwrap();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.seed, b.seed);
+        }
+        // labels are pairwise distinct; seeds follow the *physical*
+        // scenario: equal iff (grid, fleet, flex) agree
+        for i in 0..cells.len() {
+            for j in i + 1..cells.len() {
+                assert_ne!(cells[i].label, cells[j].label);
+                let same_physical = cells[i].grid_code == cells[j].grid_code
+                    && cells[i].fleet_size == cells[j].fleet_size
+                    && cells[i].flex_share == cells[j].flex_share;
+                assert_eq!(cells[i].seed == cells[j].seed, same_physical);
+            }
+        }
+    }
+
+    #[test]
+    fn solver_variants_share_the_workload_seed() {
+        // comparing solvers must compare policies on the SAME random draw
+        let m = SweepMatrix::default(); // native + greedy on each grid
+        let cells = expand(&m).unwrap();
+        for pair in cells.chunks(2) {
+            assert_eq!(pair[0].grid_code, pair[1].grid_code);
+            assert_ne!(pair[0].solver, pair[1].solver);
+            assert_eq!(pair[0].seed, pair[1].seed);
+            assert_eq!(pair[0].cfg.seed, pair[1].cfg.seed);
+        }
+    }
+
+    #[test]
+    fn close_flex_shares_do_not_collide() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        m.solvers = vec!["native".into()];
+        m.flex_shares = vec![0.121, 0.124]; // both would print as 0.12 at 2dp
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_ne!(cells[0].label, cells[1].label);
+        assert_ne!(cells[0].seed, cells[1].seed);
+    }
+
+    #[test]
+    fn seeds_are_position_independent() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        let only_pl = expand(&m).unwrap();
+        m.grids = vec!["FR".into(), "PL".into()];
+        let both = expand(&m).unwrap();
+        // the PL cells keep their seeds even though their indices moved
+        for cell in &only_pl {
+            let twin = both.iter().find(|c| c.label == cell.label).unwrap();
+            assert_eq!(twin.seed, cell.seed);
+            assert_eq!(twin.cfg.seed, cell.cfg.seed);
+        }
+    }
+
+    #[test]
+    fn cell_configs_are_valid_scenarios() {
+        let mut m = SweepMatrix::default();
+        m.flex_shares = vec![0.0, 0.5, 1.0];
+        m.spatial = vec![false, true];
+        for cell in expand(&m).unwrap() {
+            cell.cfg.validate().unwrap();
+            assert_eq!(cell.cfg.total_clusters(), cell.fleet_size);
+        }
+    }
+
+    #[test]
+    fn unknown_axis_values_are_rejected() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["atlantis".into()];
+        assert!(expand(&m).is_err());
+        let mut m2 = SweepMatrix::default();
+        m2.solvers = vec!["quantum".into()];
+        assert!(expand(&m2).is_err());
+    }
+}

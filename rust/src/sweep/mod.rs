@@ -1,0 +1,213 @@
+//! Parallel scenario-sweep engine.
+//!
+//! The paper's value claim rests on running the VCC pipeline across a
+//! *fleet* of heterogeneous clusters and grid mixes, and the temporal-
+//! shifting literature shows carbon savings swing wildly with region,
+//! flexibility share and deadline. This subsystem turns the repo from a
+//! one-scenario demo into a many-scenario harness:
+//!
+//! 1. a declarative [`SweepMatrix`](crate::config::SweepMatrix) names the
+//!    axes (grid-mix presets à la FR/CA/DE/PL, fleet size, flexible-demand
+//!    share, solver backend, spatial shifting on/off);
+//! 2. [`matrix::expand`] takes the cartesian product into [`SweepCell`]s
+//!    with deterministic per-cell seeds (derived from axis values, not
+//!    position);
+//! 3. [`run_sweep`] fans the cells out over `util::threadpool` — one
+//!    simulation loop per worker, clusters already parallel inside — with
+//!    a shaped run per cell plus one shared unshaped baseline per
+//!    physical scenario (solver/spatial variants reuse it);
+//! 4. the per-cell [`DaySummary`](crate::coordinator::DaySummary) streams
+//!    are aggregated into a cross-scenario [`SweepReport`] (carbon saved
+//!    vs baseline, peak shift, SLO health) emitted as JSON + ASCII table.
+//!
+//! Every metric is a pure function of the matrix: rerunning a sweep — with
+//! any worker count — reproduces the report byte-for-byte.
+
+pub mod matrix;
+pub mod report;
+
+pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
+pub use report::{CellReport, SweepReport};
+
+use crate::config::SweepMatrix;
+use crate::coordinator::{SimOptions, Simulation, SolverBackend, WindowAggregate};
+use crate::util::error::Result;
+use crate::util::threadpool;
+
+/// Movable fraction used by cells with the spatial axis on (paper §V).
+pub const SPATIAL_MOVABLE_FRACTION: f64 = 0.3;
+
+/// Run the whole matrix: `measure_days` measured days per cell after the
+/// matrix's warmup, fanned out over at most `threads` workers.
+///
+/// Cells that differ only in solver backend or spatial shifting share a
+/// seed (same physical scenario), so their common unshaped baseline is
+/// simulated once and shared rather than recomputed per cell.
+pub fn run_sweep(matrix: &SweepMatrix, measure_days: usize, threads: usize) -> Result<SweepReport> {
+    crate::ensure!(measure_days > 0, "sweep needs at least one measured day");
+    let cells = expand(matrix)?;
+    let threads = threads.max(1);
+    let warmup = matrix.warmup_days;
+    // One scenario per worker; the per-cluster fan-out inside each
+    // simulation gets the leftover parallelism — sized per pass, since
+    // the baseline pass has fewer tasks than the shaped pass — so a
+    // small matrix on a big machine still fills the cores.
+    let inner_for = |tasks: usize| (threads / tasks.min(threads)).max(1);
+
+    // Distinct physical scenarios (by per-cell seed) -> one baseline each.
+    let mut uniq: Vec<usize> = Vec::new(); // representative cell index
+    let mut base_idx: Vec<usize> = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        match uniq.iter().position(|&u| cells[u].seed == cell.seed) {
+            Some(p) => base_idx.push(p),
+            None => {
+                base_idx.push(uniq.len());
+                uniq.push(cell.index);
+            }
+        }
+    }
+    let inner = inner_for(uniq.len());
+    let baselines: Vec<WindowAggregate> = threadpool::parallel_map(uniq.len(), threads, |k| {
+        baseline_aggregate(&cells[uniq[k]], warmup, measure_days, inner)
+    });
+    let inner = inner_for(cells.len());
+    let shaped: Vec<ShapedOutcome> = threadpool::parallel_map(cells.len(), threads, |i| {
+        shaped_outcome(&cells[i], warmup, measure_days, inner)
+    });
+
+    let reports = cells
+        .iter()
+        .zip(&shaped)
+        .map(|(cell, s)| make_report(cell, s, &baselines[base_idx[cell.index]]))
+        .collect();
+    Ok(SweepReport::new(warmup, measure_days, reports))
+}
+
+/// Shaped-run results a [`CellReport`] needs beyond the window aggregate.
+struct ShapedOutcome {
+    agg: WindowAggregate,
+    slo_pauses: usize,
+    spatial_moved_gcuh: f64,
+}
+
+/// Run one cell's shaped simulation over warmup + measurement.
+fn shaped_outcome(
+    cell: &SweepCell,
+    warmup_days: usize,
+    measure_days: usize,
+    inner_threads: usize,
+) -> ShapedOutcome {
+    let days = warmup_days + measure_days;
+    let backend = match cell.solver {
+        SolverChoice::Native => SolverBackend::Native,
+        SolverChoice::Greedy => SolverBackend::GreedyBaseline,
+        SolverChoice::Artifact => SolverBackend::Artifact,
+    };
+    let mut sim = Simulation::with_options(
+        cell.cfg.clone(),
+        SimOptions {
+            backend: Some(backend),
+            threads: Some(inner_threads),
+            shaping_disabled: false,
+            spatial_movable_fraction: cell.spatial.then_some(SPATIAL_MOVABLE_FRACTION),
+        },
+    );
+    sim.run_days(days);
+    ShapedOutcome {
+        agg: sim.metrics.window_aggregate(warmup_days..days),
+        slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
+        spatial_moved_gcuh: sim.spatial_totals.0,
+    }
+}
+
+/// Run the unshaped baseline for a physical scenario (solver/spatial
+/// variants share this — the solver is never consulted when shaping is
+/// off, so one native run represents them all).
+fn baseline_aggregate(
+    cell: &SweepCell,
+    warmup_days: usize,
+    measure_days: usize,
+    inner_threads: usize,
+) -> WindowAggregate {
+    let days = warmup_days + measure_days;
+    let mut sim = Simulation::with_options(
+        cell.cfg.clone(),
+        SimOptions {
+            backend: Some(SolverBackend::Native),
+            threads: Some(inner_threads),
+            shaping_disabled: true,
+            spatial_movable_fraction: None,
+        },
+    );
+    sim.run_days(days);
+    sim.metrics.window_aggregate(warmup_days..days)
+}
+
+fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> CellReport {
+    let pct = |base: f64, now: f64| {
+        if base.abs() > 1e-9 {
+            100.0 * (base - now) / base
+        } else {
+            0.0
+        }
+    };
+    CellReport {
+        index: cell.index,
+        label: cell.label.clone(),
+        grid: cell.grid_code.clone(),
+        fleet_size: cell.fleet_size,
+        flex_share: cell.flex_share,
+        solver: cell.solver.name().to_string(),
+        spatial: cell.spatial,
+        seed: cell.seed,
+        carbon_baseline_kg: b.carbon_kg,
+        carbon_shaped_kg: s.agg.carbon_kg,
+        carbon_saved_pct: pct(b.carbon_kg, s.agg.carbon_kg),
+        peak_baseline_kw: b.mean_daily_peak_kw,
+        peak_shaped_kw: s.agg.mean_daily_peak_kw,
+        peak_shift_pct: pct(b.mean_daily_peak_kw, s.agg.mean_daily_peak_kw),
+        slo_pauses: s.slo_pauses,
+        flex_completion: s.agg.flex_completion(),
+        shaped_fraction: s.agg.shaped_fraction(),
+        spatial_moved_gcuh: s.spatial_moved_gcuh,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smallest meaningful sweep: shaping must actually engage after
+    /// warmup, and the report must carry one row per cell.
+    #[test]
+    fn tiny_sweep_runs_and_reports() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            solvers: vec!["native".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let rep = run_sweep(&m, 4, 2).unwrap();
+        assert_eq!(rep.cells.len(), 1);
+        let c = &rep.cells[0];
+        assert_eq!(c.grid, "PL");
+        assert!(c.carbon_baseline_kg > 0.0);
+        assert!(c.carbon_shaped_kg > 0.0);
+        assert!(
+            c.shaped_fraction > 0.0,
+            "post-warmup window must contain shaped cluster-days"
+        );
+        assert!(c.flex_completion > 0.5, "flex completion {}", c.flex_completion);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("cics-sweep-v1"));
+        assert!(rep.ascii_table().contains("PL f2 x1 native sp-off"));
+    }
+
+    #[test]
+    fn rejects_zero_days() {
+        assert!(run_sweep(&SweepMatrix::default(), 0, 4).is_err());
+    }
+}

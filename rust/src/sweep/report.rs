@@ -1,0 +1,198 @@
+//! Cross-scenario comparison report: per-cell metrics (carbon saved vs
+//! the unshaped baseline, peak shift, SLO health) aggregated into a
+//! deterministic JSON document and an ASCII table.
+//!
+//! Determinism contract: every number here is a pure function of the
+//! matrix (per-cell seeds), never of wall clock, thread count or
+//! execution order — `SweepReport::to_json().to_string()` must be
+//! byte-identical across reruns (asserted by `tests/sweep_determinism`).
+
+use crate::util::json::Json;
+
+/// Measured outcome of one sweep cell (shaped run vs unshaped baseline
+/// over the same seed and measurement window).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellReport {
+    pub index: usize,
+    pub label: String,
+    pub grid: String,
+    pub fleet_size: usize,
+    pub flex_share: f64,
+    pub solver: String,
+    pub spatial: bool,
+    pub seed: u64,
+    /// Fleet carbon over the measurement window (kg CO2e).
+    pub carbon_baseline_kg: f64,
+    pub carbon_shaped_kg: f64,
+    /// 100 * (baseline - shaped) / baseline.
+    pub carbon_saved_pct: f64,
+    /// Mean daily fleet peak power over the window (kW).
+    pub peak_baseline_kw: f64,
+    pub peak_shaped_kw: f64,
+    /// 100 * (baseline - shaped) / baseline (positive = peak reduced).
+    pub peak_shift_pct: f64,
+    /// SLO guard pauses triggered across the whole shaped run.
+    pub slo_pauses: usize,
+    /// Completed / submitted flexible work in the window (shaped run).
+    pub flex_completion: f64,
+    /// Shaped cluster-days / all cluster-days in the window.
+    pub shaped_fraction: f64,
+    /// Spatially moved flexible work (GCU-h; 0 with spatial off).
+    pub spatial_moved_gcuh: f64,
+}
+
+/// Round to `digits` decimals — keeps the emitted JSON tidy without
+/// affecting determinism (inputs are already bit-identical across runs).
+fn round(x: f64, digits: i32) -> f64 {
+    let p = 10f64.powi(digits);
+    (x * p).round() / p
+}
+
+impl CellReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("label", Json::Str(self.label.clone())),
+            ("grid", Json::Str(self.grid.clone())),
+            ("fleet_size", Json::Num(self.fleet_size as f64)),
+            ("flex_share", Json::Num(round(self.flex_share, 4))),
+            ("solver", Json::Str(self.solver.clone())),
+            ("spatial", Json::Bool(self.spatial)),
+            // u64 seeds exceed f64's 2^53 integer range; emit as a string
+            // so the recorded seed reproduces the cell exactly.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("carbon_baseline_kg", Json::Num(round(self.carbon_baseline_kg, 3))),
+            ("carbon_shaped_kg", Json::Num(round(self.carbon_shaped_kg, 3))),
+            ("carbon_saved_pct", Json::Num(round(self.carbon_saved_pct, 4))),
+            ("peak_baseline_kw", Json::Num(round(self.peak_baseline_kw, 3))),
+            ("peak_shaped_kw", Json::Num(round(self.peak_shaped_kw, 3))),
+            ("peak_shift_pct", Json::Num(round(self.peak_shift_pct, 4))),
+            ("slo_pauses", Json::Num(self.slo_pauses as f64)),
+            ("flex_completion", Json::Num(round(self.flex_completion, 6))),
+            ("shaped_fraction", Json::Num(round(self.shaped_fraction, 6))),
+            ("spatial_moved_gcuh", Json::Num(round(self.spatial_moved_gcuh, 3))),
+        ])
+    }
+}
+
+/// The full cross-scenario report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    /// Warmup days before the measurement window.
+    pub warmup_days: usize,
+    /// Measured days per cell.
+    pub measure_days: usize,
+    pub cells: Vec<CellReport>,
+}
+
+impl SweepReport {
+    pub fn new(warmup_days: usize, measure_days: usize, cells: Vec<CellReport>) -> SweepReport {
+        SweepReport { warmup_days, measure_days, cells }
+    }
+
+    /// Cell with the largest carbon saving.
+    pub fn best_cell(&self) -> Option<&CellReport> {
+        self.cells
+            .iter()
+            .max_by(|a, b| a.carbon_saved_pct.total_cmp(&b.carbon_saved_pct))
+    }
+
+    /// Deterministic JSON document (BTreeMap-backed objects: key order is
+    /// sorted; cell order is the expansion order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("cics-sweep-v1".into())),
+            ("warmup_days", Json::Num(self.warmup_days as f64)),
+            ("measure_days", Json::Num(self.measure_days as f64)),
+            ("cells", Json::Arr(self.cells.iter().map(CellReport::to_json).collect())),
+        ])
+    }
+
+    /// Fixed-width ASCII comparison table, one row per cell.
+    pub fn ascii_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>9} {:>12} {:>12} {:>8} {:>5} {:>7} {:>7}\n",
+            "cell", "saved%", "kg base", "kg shaped", "peak%", "slo", "flex%", "shaped%"
+        ));
+        out.push_str(&format!("{}\n", "-".repeat(95)));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<28} {:>8.2}% {:>12.0} {:>12.0} {:>7.2}% {:>5} {:>6.1}% {:>6.1}%\n",
+                c.label,
+                c.carbon_saved_pct,
+                c.carbon_baseline_kg,
+                c.carbon_shaped_kg,
+                c.peak_shift_pct,
+                c.slo_pauses,
+                100.0 * c.flex_completion,
+                100.0 * c.shaped_fraction,
+            ));
+        }
+        if let Some(best) = self.best_cell() {
+            out.push_str(&format!(
+                "best cell: {} ({:.2}% carbon saved over {} measured days)\n",
+                best.label, best.carbon_saved_pct, self.measure_days
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_cell(i: usize, saved: f64) -> CellReport {
+        CellReport {
+            index: i,
+            label: format!("PL f4 x0.50 native sp-off #{i}"),
+            grid: "PL".into(),
+            fleet_size: 4,
+            flex_share: 0.5,
+            solver: "native".into(),
+            spatial: false,
+            seed: 42 + i as u64,
+            carbon_baseline_kg: 1000.0,
+            carbon_shaped_kg: 1000.0 - 10.0 * saved,
+            carbon_saved_pct: saved,
+            peak_baseline_kw: 500.0,
+            peak_shaped_kw: 490.0,
+            peak_shift_pct: 2.0,
+            slo_pauses: 0,
+            flex_completion: 0.97,
+            shaped_fraction: 0.8,
+            spatial_moved_gcuh: 0.0,
+        }
+    }
+
+    #[test]
+    fn json_is_stable_and_reparses() {
+        let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.5), toy_cell(1, 3.25)]);
+        let s1 = rep.to_json().to_string();
+        let s2 = rep.to_json().to_string();
+        assert_eq!(s1, s2);
+        let parsed = Json::parse(&s1).unwrap();
+        assert_eq!(parsed.str_or("schema", ""), "cics-sweep-v1");
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[1].f64_or("carbon_saved_pct", 0.0), 3.25);
+    }
+
+    #[test]
+    fn table_lists_every_cell_and_best() {
+        let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.5), toy_cell(1, 3.25)]);
+        let t = rep.ascii_table();
+        assert!(t.contains("#0") && t.contains("#1"));
+        assert!(t.contains("best cell"));
+        assert!(t.contains("3.25% carbon saved"));
+        assert_eq!(rep.best_cell().unwrap().index, 1);
+    }
+
+    #[test]
+    fn rounding_is_exact_on_round_numbers() {
+        assert_eq!(round(1.23456789, 4), 1.2346);
+        assert_eq!(round(-0.5, 3), -0.5);
+        assert_eq!(round(2.0, 6), 2.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal error substrate — the offline build has no `anyhow`/`thiserror`
+//! (DESIGN.md §Substitutions), so CICS carries its own single-message error
+//! type plus the small macro surface the pipelines actually use
+//! ([`crate::ensure!`], [`crate::bail!`], [`crate::err!`], [`Context`]).
+//!
+//! The type is deliberately a flat message (no source chain): every error
+//! in this crate is terminal — printed to the operator or asserted in a
+//! test — and context is folded into the message at the point of wrapping.
+
+use std::fmt;
+
+/// A human-readable error message.
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (drop-in for the former `anyhow::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Prefix the message with context, `"{context}: {original}"`.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // Debug mirrors Display so `.unwrap()` panics and `{e:?}` stay readable.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(format!("io error: {e}"))
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+/// Attach context to any `Result<_, E: Display>`, converting it into the
+/// crate error type (drop-in for `anyhow::Context`).
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad value {v}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an error: `bail!("bad value {v}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)+)).into())
+    };
+}
+
+/// Return early with an error unless the condition holds
+/// (drop-in for `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            ))
+            .into());
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_positive(x: f64) -> Result<f64> {
+        crate::ensure!(x > 0.0, "x must be positive, got {x}");
+        Ok(x.sqrt())
+    }
+
+    fn always_bails() -> Result<()> {
+        crate::bail!("nope");
+    }
+
+    fn bare_ensure(ok: bool) -> Result<()> {
+        crate::ensure!(ok);
+        Ok(())
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert!(needs_positive(4.0).is_ok());
+        let e = needs_positive(-1.0).unwrap_err();
+        assert_eq!(e.to_string(), "x must be positive, got -1");
+        assert_eq!(always_bails().unwrap_err().to_string(), "nope");
+        assert!(bare_ensure(true).is_ok());
+        assert!(bare_ensure(false).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest:"));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn from_io_and_display() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(format!("{e}").contains("boom"));
+        assert!(format!("{e:?}").contains("boom"));
+        let m = err!("v = {}", 3);
+        assert_eq!(m.to_string(), "v = 3");
+    }
+}

@@ -1,9 +1,18 @@
 //! A small fixed-size thread pool with scoped fan-out.
 //!
 //! The coordinator retrains power models and forecasting models for every
-//! cluster daily "in a parallelized manner" (paper §III); this pool is the
-//! substrate for that fan-out (no tokio in the offline environment — and
-//! the workload is CPU-bound anyway).
+//! cluster daily "in a parallelized manner" (paper §III), and the sweep
+//! engine fans whole scenarios out over [`parallel_map`]; this module is
+//! the substrate for those fan-outs (no tokio in the offline environment
+//! — and the workload is CPU-bound anyway).
+//!
+//! Panic policy: the two primitives differ deliberately. A
+//! [`ThreadPool`] job that panics is contained with `catch_unwind` — the
+//! worker logs and moves on, so a poisoned job can neither kill a worker
+//! (which would strand queued jobs, deadlocking a 1-worker pool) nor
+//! take the process down. [`parallel_map`] instead *propagates* a
+//! panicking item out of its scope: its callers (daily pipelines, sweep
+//! cells) want a loud failure, not a silently incomplete result vector.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -28,7 +37,18 @@ impl ThreadPool {
                 thread::spawn(move || loop {
                     let job = rx.lock().unwrap().recv();
                     match job {
-                        Ok(job) => job(),
+                        // A panicking job must not kill the worker: with a
+                        // dead worker the queue keeps accepting jobs that
+                        // nothing will ever run (a 1-worker pool would
+                        // stall outright). The panic is contained here and
+                        // the worker moves on to the next job; the payload
+                        // is dropped after logging.
+                        Ok(job) => {
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            if r.is_err() {
+                                eprintln!("threadpool: job panicked; worker continues");
+                            }
+                        }
                         Err(_) => break,
                     }
                 })
@@ -100,6 +120,31 @@ mod tests {
         }
         drop(pool); // joins
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_or_starve_the_pool() {
+        // Even on a 1-worker pool — the worst case — a panicking job must
+        // leave the worker alive: every later job still runs, and drop()
+        // still joins cleanly instead of hanging on an abandoned queue.
+        for workers in [1, 4] {
+            let pool = ThreadPool::new(workers);
+            let counter = Arc::new(AtomicUsize::new(0));
+            pool.execute(|| panic!("injected failure"));
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.execute(|| panic!("second injected failure"));
+            drop(pool); // joins; must not deadlock
+            assert_eq!(
+                counter.load(Ordering::SeqCst),
+                50,
+                "all non-panicking jobs must complete ({workers} workers)"
+            );
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! End-to-end integration: the full system — workload → scheduler →
-//! telemetry → pipelines → AOT artifact solve (PJRT) → VCC → scheduler —
-//! over multiple simulated weeks. Requires `make artifacts`.
+//! telemetry → pipelines → day-ahead solve → VCC → scheduler — over
+//! multiple simulated weeks. Uses the AOT artifact via PJRT when present
+//! (`make artifacts` + the `xla-pjrt` feature); otherwise the rust-native
+//! PGD mirror, which is the same algorithm in f64.
 
 use cics::config::{GridArchetype, ScenarioConfig};
-use cics::coordinator::{Simulation, SolverBackend};
+use cics::coordinator::Simulation;
 use cics::util::stats;
 
 fn cfg(clusters: usize) -> ScenarioConfig {
@@ -16,13 +18,8 @@ fn cfg(clusters: usize) -> ScenarioConfig {
 }
 
 #[test]
-fn full_stack_with_artifact_shapes_load_and_meets_slo() {
+fn full_stack_shapes_load_and_meets_slo() {
     let mut sim = Simulation::new(cfg(4));
-    assert_eq!(
-        sim.backend,
-        SolverBackend::Artifact,
-        "artifacts must be present for the end-to-end test (make artifacts)"
-    );
     sim.run_days(38);
 
     // 1. shaping actually happened after warmup
@@ -56,8 +53,10 @@ fn full_stack_with_artifact_shapes_load_and_meets_slo() {
         );
     }
 
-    // 4. the artifact solver was exercised
-    assert!(sim.runtime.as_ref().unwrap().solver_calls.get() > 10);
+    // 4. when artifacts are loaded, the artifact solver was exercised
+    if let Some(rt) = &sim.runtime {
+        assert!(rt.solver_calls.get() > 10);
+    }
 }
 
 #[test]

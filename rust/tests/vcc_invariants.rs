@@ -1,0 +1,153 @@
+//! Property tests for the paper's core VCC invariants (§II-C safety,
+//! §III-C problem structure): for any shapeable problem and any feasible
+//! deviation profile,
+//!
+//! 1. **daily capacity is preserved** — the curve's daily total carries at
+//!    least the forecast inflexible reservations *plus* the full
+//!    risk-aware flexible demand tau (sum of hourly limits >= daily
+//!    flexible demand on top of the inflexible floor), and
+//! 2. **hourly limits never drop below the unshapeable floor** — forecast
+//!    inflexible usage at its reservation ratio (clamped only by machine
+//!    capacity), because delta >= -1 can displace flexible work but never
+//!    inflexible.
+//!
+//! Checked for the PGD solver's outputs and for arbitrary projected
+//! profiles, plus end-to-end on the coordinator's distributed curves.
+
+use cics::forecast::DayAheadForecast;
+use cics::optimizer::{assemble, pgd, ClusterProblem};
+use cics::power::PwlModel;
+use cics::timebase::HOURS_PER_DAY;
+use cics::util::prop;
+use cics::util::rng::Pcg;
+use cics::vcc::Vcc;
+
+/// A randomized shapeable cluster problem with per-hour ratio variation;
+/// None when the draw lands unshapeable.
+fn try_random_problem(seed: u64) -> Option<ClusterProblem> {
+    let mut rng = Pcg::new(seed, 99);
+    let cap = rng.uniform(3000.0, 9000.0);
+    let if_level = rng.uniform(0.25, 0.45);
+    let mut u_if = [0.0; HOURS_PER_DAY];
+    for (h, u) in u_if.iter_mut().enumerate() {
+        let x = (h as f64 - 15.0) / 24.0 * std::f64::consts::TAU;
+        *u = cap * if_level * (1.0 + rng.uniform(0.05, 0.2) * x.cos());
+    }
+    let mut eta = [0.0; HOURS_PER_DAY];
+    let peak_h = rng.uniform(10.0, 16.0);
+    for (h, e) in eta.iter_mut().enumerate() {
+        let x = (h as f64 - peak_h) / rng.uniform(3.0, 6.0);
+        *e = rng.uniform(0.2, 0.4) + rng.uniform(0.2, 0.5) * (-0.5 * x * x).exp();
+    }
+    let mut ratio = [1.2; HOURS_PER_DAY];
+    for r in ratio.iter_mut() {
+        *r = rng.uniform(1.05, 1.4);
+    }
+    let tau = cap * rng.uniform(0.1, 0.3) * 24.0;
+    let fc = DayAheadForecast {
+        cluster_id: 0,
+        day: 1,
+        u_if_hat: u_if,
+        tuf_hat: tau,
+        tr_hat: tau * 3.0,
+        ratio_hat: ratio,
+        u_if_upper: u_if.map(|u| u * 1.08),
+        mature: true,
+    };
+    assemble(
+        0,
+        &fc,
+        &eta,
+        tau,
+        PwlModel::linear_default(cap, cap * 0.1, cap * 0.28),
+        cap * 0.96,
+        cap,
+        0.25,
+        -1.0,
+        3.0,
+    )
+    .ok()
+}
+
+/// The two invariants for one (problem, delta) pair.
+fn check_vcc(p: &ClusterProblem, delta: &[f64; HOURS_PER_DAY]) -> bool {
+    let vcc = Vcc::from_deltas(0, 1, &p.u_if_hat, p.tau, delta, &p.ratio_hat, p.capacity_gcu);
+    // inflexible floor: VCC(h) >= min(U_IF_hat(h) * R_hat(h), capacity)
+    let floor_ok = (0..HOURS_PER_DAY).all(|h| {
+        let floor = (p.u_if_hat[h] * p.ratio_hat[h]).min(p.capacity_gcu);
+        vcc.hourly[h] >= floor - 1e-6
+    });
+    // daily capacity: inflexible reservations + the full flexible tau.
+    // Within the box bounds the machine-capacity clamp is provably
+    // inactive (that is exactly what `assemble`'s cap_mach bound encodes),
+    // so the total decomposes and R >= 1 gives the tau term.
+    let min_daily: f64 =
+        p.u_if_hat.iter().zip(p.ratio_hat.iter()).map(|(&u, &r)| u * r).sum();
+    let required = min_daily + p.tau;
+    let daily_ok = vcc.daily_total() >= required * (1.0 - 1e-6);
+    // and the cluster operating system's own safety gate agrees
+    let safety_ok = vcc.safety_check(p.capacity_gcu, min_daily).is_ok();
+    floor_ok && daily_ok && safety_ok
+}
+
+#[test]
+fn pgd_solutions_preserve_daily_capacity_and_hourly_floor() {
+    prop::for_all_cases(101, 24, |rng: &mut Pcg| rng.next_u64(), |&seed: &u64| {
+        let Some(p) = try_random_problem(seed) else { return true };
+        let sol = pgd::solve(&p, 10.0, 150);
+        assert!(p.feasible(&sol.delta, 1e-5));
+        check_vcc(&p, &sol.delta)
+    });
+}
+
+#[test]
+fn arbitrary_projected_profiles_preserve_the_invariants() {
+    // not just the solver's outputs: any profile inside
+    // {sum = 0} /\ [lo, ub] must yield a safe curve
+    prop::for_all_cases(202, 24, |rng: &mut Pcg| rng.next_u64(), |&seed: &u64| {
+        let Some(p) = try_random_problem(seed) else { return true };
+        let mut rng = Pcg::new(seed, 7);
+        let mut z = [0.0; HOURS_PER_DAY];
+        for v in z.iter_mut() {
+            *v = rng.uniform(-2.0, 4.0);
+        }
+        let delta = pgd::project_sum_zero_box(&z, &p.lo, &p.ub);
+        check_vcc(&p, &delta)
+    });
+}
+
+#[test]
+fn greedy_baseline_profiles_preserve_the_invariants() {
+    prop::for_all_cases(303, 16, |rng: &mut Pcg| rng.next_u64(), |&seed: &u64| {
+        let Some(p) = try_random_problem(seed) else { return true };
+        let sol = cics::optimizer::baselines::greedy_carbon(&p, &p.eta);
+        check_vcc(&p, &sol.delta)
+    });
+}
+
+#[test]
+fn coordinator_distributed_curves_pass_the_safety_gate() {
+    use cics::config::ScenarioConfig;
+    use cics::coordinator::Simulation;
+
+    let mut cfg = ScenarioConfig::default();
+    cfg.campuses[0].clusters = 3;
+    cfg.campuses[0].archetype_mix = (1.0, 0.0, 0.0);
+    cfg.optimizer.iters = 150;
+    cfg.optimizer.use_artifact = false;
+    let mut sim = Simulation::new(cfg);
+    sim.run_days(30);
+    let mut shaped_seen = 0;
+    for (cid, v) in sim.today_vccs.iter().enumerate() {
+        let v = v.as_ref().expect("planning cycle issues a curve per cluster");
+        let cap = sim.fleet.clusters[cid].capacity_gcu;
+        assert!(v.safety_check(cap, 0.0).is_ok(), "cluster {cid}");
+        if v.shaped {
+            shaped_seen += 1;
+        } else {
+            // the fallback is exactly the machine-capacity curve
+            assert!(v.hourly.iter().all(|&x| (x - cap).abs() < 1e-9));
+        }
+    }
+    assert!(shaped_seen > 0, "after 30 days some clusters must shape");
+}
