@@ -328,7 +328,11 @@ impl Default for SweepMatrix {
             fleet_sizes: vec![4],
             flex_shares: vec![0.5],
             solvers: vec!["native".into(), "greedy".into()],
-            spatial: vec![false],
+            // Both spatial variants by default: the §V extension is part
+            // of the paper's headline story, and the four policy variants
+            // per physical scenario all fork from one shared warmup
+            // checkpoint, so the larger default matrix costs little.
+            spatial: vec![false, true],
             warmup_days: 25,
         }
     }

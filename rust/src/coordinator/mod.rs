@@ -71,6 +71,45 @@ const RETAIN_DAYS: usize = 35;
 /// Trailing days used to train power models.
 const POWER_TRAIN_DAYS: usize = 14;
 
+/// Deep copy of every piece of mutable simulation state at a day
+/// boundary — the unit of the sweep engine's warmup checkpoint/fork
+/// optimization. Take it after `run_day`/`run_days` (so `today_vccs` and
+/// `day` are consistent) and [`Simulation::resume`] it any number of
+/// times: each resumed simulation reproduces the exact `DaySummary`
+/// stream an uninterrupted run would have produced. All randomness in
+/// the system is keyed by (seed, entity, day, tick), so there are no RNG
+/// stream positions to capture — determinism is carried entirely by the
+/// state copied here.
+///
+/// Variant knobs (solver backend, master shaping switch, spatial movable
+/// fraction, thread budget) are deliberately *not* part of the snapshot:
+/// they are re-applied per fork through the [`SimOptions`] handed to
+/// `resume`. That is what lets one unshaped warmup serve both the
+/// unshaped baseline and every shaped solver/spatial variant of a
+/// physical scenario. A `treatment` gate is not carried either — forks
+/// start untreated.
+#[derive(Clone)]
+pub struct SimSnapshot {
+    cfg: ScenarioConfig,
+    fleet: Fleet,
+    zones: Vec<GridZone>,
+    workloads: Vec<WorkloadModel>,
+    schedulers: Vec<ClusterScheduler>,
+    forecasters: Vec<LoadForecaster>,
+    slo_guard: SloGuard,
+    slo_states: Vec<SloState>,
+    store: TelemetryStore,
+    ape: ApeCollector,
+    carbon_fc: CarbonForecaster,
+    rollout: Rollout,
+    today_vccs: Vec<Option<Vcc>>,
+    spatial_scale: Vec<f64>,
+    spatial_totals: (f64, f64),
+    day: usize,
+    metrics: FleetMetrics,
+    last_unshapeable: Vec<(usize, Unshapeable)>,
+}
+
 pub struct Simulation {
     pub cfg: ScenarioConfig,
     pub fleet: Fleet,
@@ -183,6 +222,95 @@ impl Simulation {
             last_unshapeable: Vec::new(),
             threads,
             cfg,
+        }
+    }
+
+    /// Checkpoint the full mutable state — schedulers with carried-over
+    /// queues and running sets, forecaster histories, telemetry store,
+    /// SLO states, metrics, spatial bookkeeping — at the current day
+    /// boundary. See [`SimSnapshot`] for what is (and is not) captured.
+    pub fn snapshot(&self) -> SimSnapshot {
+        SimSnapshot {
+            cfg: self.cfg.clone(),
+            fleet: self.fleet.clone(),
+            zones: self.zones.clone(),
+            workloads: self.workloads.clone(),
+            schedulers: self.schedulers.clone(),
+            forecasters: self.forecasters.clone(),
+            slo_guard: self.slo_guard.clone(),
+            slo_states: self.slo_states.clone(),
+            store: self.store.clone(),
+            ape: self.ape.clone(),
+            carbon_fc: self.carbon_fc.clone(),
+            rollout: self.rollout.clone(),
+            today_vccs: self.today_vccs.clone(),
+            spatial_scale: self.spatial_scale.clone(),
+            spatial_totals: self.spatial_totals,
+            day: self.day,
+            metrics: self.metrics.clone(),
+            last_unshapeable: self.last_unshapeable.clone(),
+        }
+    }
+
+    /// Rebuild a live simulation from a snapshot, applying fresh variant
+    /// options (the fork half of the warmup checkpoint/fork engine).
+    /// Backend/runtime resolution mirrors [`Simulation::with_options`],
+    /// except an explicit `Some(Artifact)` request always probes the
+    /// artifact directory: the snapshot's config may come from a
+    /// representative cell that never asked for the artifact, while the
+    /// fork does.
+    pub fn resume(snap: SimSnapshot, opts: SimOptions) -> Simulation {
+        let runtime = match opts.backend {
+            Some(SolverBackend::Native) | Some(SolverBackend::GreedyBaseline) => None,
+            Some(SolverBackend::Artifact) => Runtime::load_default(&snap.cfg.artifact_dir),
+            None => {
+                if snap.cfg.optimizer.use_artifact {
+                    Runtime::load_default(&snap.cfg.artifact_dir)
+                } else {
+                    None
+                }
+            }
+        };
+        let backend = match opts.backend {
+            Some(SolverBackend::GreedyBaseline) => SolverBackend::GreedyBaseline,
+            Some(SolverBackend::Native) => SolverBackend::Native,
+            Some(SolverBackend::Artifact) | None => {
+                if runtime.is_some() {
+                    SolverBackend::Artifact
+                } else {
+                    SolverBackend::Native
+                }
+            }
+        };
+        let threads = opts
+            .threads
+            .unwrap_or_else(crate::util::threadpool::ThreadPool::default_size)
+            .max(1);
+        Simulation {
+            cfg: snap.cfg,
+            fleet: snap.fleet,
+            zones: snap.zones,
+            workloads: snap.workloads,
+            schedulers: snap.schedulers,
+            forecasters: snap.forecasters,
+            slo_guard: snap.slo_guard,
+            slo_states: snap.slo_states,
+            store: snap.store,
+            ape: snap.ape,
+            carbon_fc: snap.carbon_fc,
+            runtime,
+            rollout: snap.rollout,
+            backend,
+            today_vccs: snap.today_vccs,
+            treatment: None,
+            shaping_enabled: !opts.shaping_disabled,
+            spatial_movable_fraction: opts.spatial_movable_fraction,
+            spatial_scale: snap.spatial_scale,
+            spatial_totals: snap.spatial_totals,
+            day: snap.day,
+            metrics: snap.metrics,
+            last_unshapeable: snap.last_unshapeable,
+            threads,
         }
     }
 
@@ -611,6 +739,32 @@ mod tests {
         sim.run_days(30);
         let v0 = sim.today_vccs[0].as_ref().unwrap();
         assert!(!v0.shaped, "cluster 0 must stay untreated");
+    }
+
+    #[test]
+    fn snapshot_resume_matches_uninterrupted_run() {
+        let opts = |threads: usize| SimOptions {
+            backend: Some(SolverBackend::Native),
+            threads: Some(threads),
+            shaping_disabled: true,
+            spatial_movable_fraction: None,
+        };
+        let mut uninterrupted = Simulation::with_options(small_cfg(), opts(2));
+        uninterrupted.run_days(8);
+        let mut warm = Simulation::with_options(small_cfg(), opts(2));
+        warm.run_days(5);
+        // resume with a different thread budget: results must not care
+        let mut resumed = Simulation::resume(warm.snapshot(), opts(1));
+        resumed.run_days(3);
+        assert_eq!(uninterrupted.day, resumed.day);
+        assert_eq!(uninterrupted.today_vccs, resumed.today_vccs);
+        for cid in 0..uninterrupted.fleet.clusters.len() {
+            assert_eq!(
+                uninterrupted.metrics.all(cid),
+                resumed.metrics.all(cid),
+                "cluster {cid} summary stream diverged after resume"
+            );
+        }
     }
 
     #[test]

@@ -8,7 +8,12 @@ use crate::timebase::HOURS_PER_DAY;
 use crate::vcc::Vcc;
 
 /// Hourly-resolution summary of one cluster-day.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every field exactly (f64 equality, no tolerance):
+/// the warmup checkpoint/fork engine promises that a forked run's summary
+/// stream is *bit-identical* to an unforked run's, and the fork-
+/// equivalence test leans on this.
+#[derive(Clone, Debug, PartialEq)]
 pub struct DaySummary {
     pub cluster_id: usize,
     pub day: usize,

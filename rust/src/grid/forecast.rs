@@ -25,6 +25,7 @@ pub struct CarbonForecast {
 }
 
 /// Forecast provider for a set of zones (the "carbon fetching pipeline").
+#[derive(Clone, Debug)]
 pub struct CarbonForecaster {
     /// Per-hour dispatch-model error growth rate (per hour of horizon).
     pub horizon_growth: f64,

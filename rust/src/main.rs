@@ -9,6 +9,8 @@
 //!   report      regenerate figure CSVs/charts into reports/
 //!   sweep       expand a scenario matrix and run every cell in parallel,
 //!               emitting a cross-scenario JSON + ASCII report
+//!   bench       time the sweep's warmup checkpoint/fork path against the
+//!               no-share path and write machine-readable BENCH_sweep.json
 //!
 //! (The offline build has no clap; argument parsing is a small hand-rolled
 //! substrate — see DESIGN.md §Substitutions.)
@@ -351,6 +353,103 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    use cics::config::SweepMatrix;
+    use cics::sweep::{run_sweep_mode, WarmupSharing};
+    use cics::util::json::Json;
+
+    let mut m = match args.get("matrix") {
+        Some(path) => SweepMatrix::from_file(path)?,
+        None => SweepMatrix::default(),
+    };
+    if args.has("quick") {
+        // CI-sized matrix: one physical scenario, four variants — enough
+        // to exercise grouping, forking and both sharing modes fast.
+        m.grids = vec!["PL".into()];
+        m.fleet_sizes = vec![2];
+        m.flex_shares = vec![1.0];
+        m.solvers = vec!["native".into(), "greedy".into()];
+        m.spatial = vec![false, true];
+        m.warmup_days = 24;
+    }
+    m.warmup_days = args.usize("warmup", m.warmup_days);
+    m.validate()?;
+    // Short measured window by default: the warmup prefix is the cost the
+    // fork engine amortizes, so the bench keeps it dominant, mirroring
+    // how exploratory sweeps are actually run (many cells, few measured
+    // days each).
+    let days = args.usize("days", if args.has("quick") { 3 } else { 4 });
+    let threads =
+        args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
+
+    println!(
+        "cics bench: {} cells, {} warmup + {} measured days, {} worker threads",
+        m.n_cells(),
+        m.warmup_days,
+        days,
+        threads
+    );
+    println!("  [1/2] fork path (shared warmup checkpoints)...");
+    let t0 = std::time::Instant::now();
+    let (fork_rep, fork_t) = run_sweep_mode(&m, days, threads, WarmupSharing::Fork)?;
+    let fork_s = t0.elapsed().as_secs_f64();
+    println!(
+        "        {:.2}s total ({:.2}s warmup phase, {:.2}s fork units)",
+        fork_s, fork_t.warmup_s, fork_t.units_s
+    );
+    println!("  [2/2] no-share path (warmup re-simulated per unit)...");
+    let t1 = std::time::Instant::now();
+    let (noshare_rep, noshare_t) = run_sweep_mode(&m, days, threads, WarmupSharing::PerCell)?;
+    let noshare_s = t1.elapsed().as_secs_f64();
+    println!("        {noshare_s:.2}s total");
+
+    let identical = fork_rep.to_json().to_string() == noshare_rep.to_json().to_string();
+    let speedup = if fork_s > 0.0 { noshare_s / fork_s } else { 0.0 };
+    println!();
+    println!(
+        "  speedup: {speedup:.2}x wall-clock at equal measured days; reports identical: {identical}"
+    );
+    if !identical {
+        return Err(cics::err!(
+            "fork and no-share sweeps diverged — the checkpoint/fork engine broke determinism"
+        ));
+    }
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("cics-bench-sweep-v1".into())),
+        ("cells", Json::Num(m.n_cells() as f64)),
+        ("warmup_days", Json::Num(m.warmup_days as f64)),
+        ("measure_days", Json::Num(days as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("fork_wall_s", Json::Num(fork_s)),
+        ("fork_warmup_phase_s", Json::Num(fork_t.warmup_s)),
+        ("fork_units_phase_s", Json::Num(fork_t.units_s)),
+        ("noshare_wall_s", Json::Num(noshare_s)),
+        ("noshare_units_phase_s", Json::Num(noshare_t.units_s)),
+        ("speedup", Json::Num(speedup)),
+        ("reports_identical", Json::Bool(identical)),
+    ]);
+    let out = args.get("out").unwrap_or("reports");
+    let path = std::path::Path::new(out).join("BENCH_sweep.json");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, doc.to_string())?;
+    println!("  wrote {path:?}");
+
+    if let Some(min) = args.get("assert-speedup") {
+        let min: f64 = min
+            .parse()
+            .map_err(|_| cics::err!("--assert-speedup: cannot parse {min:?}"))?;
+        if speedup < min {
+            return Err(cics::err!(
+                "speedup {speedup:.2}x below required {min:.2}x — warmup sharing regressed"
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
@@ -362,14 +461,18 @@ fn main() {
         "solve" => cmd_solve(&args),
         "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
         _ => {
             println!(
                 "cics — Carbon-Intelligent Compute System (paper reproduction)\n\
-                 usage: cics <simulate|experiment|pipelines|solve|report|sweep> [--days N]\n\
+                 usage: cics <simulate|experiment|pipelines|solve|report|sweep|bench> [--days N]\n\
                  \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
                  \u{20}      [--warmup N] [--measure N]\n\
                  sweep:  [--matrix FILE] [--grids FR,CA,DE,PL] [--fleets 4,8] [--flex 0.3,0.6]\n\
-                 \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]"
+                 \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
+                 bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
+                 \u{20}      [--assert-speedup X] [--out DIR]   (times fork vs no-share sweep\n\
+                 \u{20}      paths and writes BENCH_sweep.json)"
             );
             Ok(())
         }

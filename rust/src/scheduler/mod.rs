@@ -32,7 +32,11 @@ pub struct DayOutcome {
     pub queued_end_gcuh: f64,
     pub jobs_completed: usize,
     pub jobs_paused: usize,
-    /// Mean queueing delay of jobs started today (ticks).
+    /// Jobs admitted (started) today — the weight behind the delay mean.
+    pub jobs_started: usize,
+    /// Mean queueing delay of jobs started today (ticks), weighted by job
+    /// count: every admitted job contributes equally regardless of which
+    /// tick's batch it arrived in.
     pub mean_start_delay_ticks: f64,
 }
 
@@ -43,6 +47,11 @@ pub struct DayOutcome {
 /// per-tick countdown, and a `next_completion` watermark lets most ticks
 /// skip the running-set scan entirely (the scan was ~16% of simulation
 /// time under the flat profile — see EXPERIMENTS.md §Perf).
+///
+/// `Clone` is part of the warmup checkpoint/fork contract: a cloned
+/// scheduler (queue, running set, job-id counter, cached totals) resumes
+/// byte-identically to the original — see `coordinator::SimSnapshot`.
+#[derive(Clone, Debug)]
 pub struct ClusterScheduler {
     pub cluster_id: usize,
     /// (absolute completion tick, job). Job order = admission order, so
@@ -109,6 +118,11 @@ impl ClusterScheduler {
     /// admission time (full-runtime lookahead makes shaped clusters leak
     /// ~9% of daily flexible work into backlog and trips the SLO guard).
     const RAMP_LOOKAHEAD_TICKS: usize = 2 * TICKS_PER_HOUR;
+
+    /// Head-of-line admission window: how many queued jobs (and how many
+    /// admissions) a single tick may consider. Small enough that the
+    /// per-tick admission pass is O(1) in queue length.
+    const ADMISSION_WINDOW: usize = 8;
 
     /// Effective admission cap for a job admitted at `t` with `dur` ticks:
     /// the minimum cap over the hours of the lookahead window its runtime
@@ -213,46 +227,54 @@ impl ClusterScheduler {
             self.queue.push_front(j);
         }
 
-        // 5. Admission: FIFO scan while capacity remains. Jobs whose
-        //    runtime spans later hours must fit under the min cap of those
-        //    hours (ramp-down). A small head-of-line window (8) lets
+        // 5. Admission: one forward pass over the head-of-line window.
+        //    Jobs whose runtime spans later hours must fit under the min
+        //    cap of those hours (ramp-down). A small window (8) lets
         //    short/small jobs pass a stuck giant head job without
-        //    starving it unfairly.
-        let mut started_delays: Vec<f64> = Vec::new();
-        let window = 8.min(self.queue.len());
-        let mut scanned = 0;
-        while scanned < window && !self.queue.is_empty() {
-            let mut admitted_any = false;
-            for idx in 0..window.min(self.queue.len()) {
-                let j = &self.queue[idx];
-                let cap = self.admission_cap(cluster, vcc, t, j.remaining_ticks);
-                let fits_machines =
-                    self.run_usage + usage_if + j.demand_gcu <= cluster.capacity_gcu;
-                if resv_if + self.run_resv + j.reservation_gcu <= cap && fits_machines {
-                    let j = self.queue.remove(idx).unwrap();
-                    started_delays.push(j.delay_ticks(t) as f64);
-                    self.run_resv += j.reservation_gcu;
-                    self.run_usage += j.demand_gcu;
-                    let end = now + j.remaining_ticks;
-                    self.next_completion = self.next_completion.min(end);
-                    self.running.push((end, j));
-                    admitted_any = true;
-                    break;
-                }
+        //    starving it unfairly. Headroom only shrinks as jobs are
+        //    admitted within a tick, so a job that failed once this tick
+        //    can never fit later in the same tick — the old rescan-after-
+        //    each-admission loop examined exactly the candidates this
+        //    single pass visits once (it was O(window²) per tick with a
+        //    positional remove inside). Failed jobs stay in place at the
+        //    queue head, preserving FIFO-modulo-window order; the window
+        //    tracks the *current* head, so each admission pulls the next
+        //    queued job into view, matching the old sliding behaviour.
+        let mut admitted = 0usize;
+        let mut skipped = 0usize;
+        let mut delay_sum = 0.0;
+        while admitted < Self::ADMISSION_WINDOW
+            && skipped < Self::ADMISSION_WINDOW
+            && skipped < self.queue.len()
+        {
+            let j = &self.queue[skipped];
+            let cap = self.admission_cap(cluster, vcc, t, j.remaining_ticks);
+            let fits_machines =
+                self.run_usage + usage_if + j.demand_gcu <= cluster.capacity_gcu;
+            if resv_if + self.run_resv + j.reservation_gcu <= cap && fits_machines {
+                // remove() at an index < ADMISSION_WINDOW shifts only the
+                // short head segment, not the whole deque
+                let j = self.queue.remove(skipped).unwrap();
+                delay_sum += j.delay_ticks(t) as f64;
+                self.run_resv += j.reservation_gcu;
+                self.run_usage += j.demand_gcu;
+                let end = now + j.remaining_ticks;
+                self.next_completion = self.next_completion.min(end);
+                self.running.push((end, j));
+                admitted += 1;
+            } else {
+                skipped += 1;
             }
-            if !admitted_any {
-                break;
-            }
-            scanned += 1;
         }
-        if !started_delays.is_empty() {
-            let n = started_delays.len() as f64;
-            // running mean across the day
-            let prev = outcome.mean_start_delay_ticks;
+        if admitted > 0 {
+            // job-count-weighted running mean across the day: a fixed-
+            // weight blend would bias the mean toward whichever ticks
+            // happen to admit last, regardless of batch size
+            let prev_n = outcome.jobs_started as f64;
+            let n = admitted as f64;
             outcome.mean_start_delay_ticks =
-                if prev == 0.0 { crate::util::stats::mean(&started_delays) } else {
-                    0.5 * prev + 0.5 * started_delays.iter().sum::<f64>() / n
-                };
+                (outcome.mean_start_delay_ticks * prev_n + delay_sum) / (prev_n + n);
+            outcome.jobs_started += admitted;
         }
 
         // 6. Telemetry.
@@ -378,6 +400,30 @@ mod tests {
             let want = models[0].inflexible_usage(SimTime::new(0, tick));
             assert!((rec.usage_if[tick] - want).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn start_delay_mean_is_job_count_weighted() {
+        let (fleet, models) = setup();
+        let c = &fleet.clusters[0];
+        // Zero cap: nothing ever starts, so the mean stays untouched.
+        let vcc0 = Vcc { cluster_id: c.id, day: 0, hourly: [0.0; HOURS_PER_DAY], shaped: true };
+        let mut s = ClusterScheduler::new(c.id);
+        let (_, out0) = run_day(&mut s, c, &models[0], Some(&vcc0), 0);
+        assert_eq!(out0.jobs_started, 0);
+        assert_eq!(out0.mean_start_delay_ticks, 0.0);
+        // Uncapped day: every admission event ends the day completed,
+        // paused back to the queue, or still running — exactly.
+        let mut s = ClusterScheduler::new(c.id);
+        let (_, out) = run_day(&mut s, c, &models[0], None, 0);
+        assert!(out.jobs_started > 0);
+        assert_eq!(
+            out.jobs_started,
+            out.jobs_completed + out.jobs_paused + s.running_len(),
+            "admission events must be conserved"
+        );
+        assert!(out.mean_start_delay_ticks >= 0.0);
+        assert!(out.mean_start_delay_ticks < TICKS_PER_DAY as f64);
     }
 
     #[test]

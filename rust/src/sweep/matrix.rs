@@ -196,15 +196,19 @@ mod tests {
     }
 
     #[test]
-    fn solver_variants_share_the_workload_seed() {
-        // comparing solvers must compare policies on the SAME random draw
-        let m = SweepMatrix::default(); // native + greedy on each grid
+    fn policy_variants_share_the_workload_seed() {
+        // comparing solvers/spatial must compare policies on the SAME
+        // random draw; the default matrix has 4 variants per scenario
+        // (native/greedy x spatial off/on, spatial innermost)
+        let m = SweepMatrix::default();
         let cells = expand(&m).unwrap();
-        for pair in cells.chunks(2) {
-            assert_eq!(pair[0].grid_code, pair[1].grid_code);
-            assert_ne!(pair[0].solver, pair[1].solver);
-            assert_eq!(pair[0].seed, pair[1].seed);
-            assert_eq!(pair[0].cfg.seed, pair[1].cfg.seed);
+        for quad in cells.chunks(4) {
+            assert_eq!(quad.len(), 4);
+            assert!(quad.iter().all(|c| c.grid_code == quad[0].grid_code));
+            assert!(quad.iter().all(|c| c.seed == quad[0].seed));
+            assert!(quad.iter().all(|c| c.cfg.seed == quad[0].cfg.seed));
+            assert_ne!(quad[0].solver, quad[2].solver);
+            assert_ne!(quad[0].spatial, quad[1].spatial);
         }
     }
 
@@ -213,6 +217,7 @@ mod tests {
         let mut m = SweepMatrix::default();
         m.grids = vec!["PL".into()];
         m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
         m.flex_shares = vec![0.121, 0.124]; // both would print as 0.12 at 2dp
         let cells = expand(&m).unwrap();
         assert_eq!(cells.len(), 2);

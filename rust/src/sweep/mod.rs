@@ -1,4 +1,4 @@
-//! Parallel scenario-sweep engine.
+//! Parallel scenario-sweep engine with warmup checkpoint/fork sharing.
 //!
 //! The paper's value claim rests on running the VCC pipeline across a
 //! *fleet* of heterogeneous clusters and grid mixes, and the temporal-
@@ -12,16 +12,35 @@
 //! 2. [`matrix::expand`] takes the cartesian product into [`SweepCell`]s
 //!    with deterministic per-cell seeds (derived from axis values, not
 //!    position);
-//! 3. [`run_sweep`] fans the cells out over `util::threadpool` — one
-//!    simulation loop per worker, clusters already parallel inside — with
-//!    a shaped run per cell plus one shared unshaped baseline per
-//!    physical scenario (solver/spatial variants reuse it);
+//! 3. [`run_sweep`] builds a prefix-tree execution plan: cells that share
+//!    a physical seed (solver/spatial variants and the unshaped baseline
+//!    of one scenario) form a group whose 24–30 warmup days are simulated
+//!    **once** — unshaped, native solver — then checkpointed via
+//!    [`SimSnapshot`](crate::coordinator::SimSnapshot) and forked into
+//!    the baseline plus one shaped run per variant, each simulating only
+//!    the measured window. Fork units are equal-sized and dispatched over
+//!    a work-stealing queue ([`threadpool::parallel_map_dyn`]);
 //! 4. the per-cell [`DaySummary`](crate::coordinator::DaySummary) streams
 //!    are aggregated into a cross-scenario [`SweepReport`] (carbon saved
 //!    vs baseline, peak shift, SLO health) emitted as JSON + ASCII table.
 //!
+//! Warmup semantics: warmup days are unshaped for *every* cell — shaping
+//! (and the spatial pass) is enabled from the first measured day's
+//! planning cycle onward. Note the day-ahead cadence: that first measured
+//! day still executes under the warmup's unshaped VCC (pushed the night
+//! before), so the first *shaped* VCC takes effect on the second measured
+//! day — size `measure_days` accordingly. This is what makes the warmup
+//! prefix byte-shareable across variants, and it makes shaped-vs-baseline
+//! comparisons cleaner: both sides enter the measured window from the
+//! identical state. `tests/fork_equivalence.rs` pins that a fork
+//! reproduces a fresh unshaped-warmup run bit-for-bit, and the
+//! `cics bench` harness measures the speedup against the unshared path
+//! ([`WarmupSharing::PerCell`]), which exists precisely so the two paths
+//! can be compared on identical semantics.
+//!
 //! Every metric is a pure function of the matrix: rerunning a sweep — with
-//! any worker count — reproduces the report byte-for-byte.
+//! any worker count, and with either sharing mode — reproduces the report
+//! byte-for-byte.
 
 pub mod matrix;
 pub mod report;
@@ -30,57 +49,183 @@ pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
 pub use report::{CellReport, SweepReport};
 
 use crate::config::SweepMatrix;
-use crate::coordinator::{SimOptions, Simulation, SolverBackend, WindowAggregate};
+use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend, WindowAggregate};
 use crate::util::error::Result;
 use crate::util::threadpool;
 
 /// Movable fraction used by cells with the spatial axis on (paper §V).
 pub const SPATIAL_MOVABLE_FRACTION: f64 = 0.3;
 
+/// How fork units obtain their warmup state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarmupSharing {
+    /// One warmup per physical scenario, checkpointed and forked into
+    /// every unit of the group (the production path).
+    Fork,
+    /// Every unit re-simulates its own warmup from scratch. Identical
+    /// semantics and identical report bytes — the reference the bench
+    /// harness times the fork path against. (It isolates exactly the
+    /// redundant-warmup cost; it is *not* the pre-fork engine, which ran
+    /// shaped warmups and so had different semantics.)
+    PerCell,
+}
+
+/// Wall-clock phase timings of one sweep run (bench harness output;
+/// never part of the deterministic report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepTiming {
+    /// Shared-warmup phase (zero in [`WarmupSharing::PerCell`] mode,
+    /// where warmup cost is folded into each unit).
+    pub warmup_s: f64,
+    /// Fork-unit phase: baseline + shaped measured windows.
+    pub units_s: f64,
+    /// Whole `run_sweep` call.
+    pub total_s: f64,
+}
+
 /// Run the whole matrix: `measure_days` measured days per cell after the
-/// matrix's warmup, fanned out over at most `threads` workers.
-///
-/// Cells that differ only in solver backend or spatial shifting share a
-/// seed (same physical scenario), so their common unshaped baseline is
-/// simulated once and shared rather than recomputed per cell.
+/// matrix's warmup, fanned out over at most `threads` workers, sharing
+/// each physical scenario's warmup across its variants.
 pub fn run_sweep(matrix: &SweepMatrix, measure_days: usize, threads: usize) -> Result<SweepReport> {
+    run_sweep_mode(matrix, measure_days, threads, WarmupSharing::Fork).map(|(rep, _)| rep)
+}
+
+/// [`run_sweep`] with an explicit sharing mode, also returning phase
+/// timings — the entry point of the `cics bench` harness.
+pub fn run_sweep_mode(
+    matrix: &SweepMatrix,
+    measure_days: usize,
+    threads: usize,
+    sharing: WarmupSharing,
+) -> Result<(SweepReport, SweepTiming)> {
     crate::ensure!(measure_days > 0, "sweep needs at least one measured day");
+    let t_start = std::time::Instant::now();
     let cells = expand(matrix)?;
     let threads = threads.max(1);
     let warmup = matrix.warmup_days;
-    // One scenario per worker; the per-cluster fan-out inside each
-    // simulation gets the leftover parallelism — sized per pass, since
-    // the baseline pass has fewer tasks than the shaped pass — so a
-    // small matrix on a big machine still fills the cores.
+    let groups = plan_groups(&cells);
+
+    // One task per worker; the per-cluster fan-out inside each simulation
+    // gets the leftover parallelism — sized per phase, since the warmup
+    // phase has fewer tasks than the unit phase — so a small matrix on a
+    // big machine still fills the cores.
     let inner_for = |tasks: usize| (threads / tasks.min(threads)).max(1);
 
-    // Distinct physical scenarios (by per-cell seed) -> one baseline each.
-    let mut uniq: Vec<usize> = Vec::new(); // representative cell index
-    let mut base_idx: Vec<usize> = Vec::with_capacity(cells.len());
-    for cell in &cells {
-        match uniq.iter().position(|&u| cells[u].seed == cell.seed) {
-            Some(p) => base_idx.push(p),
-            None => {
-                base_idx.push(uniq.len());
-                uniq.push(cell.index);
-            }
+    // ---- phase 1: one unshaped warmup + checkpoint per physical scenario
+    let snaps: Vec<SimSnapshot> = match sharing {
+        WarmupSharing::Fork => {
+            let inner = inner_for(groups.len());
+            threadpool::parallel_map_dyn(groups.len(), threads, |g| {
+                warmup_snapshot(&cells[groups[g].rep], warmup, inner)
+            })
+        }
+        WarmupSharing::PerCell => Vec::new(),
+    };
+    let warmup_s = t_start.elapsed().as_secs_f64();
+
+    // ---- phase 2: equal-sized fork units (baseline + one per variant)
+    let units = plan_units(&groups);
+    let t_units = std::time::Instant::now();
+    let inner = inner_for(units.len());
+    let outcomes: Vec<UnitOutcome> = threadpool::parallel_map_dyn(units.len(), threads, |u| {
+        let (g, cell_idx) = units[u];
+        let snap = match sharing {
+            WarmupSharing::Fork => snaps[g].clone(),
+            WarmupSharing::PerCell => warmup_snapshot(&cells[groups[g].rep], warmup, inner),
+        };
+        run_fork_unit(snap, cell_idx.map(|i| &cells[i]), warmup, measure_days, inner)
+    });
+    let units_s = t_units.elapsed().as_secs_f64();
+
+    // ---- assemble: one report row per cell against its group baseline
+    let mut baselines: Vec<Option<WindowAggregate>> = groups.iter().map(|_| None).collect();
+    let mut shaped: Vec<Option<ShapedOutcome>> = cells.iter().map(|_| None).collect();
+    for (&(g, cell_idx), out) in units.iter().zip(outcomes) {
+        match (cell_idx, out) {
+            (None, UnitOutcome::Baseline(b)) => baselines[g] = Some(b),
+            (Some(i), UnitOutcome::Shaped(s)) => shaped[i] = Some(s),
+            _ => unreachable!("fork unit kind and outcome kind always agree"),
         }
     }
-    let inner = inner_for(uniq.len());
-    let baselines: Vec<WindowAggregate> = threadpool::parallel_map(uniq.len(), threads, |k| {
-        baseline_aggregate(&cells[uniq[k]], warmup, measure_days, inner)
-    });
-    let inner = inner_for(cells.len());
-    let shaped: Vec<ShapedOutcome> = threadpool::parallel_map(cells.len(), threads, |i| {
-        shaped_outcome(&cells[i], warmup, measure_days, inner)
-    });
-
+    let mut group_of = vec![0usize; cells.len()];
+    for (g, grp) in groups.iter().enumerate() {
+        for &ci in &grp.members {
+            group_of[ci] = g;
+        }
+    }
     let reports = cells
         .iter()
-        .zip(&shaped)
-        .map(|(cell, s)| make_report(cell, s, &baselines[base_idx[cell.index]]))
+        .map(|cell| {
+            let s = shaped[cell.index].as_ref().expect("every cell ran a shaped unit");
+            let b = baselines[group_of[cell.index]]
+                .as_ref()
+                .expect("every group ran a baseline unit");
+            make_report(cell, s, b)
+        })
         .collect();
-    Ok(SweepReport::new(warmup, measure_days, reports))
+    let timing = SweepTiming { warmup_s, units_s, total_s: t_start.elapsed().as_secs_f64() };
+    Ok((SweepReport::new(warmup, measure_days, reports), timing))
+}
+
+/// One node of the prefix-tree plan: the cells sharing a physical seed.
+/// Their configs are identical up to the solver/spatial policy knobs that
+/// only matter once shaping starts, so any member can represent the
+/// group's warmup (the warmup forces the native backend and no shaping,
+/// making the representative's remaining config bits inert).
+struct PlanGroup {
+    /// Cell index whose config seeds the group's warmup simulation.
+    rep: usize,
+    /// All member cell indices, in expansion order.
+    members: Vec<usize>,
+}
+
+/// Group cells by physical seed, preserving expansion order.
+fn plan_groups(cells: &[SweepCell]) -> Vec<PlanGroup> {
+    let mut groups: Vec<PlanGroup> = Vec::new();
+    for cell in cells {
+        match groups.iter_mut().find(|g| cells[g.rep].seed == cell.seed) {
+            Some(g) => g.members.push(cell.index),
+            None => groups.push(PlanGroup { rep: cell.index, members: vec![cell.index] }),
+        }
+    }
+    groups
+}
+
+/// Flatten the plan into fork units: `(group, None)` is the group's
+/// unshaped baseline, `(group, Some(cell))` a shaped variant. Every unit
+/// simulates exactly `measure_days`, so units are interchangeable pieces
+/// of work for the dynamic queue.
+fn plan_units(groups: &[PlanGroup]) -> Vec<(usize, Option<usize>)> {
+    let mut units = Vec::with_capacity(groups.iter().map(|g| g.members.len() + 1).sum());
+    for (g, grp) in groups.iter().enumerate() {
+        units.push((g, None));
+        for &ci in &grp.members {
+            units.push((g, Some(ci)));
+        }
+    }
+    units
+}
+
+/// Simulate a physical scenario's warmup — shaping disabled, native
+/// solver, no spatial pass — and checkpoint the state at the boundary.
+fn warmup_snapshot(rep: &SweepCell, warmup_days: usize, inner_threads: usize) -> SimSnapshot {
+    let mut sim = Simulation::with_options(
+        rep.cfg.clone(),
+        SimOptions {
+            backend: Some(SolverBackend::Native),
+            threads: Some(inner_threads),
+            shaping_disabled: true,
+            spatial_movable_fraction: None,
+        },
+    );
+    sim.run_days(warmup_days);
+    sim.snapshot()
+}
+
+/// What a fork unit produced.
+enum UnitOutcome {
+    Baseline(WindowAggregate),
+    Shaped(ShapedOutcome),
 }
 
 /// Shaped-run results a [`CellReport`] needs beyond the window aggregate.
@@ -90,57 +235,45 @@ struct ShapedOutcome {
     spatial_moved_gcuh: f64,
 }
 
-/// Run one cell's shaped simulation over warmup + measurement.
-fn shaped_outcome(
-    cell: &SweepCell,
+/// Resume a warmup checkpoint as one fork unit and simulate the measured
+/// window. `cell: None` continues unshaped (the shared baseline); `Some`
+/// applies the variant's solver backend and spatial setting.
+fn run_fork_unit(
+    snap: SimSnapshot,
+    cell: Option<&SweepCell>,
     warmup_days: usize,
     measure_days: usize,
     inner_threads: usize,
-) -> ShapedOutcome {
-    let days = warmup_days + measure_days;
-    let backend = match cell.solver {
-        SolverChoice::Native => SolverBackend::Native,
-        SolverChoice::Greedy => SolverBackend::GreedyBaseline,
-        SolverChoice::Artifact => SolverBackend::Artifact,
-    };
-    let mut sim = Simulation::with_options(
-        cell.cfg.clone(),
-        SimOptions {
-            backend: Some(backend),
-            threads: Some(inner_threads),
-            shaping_disabled: false,
-            spatial_movable_fraction: cell.spatial.then_some(SPATIAL_MOVABLE_FRACTION),
-        },
-    );
-    sim.run_days(days);
-    ShapedOutcome {
-        agg: sim.metrics.window_aggregate(warmup_days..days),
-        slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
-        spatial_moved_gcuh: sim.spatial_totals.0,
-    }
-}
-
-/// Run the unshaped baseline for a physical scenario (solver/spatial
-/// variants share this — the solver is never consulted when shaping is
-/// off, so one native run represents them all).
-fn baseline_aggregate(
-    cell: &SweepCell,
-    warmup_days: usize,
-    measure_days: usize,
-    inner_threads: usize,
-) -> WindowAggregate {
-    let days = warmup_days + measure_days;
-    let mut sim = Simulation::with_options(
-        cell.cfg.clone(),
-        SimOptions {
+) -> UnitOutcome {
+    let opts = match cell {
+        None => SimOptions {
             backend: Some(SolverBackend::Native),
             threads: Some(inner_threads),
             shaping_disabled: true,
             spatial_movable_fraction: None,
         },
-    );
-    sim.run_days(days);
-    sim.metrics.window_aggregate(warmup_days..days)
+        Some(cell) => SimOptions {
+            backend: Some(match cell.solver {
+                SolverChoice::Native => SolverBackend::Native,
+                SolverChoice::Greedy => SolverBackend::GreedyBaseline,
+                SolverChoice::Artifact => SolverBackend::Artifact,
+            }),
+            threads: Some(inner_threads),
+            shaping_disabled: false,
+            spatial_movable_fraction: cell.spatial.then_some(SPATIAL_MOVABLE_FRACTION),
+        },
+    };
+    let mut sim = Simulation::resume(snap, opts);
+    sim.run_days(measure_days);
+    let window = warmup_days..warmup_days + measure_days;
+    match cell {
+        None => UnitOutcome::Baseline(sim.metrics.window_aggregate(window)),
+        Some(_) => UnitOutcome::Shaped(ShapedOutcome {
+            agg: sim.metrics.window_aggregate(window),
+            slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
+            spatial_moved_gcuh: sim.spatial_totals.0,
+        }),
+    }
 }
 
 fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> CellReport {
@@ -204,6 +337,55 @@ mod tests {
         let json = rep.to_json().to_string();
         assert!(json.contains("cics-sweep-v1"));
         assert!(rep.ascii_table().contains("PL f2 x1 native sp-off"));
+    }
+
+    /// The fork path and the warmup-per-cell path are the same semantics
+    /// executed two ways: their reports must agree byte-for-byte.
+    #[test]
+    fn fork_and_per_cell_paths_agree_bytewise() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            solvers: vec!["native".into(), "greedy".into()],
+            spatial: vec![false, true],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let (fork, _) = run_sweep_mode(&m, 3, 4, WarmupSharing::Fork).unwrap();
+        let (per_cell, _) = run_sweep_mode(&m, 3, 4, WarmupSharing::PerCell).unwrap();
+        assert_eq!(fork.to_json().to_string(), per_cell.to_json().to_string());
+        assert_eq!(fork, per_cell);
+        // four variants of one physical scenario share one baseline
+        assert_eq!(fork.cells.len(), 4);
+        let base = fork.cells[0].carbon_baseline_kg;
+        assert!(fork.cells.iter().all(|c| c.carbon_baseline_kg == base));
+    }
+
+    #[test]
+    fn plan_groups_cluster_by_seed_in_order() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into(), "FR".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            solvers: vec!["native".into(), "greedy".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let cells = expand(&m).unwrap();
+        let groups = plan_groups(&cells);
+        assert_eq!(groups.len(), 2, "two physical scenarios");
+        for g in &groups {
+            assert_eq!(g.members.len(), 2, "native+greedy variants per scenario");
+            assert!(g.members.contains(&g.rep));
+            for &ci in &g.members {
+                assert_eq!(cells[ci].seed, cells[g.rep].seed);
+            }
+        }
+        let units = plan_units(&groups);
+        assert_eq!(units.len(), 6, "2 baselines + 4 shaped variants");
+        assert_eq!(units.iter().filter(|(_, c)| c.is_none()).count(), 2);
     }
 
     #[test]

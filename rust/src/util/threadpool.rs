@@ -103,6 +103,53 @@ where
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
+/// Like [`parallel_map`], but workers pull the next index from a shared
+/// atomic counter instead of owning a pre-sliced chunk. Output order is
+/// still `0..n` regardless of which worker ran what.
+///
+/// Use this when item costs are uneven or `n` barely exceeds the worker
+/// count — the sweep engine's fork units are exactly that shape (one
+/// warmup per scenario group, then measure-window forks of equal length
+/// but different solver cost): static chunking would strand whole
+/// workers behind one slow chunk, dynamic dispatch keeps every core fed
+/// until the queue drains.
+pub fn parallel_map_dyn<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // The receiver outlives the scope; a send can only fail
+                // after a sibling panic already doomed the scope.
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx.iter() {
+            out[i] = Some(v);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +207,23 @@ mod tests {
     fn parallel_map_empty_and_single() {
         assert!(parallel_map(0, 4, |i| i).is_empty());
         assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_map_dyn_preserves_order_under_uneven_costs() {
+        // items deliberately uneven: early indices sleep, late ones are
+        // instant — dynamic dispatch must still return 0..n in order
+        let out = parallel_map_dyn(41, 8, |i| {
+            if i < 4 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            i * 3
+        });
+        assert_eq!(out.len(), 41);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+        assert!(parallel_map_dyn(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map_dyn(1, 1, |i| i + 7), vec![7]);
     }
 }

@@ -1,0 +1,132 @@
+//! The warmup checkpoint/fork engine's equivalence contract: simulating
+//! a scenario's warmup once (unshaped, native solver), checkpointing it
+//! with `Simulation::snapshot()`, and resuming the checkpoint under a
+//! variant's options must produce a **byte-identical** `DaySummary`
+//! stream to a fresh, uninterrupted run of the same seed that spent its
+//! warmup unshaped and flipped shaping on at the boundary.
+//!
+//! All randomness is keyed by (seed, entity, day, tick) — no RNG stream
+//! positions exist outside the snapshotted state — so any divergence
+//! here means a piece of mutable state was missed by the snapshot.
+//! Checked per solver backend (native and greedy) and for the spatial
+//! extension, with different thread budgets on the two sides so thread
+//! scheduling provably cannot leak into results.
+
+use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
+use cics::coordinator::{SimOptions, Simulation, SolverBackend};
+
+const WARMUP: usize = 24;
+const MEASURE: usize = 4;
+
+fn campus(name: &str, grid: GridArchetype, clusters: usize) -> CampusConfig {
+    CampusConfig {
+        name: name.into(),
+        grid,
+        clusters,
+        contract_limit_kw: f64::INFINITY,
+        archetype_mix: (1.0, 0.0, 0.0),
+    }
+}
+
+fn cfg(campuses: Vec<CampusConfig>) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default();
+    cfg.seed = 4242;
+    cfg.campuses = campuses;
+    cfg.optimizer.iters = 150;
+    cfg.optimizer.use_artifact = false;
+    cfg
+}
+
+/// Every cluster-day summary, Debug-printed: f64s render at full
+/// round-trip precision (and -0.0 renders distinctly from 0.0), so equal
+/// strings mean bit-identical streams.
+fn stream_bytes(sim: &Simulation) -> String {
+    let mut out = String::new();
+    for cid in 0..sim.fleet.clusters.len() {
+        for s in sim.metrics.all(cid) {
+            out.push_str(&format!("{s:?}\n"));
+        }
+    }
+    out
+}
+
+fn assert_fork_matches_fresh(
+    cfg_fn: impl Fn() -> ScenarioConfig,
+    backend: SolverBackend,
+    spatial: Option<f64>,
+) {
+    // Reference: one uninterrupted simulation, warmup unshaped, variant
+    // settings applied exactly at the day boundary.
+    let mut fresh = Simulation::with_options(
+        cfg_fn(),
+        SimOptions {
+            backend: Some(backend),
+            threads: Some(2),
+            shaping_disabled: true,
+            spatial_movable_fraction: None,
+        },
+    );
+    fresh.run_days(WARMUP);
+    fresh.shaping_enabled = true;
+    fresh.spatial_movable_fraction = spatial;
+    fresh.run_days(MEASURE);
+
+    // Fork path: warmup under the engine's canonical warmup options
+    // (native backend — the solver is never consulted while shaping is
+    // off), checkpoint, resume under the variant's options.
+    let mut warm = Simulation::with_options(
+        cfg_fn(),
+        SimOptions {
+            backend: Some(SolverBackend::Native),
+            threads: Some(2),
+            shaping_disabled: true,
+            spatial_movable_fraction: None,
+        },
+    );
+    warm.run_days(WARMUP);
+    let mut forked = Simulation::resume(
+        warm.snapshot(),
+        SimOptions {
+            backend: Some(backend),
+            threads: Some(1), // different thread budget on purpose
+            shaping_disabled: false,
+            spatial_movable_fraction: spatial,
+        },
+    );
+    forked.run_days(MEASURE);
+
+    assert_eq!(fresh.day, forked.day);
+    assert_eq!(stream_bytes(&fresh), stream_bytes(&forked), "DaySummary streams diverged");
+    for cid in 0..fresh.fleet.clusters.len() {
+        assert_eq!(fresh.metrics.all(cid), forked.metrics.all(cid));
+    }
+    assert_eq!(fresh.today_vccs, forked.today_vccs, "pending VCCs diverged");
+    // the contract is only meaningful if shaping actually engaged
+    let shaped_days =
+        forked.metrics.iter().filter(|s| s.shaped && s.day >= WARMUP).count();
+    assert!(shaped_days > 0, "no shaped cluster-days in the measured window");
+}
+
+#[test]
+fn native_fork_reproduces_fresh_run_byte_identically() {
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    assert_fork_matches_fresh(mk, SolverBackend::Native, None);
+}
+
+#[test]
+fn greedy_fork_reproduces_fresh_run_byte_identically() {
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    assert_fork_matches_fresh(mk, SolverBackend::GreedyBaseline, None);
+}
+
+#[test]
+fn spatial_fork_reproduces_fresh_run_byte_identically() {
+    // spatial shifting needs >1 campus to have anything to move
+    let mk = || {
+        cfg(vec![
+            campus("dirty", GridArchetype::FossilPeaker, 2),
+            campus("clean", GridArchetype::LowCarbonBase, 2),
+        ])
+    };
+    assert_fork_matches_fresh(mk, SolverBackend::Native, Some(0.3));
+}

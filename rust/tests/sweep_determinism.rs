@@ -1,11 +1,13 @@
 //! The scenario-sweep engine's determinism contract: the same matrix run
-//! twice — and with different worker counts — produces byte-identical
-//! aggregated metrics. Per-cell seeds are derived from axis values and
-//! every stochastic process is keyed by (seed, entity, day, tick), so
-//! neither scheduling nor the parallel fan-out may leak into results.
+//! twice — with different worker counts, and with either warmup-sharing
+//! mode (checkpoint/fork vs per-cell re-simulation) — produces
+//! byte-identical aggregated metrics. Per-cell seeds are derived from
+//! axis values and every stochastic process is keyed by (seed, entity,
+//! day, tick), so neither scheduling, the parallel fan-out, nor the fork
+//! plan may leak into results.
 
 use cics::config::SweepMatrix;
-use cics::sweep;
+use cics::sweep::{self, WarmupSharing};
 
 fn small_matrix() -> SweepMatrix {
     SweepMatrix {
@@ -42,6 +44,12 @@ fn sweep_is_deterministic_across_reruns_and_worker_counts() {
     for (i, c) in serial.cells.iter().enumerate() {
         assert_eq!(c.index, i);
     }
+
+    // the warmup checkpoint/fork plan is an execution strategy, not a
+    // semantics change: re-simulating every warmup per cell must emit
+    // the exact same bytes
+    let (per_cell, _) = sweep::run_sweep_mode(&m, 4, 5, WarmupSharing::PerCell).unwrap();
+    assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
 }
 
 #[test]
