@@ -1,9 +1,12 @@
-//! Internal perf probe: times the coordinator's phases over a fig7-like run.
+//! Internal perf probe: times the coordinator's phases over a fig7-like
+//! run, under both per-tick engines (the event engine is the default;
+//! legacy is the A/B reference — see README §Simulation engine).
 use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
-use cics::coordinator::Simulation;
+use cics::coordinator::{SimOptions, Simulation};
+use cics::scheduler::SimEngine;
 use std::time::Instant;
 
-fn main() {
+fn cfg() -> ScenarioConfig {
     let mut cfg = ScenarioConfig::default();
     cfg.campuses = vec![CampusConfig {
         name: "perf".into(),
@@ -13,13 +16,28 @@ fn main() {
         archetype_mix: (0.5, 0.3, 0.2),
     }];
     cfg.optimizer.use_artifact = false;
-    let mut sim = Simulation::new(cfg);
-    sim.shaping_enabled = false;
-    let t0 = Instant::now();
-    sim.run_days(30);
-    println!("48 clusters x 30 days unshaped: {:.2}s", t0.elapsed().as_secs_f64());
-    sim.shaping_enabled = true;
-    let t1 = Instant::now();
-    sim.run_days(10);
-    println!("48 clusters x 10 days shaped(native): {:.2}s", t1.elapsed().as_secs_f64());
+    cfg
+}
+
+fn main() {
+    for engine in [SimEngine::Legacy, SimEngine::Event] {
+        let mut sim =
+            Simulation::with_options(cfg(), SimOptions { engine, ..SimOptions::default() });
+        sim.shaping_enabled = false;
+        let t0 = Instant::now();
+        sim.run_days(30);
+        println!(
+            "[{:>6}] 48 clusters x 30 days unshaped: {:.2}s",
+            engine.name(),
+            t0.elapsed().as_secs_f64()
+        );
+        sim.shaping_enabled = true;
+        let t1 = Instant::now();
+        sim.run_days(10);
+        println!(
+            "[{:>6}] 48 clusters x 10 days shaped(native): {:.2}s",
+            engine.name(),
+            t1.elapsed().as_secs_f64()
+        );
+    }
 }

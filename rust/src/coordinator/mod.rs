@@ -22,9 +22,9 @@ use crate::grid::{CarbonForecaster, GridZone};
 use crate::optimizer::{self, baselines, campus, pgd, ClusterProblem, ClusterSolution, Unshapeable};
 use crate::power::{self, ClusterPowerModel};
 use crate::runtime::Runtime;
-use crate::scheduler::{ClusterScheduler, DayOutcome};
+use crate::scheduler::{ClusterScheduler, DayOutcome, SimEngine};
 use crate::telemetry::{ClusterDayRecord, TelemetryStore};
-use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY};
+use crate::timebase::HOURS_PER_DAY;
 use crate::vcc::{Rollout, SloGuard, SloState, Vcc};
 use crate::workload::WorkloadModel;
 
@@ -64,6 +64,10 @@ pub struct SimOptions {
     pub shaping_disabled: bool,
     /// Spatial-shifting extension: movable fraction of flexible demand.
     pub spatial_movable_fraction: Option<f64>,
+    /// Per-tick simulation core (default [`SimEngine::Event`]). Like the
+    /// solver backend, this is an execution strategy, not state: both
+    /// engines are byte-identical, so forks may switch engines freely.
+    pub engine: SimEngine,
 }
 
 /// Days of full telemetry kept for training windows.
@@ -82,12 +86,18 @@ const POWER_TRAIN_DAYS: usize = 14;
 /// state copied here.
 ///
 /// Variant knobs (solver backend, master shaping switch, spatial movable
-/// fraction, thread budget) are deliberately *not* part of the snapshot:
-/// they are re-applied per fork through the [`SimOptions`] handed to
-/// `resume`. That is what lets one unshaped warmup serve both the
-/// unshaped baseline and every shaped solver/spatial variant of a
-/// physical scenario. A `treatment` gate is not carried either — forks
-/// start untreated.
+/// fraction, thread budget, per-tick engine) are deliberately *not* part
+/// of the snapshot: they are re-applied per fork through the
+/// [`SimOptions`] handed to `resume`. That is what lets one unshaped
+/// warmup serve both the unshaped baseline and every shaped
+/// solver/spatial variant of a physical scenario. A `treatment` gate is
+/// not carried either — forks start untreated.
+///
+/// The event engine's day-local structures (arrival buckets, completion
+/// heap, cap tables) are likewise absent: they are rebuilt from the
+/// canonical running set at the start of every day and emptied at its
+/// end, so snapshots stay engine-agnostic — a warmup checkpointed under
+/// one [`SimEngine`] forks byte-identically under the other.
 #[derive(Clone)]
 pub struct SimSnapshot {
     cfg: ScenarioConfig,
@@ -144,6 +154,8 @@ pub struct Simulation {
     pub metrics: FleetMetrics,
     /// Unshapeable-cause counters for the most recent planning cycle.
     pub last_unshapeable: Vec<(usize, Unshapeable)>,
+    /// Per-tick simulation core for the real-time day.
+    pub engine: SimEngine,
     threads: usize,
 }
 
@@ -220,6 +232,7 @@ impl Simulation {
             day: 0,
             metrics: FleetMetrics::new(n),
             last_unshapeable: Vec::new(),
+            engine: opts.engine,
             threads,
             cfg,
         }
@@ -310,6 +323,7 @@ impl Simulation {
             day: snap.day,
             metrics: snap.metrics,
             last_unshapeable: snap.last_unshapeable,
+            engine: opts.engine,
             threads,
         }
     }
@@ -342,6 +356,7 @@ impl Simulation {
         let vccs = &self.today_vccs;
         let spatial_scale = &self.spatial_scale;
         let seed = self.cfg.seed;
+        let engine = self.engine;
         let results: Vec<(ClusterDayRecord, DayOutcome)> = {
             let scheds = &mut self.schedulers;
             let n = scheds.len();
@@ -366,17 +381,9 @@ impl Simulation {
                             let mut rec = ClusterDayRecord::new(cluster, day);
                             let mut outc = DayOutcome::default();
                             let scale = spatial_scale[cid];
-                            for tick in 0..TICKS_PER_DAY {
-                                sched.tick_scaled(
-                                    cluster,
-                                    model,
-                                    vcc,
-                                    SimTime::new(day, tick),
-                                    &mut rec,
-                                    &mut outc,
-                                    scale,
-                                );
-                            }
+                            sched.run_day(
+                                cluster, model, vcc, day, &mut rec, &mut outc, scale, engine,
+                            );
                             sched.end_day(&mut outc);
                             rec.flex_backlog_gcuh = outc.queued_end_gcuh;
                             rec.flex_done_gcuh = outc.completed_gcuh;
@@ -743,18 +750,21 @@ mod tests {
 
     #[test]
     fn snapshot_resume_matches_uninterrupted_run() {
-        let opts = |threads: usize| SimOptions {
+        let opts = |threads: usize, engine: SimEngine| SimOptions {
             backend: Some(SolverBackend::Native),
             threads: Some(threads),
             shaping_disabled: true,
             spatial_movable_fraction: None,
+            engine,
         };
-        let mut uninterrupted = Simulation::with_options(small_cfg(), opts(2));
+        let mut uninterrupted = Simulation::with_options(small_cfg(), opts(2, SimEngine::Event));
         uninterrupted.run_days(8);
-        let mut warm = Simulation::with_options(small_cfg(), opts(2));
+        // warm up under the *legacy* engine, resume under the default
+        // event engine with a different thread budget: snapshots are
+        // engine-agnostic and results must not care about either knob
+        let mut warm = Simulation::with_options(small_cfg(), opts(2, SimEngine::Legacy));
         warm.run_days(5);
-        // resume with a different thread budget: results must not care
-        let mut resumed = Simulation::resume(warm.snapshot(), opts(1));
+        let mut resumed = Simulation::resume(warm.snapshot(), opts(1, SimEngine::Event));
         resumed.run_days(3);
         assert_eq!(uninterrupted.day, resumed.day);
         assert_eq!(uninterrupted.today_vccs, resumed.today_vccs);

@@ -16,9 +16,10 @@
 //! substrate — see DESIGN.md §Substitutions.)
 
 use cics::config::ScenarioConfig;
-use cics::coordinator::Simulation;
+use cics::coordinator::{SimOptions, Simulation};
 use cics::experiment;
 use cics::report;
+use cics::scheduler::SimEngine;
 use cics::timebase::HOURS_PER_DAY;
 use cics::util::error::Result;
 
@@ -81,16 +82,28 @@ fn load_config(args: &Args) -> Result<ScenarioConfig> {
     Ok(cfg)
 }
 
+/// `--engine legacy|event` (default: the event engine). Both engines are
+/// byte-identical; legacy exists for A/B timing and equivalence pinning.
+fn parse_engine(args: &Args) -> Result<SimEngine> {
+    match args.get("engine") {
+        None => Ok(SimEngine::default()),
+        Some(s) => SimEngine::parse(s)
+            .ok_or_else(|| cics::err!("--engine: expected legacy|event, got {s:?}")),
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let days = args.usize("days", 40);
-    let mut sim = Simulation::new(cfg);
+    let engine = parse_engine(args)?;
+    let mut sim = Simulation::with_options(cfg, SimOptions { engine, ..SimOptions::default() });
     println!(
-        "cics simulate: {} clusters / {} campuses, {} days, solver = {}",
+        "cics simulate: {} clusters / {} campuses, {} days, solver = {}, engine = {}",
         sim.fleet.clusters.len(),
         sim.fleet.campuses.len(),
         days,
-        sim.backend_name()
+        sim.backend_name(),
+        engine.name()
     );
     for d in 0..days {
         sim.run_day();
@@ -321,12 +334,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     m.warmup_days = args.usize("warmup", m.warmup_days);
     m.validate()?;
     let days = args.usize("days", 20);
+    let engine = parse_engine(args)?;
     let threads =
         args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
 
     println!(
         "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} solvers x {} spatial), \
-         {} warmup + {} measured days, {} worker threads",
+         {} warmup + {} measured days, {} worker threads, {} engine",
         m.n_cells(),
         m.grids.len(),
         m.fleet_sizes.len(),
@@ -335,10 +349,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         m.spatial.len(),
         m.warmup_days,
         days,
-        threads
+        threads,
+        engine.name()
     );
     let t0 = std::time::Instant::now();
-    let report = cics::sweep::run_sweep(&m, days, threads)?;
+    let report = cics::sweep::run_sweep_engine(
+        &m,
+        days,
+        threads,
+        cics::sweep::WarmupSharing::Fork,
+        engine,
+    )
+    .map(|(rep, _)| rep)?;
     println!();
     println!("{}", report.ascii_table());
     println!("(swept {} cells in {:.1?})", report.cells.len(), t0.elapsed());
@@ -355,7 +377,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     use cics::config::SweepMatrix;
-    use cics::sweep::{run_sweep_mode, WarmupSharing};
+    use cics::sweep::{bench_tick_engines, run_sweep_engine, WarmupSharing};
     use cics::util::json::Json;
 
     let mut m = match args.get("matrix") {
@@ -379,39 +401,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // how exploratory sweeps are actually run (many cells, few measured
     // days each).
     let days = args.usize("days", if args.has("quick") { 3 } else { 4 });
+    let tick_days = args.usize("tick-days", 30);
+    let engine = parse_engine(args)?;
     let threads =
         args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
 
     println!(
-        "cics bench: {} cells, {} warmup + {} measured days, {} worker threads",
+        "cics bench: {} cells, {} warmup + {} measured days, {} worker threads, {} engine",
         m.n_cells(),
         m.warmup_days,
         days,
-        threads
+        threads,
+        engine.name()
     );
-    println!("  [1/2] fork path (shared warmup checkpoints)...");
+    println!("  [1/3] fork path (shared warmup checkpoints)...");
     let t0 = std::time::Instant::now();
-    let (fork_rep, fork_t) = run_sweep_mode(&m, days, threads, WarmupSharing::Fork)?;
+    let (fork_rep, fork_t) = run_sweep_engine(&m, days, threads, WarmupSharing::Fork, engine)?;
     let fork_s = t0.elapsed().as_secs_f64();
     println!(
         "        {:.2}s total ({:.2}s warmup phase, {:.2}s fork units)",
         fork_s, fork_t.warmup_s, fork_t.units_s
     );
-    println!("  [2/2] no-share path (warmup re-simulated per unit)...");
+    println!("  [2/3] no-share path (warmup re-simulated per unit)...");
     let t1 = std::time::Instant::now();
-    let (noshare_rep, noshare_t) = run_sweep_mode(&m, days, threads, WarmupSharing::PerCell)?;
+    let (noshare_rep, noshare_t) =
+        run_sweep_engine(&m, days, threads, WarmupSharing::PerCell, engine)?;
     let noshare_s = t1.elapsed().as_secs_f64();
     println!("        {noshare_s:.2}s total");
 
     let identical = fork_rep.to_json().to_string() == noshare_rep.to_json().to_string();
     let speedup = if fork_s > 0.0 { noshare_s / fork_s } else { 0.0 };
-    println!();
     println!(
-        "  speedup: {speedup:.2}x wall-clock at equal measured days; reports identical: {identical}"
+        "        speedup: {speedup:.2}x wall-clock at equal measured days; reports identical: {identical}"
     );
     if !identical {
         return Err(cics::err!(
             "fork and no-share sweeps diverged — the checkpoint/fork engine broke determinism"
+        ));
+    }
+
+    println!(
+        "  [3/3] tick engines (legacy vs event, {tick_days} unshaped real-time days per scenario)..."
+    );
+    let tick = bench_tick_engines(&m, tick_days)?;
+    println!(
+        "        legacy {:.0} cluster-days/s, event {:.0} cluster-days/s — {:.2}x, identical: {}",
+        tick.legacy_cd_per_s, tick.event_cd_per_s, tick.speedup, tick.identical
+    );
+    if !tick.identical {
+        return Err(cics::err!(
+            "tick engines diverged — Legacy and Event must be byte-identical"
         ));
     }
 
@@ -421,6 +460,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("warmup_days", Json::Num(m.warmup_days as f64)),
         ("measure_days", Json::Num(days as f64)),
         ("threads", Json::Num(threads as f64)),
+        ("engine", Json::Str(engine.name().into())),
         ("fork_wall_s", Json::Num(fork_s)),
         ("fork_warmup_phase_s", Json::Num(fork_t.warmup_s)),
         ("fork_units_phase_s", Json::Num(fork_t.units_s)),
@@ -428,6 +468,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("noshare_units_phase_s", Json::Num(noshare_t.units_s)),
         ("speedup", Json::Num(speedup)),
         ("reports_identical", Json::Bool(identical)),
+        (
+            "tick_engine",
+            Json::obj(vec![
+                ("days", Json::Num(tick_days as f64)),
+                ("cluster_days", Json::Num(tick.cluster_days as f64)),
+                ("legacy_wall_s", Json::Num(tick.legacy_s)),
+                ("event_wall_s", Json::Num(tick.event_s)),
+                ("legacy_cluster_days_per_s", Json::Num(tick.legacy_cd_per_s)),
+                ("event_cluster_days_per_s", Json::Num(tick.event_cd_per_s)),
+                ("speedup", Json::Num(tick.speedup)),
+                ("identical", Json::Bool(tick.identical)),
+            ]),
+        ),
     ]);
     let out = args.get("out").unwrap_or("reports");
     let path = std::path::Path::new(out).join("BENCH_sweep.json");
@@ -444,6 +497,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         if speedup < min {
             return Err(cics::err!(
                 "speedup {speedup:.2}x below required {min:.2}x — warmup sharing regressed"
+            ));
+        }
+        if tick.speedup < min {
+            return Err(cics::err!(
+                "tick-engine speedup {:.2}x below required {min:.2}x — the event engine \
+                 no longer beats legacy",
+                tick.speedup
             ));
         }
     }
@@ -467,12 +527,13 @@ fn main() {
                 "cics — Carbon-Intelligent Compute System (paper reproduction)\n\
                  usage: cics <simulate|experiment|pipelines|solve|report|sweep|bench> [--days N]\n\
                  \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
-                 \u{20}      [--warmup N] [--measure N]\n\
+                 \u{20}      [--warmup N] [--measure N] [--engine legacy|event]\n\
                  sweep:  [--matrix FILE] [--grids FR,CA,DE,PL] [--fleets 4,8] [--flex 0.3,0.6]\n\
                  \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
                  bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
-                 \u{20}      [--assert-speedup X] [--out DIR]   (times fork vs no-share sweep\n\
-                 \u{20}      paths and writes BENCH_sweep.json)"
+                 \u{20}      [--tick-days N] [--assert-speedup X] [--out DIR]   (times fork vs\n\
+                 \u{20}      no-share sweep paths and the legacy-vs-event tick engines, and\n\
+                 \u{20}      writes BENCH_sweep.json)"
             );
             Ok(())
         }

@@ -16,13 +16,54 @@
 //! youngest running flexible tasks are paused back onto the queue,
 //! emulating Borg's ability to disable lower-tier tasks.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::fleet::Cluster;
 use crate::telemetry::ClusterDayRecord;
-use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_HOUR};
+use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY, TICKS_PER_HOUR};
 use crate::vcc::Vcc;
-use crate::workload::{FlexJob, WorkloadModel};
+use crate::workload::{DayArrivals, FlexJob, WorkloadModel};
+
+/// Which per-tick core executes a simulated day.
+///
+/// Both engines produce byte-identical telemetry, day outcomes and sweep
+/// reports (`tests/engine_equivalence.rs` pins this across grid presets,
+/// worker counts and warmup-sharing modes). [`SimEngine::Event`] is the
+/// default production path; [`SimEngine::Legacy`] is kept for A/B
+/// benchmarking (`cics bench`'s `tick_engine` section) and as the
+/// reference the equivalence tests pin against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimEngine {
+    /// The original per-tick path: demand parameters and keyed RNGs
+    /// re-derived every tick, a fresh arrivals `Vec` per tick, and
+    /// watermark-triggered full rescans of the running set.
+    Legacy,
+    /// Day-level precomputation (pregenerated arrival buckets, hoisted
+    /// day factors, O(1) admission-cap tables) plus a completion-ordered
+    /// binary heap with lazy deletion: the steady-state tick core is
+    /// allocation-free and O(events · log n), not O(running set).
+    #[default]
+    Event,
+}
+
+impl SimEngine {
+    /// Parse a CLI flag value (`legacy` | `event`).
+    pub fn parse(s: &str) -> Option<SimEngine> {
+        match s.to_ascii_lowercase().as_str() {
+            "legacy" => Some(SimEngine::Legacy),
+            "event" => Some(SimEngine::Event),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimEngine::Legacy => "legacy",
+            SimEngine::Event => "event",
+        }
+    }
+}
 
 /// Scheduler outcome counters for one day (SLO monitoring inputs).
 #[derive(Clone, Debug, Default)]
@@ -66,6 +107,9 @@ pub struct ClusterScheduler {
     next_completion: usize,
     /// The last tick processed (for remaining-work queries).
     now_tick: usize,
+    /// Reusable day-local structures of the event engine (empty between
+    /// days, so cloning a scheduler at a day boundary stays cheap).
+    scratch: DayScratch,
 }
 
 impl ClusterScheduler {
@@ -79,6 +123,7 @@ impl ClusterScheduler {
             run_usage: 0.0,
             next_completion: usize::MAX,
             now_tick: 0,
+            scratch: DayScratch::default(),
         }
     }
 
@@ -136,9 +181,7 @@ impl ClusterScheduler {
         t: SimTime,
         dur: usize,
     ) -> f64 {
-        let first = t.hour();
-        let last_tick = t.tick + dur.min(Self::RAMP_LOOKAHEAD_TICKS);
-        let last = ((last_tick.saturating_sub(1)) / TICKS_PER_HOUR).min(HOURS_PER_DAY - 1);
+        let (first, last) = cap_hour_span(t, dur);
         (first..=last)
             .map(|h| self.cap_at(cluster, vcc, h))
             .fold(f64::INFINITY, f64::min)
@@ -218,13 +261,27 @@ impl ClusterScheduler {
 
         // 4. Throttle: if a VCC drop stranded reservations above the cap,
         //    pause the youngest flexible jobs back to the queue front.
+        let mut paused_any = false;
         while resv_if + self.run_resv > cap_now && !self.running.is_empty() {
             let (end, mut j) = self.running.pop().unwrap();
-            j.remaining_ticks = end - now;
+            // completions were processed above, so every running job ends
+            // strictly in the future (the .max(1) is a release-mode
+            // backstop: a zero-duration requeue would loop forever)
+            debug_assert!(end > now, "paused job already past its end tick");
+            j.remaining_ticks = (end - now).max(1);
             self.run_resv -= j.reservation_gcu;
             self.run_usage -= j.demand_gcu;
             outcome.jobs_paused += 1;
             self.queue.push_front(j);
+            paused_any = true;
+        }
+        if paused_any {
+            // Refresh the completion watermark: a popped job may have
+            // carried the minimum end tick, and a stale (too low)
+            // watermark later fires a full rescan that completes nothing.
+            // The event engine gets this for free via lazy deletion.
+            self.next_completion =
+                self.running.iter().map(|(end, _)| *end).min().unwrap_or(usize::MAX);
         }
 
         // 5. Admission: one forward pass over the head-of-line window.
@@ -292,6 +349,362 @@ impl ClusterScheduler {
     /// End-of-day bookkeeping.
     pub fn end_day(&mut self, outcome: &mut DayOutcome) {
         outcome.queued_end_gcuh = self.backlog_gcuh();
+    }
+
+    /// Simulate one full day (288 ticks) under the chosen engine. Both
+    /// engines produce byte-identical records, outcomes and end-of-day
+    /// scheduler state; the event engine just gets there without per-tick
+    /// allocation or running-set rescans.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_day(
+        &mut self,
+        cluster: &Cluster,
+        model: &WorkloadModel,
+        vcc: Option<&Vcc>,
+        day: usize,
+        rec: &mut ClusterDayRecord,
+        outcome: &mut DayOutcome,
+        flex_scale: f64,
+        engine: SimEngine,
+    ) {
+        match engine {
+            SimEngine::Legacy => {
+                for tick in 0..TICKS_PER_DAY {
+                    self.tick_scaled(
+                        cluster,
+                        model,
+                        vcc,
+                        SimTime::new(day, tick),
+                        rec,
+                        outcome,
+                        flex_scale,
+                    );
+                }
+            }
+            SimEngine::Event => {
+                self.run_day_event(cluster, model, vcc, day, rec, outcome, flex_scale)
+            }
+        }
+    }
+
+    /// The event engine's day loop: hoist everything that is constant
+    /// over the day, run 288 allocation-free ticks against an
+    /// event-ordered running set, then compact back into the canonical
+    /// admission-ordered representation shared with the legacy engine —
+    /// so snapshots taken at day boundaries are engine-agnostic and a
+    /// warmup checkpoint can be forked under either engine.
+    #[allow(clippy::too_many_arguments)]
+    fn run_day_event(
+        &mut self,
+        cluster: &Cluster,
+        model: &WorkloadModel,
+        vcc: Option<&Vcc>,
+        day: usize,
+        rec: &mut ClusterDayRecord,
+        outcome: &mut DayOutcome,
+        flex_scale: f64,
+    ) {
+        // Take the scratch out of `self` so the tick core can borrow the
+        // scheduler and the day-local structures independently.
+        let mut s = std::mem::take(&mut self.scratch);
+        s.clear(); // defensive: a caller panic mid-day must not leak state
+        // (1) all of today's arrivals, bucketed by tick — bit-identical
+        //     to the per-tick draws, ids consumed in tick order
+        model.pregenerate_day(day, flex_scale, &mut self.next_job_id, &mut s.arrivals);
+        // (2) per-day admission-cap tables: O(1) `cap_at` + ramp-down min
+        s.build_cap_tables(cluster, vcc);
+        // (3) inflexible day factor (keyed by day only)
+        let if_day_factor = model.if_day_factor(day);
+        // (4) event-ordered running set from the carried-over jobs
+        s.load_running(&mut self.running);
+
+        for tick in 0..TICKS_PER_DAY {
+            self.tick_event(cluster, model, if_day_factor, &mut s, SimTime::new(day, tick), rec, outcome);
+        }
+
+        // Compact survivors (in admission order) back into the canonical
+        // running set and restore the watermark the legacy engine keeps.
+        debug_assert!(self.running.is_empty());
+        for slot in s.active.drain(..) {
+            if slot.alive {
+                self.running.push((slot.end, slot.job));
+            }
+        }
+        self.next_completion =
+            self.running.iter().map(|(end, _)| *end).min().unwrap_or(usize::MAX);
+        s.clear();
+        self.scratch = s;
+    }
+
+    /// One tick of the event engine. Mirrors `tick_scaled` step for step —
+    /// every floating-point accumulation happens in the same order on the
+    /// same values, so the two cores are bit-identical — but each step is
+    /// O(1)/O(log n): arrivals drain a pregenerated bucket, completions
+    /// pop a lazy-deletion heap, caps are table lookups.
+    #[allow(clippy::too_many_arguments)]
+    fn tick_event(
+        &mut self,
+        cluster: &Cluster,
+        model: &WorkloadModel,
+        if_day_factor: f64,
+        s: &mut DayScratch,
+        t: SimTime,
+        rec: &mut ClusterDayRecord,
+        outcome: &mut DayOutcome,
+    ) {
+        // 1. Inflexible tier (hoisted day factor; per-tick noise stream
+        //    unchanged).
+        let usage_if = model.inflexible_usage_with_day_factor(t, if_day_factor);
+        let resv_if = usage_if * model.inflexible_ratio(usage_if);
+
+        // 2. New flexible arrivals: drain today's bucket in draw order.
+        for j in s.arrivals.tick_jobs(t.tick) {
+            outcome.submitted_gcuh += j.work_gcuh();
+            self.queue.push_back(j.clone());
+        }
+
+        // 3. Progress running jobs; completions pop off the heap. Dead
+        //    top entries (paused jobs) can fire a spurious wake, but a
+        //    wake that completes nothing is byte-neutral, so lazy
+        //    deletion never shows up in results.
+        let now = t.abs_tick();
+        self.now_tick = now;
+        outcome.completed_gcuh += self.run_usage / TICKS_PER_HOUR as f64;
+        if s.next_event() <= now {
+            s.completing.clear();
+            while let Some(&Reverse((end, idx))) = s.heap.peek() {
+                if end > now {
+                    break;
+                }
+                s.heap.pop();
+                if s.active[idx].alive {
+                    s.completing.push(idx);
+                }
+            }
+            if !s.completing.is_empty() {
+                // Heap pops arrive in end-tick order; the legacy rescan
+                // frees in admission order. Slot indices are assigned in
+                // admission order, so a sort restores the exact legacy
+                // summation order (the batch is tiny).
+                s.completing.sort_unstable();
+                let (mut freed_resv, mut freed_usage) = (0.0, 0.0);
+                for &idx in &s.completing {
+                    let slot = &mut s.active[idx];
+                    slot.alive = false;
+                    freed_resv += slot.job.reservation_gcu;
+                    freed_usage += slot.job.demand_gcu;
+                }
+                let completed = s.completing.len();
+                outcome.jobs_completed += completed;
+                s.alive -= completed;
+                self.run_resv -= freed_resv;
+                self.run_usage -= freed_usage;
+                if s.alive == 0 {
+                    // re-anchor to kill fp drift when the set empties
+                    self.run_resv = 0.0;
+                    self.run_usage = 0.0;
+                }
+            }
+        }
+
+        let hour = t.hour();
+        let cap_now = s.cap_row[hour];
+
+        // 4. Throttle: pause the youngest running jobs. Lazy deletion —
+        //    the heap entry stays behind, marked dead — replaces the
+        //    legacy path's watermark refresh.
+        while resv_if + self.run_resv > cap_now && s.alive > 0 {
+            let idx = s.pop_youngest_alive();
+            let slot = &mut s.active[idx];
+            slot.alive = false;
+            let end = slot.end;
+            let mut j = slot.job.clone();
+            s.alive -= 1;
+            debug_assert!(end > now, "paused job already past its end tick");
+            j.remaining_ticks = (end - now).max(1);
+            self.run_resv -= j.reservation_gcu;
+            self.run_usage -= j.demand_gcu;
+            outcome.jobs_paused += 1;
+            self.queue.push_front(j);
+        }
+
+        // 5. Admission: the same single forward pass as the legacy
+        //    engine, with the per-candidate hour-range min replaced by an
+        //    O(1) range-min table lookup.
+        let mut admitted = 0usize;
+        let mut skipped = 0usize;
+        let mut delay_sum = 0.0;
+        while admitted < Self::ADMISSION_WINDOW
+            && skipped < Self::ADMISSION_WINDOW
+            && skipped < self.queue.len()
+        {
+            let j = &self.queue[skipped];
+            let cap = s.admission_cap(t, j.remaining_ticks);
+            let fits_machines =
+                self.run_usage + usage_if + j.demand_gcu <= cluster.capacity_gcu;
+            if resv_if + self.run_resv + j.reservation_gcu <= cap && fits_machines {
+                let j = self.queue.remove(skipped).unwrap();
+                delay_sum += j.delay_ticks(t) as f64;
+                self.run_resv += j.reservation_gcu;
+                self.run_usage += j.demand_gcu;
+                let end = now + j.remaining_ticks;
+                s.admit(end, j);
+                admitted += 1;
+            } else {
+                skipped += 1;
+            }
+        }
+        if admitted > 0 {
+            let prev_n = outcome.jobs_started as f64;
+            let n = admitted as f64;
+            outcome.mean_start_delay_ticks =
+                (outcome.mean_start_delay_ticks * prev_n + delay_sum) / (prev_n + n);
+            outcome.jobs_started += admitted;
+        }
+
+        // 6. Telemetry.
+        rec.record_tick(
+            cluster,
+            model.seed,
+            t.tick,
+            usage_if,
+            self.run_usage,
+            resv_if,
+            self.run_resv,
+        );
+    }
+}
+
+/// How many hours an admission's ramp-down lookahead can span: the
+/// two-hour window plus up to one partial hour of tick misalignment.
+const RAMP_SPAN: usize = ClusterScheduler::RAMP_LOOKAHEAD_TICKS / TICKS_PER_HOUR + 1;
+
+/// The `(first, last)` hour span an admission at `t` with `dur` ticks
+/// must clear — the single source of truth shared by the legacy fold and
+/// the event engine's range-min lookup, so the two cores can never
+/// drift apart. `last - first < RAMP_SPAN` always.
+///
+/// `FlexJob` construction clamps durations to >= 1 tick; a zero here
+/// would make `last` underflow to "hour 0" and span a degenerate range
+/// (the release-mode `.max(1)` is a backstop for that).
+#[inline]
+fn cap_hour_span(t: SimTime, dur: usize) -> (usize, usize) {
+    debug_assert!(dur >= 1, "zero-duration job reached the admission cap");
+    let dur = dur.max(1);
+    let first = t.hour();
+    let last_tick = t.tick + dur.min(ClusterScheduler::RAMP_LOOKAHEAD_TICKS);
+    let last = ((last_tick - 1) / TICKS_PER_HOUR).min(HOURS_PER_DAY - 1);
+    debug_assert!(last >= first && last - first < RAMP_SPAN);
+    (first, last)
+}
+
+/// One entry of the event engine's day-local running set. Slots are
+/// append-only within a day (index order == admission order); pauses and
+/// completions mark them dead instead of removing them.
+#[derive(Clone, Debug)]
+struct ActiveSlot {
+    end: usize,
+    alive: bool,
+    job: FlexJob,
+}
+
+/// The event engine's reusable day-local structures. Everything here is
+/// rebuilt from the scheduler's canonical state at the start of a day and
+/// emptied again at the end, so snapshots/forks never see it mid-flight;
+/// buffers keep their capacity across days, making the steady-state tick
+/// loop allocation-free.
+#[derive(Clone, Debug, Default)]
+struct DayScratch {
+    /// Today's pregenerated arrivals, bucketed by tick.
+    arrivals: DayArrivals,
+    /// Day-local running set, in admission order (lazy deletion).
+    active: Vec<ActiveSlot>,
+    /// Min-heap of (end tick, slot index); dead slots are skipped when
+    /// they surface.
+    heap: BinaryHeap<Reverse<(usize, usize)>>,
+    /// Admission-order stack of slot indices (pause-victim lookup; dead
+    /// entries popped on contact, so the scan is amortized O(1)).
+    order: Vec<usize>,
+    /// Slots completing this tick (sorted into admission order).
+    completing: Vec<usize>,
+    /// Alive slot count (mirrors the legacy `running.len()`).
+    alive: usize,
+    /// Per-hour admission cap: `min(VCC(h), machine capacity)`.
+    cap_row: [f64; HOURS_PER_DAY],
+    /// `range_min[h][k]` = fold-min of `cap_row[h..=h+k]` (clamped to the
+    /// day) built with the exact `INFINITY.min(..)` fold of the legacy
+    /// helper, so lookups are bit-identical to the scans they replace.
+    range_min: [[f64; RAMP_SPAN]; HOURS_PER_DAY],
+}
+
+impl DayScratch {
+    /// Build the per-(cluster, day, VCC) cap tables.
+    fn build_cap_tables(&mut self, cluster: &Cluster, vcc: Option<&Vcc>) {
+        for (h, row) in self.cap_row.iter_mut().enumerate() {
+            let v = vcc.map(|v| v.hourly[h]).unwrap_or(f64::INFINITY);
+            *row = v.min(cluster.capacity_gcu);
+        }
+        for h in 0..HOURS_PER_DAY {
+            let mut m = f64::INFINITY;
+            for k in 0..RAMP_SPAN {
+                if h + k < HOURS_PER_DAY {
+                    m = m.min(self.cap_row[h + k]);
+                }
+                self.range_min[h][k] = m;
+            }
+        }
+    }
+
+    /// O(1) mirror of `ClusterScheduler::admission_cap`.
+    fn admission_cap(&self, t: SimTime, dur: usize) -> f64 {
+        let (first, last) = cap_hour_span(t, dur);
+        self.range_min[first][last - first]
+    }
+
+    /// Earliest end tick on the heap (alive or dead), usize::MAX if none.
+    #[inline]
+    fn next_event(&self) -> usize {
+        self.heap.peek().map(|r| r.0 .0).unwrap_or(usize::MAX)
+    }
+
+    /// Register a newly admitted (or carried-over) running job.
+    fn admit(&mut self, end: usize, job: FlexJob) {
+        let idx = self.active.len();
+        self.active.push(ActiveSlot { end, alive: true, job });
+        self.order.push(idx);
+        self.heap.push(Reverse((end, idx)));
+        self.alive += 1;
+    }
+
+    /// Move the canonical admission-ordered running set into the
+    /// day-local structures (start of day).
+    fn load_running(&mut self, running: &mut Vec<(usize, FlexJob)>) {
+        debug_assert!(self.active.is_empty() && self.heap.is_empty() && self.order.is_empty());
+        for (end, job) in running.drain(..) {
+            self.admit(end, job);
+        }
+    }
+
+    /// Pop the youngest alive slot off the admission-order stack. Dead
+    /// entries encountered on the way were completed earlier and are
+    /// discarded for good. Caller guarantees `alive > 0`.
+    fn pop_youngest_alive(&mut self) -> usize {
+        loop {
+            let idx = self.order.pop().expect("an alive slot exists below dead stack entries");
+            if self.active[idx].alive {
+                return idx;
+            }
+        }
+    }
+
+    /// Empty every day-local buffer, keeping capacity for reuse.
+    fn clear(&mut self) {
+        self.arrivals.clear();
+        self.active.clear();
+        self.heap.clear();
+        self.order.clear();
+        self.completing.clear();
+        self.alive = 0;
     }
 }
 
@@ -424,6 +837,101 @@ mod tests {
         );
         assert!(out.mean_start_delay_ticks >= 0.0);
         assert!(out.mean_start_delay_ticks < TICKS_PER_DAY as f64);
+    }
+
+    #[test]
+    fn event_engine_matches_legacy_byte_for_byte() {
+        // Drive both engines through the full behavioural repertoire —
+        // uncapped flow, an intraday VCC collapse (ramp-down + queueing),
+        // a day-boundary drop (throttle pauses), a zero cap (the running
+        // set empties through pauses), and an uncapped drain — and pin
+        // records, outcomes and end-of-day scheduler state to equal
+        // Debug bytes (f64 Debug is round-trip exact).
+        let (fleet, models) = setup();
+        let c = &fleet.clusters[0];
+        let m = &models[0];
+        let mut legacy = ClusterScheduler::new(c.id);
+        let mut event = ClusterScheduler::new(c.id);
+        for day in 0..5 {
+            let vcc = match day {
+                1 => {
+                    let mut hourly = [c.capacity_gcu; HOURS_PER_DAY];
+                    for h in 10..18 {
+                        hourly[h] = c.capacity_gcu * 0.45;
+                    }
+                    Some(Vcc { cluster_id: c.id, day, hourly, shaped: true })
+                }
+                2 => Some(Vcc {
+                    cluster_id: c.id,
+                    day,
+                    hourly: [c.capacity_gcu * 0.5; HOURS_PER_DAY],
+                    shaped: true,
+                }),
+                3 => Some(Vcc {
+                    cluster_id: c.id,
+                    day,
+                    hourly: [0.0; HOURS_PER_DAY],
+                    shaped: true,
+                }),
+                _ => None,
+            };
+            let one = |s: &mut ClusterScheduler, engine: SimEngine| {
+                let mut rec = ClusterDayRecord::new(c, day);
+                let mut out = DayOutcome::default();
+                s.run_day(c, m, vcc.as_ref(), day, &mut rec, &mut out, 1.0, engine);
+                s.end_day(&mut out);
+                (rec, out)
+            };
+            let (rec_l, out_l) = one(&mut legacy, SimEngine::Legacy);
+            let (rec_e, out_e) = one(&mut event, SimEngine::Event);
+            assert_eq!(format!("{out_l:?}"), format!("{out_e:?}"), "day {day} outcome");
+            assert_eq!(format!("{rec_l:?}"), format!("{rec_e:?}"), "day {day} record");
+            assert_eq!(
+                format!("{:?}", legacy.running),
+                format!("{:?}", event.running),
+                "day {day} running set"
+            );
+            assert_eq!(
+                format!("{:?}", legacy.queue),
+                format!("{:?}", event.queue),
+                "day {day} queue"
+            );
+            assert_eq!(legacy.next_job_id, event.next_job_id, "day {day} job ids");
+            assert_eq!(legacy.next_completion, event.next_completion, "day {day} watermark");
+            assert_eq!(
+                legacy.run_resv.to_bits(),
+                event.run_resv.to_bits(),
+                "day {day} run_resv bits"
+            );
+            assert_eq!(
+                legacy.run_usage.to_bits(),
+                event.run_usage.to_bits(),
+                "day {day} run_usage bits"
+            );
+            if day == 3 {
+                assert!(out_l.jobs_paused > 0, "zero-cap day must pause running jobs");
+            }
+        }
+    }
+
+    #[test]
+    fn watermark_stays_exact_after_pauses() {
+        // The satellite fix: after the throttle pops running jobs, the
+        // completion watermark must equal the true minimum end tick (or
+        // MAX when the set emptied), never a popped job's end.
+        let (fleet, models) = setup();
+        let c = &fleet.clusters[0];
+        let mut s = ClusterScheduler::new(c.id);
+        run_day(&mut s, c, &models[0], None, 0);
+        assert!(s.running_len() > 0);
+        // zero cap: hour 0 of day 1 pauses everything
+        let vcc = Vcc { cluster_id: c.id, day: 1, hourly: [0.0; HOURS_PER_DAY], shaped: true };
+        let mut rec = ClusterDayRecord::new(c, 1);
+        let mut out = DayOutcome::default();
+        s.tick(c, &models[0], Some(&vcc), SimTime::new(1, 0), &mut rec, &mut out);
+        assert!(out.jobs_paused > 0);
+        assert_eq!(s.running_len(), 0, "zero cap empties the running set");
+        assert_eq!(s.next_completion, usize::MAX, "watermark must reset with the set");
     }
 
     #[test]

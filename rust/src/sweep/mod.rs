@@ -50,8 +50,12 @@ pub use report::{CellReport, SweepReport};
 
 use crate::config::SweepMatrix;
 use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend, WindowAggregate};
+use crate::fleet::Fleet;
+use crate::scheduler::{ClusterScheduler, DayOutcome, SimEngine};
+use crate::telemetry::ClusterDayRecord;
 use crate::util::error::Result;
 use crate::util::threadpool;
+use crate::workload::WorkloadModel;
 
 /// Movable fraction used by cells with the spatial axis on (paper §V).
 pub const SPATIAL_MOVABLE_FRACTION: f64 = 0.3;
@@ -91,12 +95,26 @@ pub fn run_sweep(matrix: &SweepMatrix, measure_days: usize, threads: usize) -> R
 }
 
 /// [`run_sweep`] with an explicit sharing mode, also returning phase
-/// timings — the entry point of the `cics bench` harness.
+/// timings, under the default per-tick engine.
 pub fn run_sweep_mode(
     matrix: &SweepMatrix,
     measure_days: usize,
     threads: usize,
     sharing: WarmupSharing,
+) -> Result<(SweepReport, SweepTiming)> {
+    run_sweep_engine(matrix, measure_days, threads, sharing, SimEngine::default())
+}
+
+/// [`run_sweep_mode`] with an explicit per-tick [`SimEngine`] — the full
+/// entry point of the `cics bench` harness. The engine, like the sharing
+/// mode, is an execution strategy: the report bytes are identical either
+/// way (`tests/engine_equivalence.rs`).
+pub fn run_sweep_engine(
+    matrix: &SweepMatrix,
+    measure_days: usize,
+    threads: usize,
+    sharing: WarmupSharing,
+    engine: SimEngine,
 ) -> Result<(SweepReport, SweepTiming)> {
     crate::ensure!(measure_days > 0, "sweep needs at least one measured day");
     let t_start = std::time::Instant::now();
@@ -116,7 +134,7 @@ pub fn run_sweep_mode(
         WarmupSharing::Fork => {
             let inner = inner_for(groups.len());
             threadpool::parallel_map_dyn(groups.len(), threads, |g| {
-                warmup_snapshot(&cells[groups[g].rep], warmup, inner)
+                warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)
             })
         }
         WarmupSharing::PerCell => Vec::new(),
@@ -131,9 +149,11 @@ pub fn run_sweep_mode(
         let (g, cell_idx) = units[u];
         let snap = match sharing {
             WarmupSharing::Fork => snaps[g].clone(),
-            WarmupSharing::PerCell => warmup_snapshot(&cells[groups[g].rep], warmup, inner),
+            WarmupSharing::PerCell => {
+                warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)
+            }
         };
-        run_fork_unit(snap, cell_idx.map(|i| &cells[i]), warmup, measure_days, inner)
+        run_fork_unit(snap, cell_idx.map(|i| &cells[i]), warmup, measure_days, inner, engine)
     });
     let units_s = t_units.elapsed().as_secs_f64();
 
@@ -208,7 +228,12 @@ fn plan_units(groups: &[PlanGroup]) -> Vec<(usize, Option<usize>)> {
 
 /// Simulate a physical scenario's warmup — shaping disabled, native
 /// solver, no spatial pass — and checkpoint the state at the boundary.
-fn warmup_snapshot(rep: &SweepCell, warmup_days: usize, inner_threads: usize) -> SimSnapshot {
+fn warmup_snapshot(
+    rep: &SweepCell,
+    warmup_days: usize,
+    inner_threads: usize,
+    engine: SimEngine,
+) -> SimSnapshot {
     let mut sim = Simulation::with_options(
         rep.cfg.clone(),
         SimOptions {
@@ -216,6 +241,7 @@ fn warmup_snapshot(rep: &SweepCell, warmup_days: usize, inner_threads: usize) ->
             threads: Some(inner_threads),
             shaping_disabled: true,
             spatial_movable_fraction: None,
+            engine,
         },
     );
     sim.run_days(warmup_days);
@@ -244,6 +270,7 @@ fn run_fork_unit(
     warmup_days: usize,
     measure_days: usize,
     inner_threads: usize,
+    engine: SimEngine,
 ) -> UnitOutcome {
     let opts = match cell {
         None => SimOptions {
@@ -251,6 +278,7 @@ fn run_fork_unit(
             threads: Some(inner_threads),
             shaping_disabled: true,
             spatial_movable_fraction: None,
+            engine,
         },
         Some(cell) => SimOptions {
             backend: Some(match cell.solver {
@@ -261,6 +289,7 @@ fn run_fork_unit(
             threads: Some(inner_threads),
             shaping_disabled: false,
             spatial_movable_fraction: cell.spatial.then_some(SPATIAL_MOVABLE_FRACTION),
+            engine,
         },
     };
     let mut sim = Simulation::resume(snap, opts);
@@ -304,6 +333,92 @@ fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> Cell
         shaped_fraction: s.agg.shaped_fraction(),
         spatial_moved_gcuh: s.spatial_moved_gcuh,
     }
+}
+
+/// Results of the tick-engine A/B (`cics bench`'s `tick_engine`
+/// section): both per-tick cores simulate the matrix's distinct physical
+/// scenarios for a number of pure real-time days — no planning cycle,
+/// exactly the loop the event engine restructures — and must agree
+/// byte-for-byte while the event engine wins on wall-clock.
+#[derive(Clone, Debug)]
+pub struct TickEngineBench {
+    /// Simulated cluster-days per engine run.
+    pub cluster_days: usize,
+    /// Wall-clock seconds per engine.
+    pub legacy_s: f64,
+    pub event_s: f64,
+    /// Simulated cluster-days per second per engine.
+    pub legacy_cd_per_s: f64,
+    pub event_cd_per_s: f64,
+    /// Event rate over legacy rate.
+    pub speedup: f64,
+    /// Whether the engines produced identical day outcomes and
+    /// end-of-day scheduler state (they must — `--assert-speedup` treats
+    /// `false` as a hard failure).
+    pub identical: bool,
+}
+
+/// Time [`SimEngine::Legacy`] against [`SimEngine::Event`] on the
+/// matrix's distinct physical scenarios: `days` unshaped real-time days
+/// per scenario, serial (the ratio, not the throughput, is the point).
+/// Each engine gets an untimed one-day warm pass first.
+pub fn bench_tick_engines(matrix: &SweepMatrix, days: usize) -> Result<TickEngineBench> {
+    crate::ensure!(days > 0, "tick-engine bench needs at least one day");
+    let cells = expand(matrix)?;
+    let groups = plan_groups(&cells);
+    let run = |engine: SimEngine, run_days: usize| -> (f64, String, usize) {
+        use std::fmt::Write as _;
+        let mut sig = String::new();
+        let mut cluster_days = 0usize;
+        let t0 = std::time::Instant::now();
+        for g in &groups {
+            let cfg = &cells[g.rep].cfg;
+            let fleet = Fleet::build(cfg);
+            let models: Vec<WorkloadModel> = fleet
+                .clusters
+                .iter()
+                .map(|c| WorkloadModel::for_cluster(cfg.seed, c))
+                .collect();
+            let mut scheds: Vec<ClusterScheduler> =
+                fleet.clusters.iter().map(|c| ClusterScheduler::new(c.id)).collect();
+            for day in 0..run_days {
+                for (cid, sched) in scheds.iter_mut().enumerate() {
+                    let cluster = &fleet.clusters[cid];
+                    let mut rec = ClusterDayRecord::new(cluster, day);
+                    let mut out = DayOutcome::default();
+                    sched.run_day(cluster, &models[cid], None, day, &mut rec, &mut out, 1.0, engine);
+                    sched.end_day(&mut out);
+                    cluster_days += 1;
+                    // outcome Debug is round-trip exact for f64, so equal
+                    // signatures mean bit-identical accounting (the full
+                    // telemetry-byte contract lives in the equivalence
+                    // tests; both engines pay this same formatting cost)
+                    let _ = writeln!(
+                        sig,
+                        "{cid}/{day} {out:?} q{} r{}",
+                        sched.queue_len(),
+                        sched.running_len()
+                    );
+                }
+            }
+        }
+        (t0.elapsed().as_secs_f64(), sig, cluster_days)
+    };
+    let _ = run(SimEngine::Legacy, 1);
+    let _ = run(SimEngine::Event, 1);
+    let (legacy_s, sig_legacy, cluster_days) = run(SimEngine::Legacy, days);
+    let (event_s, sig_event, event_days) = run(SimEngine::Event, days);
+    debug_assert_eq!(cluster_days, event_days);
+    let rate = |secs: f64| if secs > 0.0 { cluster_days as f64 / secs } else { 0.0 };
+    Ok(TickEngineBench {
+        cluster_days,
+        legacy_s,
+        event_s,
+        legacy_cd_per_s: rate(legacy_s),
+        event_cd_per_s: rate(event_s),
+        speedup: if event_s > 0.0 { legacy_s / event_s } else { 0.0 },
+        identical: sig_legacy == sig_event,
+    })
 }
 
 #[cfg(test)]

@@ -20,6 +20,33 @@ pub struct FlexJob {
 }
 
 impl FlexJob {
+    /// Construct a freshly submitted job. The duration is clamped to at
+    /// least one tick: a zero-duration job would make the scheduler's
+    /// admission-cap hour range degenerate (`last_tick - 1` underflows
+    /// into "scan to hour 0"), and a job that does no work has no reason
+    /// to exist. All job construction funnels through here so the
+    /// invariant holds everywhere (`scheduler::ClusterScheduler`
+    /// asserts it in the cap helper).
+    pub fn new(
+        id: u64,
+        cluster_id: usize,
+        demand_gcu: f64,
+        reservation_gcu: f64,
+        duration_ticks: usize,
+        submit: SimTime,
+    ) -> FlexJob {
+        let duration_ticks = duration_ticks.max(1);
+        FlexJob {
+            id,
+            cluster_id,
+            demand_gcu,
+            reservation_gcu,
+            duration_ticks,
+            submit,
+            remaining_ticks: duration_ticks,
+        }
+    }
+
     /// Total work of the job in GCU-hours (usage integral).
     pub fn work_gcuh(&self) -> f64 {
         self.demand_gcu * self.duration_ticks as f64 / TICKS_PER_HOUR as f64
@@ -67,5 +94,15 @@ mod tests {
         assert_eq!(j.delay_ticks(SimTime::new(1, 150)), 50);
         assert_eq!(j.delay_ticks(SimTime::new(2, 0)), 188);
         assert_eq!(j.delay_ticks(SimTime::new(1, 50)), 0); // clamped
+    }
+
+    #[test]
+    fn constructor_clamps_zero_duration() {
+        let j = FlexJob::new(7, 0, 10.0, 12.0, 0, SimTime::new(0, 0));
+        assert_eq!(j.duration_ticks, 1);
+        assert_eq!(j.remaining_ticks, 1);
+        let j = FlexJob::new(8, 0, 10.0, 12.0, 36, SimTime::new(0, 0));
+        assert_eq!(j.duration_ticks, 36);
+        assert_eq!(j.remaining_ticks, 36);
     }
 }

@@ -16,9 +16,7 @@ pub mod job;
 
 use crate::config::Archetype;
 use crate::fleet::Cluster;
-use crate::timebase::{SimTime, TICKS_PER_DAY, TICKS_PER_HOUR};
-#[cfg(test)]
-use crate::timebase::HOURS_PER_DAY;
+use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY, TICKS_PER_HOUR};
 use crate::util::rng::Pcg;
 
 pub use job::FlexJob;
@@ -122,8 +120,10 @@ impl WorkloadModel {
     }
 
     /// Day-level multiplicative factor: weekly seasonality, growth trend,
-    /// and a persistent day-level noise draw (keyed by day).
-    fn if_day_factor(&self, day: usize) -> f64 {
+    /// and a persistent day-level noise draw (keyed by day). Public so the
+    /// event engine can hoist it out of the tick loop (it only depends on
+    /// the day, but the per-tick path re-derives it 288 times).
+    pub fn if_day_factor(&self, day: usize) -> f64 {
         let weekend = if crate::timebase::is_weekend(day) { self.if_weekend } else { 1.0 };
         let trend = 1.0 + self.growth_per_day * day as f64;
         let mut rng = Pcg::keyed(self.seed, 0x1F0A + self.cluster_id as u64, day as u64, 1);
@@ -132,11 +132,19 @@ impl WorkloadModel {
 
     /// True inflexible usage (GCU) at a tick. Deterministic per (day,tick).
     pub fn inflexible_usage(&self, t: SimTime) -> f64 {
+        self.inflexible_usage_with_day_factor(t, self.if_day_factor(t.day))
+    }
+
+    /// [`inflexible_usage`](Self::inflexible_usage) with the day factor
+    /// precomputed — the event engine's day-level hoist. The expression
+    /// and the per-tick noise stream are identical to the per-tick path,
+    /// so the two produce bit-identical values.
+    pub fn inflexible_usage_with_day_factor(&self, t: SimTime, day_factor: f64) -> f64 {
         let base = self.if_level * self.capacity_gcu;
         let mut rng =
             Pcg::keyed(self.seed, 0x11CF + self.cluster_id as u64, t.day as u64, t.tick as u64);
         let u = base
-            * self.if_day_factor(t.day)
+            * day_factor
             * self.diurnal(t.frac_hour())
             * (1.0 + rng.normal_ms(0.0, self.if_tick_noise));
         u.clamp(0.0, self.capacity_gcu)
@@ -200,31 +208,112 @@ impl WorkloadModel {
         let daily = self.flex_daily_demand(t.day) * scale;
         let jobs_per_day = daily / self.mean_job_work();
         let rate = jobs_per_day / TICKS_PER_DAY as f64 * self.submit_profile(t.hour());
+        let mut out = Vec::new();
+        self.draw_tick_arrivals(t, rate, next_job_id, &mut out);
+        out
+    }
+
+    /// Draw one tick's job arrivals given the (day-constant) Poisson rate
+    /// for that tick's hour, appending to `out`. The single source of
+    /// truth for the per-tick job stream: both the per-tick path above and
+    /// [`pregenerate_day`](Self::pregenerate_day) call this with the same
+    /// keyed RNG stream, so they produce bit-identical jobs (and consume
+    /// ids in the same order).
+    fn draw_tick_arrivals(
+        &self,
+        t: SimTime,
+        rate: f64,
+        next_job_id: &mut u64,
+        out: &mut Vec<FlexJob>,
+    ) {
         let mut rng =
             Pcg::keyed(self.seed, 0xA881 + self.cluster_id as u64, t.day as u64, t.tick as u64);
         let n = rng.poisson(rate);
-        (0..n)
-            .map(|_| {
-                let gcu = rng
-                    .lognormal(self.job_gcu_median, self.job_gcu_sigma)
-                    .min(self.capacity_gcu * 0.05);
-                let ticks = (rng.lognormal(self.job_ticks_median, self.job_ticks_sigma).round()
-                    as usize)
-                    .clamp(1, TICKS_PER_DAY / 2);
-                let headroom = rng.uniform(0.10, 0.40);
-                let id = *next_job_id;
-                *next_job_id += 1;
-                FlexJob {
-                    id,
-                    cluster_id: self.cluster_id,
-                    demand_gcu: gcu,
-                    reservation_gcu: gcu * (1.0 + headroom),
-                    duration_ticks: ticks,
-                    submit: t,
-                    remaining_ticks: ticks,
-                }
-            })
-            .collect()
+        for _ in 0..n {
+            let gcu = rng
+                .lognormal(self.job_gcu_median, self.job_gcu_sigma)
+                .min(self.capacity_gcu * 0.05);
+            let ticks = (rng.lognormal(self.job_ticks_median, self.job_ticks_sigma).round()
+                as usize)
+                .clamp(1, TICKS_PER_DAY / 2);
+            let headroom = rng.uniform(0.10, 0.40);
+            let id = *next_job_id;
+            *next_job_id += 1;
+            out.push(FlexJob::new(
+                id,
+                self.cluster_id,
+                gcu,
+                gcu * (1.0 + headroom),
+                ticks,
+                t,
+            ));
+        }
+    }
+
+    /// Pre-draw the whole day's arrivals into a reusable buffer, bucketed
+    /// by tick — the event engine's day-level pass. The per-tick keyed RNG
+    /// streams are exactly those of [`flex_arrivals_scaled`], and ids are
+    /// consumed in tick order, so the jobs are bit-identical to 288
+    /// per-tick calls; what this pass hoists is everything that is
+    /// constant over the day (the daily-demand draw, the mean-job-work
+    /// exponentials, the per-hour submission profile) plus the per-tick
+    /// `Vec` allocation.
+    pub fn pregenerate_day(
+        &self,
+        day: usize,
+        scale: f64,
+        next_job_id: &mut u64,
+        out: &mut DayArrivals,
+    ) {
+        out.jobs.clear();
+        out.offsets.clear();
+        let daily = self.flex_daily_demand(day) * scale;
+        let jobs_per_day = daily / self.mean_job_work();
+        let per_tick = jobs_per_day / TICKS_PER_DAY as f64;
+        let mut rate_h = [0.0; HOURS_PER_DAY];
+        for (h, r) in rate_h.iter_mut().enumerate() {
+            *r = per_tick * self.submit_profile(h);
+        }
+        for tick in 0..TICKS_PER_DAY {
+            out.offsets.push(out.jobs.len());
+            let t = SimTime::new(day, tick);
+            self.draw_tick_arrivals(t, rate_h[t.hour()], next_job_id, &mut out.jobs);
+        }
+        out.offsets.push(out.jobs.len());
+    }
+}
+
+/// One day of pregenerated flexible arrivals, bucketed by tick — the
+/// event engine's reusable scratch buffer (buffers keep their capacity
+/// across days, so the steady-state tick loop allocates nothing).
+#[derive(Clone, Debug, Default)]
+pub struct DayArrivals {
+    /// All of the day's jobs in draw (= tick, then stream) order.
+    jobs: Vec<FlexJob>,
+    /// `jobs[offsets[t]..offsets[t + 1]]` arrive during tick `t`
+    /// (`TICKS_PER_DAY + 1` entries once populated).
+    offsets: Vec<usize>,
+}
+
+impl DayArrivals {
+    /// The jobs arriving during `tick`, in draw order.
+    pub fn tick_jobs(&self, tick: usize) -> &[FlexJob] {
+        &self.jobs[self.offsets[tick]..self.offsets[tick + 1]]
+    }
+
+    /// Total jobs pregenerated for the day.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Drop the day's jobs but keep the allocations for reuse.
+    pub fn clear(&mut self) {
+        self.jobs.clear();
+        self.offsets.clear();
     }
 }
 
@@ -329,6 +418,41 @@ mod tests {
         let after = m.flex_daily_demand(10);
         // same-day noise differs, but 1.5x should dominate
         assert!(after > before * 1.2);
+    }
+
+    #[test]
+    fn pregenerated_day_matches_per_tick_arrivals_exactly() {
+        // The event engine's whole-day pass must reproduce the per-tick
+        // stream bit-for-bit: same jobs, same buckets, same id sequence.
+        for m in models().iter().take(3) {
+            for &(day, scale) in &[(0usize, 1.0f64), (6, 1.0), (9, 0.85)] {
+                let mut id_tick = 1000;
+                let mut per_tick: Vec<Vec<FlexJob>> = Vec::new();
+                for tick in 0..TICKS_PER_DAY {
+                    per_tick.push(m.flex_arrivals_scaled(
+                        SimTime::new(day, tick),
+                        &mut id_tick,
+                        scale,
+                    ));
+                }
+                let mut id_day = 1000;
+                let mut pre = DayArrivals::default();
+                m.pregenerate_day(day, scale, &mut id_day, &mut pre);
+                assert_eq!(id_tick, id_day, "id counters diverged");
+                for tick in 0..TICKS_PER_DAY {
+                    assert_eq!(
+                        pre.tick_jobs(tick),
+                        per_tick[tick].as_slice(),
+                        "cluster {} day {day} tick {tick}",
+                        m.cluster_id
+                    );
+                }
+                // buffer reuse: a second day overwrites, no stale state
+                m.pregenerate_day(day + 1, scale, &mut id_day, &mut pre);
+                assert!(!pre.is_empty());
+                assert_eq!(pre.offsets.len(), TICKS_PER_DAY + 1);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! The tick-engine equivalence contract: `SimEngine::Legacy` (the
+//! original per-tick core) and `SimEngine::Event` (day-level
+//! precomputation + completion-ordered heap) are two executions of the
+//! same semantics, so every observable byte — sweep reports, `cics
+//! bench` comparisons, day outcomes — must be identical between them.
+//!
+//! The event engine earns this by construction: arrivals come from the
+//! same per-tick keyed RNG streams (just drawn in one day-level pass),
+//! cap tables fold `f64::min` over the same values in the same order as
+//! the per-candidate scans they replace, and every floating-point
+//! accumulator is updated in the legacy order. These tests pin the
+//! contract end-to-end across all four grid presets, worker counts and
+//! warmup-sharing modes.
+
+use cics::config::SweepMatrix;
+use cics::scheduler::SimEngine;
+use cics::sweep::{self, WarmupSharing};
+
+fn preset_matrix(grid: &str) -> SweepMatrix {
+    SweepMatrix {
+        seed: 314159,
+        grids: vec![grid.into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 24,
+    }
+}
+
+#[test]
+fn sweep_reports_byte_identical_across_engines_for_all_grid_presets() {
+    for grid in ["FR", "CA", "DE", "PL"] {
+        let m = preset_matrix(grid);
+        let (legacy, _) =
+            sweep::run_sweep_engine(&m, 3, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+        let (event, _) =
+            sweep::run_sweep_engine(&m, 3, 2, WarmupSharing::Fork, SimEngine::Event).unwrap();
+        assert_eq!(
+            legacy.to_json().to_string(),
+            event.to_json().to_string(),
+            "grid {grid}: report bytes diverged between engines"
+        );
+        assert_eq!(legacy, event, "grid {grid}");
+        // the contract is only meaningful on a non-trivial report
+        assert!(event.cells[0].carbon_baseline_kg > 0.0, "grid {grid}: empty report");
+    }
+}
+
+#[test]
+fn engines_agree_across_worker_counts_and_sharing_modes() {
+    // A richer matrix: four policy variants (2 solvers x 2 spatial) of
+    // one physical scenario, so the fork plan, the spatial pass and the
+    // greedy baseline all execute under both engines.
+    let mut m = preset_matrix("PL");
+    m.solvers = vec!["native".into(), "greedy".into()];
+    m.spatial = vec![false, true];
+    let (reference, _) =
+        sweep::run_sweep_engine(&m, 3, 1, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    let json = reference.to_json().to_string();
+    for (threads, sharing, engine) in [
+        (4, WarmupSharing::Fork, SimEngine::Event),
+        (3, WarmupSharing::PerCell, SimEngine::Event),
+        (2, WarmupSharing::PerCell, SimEngine::Legacy),
+    ] {
+        let (rep, _) = sweep::run_sweep_engine(&m, 3, threads, sharing, engine).unwrap();
+        assert_eq!(
+            json,
+            rep.to_json().to_string(),
+            "{threads} workers, {sharing:?}, {engine:?}"
+        );
+    }
+    // shaping engaged, so the measured window actually exercised VCCs
+    assert!(reference.cells.iter().any(|c| c.shaped_fraction > 0.0));
+}
+
+#[test]
+fn tick_engine_bench_sees_identical_outputs() {
+    // `cics bench`'s tick_engine section compares the raw real-time day
+    // loop (no planning cycle) between engines; its `identical` flag is
+    // a hard gate, so pin it here on a small matrix.
+    let m = preset_matrix("PL");
+    let b = sweep::bench_tick_engines(&m, 4).unwrap();
+    assert!(b.identical, "tick engines diverged on the raw day loop");
+    assert_eq!(b.cluster_days, 2 * 4, "fleet of 2 x 4 days");
+    assert!(b.legacy_s > 0.0 && b.event_s > 0.0);
+    assert!(b.speedup > 0.0);
+}

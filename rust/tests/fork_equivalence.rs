@@ -11,9 +11,16 @@
 //! Checked per solver backend (native and greedy) and for the spatial
 //! extension, with different thread budgets on the two sides so thread
 //! scheduling provably cannot leak into results.
+//!
+//! The per-tick engine (`SimEngine`) is a fork-time knob like the
+//! backend: snapshots carry only the canonical running set (the event
+//! engine's day-local heap/buckets are rebuilt every day), so a warmup
+//! checkpointed under one engine must fork byte-identically under the
+//! other — the cross-engine tests pin that.
 
 use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
 use cics::coordinator::{SimOptions, Simulation, SolverBackend};
+use cics::scheduler::SimEngine;
 
 const WARMUP: usize = 24;
 const MEASURE: usize = 4;
@@ -54,9 +61,14 @@ fn assert_fork_matches_fresh(
     cfg_fn: impl Fn() -> ScenarioConfig,
     backend: SolverBackend,
     spatial: Option<f64>,
+    warmup_engine: SimEngine,
+    fork_engine: SimEngine,
 ) {
     // Reference: one uninterrupted simulation, warmup unshaped, variant
-    // settings applied exactly at the day boundary.
+    // settings applied exactly at the day boundary. Runs entirely under
+    // `fork_engine` — when `warmup_engine` differs, the test is also
+    // pinning that a checkpoint taken under one engine forks
+    // byte-identically under the other.
     let mut fresh = Simulation::with_options(
         cfg_fn(),
         SimOptions {
@@ -64,6 +76,7 @@ fn assert_fork_matches_fresh(
             threads: Some(2),
             shaping_disabled: true,
             spatial_movable_fraction: None,
+            engine: fork_engine,
         },
     );
     fresh.run_days(WARMUP);
@@ -81,6 +94,7 @@ fn assert_fork_matches_fresh(
             threads: Some(2),
             shaping_disabled: true,
             spatial_movable_fraction: None,
+            engine: warmup_engine,
         },
     );
     warm.run_days(WARMUP);
@@ -91,6 +105,7 @@ fn assert_fork_matches_fresh(
             threads: Some(1), // different thread budget on purpose
             shaping_disabled: false,
             spatial_movable_fraction: spatial,
+            engine: fork_engine,
         },
     );
     forked.run_days(MEASURE);
@@ -110,13 +125,19 @@ fn assert_fork_matches_fresh(
 #[test]
 fn native_fork_reproduces_fresh_run_byte_identically() {
     let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
-    assert_fork_matches_fresh(mk, SolverBackend::Native, None);
+    assert_fork_matches_fresh(mk, SolverBackend::Native, None, SimEngine::Event, SimEngine::Event);
 }
 
 #[test]
 fn greedy_fork_reproduces_fresh_run_byte_identically() {
     let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
-    assert_fork_matches_fresh(mk, SolverBackend::GreedyBaseline, None);
+    assert_fork_matches_fresh(
+        mk,
+        SolverBackend::GreedyBaseline,
+        None,
+        SimEngine::Event,
+        SimEngine::Event,
+    );
 }
 
 #[test]
@@ -128,5 +149,41 @@ fn spatial_fork_reproduces_fresh_run_byte_identically() {
             campus("clean", GridArchetype::LowCarbonBase, 2),
         ])
     };
-    assert_fork_matches_fresh(mk, SolverBackend::Native, Some(0.3));
+    assert_fork_matches_fresh(mk, SolverBackend::Native, Some(0.3), SimEngine::Event, SimEngine::Event);
+}
+
+#[test]
+fn legacy_engine_fork_reproduces_fresh_run_byte_identically() {
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    assert_fork_matches_fresh(
+        mk,
+        SolverBackend::Native,
+        None,
+        SimEngine::Legacy,
+        SimEngine::Legacy,
+    );
+}
+
+#[test]
+fn legacy_warmup_forks_byte_identically_under_event_engine() {
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    assert_fork_matches_fresh(
+        mk,
+        SolverBackend::Native,
+        None,
+        SimEngine::Legacy,
+        SimEngine::Event,
+    );
+}
+
+#[test]
+fn event_warmup_forks_byte_identically_under_legacy_engine() {
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    assert_fork_matches_fresh(
+        mk,
+        SolverBackend::Native,
+        None,
+        SimEngine::Event,
+        SimEngine::Legacy,
+    );
 }

@@ -7,6 +7,7 @@
 //! plan may leak into results.
 
 use cics::config::SweepMatrix;
+use cics::scheduler::SimEngine;
 use cics::sweep::{self, WarmupSharing};
 
 fn small_matrix() -> SweepMatrix {
@@ -50,6 +51,13 @@ fn sweep_is_deterministic_across_reruns_and_worker_counts() {
     // the exact same bytes
     let (per_cell, _) = sweep::run_sweep_mode(&m, 4, 5, WarmupSharing::PerCell).unwrap();
     assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
+
+    // ...and so is the per-tick engine: the legacy core must emit the
+    // same bytes as the event core the runs above used by default
+    // (engine_equivalence.rs pins this in depth; this guards the default)
+    let (legacy, _) =
+        sweep::run_sweep_engine(&m, 4, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
 }
 
 #[test]
