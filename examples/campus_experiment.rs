@@ -23,7 +23,7 @@ fn main() -> cics::util::error::Result<()> {
     let measure = 60; // two months, like the paper's Feb 12 2021 experiment
     println!("campus controlled experiment: 24 clusters, {warmup}d warmup + {measure}d measured");
     let t0 = std::time::Instant::now();
-    let res = experiment::run_controlled(cfg, warmup, measure);
+    let res = experiment::run_controlled(cfg, warmup, measure)?;
     let wall = t0.elapsed();
 
     let (chart, rows) = report::experiment_panel(&res);

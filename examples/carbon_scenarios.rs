@@ -22,7 +22,7 @@ fn run(grid: GridArchetype, lambda_e: f64, lambda_p: f64, shaped: bool) -> (f64,
     cfg.optimizer.iters = 250;
     let mut sim = Simulation::new(cfg);
     sim.shaping_enabled = shaped;
-    sim.run_days(45);
+    sim.run_days(45).unwrap();
     // average over the last 14 days
     let mut carbon = Vec::new();
     let mut peaks = Vec::new();
@@ -88,10 +88,10 @@ fn main() {
     cfg.optimizer.iters = 250;
     let days = 45;
     let mut temporal = Simulation::new(cfg.clone());
-    temporal.run_days(days);
+    temporal.run_days(days).unwrap();
     let mut spatial = Simulation::new(cfg);
     spatial.spatial_movable_fraction = Some(0.3);
-    spatial.run_days(days);
+    spatial.run_days(days).unwrap();
     let carbon = |sim: &Simulation| -> f64 {
         (days - 14..days).filter_map(|d| sim.metrics.fleet_day(d)).map(|(_, kg)| kg).sum()
     };

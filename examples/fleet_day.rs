@@ -32,7 +32,7 @@ fn main() -> cics::util::error::Result<()> {
     );
     let days = 35;
     let t0 = std::time::Instant::now();
-    sim.run_days(days);
+    sim.run_days(days)?;
     println!("{days} days simulated in {:.1?}\n", t0.elapsed());
 
     // Figs 9-11: one cluster per archetype from the fossil-peaker campus.

@@ -25,7 +25,7 @@ fn main() {
             Simulation::with_options(cfg(), SimOptions { engine, ..SimOptions::default() });
         sim.shaping_enabled = false;
         let t0 = Instant::now();
-        sim.run_days(30);
+        sim.run_days(30).unwrap();
         println!(
             "[{:>6}] 48 clusters x 30 days unshaped: {:.2}s",
             engine.name(),
@@ -33,7 +33,7 @@ fn main() {
         );
         sim.shaping_enabled = true;
         let t1 = Instant::now();
-        sim.run_days(10);
+        sim.run_days(10).unwrap();
         println!(
             "[{:>6}] 48 clusters x 10 days shaped(native): {:.2}s",
             engine.name(),

@@ -19,7 +19,7 @@ fn main() -> cics::util::error::Result<()> {
     let mut sim = Simulation::new(cfg);
     println!("solver backend: {}", sim.backend_name());
     println!("simulating 35 days (warmup + shaped)...");
-    sim.run_days(35);
+    sim.run_days(35)?;
 
     let last = sim.day - 1;
     let s = sim.metrics.summary(0, last).expect("day summary");

@@ -19,7 +19,9 @@ fn main() {
     let cfg = common::standard_campus(24);
     let warmup = 30;
     let measure = 60;
-    let (res, secs) = common::timed(|| experiment::run_controlled(cfg, warmup, measure));
+    let (res, secs) = common::timed(|| {
+        experiment::run_controlled(cfg, warmup, measure).expect("experiment failed")
+    });
     println!("experiment ({} + {} days) in {secs:.1}s", warmup, measure);
 
     let (chart, rows) = report::experiment_panel(&res);

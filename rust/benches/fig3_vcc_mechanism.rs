@@ -23,13 +23,13 @@ fn main() {
     // shaped run
     let (sim, secs) = common::timed(|| {
         let mut s = Simulation::new(cfg.clone());
-        s.run_days(days);
+        s.run_days(days).unwrap();
         s
     });
     // counterfactual: identical seed/workload, shaping off
     let mut off = Simulation::new(cfg);
     off.shaping_enabled = false;
-    off.run_days(days);
+    off.run_days(days).unwrap();
     println!("2 runs x {days} days in {secs:.1}s (+ counterfactual)");
 
     // pick the last weekday whose shaped day really shaped

@@ -42,7 +42,7 @@ fn main() {
     let (mut sim, secs) = common::timed(|| {
         let mut sim = Simulation::new(cfg);
         sim.shaping_enabled = false;
-        sim.run_days(days);
+        sim.run_days(days).unwrap();
         sim
     });
     let _ = &mut sim;

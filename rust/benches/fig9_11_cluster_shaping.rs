@@ -39,10 +39,10 @@ fn main() {
     let days = 50;
     let ((sim, ctrl), secs) = common::timed(|| {
         let mut on = Simulation::new(cfg.clone());
-        on.run_days(days);
+        on.run_days(days).unwrap();
         let mut off = Simulation::new(cfg.clone());
         off.shaping_enabled = false;
-        off.run_days(days);
+        off.run_days(days).unwrap();
         (on, off)
     });
     println!("paired runs, {days} days x 12 clusters, in {secs:.1}s\n");

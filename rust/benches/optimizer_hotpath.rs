@@ -52,6 +52,7 @@ fn random_problem(seed: u64) -> Option<ClusterProblem> {
         0.25,
         -1.0,
         3.0,
+        0.0,
     )
     .ok()
 }

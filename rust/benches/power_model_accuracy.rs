@@ -21,7 +21,7 @@ fn main() {
     let (sim, secs) = common::timed(|| {
         let mut sim = Simulation::new(cfg);
         sim.shaping_enabled = false;
-        sim.run_days(30);
+        sim.run_days(30).unwrap();
         sim
     });
     println!("30 days x 24 clusters simulated in {secs:.1}s");

@@ -1,0 +1,255 @@
+//! Workload-class taxonomy: per-class deadlines and flexibility windows.
+//!
+//! The paper's VCC machinery rests on one assumption — every flexible job
+//! completes "within ~24h of submission" (§I) — but real fleets mix
+//! flexibility horizons, and the temporal-shifting literature ("Let's
+//! Wait Awhile", Wiesner et al.; "War of the Efficiencies", Hanafy et
+//! al.) shows carbon savings and deadline pressure trade off sharply
+//! with the shifting window. [`FlexClasses`] makes that axis first-class:
+//! the flexible tier is split into named classes, each carrying a demand
+//! share, an optional completion deadline, and a drop-on-miss policy.
+//!
+//! The default taxonomy is a single deadline-less "within-day" class —
+//! the paper's implicit assumption — and every consumer (workload
+//! generator, both scheduler engines, the optimizer, the sweep) treats
+//! that trivial taxonomy as a strict no-op: a default-config run is
+//! byte-identical to the pre-taxonomy system.
+
+use crate::timebase::{TICKS_PER_DAY, TICKS_PER_HOUR};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// One class of temporally-flexible work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadClass {
+    /// Stable human-readable name (report column key).
+    pub name: String,
+    /// Fraction of the cluster's flexible daily demand submitted as this
+    /// class. Shares across a taxonomy sum to 1.
+    pub share: f64,
+    /// Completion deadline in ticks from submission: sub-day (< 288),
+    /// 1-day, or multi-day (> 288). `None` = the legacy deadline-less
+    /// class ("finishes today" holds in expectation, never enforced).
+    pub deadline_ticks: Option<usize>,
+    /// On a detected deadline miss: `true` drops the job (late results
+    /// are worthless — interactive-adjacent batch), `false` keeps it
+    /// queued best-effort (the miss is still counted once).
+    pub drop_on_miss: bool,
+}
+
+impl WorkloadClass {
+    fn new(
+        name: &str,
+        share: f64,
+        deadline_ticks: Option<usize>,
+        drop_on_miss: bool,
+    ) -> WorkloadClass {
+        WorkloadClass { name: name.to_string(), share, deadline_ticks, drop_on_miss }
+    }
+}
+
+/// A validated workload-class taxonomy (shares sum to 1, every deadline
+/// is at least one tick). Built from a preset name or from config JSON;
+/// threaded from [`ScenarioConfig`](crate::config::ScenarioConfig)
+/// through the workload generator into both scheduler engines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlexClasses {
+    classes: Vec<WorkloadClass>,
+}
+
+/// The default (and pre-taxonomy) preset: one deadline-less class.
+pub const DEFAULT_PRESET: &str = "within-day";
+
+impl Default for FlexClasses {
+    fn default() -> Self {
+        FlexClasses::preset(DEFAULT_PRESET).expect("default preset exists")
+    }
+}
+
+impl FlexClasses {
+    /// Named presets for the sweep's `flex_classes` axis:
+    /// `within-day` (default, legacy semantics), `tight-6h` (sub-day
+    /// deadline, dropped on miss), `multi-day-3d` (three-day window,
+    /// best-effort), and `mixed` (half within-day, a quarter each tight
+    /// and multi-day — the heterogeneous-fleet scenario).
+    pub fn preset(code: &str) -> Option<FlexClasses> {
+        let classes = match code.to_ascii_lowercase().as_str() {
+            "within-day" => vec![WorkloadClass::new("within-day", 1.0, None, false)],
+            "tight-6h" => {
+                vec![WorkloadClass::new("tight-6h", 1.0, Some(6 * TICKS_PER_HOUR), true)]
+            }
+            "multi-day-3d" => {
+                vec![WorkloadClass::new("multi-day-3d", 1.0, Some(3 * TICKS_PER_DAY), false)]
+            }
+            "mixed" => vec![
+                WorkloadClass::new("within-day", 0.5, None, false),
+                WorkloadClass::new("tight-6h", 0.25, Some(6 * TICKS_PER_HOUR), true),
+                WorkloadClass::new("multi-day-3d", 0.25, Some(3 * TICKS_PER_DAY), false),
+            ],
+            _ => return None,
+        };
+        Some(FlexClasses { classes })
+    }
+
+    /// Build from explicit classes (tests, custom configs).
+    pub fn from_classes(classes: Vec<WorkloadClass>) -> Result<FlexClasses> {
+        let fc = FlexClasses { classes };
+        fc.validate()?;
+        Ok(fc)
+    }
+
+    /// Parse the `flex_classes` config value: either a preset name
+    /// (string) or an explicit array of class objects
+    /// `{name, share, deadline_ticks?, drop_on_miss?}` (a `deadline_ticks`
+    /// of 0 or an absent key means deadline-less).
+    pub fn from_json(v: &Json) -> Result<FlexClasses> {
+        if let Some(code) = v.as_str() {
+            return FlexClasses::preset(code)
+                .ok_or_else(|| crate::err!("unknown flex_classes preset {code:?}"));
+        }
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| crate::err!("flex_classes must be a preset name or an array"))?;
+        let mut classes = Vec::with_capacity(arr.len());
+        for (i, c) in arr.iter().enumerate() {
+            let share = c
+                .get("share")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| crate::err!("flex_classes[{i}]: missing share"))?;
+            let deadline = match c.get("deadline_ticks").and_then(Json::as_usize) {
+                Some(0) | None => None,
+                Some(d) => Some(d),
+            };
+            classes.push(WorkloadClass {
+                name: c.str_or("name", &format!("class-{i}")).to_string(),
+                share,
+                deadline_ticks: deadline,
+                drop_on_miss: c.bool_or("drop_on_miss", false),
+            });
+        }
+        FlexClasses::from_classes(classes)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(!self.classes.is_empty(), "flex_classes: at least one class required");
+        let sum: f64 = self.classes.iter().map(|c| c.share).sum();
+        crate::ensure!(
+            (sum - 1.0).abs() < 1e-6,
+            "flex_classes: shares must sum to 1 (got {sum})"
+        );
+        for c in &self.classes {
+            crate::ensure!(c.share > 0.0, "flex_classes: class {:?} has share <= 0", c.name);
+            crate::ensure!(
+                c.deadline_ticks.map(|d| d >= 1).unwrap_or(true),
+                "flex_classes: class {:?} has a zero-tick deadline",
+                c.name
+            );
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &WorkloadClass {
+        &self.classes[idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WorkloadClass> {
+        self.classes.iter()
+    }
+
+    /// The trivial taxonomy — a single deadline-less class — under which
+    /// every layer behaves exactly as the pre-taxonomy system (no EDF
+    /// reordering, no miss detection, no per-class report columns).
+    pub fn is_trivial(&self) -> bool {
+        self.classes.len() == 1 && self.classes[0].deadline_ticks.is_none()
+    }
+
+    /// Share of flexible daily demand that cannot be deferred out of its
+    /// submission neighbourhood: classes with a sub-day deadline `D`
+    /// contribute `share * (1 - D/TICKS_PER_DAY)`. This floors the
+    /// optimizer's hourly lower deviation bound (`delta >= -1 +
+    /// nondeferrable_share`) — the per-class daily-capacity preservation
+    /// constraint: a VCC may not push out flexible capacity that
+    /// deadline-bound work will need the same hours. Zero for the
+    /// default taxonomy (and for any taxonomy of >= 1-day deadlines).
+    pub fn nondeferrable_share(&self) -> f64 {
+        self.classes
+            .iter()
+            .filter_map(|c| {
+                c.deadline_ticks.map(|d| {
+                    c.share * (1.0 - (d as f64 / TICKS_PER_DAY as f64)).max(0.0)
+                })
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_trivial_within_day() {
+        let fc = FlexClasses::default();
+        assert!(fc.is_trivial());
+        assert_eq!(fc.len(), 1);
+        assert_eq!(fc.get(0).name, "within-day");
+        assert_eq!(fc.get(0).deadline_ticks, None);
+        assert_eq!(fc.nondeferrable_share(), 0.0);
+        fc.validate().unwrap();
+    }
+
+    #[test]
+    fn presets_parse_and_validate() {
+        for code in ["within-day", "tight-6h", "multi-day-3d", "mixed"] {
+            let fc = FlexClasses::preset(code).unwrap();
+            fc.validate().unwrap();
+            assert_eq!(fc.is_trivial(), code == "within-day", "{code}");
+        }
+        assert!(FlexClasses::preset("yearly").is_none());
+        let mixed = FlexClasses::preset("mixed").unwrap();
+        assert_eq!(mixed.len(), 3);
+        assert!(mixed.iter().any(|c| c.drop_on_miss));
+        // only the tight 6h quarter is nondeferrable: 0.25 * (1 - 72/288)
+        assert!((mixed.nondeferrable_share() - 0.25 * 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_accepts_presets_and_explicit_arrays() {
+        let p = FlexClasses::from_json(&Json::parse("\"mixed\"").unwrap()).unwrap();
+        assert_eq!(p, FlexClasses::preset("mixed").unwrap());
+        let v = Json::parse(
+            r#"[
+              {"name": "fast", "share": 0.4, "deadline_ticks": 36, "drop_on_miss": true},
+              {"name": "slow", "share": 0.6}
+            ]"#,
+        )
+        .unwrap();
+        let fc = FlexClasses::from_json(&v).unwrap();
+        assert_eq!(fc.len(), 2);
+        assert_eq!(fc.get(0).deadline_ticks, Some(36));
+        assert!(fc.get(0).drop_on_miss);
+        assert_eq!(fc.get(1).deadline_ticks, None);
+        assert!(!fc.is_trivial());
+    }
+
+    #[test]
+    fn bad_taxonomies_are_rejected() {
+        assert!(FlexClasses::from_json(&Json::parse("\"bogus\"").unwrap()).is_err());
+        assert!(FlexClasses::from_json(&Json::parse("3").unwrap()).is_err());
+        // shares must sum to 1
+        let v = Json::parse(r#"[{"name": "a", "share": 0.5}]"#).unwrap();
+        assert!(FlexClasses::from_json(&v).is_err());
+        // missing share fails loudly
+        let v = Json::parse(r#"[{"name": "a"}]"#).unwrap();
+        assert!(FlexClasses::from_json(&v).is_err());
+        assert!(FlexClasses::from_classes(Vec::new()).is_err());
+    }
+}

@@ -6,9 +6,13 @@
 //! is the single source of truth handed to the builders in `fleet/`,
 //! `grid/` and `workload/`.
 
+pub mod classes;
+
 use crate::util::error::Result;
 use crate::util::json::Json;
 use std::path::Path;
+
+pub use classes::{FlexClasses, WorkloadClass};
 
 /// Cluster workload archetype (paper §IV clusters X / Y / Z).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -153,6 +157,12 @@ pub struct SloConfig {
     /// 18-33% headroom over average demand (Figs 9-10); the quantile term
     /// alone underestimates that until ~90 days of errors accumulate.
     pub min_buffer: f64,
+    /// Deadline-miss-rate SLO: a cluster-day whose fraction of missed
+    /// flexible-job deadlines exceeds this counts as a near-violation
+    /// day (alongside the capacity and delay signals). Only meaningful
+    /// for taxonomies with enforced deadlines — the default deadline-less
+    /// class never misses, so this is inert in the default config.
+    pub max_miss_rate: f64,
 }
 
 impl Default for SloConfig {
@@ -163,6 +173,7 @@ impl Default for SloConfig {
             near_fraction: 0.995,
             min_history_days: 21,
             min_buffer: 0.06,
+            max_miss_rate: 0.05,
         }
     }
 }
@@ -174,6 +185,10 @@ pub struct ScenarioConfig {
     pub campuses: Vec<CampusConfig>,
     pub optimizer: OptimizerConfig,
     pub slo: SloConfig,
+    /// Workload-class taxonomy of the flexible tier (shares, deadlines,
+    /// drop policies). The default single deadline-less class reproduces
+    /// the pre-taxonomy system byte-for-byte.
+    pub flex_classes: FlexClasses,
     /// Power domains per cluster.
     pub pds_per_cluster: usize,
     /// Machines per power domain ("a single PD typically has a few
@@ -198,6 +213,7 @@ impl Default for ScenarioConfig {
             }],
             optimizer: OptimizerConfig::default(),
             slo: SloConfig::default(),
+            flex_classes: FlexClasses::default(),
             pds_per_cluster: 4,
             machines_per_pd: 2000,
             history_days: 35,
@@ -256,6 +272,10 @@ impl ScenarioConfig {
             cfg.slo.near_fraction = s.f64_or("near_fraction", cfg.slo.near_fraction);
             cfg.slo.min_history_days = s.usize_or("min_history_days", cfg.slo.min_history_days);
             cfg.slo.min_buffer = s.f64_or("min_buffer", cfg.slo.min_buffer);
+            cfg.slo.max_miss_rate = s.f64_or("max_miss_rate", cfg.slo.max_miss_rate);
+        }
+        if let Some(v) = j.get("flex_classes") {
+            cfg.flex_classes = FlexClasses::from_json(v)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -279,6 +299,11 @@ impl ScenarioConfig {
             "slo_quantile must be in [0.5, 1)"
         );
         crate::ensure!(self.optimizer.gamma > 0.0 && self.optimizer.gamma < 0.5, "gamma");
+        crate::ensure!(
+            (0.0..1.0).contains(&self.slo.max_miss_rate),
+            "slo.max_miss_rate must be in [0, 1)"
+        );
+        self.flex_classes.validate()?;
         for c in &self.campuses {
             crate::ensure!(c.clusters > 0, "campus {} has no clusters", c.name);
         }
@@ -311,6 +336,12 @@ pub struct SweepMatrix {
     /// Fraction of clusters carrying a large flexible share (archetype X);
     /// the remainder are mostly-inflexible (archetype Z).
     pub flex_shares: Vec<f64>,
+    /// Workload-class presets per cell (see [`FlexClasses::preset`]):
+    /// `within-day` (default, legacy semantics), `tight-6h`,
+    /// `multi-day-3d`, `mixed`. A *physical* axis: each preset changes
+    /// the workload itself, so non-default presets derive their own cell
+    /// seeds.
+    pub flex_classes: Vec<String>,
     /// Solver backends per cell: "native", "greedy" or "artifact".
     pub solvers: Vec<String>,
     /// Spatial-shifting variants (on/off) to sweep.
@@ -327,6 +358,7 @@ impl Default for SweepMatrix {
             grids: vec!["FR".into(), "CA".into(), "DE".into(), "PL".into()],
             fleet_sizes: vec![4],
             flex_shares: vec![0.5],
+            flex_classes: vec![classes::DEFAULT_PRESET.into()],
             solvers: vec!["native".into(), "greedy".into()],
             // Both spatial variants by default: the §V extension is part
             // of the paper's headline story, and the four policy variants
@@ -394,6 +426,9 @@ impl SweepMatrix {
         if let Some(v) = axis(&j, "flex_shares", Json::as_f64)? {
             m.flex_shares = v;
         }
+        if let Some(v) = axis(&j, "flex_classes", |v| v.as_str().map(str::to_string))? {
+            m.flex_classes = v;
+        }
         if let Some(v) = axis(&j, "solvers", |v| v.as_str().map(str::to_string))? {
             m.solvers = v;
         }
@@ -414,6 +449,7 @@ impl SweepMatrix {
         crate::ensure!(!self.grids.is_empty(), "sweep matrix: no grids");
         crate::ensure!(!self.fleet_sizes.is_empty(), "sweep matrix: no fleet sizes");
         crate::ensure!(!self.flex_shares.is_empty(), "sweep matrix: no flex shares");
+        crate::ensure!(!self.flex_classes.is_empty(), "sweep matrix: no flex classes");
         crate::ensure!(!self.solvers.is_empty(), "sweep matrix: no solvers");
         crate::ensure!(!self.spatial.is_empty(), "sweep matrix: no spatial variants");
         crate::ensure!(
@@ -432,6 +468,7 @@ impl SweepMatrix {
         self.grids.len()
             * self.fleet_sizes.len()
             * self.flex_shares.len()
+            * self.flex_classes.len()
             * self.solvers.len()
             * self.spatial.len()
     }
@@ -474,6 +511,16 @@ mod tests {
     }
 
     #[test]
+    fn parses_flex_classes_preset_and_rejects_bad_ones() {
+        let cfg = ScenarioConfig::from_json(r#"{"flex_classes": "mixed"}"#).unwrap();
+        assert_eq!(cfg.flex_classes, FlexClasses::preset("mixed").unwrap());
+        assert!(!cfg.flex_classes.is_trivial());
+        assert!(ScenarioConfig::from_json(r#"{"flex_classes": "hourly"}"#).is_err());
+        // default config carries the trivial within-day taxonomy
+        assert!(ScenarioConfig::default().flex_classes.is_trivial());
+    }
+
+    #[test]
     fn rejects_bad_delta_bounds() {
         let bad = r#"{"optimizer": {"delta_min": -2.0}}"#;
         assert!(ScenarioConfig::from_json(bad).is_err());
@@ -486,12 +533,14 @@ mod tests {
         let d = SweepMatrix::default();
         d.validate().unwrap();
         assert_eq!(d.n_cells(), 8); // 4 grids x 2 solvers
+        assert_eq!(d.flex_classes, vec!["within-day".to_string()]);
         let m = SweepMatrix::from_json(
             r#"{
               "seed": 3,
               "grids": ["PL", "FR"],
               "fleet_sizes": [2, 6],
               "flex_shares": [0.25, 0.75],
+              "flex_classes": ["within-day", "mixed"],
               "solvers": ["native"],
               "spatial": [false, true],
               "warmup_days": 22
@@ -501,14 +550,17 @@ mod tests {
         assert_eq!(m.seed, 3);
         assert_eq!(m.grids, vec!["PL".to_string(), "FR".to_string()]);
         assert_eq!(m.fleet_sizes, vec![2, 6]);
+        assert_eq!(m.flex_classes, vec!["within-day".to_string(), "mixed".to_string()]);
         assert_eq!(m.spatial, vec![false, true]);
         assert_eq!(m.warmup_days, 22);
-        assert_eq!(m.n_cells(), 16);
+        assert_eq!(m.n_cells(), 32);
     }
 
     #[test]
     fn sweep_matrix_rejects_bad_axes() {
         assert!(SweepMatrix::from_json(r#"{"grids": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"flex_classes": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"flex_classes": ["mixed", 7]}"#).is_err());
         assert!(SweepMatrix::from_json(r#"{"flex_shares": [1.5]}"#).is_err());
         assert!(SweepMatrix::from_json(r#"{"fleet_sizes": [0]}"#).is_err());
         // malformed entries must fail loudly, not silently shrink the axis

@@ -25,6 +25,7 @@ use crate::runtime::Runtime;
 use crate::scheduler::{ClusterScheduler, DayOutcome, SimEngine};
 use crate::telemetry::{ClusterDayRecord, TelemetryStore};
 use crate::timebase::HOURS_PER_DAY;
+use crate::util::error::Result;
 use crate::vcc::{Rollout, SloGuard, SloState, Vcc};
 use crate::workload::WorkloadModel;
 
@@ -176,8 +177,11 @@ impl Simulation {
             .iter()
             .map(|c| GridZone::new(cfg.seed, c.id as u64, &c.name, c.grid, c.id as f64 * 0.23 % 1.0))
             .collect();
-        let workloads =
-            fleet.clusters.iter().map(|c| WorkloadModel::for_cluster(cfg.seed, c)).collect();
+        let workloads = fleet
+            .clusters
+            .iter()
+            .map(|c| WorkloadModel::for_cluster_in(cfg.seed, c, &cfg.flex_classes))
+            .collect();
         let schedulers = fleet.clusters.iter().map(|c| ClusterScheduler::new(c.id)).collect();
         let forecasters = fleet.clusters.iter().map(|c| LoadForecaster::new(c.id)).collect();
         let slo_states = fleet.clusters.iter().map(|_| SloState::default()).collect();
@@ -348,7 +352,13 @@ impl Simulation {
     }
 
     /// Simulate one full day, then run the day-ahead cycle for tomorrow.
-    pub fn run_day(&mut self) {
+    /// Errors (rather than panicking) if a cluster-day worker failed to
+    /// produce a result. An `Err` poisons the simulation: surviving
+    /// clusters have already advanced their schedulers while `day`,
+    /// metrics and telemetry have not, so callers must treat the error
+    /// as terminal for this `Simulation` (report and drop it), never
+    /// retry the day.
+    pub fn run_day(&mut self) -> Result<()> {
         let day = self.day;
         // ---- 1. real-time day, clusters in parallel ------------------------
         let fleet = &self.fleet;
@@ -357,7 +367,7 @@ impl Simulation {
         let spatial_scale = &self.spatial_scale;
         let seed = self.cfg.seed;
         let engine = self.engine;
-        let results: Vec<(ClusterDayRecord, DayOutcome)> = {
+        let results: Result<Vec<(ClusterDayRecord, DayOutcome)>> = {
             let scheds = &mut self.schedulers;
             let n = scheds.len();
             let threads = self.threads.min(n.max(1));
@@ -395,8 +405,19 @@ impl Simulation {
                     });
                 }
             });
-            out.into_iter().map(|o| o.unwrap()).collect()
+            // A missing slot means a worker thread died before filling
+            // it — surface that as an error instead of aborting the
+            // whole process on an unwrap.
+            out.into_iter()
+                .enumerate()
+                .map(|(cid, o)| {
+                    o.ok_or_else(|| {
+                        crate::err!("cluster {cid} day {day}: real-time worker produced no result")
+                    })
+                })
+                .collect()
         };
+        let results = results?;
 
         // ---- 2. carbon truth, metrics, forecaster + SLO observation --------
         // carbon truth once per campus (weather unrolls an O(day) AR(1)
@@ -432,6 +453,9 @@ impl Simulation {
                 tr_actual,
                 cap_daily,
                 flex_unmet,
+                // deadline-miss-rate SLO (always 0 for the default
+                // deadline-less taxonomy)
+                outcome.miss_rate(),
             );
             self.metrics.record_day(&rec, &outcome, self.today_vccs[cid].as_ref());
             recs.push(rec);
@@ -446,13 +470,15 @@ impl Simulation {
         // ---- 3. day-ahead cycle for tomorrow -------------------------------
         self.plan_next_day();
         self.day += 1;
+        Ok(())
     }
 
     /// Run `n` consecutive days.
-    pub fn run_days(&mut self, n: usize) {
+    pub fn run_days(&mut self, n: usize) -> Result<()> {
         for _ in 0..n {
-            self.run_day();
+            self.run_day()?;
         }
+        Ok(())
     }
 
     /// The day-ahead cycle (Fig 5): produce `today_vccs` for day+1.
@@ -545,7 +571,10 @@ impl Simulation {
             self.spatial_totals.1 += plan.total_saving_kg;
         }
 
-        // Problem assembly.
+        // Problem assembly. The taxonomy's nondeferrable share floors
+        // the optimizer's hourly lower bounds fleet-wide (per-class
+        // daily-capacity preservation; 0 for the default taxonomy).
+        let nondeferrable_share = self.cfg.flex_classes.nondeferrable_share();
         let mut problems: Vec<ClusterProblem> = Vec::new();
         let mut vccs: Vec<Option<Vcc>> = vec![None; n];
         for cid in 0..n {
@@ -595,6 +624,7 @@ impl Simulation {
                 self.cfg.optimizer.lambda_p,
                 self.cfg.optimizer.delta_min,
                 self.cfg.optimizer.delta_max,
+                nondeferrable_share,
             ) {
                 Ok(p) => problems.push(p),
                 Err(cause) => {
@@ -623,14 +653,23 @@ impl Simulation {
                 let backend = self.backend;
                 let solve = |ps: &[ClusterProblem]| -> Vec<ClusterSolution> {
                     match backend {
-                        SolverBackend::Artifact => match runtime.as_ref().unwrap().solve(ps, lambda_e)
-                        {
-                            Ok(s) => s,
-                            Err(e) => {
-                                eprintln!("artifact solve failed ({e:#}); native fallback");
-                                ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
+                        SolverBackend::Artifact => {
+                            // A missing runtime is an error (not a panic):
+                            // it joins the solve-failure fallback below.
+                            let solved = match runtime.as_ref() {
+                                Some(rt) => rt.solve(ps, lambda_e),
+                                None => Err(crate::err!(
+                                    "artifact backend active without a loaded runtime"
+                                )),
+                            };
+                            match solved {
+                                Ok(s) => s,
+                                Err(e) => {
+                                    eprintln!("artifact solve failed ({e:#}); native fallback");
+                                    ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
+                                }
                             }
-                        },
+                        }
                         SolverBackend::Native => {
                             ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
                         }
@@ -707,10 +746,10 @@ mod tests {
     #[test]
     fn warmup_days_run_unshaped_then_shaping_starts() {
         let mut sim = Simulation::new(small_cfg());
-        sim.run_days(10);
+        sim.run_days(10).unwrap();
         // before min history, everything is unshaped
         assert!(sim.unshaped_fraction() > 0.99);
-        sim.run_days(20);
+        sim.run_days(20).unwrap();
         // after warmup most clusters shape (archetype Z may opt out)
         assert!(
             sim.unshaped_fraction() < 0.7,
@@ -723,7 +762,7 @@ mod tests {
     #[test]
     fn shaped_vcc_respects_capacity_and_safety() {
         let mut sim = Simulation::new(small_cfg());
-        sim.run_days(30);
+        sim.run_days(30).unwrap();
         for (cid, v) in sim.today_vccs.iter().enumerate() {
             let v = v.as_ref().unwrap();
             let cap = sim.fleet.clusters[cid].capacity_gcu;
@@ -735,7 +774,7 @@ mod tests {
     fn master_switch_disables_shaping() {
         let mut sim = Simulation::new(small_cfg());
         sim.shaping_enabled = false;
-        sim.run_days(30);
+        sim.run_days(30).unwrap();
         assert!(sim.unshaped_fraction() > 0.99);
     }
 
@@ -743,7 +782,7 @@ mod tests {
     fn treatment_gate_controls_specific_clusters() {
         let mut sim = Simulation::new(small_cfg());
         sim.treatment = Some(Box::new(|cid, _day| cid != 0));
-        sim.run_days(30);
+        sim.run_days(30).unwrap();
         let v0 = sim.today_vccs[0].as_ref().unwrap();
         assert!(!v0.shaped, "cluster 0 must stay untreated");
     }
@@ -758,14 +797,14 @@ mod tests {
             engine,
         };
         let mut uninterrupted = Simulation::with_options(small_cfg(), opts(2, SimEngine::Event));
-        uninterrupted.run_days(8);
+        uninterrupted.run_days(8).unwrap();
         // warm up under the *legacy* engine, resume under the default
         // event engine with a different thread budget: snapshots are
         // engine-agnostic and results must not care about either knob
         let mut warm = Simulation::with_options(small_cfg(), opts(2, SimEngine::Legacy));
-        warm.run_days(5);
+        warm.run_days(5).unwrap();
         let mut resumed = Simulation::resume(warm.snapshot(), opts(1, SimEngine::Event));
-        resumed.run_days(3);
+        resumed.run_days(3).unwrap();
         assert_eq!(uninterrupted.day, resumed.day);
         assert_eq!(uninterrupted.today_vccs, resumed.today_vccs);
         for cid in 0..uninterrupted.fleet.clusters.len() {
@@ -778,9 +817,30 @@ mod tests {
     }
 
     #[test]
+    fn mixed_taxonomy_flows_into_summaries() {
+        let mut cfg = small_cfg();
+        cfg.flex_classes = crate::config::FlexClasses::preset("mixed").unwrap();
+        let mut sim = Simulation::new(cfg);
+        sim.run_days(6).unwrap();
+        for cid in 0..sim.fleet.clusters.len() {
+            for s in sim.metrics.all(cid) {
+                assert_eq!(s.class_stats.len(), 3, "cluster {cid} day {}", s.day);
+            }
+        }
+        let agg = sim.metrics.window_aggregate(0..6);
+        assert_eq!(agg.classes.len(), 3);
+        assert!(agg.classes.iter().all(|c| c.jobs_submitted > 0));
+        // per-class carbon attribution covers the flexible share of the
+        // fleet's carbon: positive, and strictly below the total (the
+        // inflexible tier keeps the rest)
+        let class_kg: f64 = agg.classes.iter().map(|c| c.carbon_kg).sum();
+        assert!(class_kg > 0.0 && class_kg < agg.carbon_kg, "{class_kg} vs {}", agg.carbon_kg);
+    }
+
+    #[test]
     fn metrics_accumulate() {
         let mut sim = Simulation::new(small_cfg());
-        sim.run_days(5);
+        sim.run_days(5).unwrap();
         assert_eq!(sim.metrics.days(0), 5);
         let s = sim.metrics.summary(0, 2).unwrap();
         assert!(s.daily_carbon_kg > 0.0);

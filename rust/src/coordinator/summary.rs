@@ -32,6 +32,10 @@ pub struct DaySummary {
     pub flex_backlog_gcuh: f64,
     pub jobs_paused: usize,
     pub mean_start_delay_ticks: f64,
+    /// Per-workload-class slice of the day, indexed by class (one entry
+    /// for the default taxonomy). A one-day [`ClassAggregate`]; window
+    /// aggregation just [`ClassAggregate::accumulate`]s these.
+    pub class_stats: Vec<ClassAggregate>,
 }
 
 /// Fleetwide metrics store: summaries plus forecast bookkeeping.
@@ -53,13 +57,45 @@ impl FleetMetrics {
 
     pub fn record_day(&mut self, rec: &ClusterDayRecord, out: &DayOutcome, vcc: Option<&Vcc>) {
         let flex_hourly = ClusterDayRecord::hourly(&rec.usage_flex);
+        let if_hourly = rec.hourly_usage_if();
+        let power_hourly = rec.hourly_power();
+        // Per-class carbon attribution: split each hour's carbon by the
+        // class's share of total cluster usage that hour (the class's
+        // integrated hourly usage over one hour equals its mean GCU, so
+        // the ratio against the tier means is unit-consistent).
+        let class_stats = out
+            .classes
+            .iter()
+            .map(|co| {
+                let mut carbon_kg = 0.0;
+                for h in 0..HOURS_PER_DAY {
+                    let total = if_hourly[h] + flex_hourly[h];
+                    if total > 1e-9 {
+                        carbon_kg += power_hourly[h] * rec.carbon_hourly[h]
+                            * (co.usage_hourly[h] / total);
+                    }
+                }
+                ClassAggregate {
+                    jobs_submitted: co.jobs_submitted,
+                    jobs_started: co.jobs_started,
+                    jobs_completed: co.jobs_completed,
+                    jobs_missed: co.jobs_missed,
+                    jobs_dropped: co.jobs_dropped,
+                    submitted_gcuh: co.submitted_gcuh,
+                    completed_gcuh: co.completed_gcuh,
+                    dropped_gcuh: co.dropped_gcuh,
+                    delay_sum_ticks: co.delay_sum_ticks,
+                    carbon_kg,
+                }
+            })
+            .collect();
         let s = DaySummary {
             cluster_id: rec.cluster_id,
             day: rec.day,
             shaped: rec.shaped,
-            hourly_power: rec.hourly_power(),
+            hourly_power: power_hourly,
             hourly_resv: rec.hourly_reservations(),
-            hourly_usage_if: rec.hourly_usage_if(),
+            hourly_usage_if: if_hourly,
             hourly_usage_flex: flex_hourly,
             carbon_intensity: rec.carbon_hourly,
             vcc: vcc.map(|v| v.hourly),
@@ -71,6 +107,7 @@ impl FleetMetrics {
             flex_backlog_gcuh: rec.flex_backlog_gcuh,
             jobs_paused: out.jobs_paused,
             mean_start_delay_ticks: out.mean_start_delay_ticks,
+            class_stats,
         };
         self.per_cluster[rec.cluster_id].push(s);
     }
@@ -130,6 +167,12 @@ impl FleetMetrics {
                 }
                 agg.flex_done_gcuh += s.flex_done_gcuh;
                 agg.flex_submitted_gcuh += s.flex_submitted_gcuh;
+                if agg.classes.len() < s.class_stats.len() {
+                    agg.classes.resize(s.class_stats.len(), ClassAggregate::default());
+                }
+                for (ca, cs) in agg.classes.iter_mut().zip(&s.class_stats) {
+                    ca.accumulate(cs);
+                }
             }
         }
         agg
@@ -178,6 +221,75 @@ pub struct WindowAggregate {
     /// Shaped cluster-days vs all cluster-days in the window.
     pub shaped_cluster_days: usize,
     pub cluster_days: usize,
+    /// Per-workload-class totals over the window, indexed by class.
+    pub classes: Vec<ClassAggregate>,
+}
+
+/// One workload class's totals — over a single cluster-day
+/// ([`DaySummary::class_stats`], built from
+/// [`crate::scheduler::ClassOutcome`] plus carbon attribution) or
+/// accumulated over a fleet-wide day window
+/// ([`WindowAggregate::classes`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassAggregate {
+    pub jobs_submitted: usize,
+    pub jobs_started: usize,
+    pub jobs_completed: usize,
+    pub jobs_missed: usize,
+    pub jobs_dropped: usize,
+    pub submitted_gcuh: f64,
+    pub completed_gcuh: f64,
+    pub dropped_gcuh: f64,
+    /// Sum of admission delays (ticks) — divide by `jobs_started` for
+    /// the class's mean start delay.
+    pub delay_sum_ticks: f64,
+    /// Cluster carbon attributed to this class (kg CO2e): each hour's
+    /// carbon is split across tiers energy-proportionally by usage, and
+    /// this class receives its share of the flexible part.
+    pub carbon_kg: f64,
+}
+
+impl ClassAggregate {
+    /// Fold another aggregate (e.g. one cluster-day's slice) into this.
+    pub fn accumulate(&mut self, other: &ClassAggregate) {
+        self.jobs_submitted += other.jobs_submitted;
+        self.jobs_started += other.jobs_started;
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_missed += other.jobs_missed;
+        self.jobs_dropped += other.jobs_dropped;
+        self.submitted_gcuh += other.submitted_gcuh;
+        self.completed_gcuh += other.completed_gcuh;
+        self.dropped_gcuh += other.dropped_gcuh;
+        self.delay_sum_ticks += other.delay_sum_ticks;
+        self.carbon_kg += other.carbon_kg;
+    }
+
+    /// Fraction of submitted jobs that missed their deadline.
+    pub fn miss_rate(&self) -> f64 {
+        if self.jobs_submitted > 0 {
+            self.jobs_missed as f64 / self.jobs_submitted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean queueing delay per admission event (ticks).
+    pub fn mean_delay_ticks(&self) -> f64 {
+        if self.jobs_started > 0 {
+            self.delay_sum_ticks / self.jobs_started as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed / submitted work (1.0 when nothing was submitted).
+    pub fn completion(&self) -> f64 {
+        if self.submitted_gcuh > 1e-9 {
+            self.completed_gcuh / self.submitted_gcuh
+        } else {
+            1.0
+        }
+    }
 }
 
 impl WindowAggregate {

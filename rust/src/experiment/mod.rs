@@ -7,6 +7,7 @@
 use crate::config::ScenarioConfig;
 use crate::coordinator::Simulation;
 use crate::timebase::HOURS_PER_DAY;
+use crate::util::error::Result;
 use crate::util::rng::Pcg;
 use crate::util::stats;
 
@@ -32,20 +33,24 @@ pub struct ExperimentResult {
 /// Run the Fig 12 experiment: `warmup` unshaped days to mature the
 /// pipelines, then `measure` days with randomized per-cluster-day
 /// treatment. Returns per-arm normalized power curves.
-pub fn run_controlled(cfg: ScenarioConfig, warmup: usize, measure: usize) -> ExperimentResult {
+pub fn run_controlled(
+    cfg: ScenarioConfig,
+    warmup: usize,
+    measure: usize,
+) -> Result<ExperimentResult> {
     let seed = cfg.seed;
     let mut sim = Simulation::new(cfg);
     // Warmup: shaping disabled so the forecasters mature on natural load.
     sim.shaping_enabled = false;
-    sim.run_days(warmup);
+    sim.run_days(warmup)?;
     // Measurement: randomized treatment per (cluster, day).
     sim.shaping_enabled = true;
     sim.treatment = Some(Box::new(move |cid, day| {
         let mut rng = Pcg::keyed(seed, 0x7EA7, cid as u64, day as u64);
         rng.chance(0.5)
     }));
-    sim.run_days(measure);
-    summarize(&sim, warmup + 1, warmup + measure)
+    sim.run_days(measure)?;
+    Ok(summarize(&sim, warmup + 1, warmup + measure))
 }
 
 /// Build the Fig 12 summary from a finished simulation over a day window.
@@ -143,7 +148,7 @@ mod tests {
         cfg.campuses[0].archetype_mix = (1.0, 0.0, 0.0); // all predictable
         cfg.optimizer.iters = 120;
         cfg.optimizer.use_artifact = false;
-        let res = run_controlled(cfg, 25, 14);
+        let res = run_controlled(cfg, 25, 14).unwrap();
         assert!(res.treated_days > 10 && res.control_days > 10);
         // both arms normalized around 1
         let t_mean = stats::mean(&res.treated.iter().map(|x| x.0).collect::<Vec<_>>());

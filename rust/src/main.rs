@@ -79,6 +79,11 @@ fn load_config(args: &Args) -> Result<ScenarioConfig> {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifact_dir = dir.to_string();
     }
+    if let Some(code) = args.get("classes") {
+        cfg.flex_classes = cics::config::FlexClasses::preset(code).ok_or_else(|| {
+            cics::err!("--classes: unknown preset {code:?} (within-day|tight-6h|multi-day-3d|mixed)")
+        })?;
+    }
     Ok(cfg)
 }
 
@@ -106,9 +111,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         engine.name()
     );
     for d in 0..days {
-        sim.run_day();
+        sim.run_day()?;
         if (d + 1) % 10 == 0 || d + 1 == days {
-            let (power, carbon) = sim.metrics.fleet_day(d).unwrap();
+            // report an error instead of aborting if the day left no
+            // telemetry behind (e.g. a degenerate scenario config)
+            let (power, carbon) = sim
+                .metrics
+                .fleet_day(d)
+                .ok_or_else(|| cics::err!("no fleet telemetry recorded for day {d}"))?;
             let total_kw: f64 = power.iter().sum::<f64>() / HOURS_PER_DAY as f64;
             println!(
                 "  day {:>3}: mean fleet power {:>9.1} kW, carbon {:>10.1} kg, unshaped {:>4.1}%",
@@ -144,7 +154,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let warmup = args.usize("warmup", 30);
     let measure = args.usize("measure", 30);
     println!("cics experiment: warmup {warmup} days, measurement {measure} days");
-    let res = experiment::run_controlled(cfg, warmup, measure);
+    let res = experiment::run_controlled(cfg, warmup, measure)?;
     let (chart, rows) = report::experiment_panel(&res);
     println!("{chart}");
     println!(
@@ -167,7 +177,7 @@ fn cmd_pipelines(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let days = args.usize("days", 30);
     let mut sim = Simulation::new(cfg);
-    sim.run_days(days);
+    sim.run_days(days)?;
     println!("intraday pipeline schedule (paper Fig 5, times in PST):");
     println!("  00:05  telemetry day-close: cluster-day records sealed");
     println!("  06:00  power-models pipeline: retrain {} PD models", {
@@ -225,6 +235,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         cfg.optimizer.lambda_p,
         cfg.optimizer.delta_min,
         cfg.optimizer.delta_max,
+        cfg.flex_classes.nondeferrable_share(),
     )
     .map_err(|e| cics::err!("assemble failed: {e:?}"))?;
 
@@ -260,7 +271,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     let out = args.get("out").unwrap_or("reports").to_string();
     let days = args.usize("days", 45);
     let mut sim = Simulation::new(cfg);
-    sim.run_days(days);
+    sim.run_days(days)?;
     // Fig 7 CSVs
     let mut rows = Vec::new();
     for t in cics::forecast::Target::ALL {
@@ -321,6 +332,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(s) = args.get("flex") {
         m.flex_shares = parse_list("flex", s, |x| x.parse().ok())?;
     }
+    if let Some(s) = args.get("classes") {
+        m.flex_classes = parse_list("classes", s, |x| Some(x.to_string()))?;
+    }
     if let Some(s) = args.get("solvers") {
         m.solvers = parse_list("solvers", s, |x| Some(x.to_string()))?;
     }
@@ -339,12 +353,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
 
     println!(
-        "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} solvers x {} spatial), \
-         {} warmup + {} measured days, {} worker threads, {} engine",
+        "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} solvers x \
+         {} spatial), {} warmup + {} measured days, {} worker threads, {} engine",
         m.n_cells(),
         m.grids.len(),
         m.fleet_sizes.len(),
         m.flex_shares.len(),
+        m.flex_classes.len(),
         m.solvers.len(),
         m.spatial.len(),
         m.warmup_days,
@@ -385,14 +400,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
         None => SweepMatrix::default(),
     };
     if args.has("quick") {
-        // CI-sized matrix: one physical scenario, four variants — enough
-        // to exercise grouping, forking and both sharing modes fast.
+        // CI-sized matrix: two physical scenarios (the default taxonomy
+        // and the mixed workload-class preset), four variants each —
+        // enough to exercise grouping, forking, both sharing modes and
+        // the deadline/EDF path fast, and to keep the mixed-class cells
+        // perf-tracked in BENCH_sweep.json.
         m.grids = vec!["PL".into()];
         m.fleet_sizes = vec![2];
         m.flex_shares = vec![1.0];
+        m.flex_classes = vec!["within-day".into(), "mixed".into()];
         m.solvers = vec!["native".into(), "greedy".into()];
         m.spatial = vec![false, true];
         m.warmup_days = 24;
+    }
+    if let Some(s) = args.get("classes") {
+        m.flex_classes = parse_list("classes", s, |x| Some(x.to_string()))?;
     }
     m.warmup_days = args.usize("warmup", m.warmup_days);
     m.validate()?;
@@ -528,8 +550,10 @@ fn main() {
                  usage: cics <simulate|experiment|pipelines|solve|report|sweep|bench> [--days N]\n\
                  \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
                  \u{20}      [--warmup N] [--measure N] [--engine legacy|event]\n\
+                 \u{20}      [--classes within-day|tight-6h|multi-day-3d|mixed]\n\
                  sweep:  [--matrix FILE] [--grids FR,CA,DE,PL] [--fleets 4,8] [--flex 0.3,0.6]\n\
-                 \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
+                 \u{20}      [--classes within-day,mixed] [--solvers native,greedy]\n\
+                 \u{20}      [--spatial off,on] [--threads N]\n\
                  bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
                  \u{20}      [--tick-days N] [--assert-speedup X] [--out DIR]   (times fork vs\n\
                  \u{20}      no-share sweep paths and the legacy-vs-event tick engines, and\n\

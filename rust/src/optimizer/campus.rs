@@ -103,6 +103,7 @@ mod tests {
                     0.05,
                     -1.0,
                     3.0,
+                    0.0,
                 )
                 .unwrap()
             })

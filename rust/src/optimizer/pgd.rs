@@ -159,6 +159,7 @@ mod tests {
             0.25,
             -1.0,
             3.0,
+            0.0,
         )
         .unwrap()
     }

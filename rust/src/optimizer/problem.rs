@@ -54,6 +54,16 @@ pub enum Unshapeable {
 
 /// Assemble a `ClusterProblem` from pipeline outputs, or explain why the
 /// cluster is unshapeable today.
+///
+/// `nondeferrable_share` is the workload-class taxonomy's per-class
+/// daily-capacity preservation constraint
+/// ([`FlexClasses::nondeferrable_share`](crate::config::FlexClasses)):
+/// the fraction of flexible demand that sub-day deadlines pin near its
+/// submission hours. It floors every hourly lower deviation bound at
+/// `-1 + nondeferrable_share`, so the optimizer can never plan away
+/// capacity that deadline-bound work must consume the same hours.
+/// Zero (the default taxonomy) leaves the legacy bound `max(delta_min,
+/// -1)` bit-for-bit intact.
 #[allow(clippy::too_many_arguments)]
 pub fn assemble(
     cluster_id: usize,
@@ -66,6 +76,7 @@ pub fn assemble(
     lambda_p: f64,
     delta_min: f64,
     delta_max: f64,
+    nondeferrable_share: f64,
 ) -> Result<ClusterProblem, Unshapeable> {
     if !fc.mature {
         return Err(Unshapeable::InsufficientData);
@@ -76,6 +87,7 @@ pub fn assemble(
     let mut lo = [0.0; HOURS_PER_DAY];
     let mut ub = [0.0; HOURS_PER_DAY];
     let flex_h = tau / 24.0;
+    let lo_floor = -1.0 + nondeferrable_share.clamp(0.0, 1.0);
     for h in 0..HOURS_PER_DAY {
         // Power-capping chance constraint (paper §III-C):
         //   (U_IF)_{1-gamma}(h) + (1+delta) tau/24 <= U_pow
@@ -84,7 +96,7 @@ pub fn assemble(
         //   (U_IF_hat + (1+delta) tau/24) * R_hat <= C
         let cap_mach = (capacity_gcu / fc.ratio_hat[h] - fc.u_if_hat[h]) / flex_h - 1.0;
         ub[h] = cap_pow.min(cap_mach).min(delta_max);
-        lo[h] = delta_min.max(-1.0);
+        lo[h] = delta_min.max(lo_floor);
         if ub[h] < 0.0 {
             // No headroom this hour even at delta = 0: the cluster cannot
             // honor its nominal flexible rate — fall back to capacity.
@@ -228,7 +240,7 @@ mod tests {
         let fc = toy_forecast(true);
         let p = assemble(
             0, &fc, &[0.5; HOURS_PER_DAY], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0,
-            3.0,
+            3.0, 0.0,
         )
         .unwrap();
         // bounds bracket zero
@@ -243,14 +255,18 @@ mod tests {
     fn immature_and_tiny_flex_rejected() {
         let fc = toy_forecast(false);
         assert_eq!(
-            assemble(0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
-                .unwrap_err(),
+            assemble(
+                0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
+            )
+            .unwrap_err(),
             Unshapeable::InsufficientData
         );
         let fc2 = toy_forecast(true);
         assert_eq!(
-            assemble(0, &fc2, &[0.5; 24], 10.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
-                .unwrap_err(),
+            assemble(
+                0, &fc2, &[0.5; 24], 10.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
+            )
+            .unwrap_err(),
             Unshapeable::NoFlex
         );
     }
@@ -260,17 +276,43 @@ mod tests {
         let mut fc = toy_forecast(true);
         fc.u_if_upper = [3790.0; HOURS_PER_DAY]; // nearly at the power cap
         assert_eq!(
-            assemble(0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0)
-                .unwrap_err(),
+            assemble(
+                0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
+            )
+            .unwrap_err(),
             Unshapeable::NoRoom
         );
+    }
+
+    #[test]
+    fn nondeferrable_share_floors_the_lower_bounds() {
+        let fc = toy_forecast(true);
+        let tight = assemble(
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.25,
+        )
+        .unwrap();
+        for h in 0..HOURS_PER_DAY {
+            assert!((tight.lo[h] - (-0.75)).abs() < 1e-12, "hour {h}: {}", tight.lo[h]);
+        }
+        // a tighter configured delta_min still wins over the floor
+        let min_wins = assemble(
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -0.5, 3.0, 0.25,
+        )
+        .unwrap();
+        assert!(min_wins.lo.iter().all(|&l| (l - (-0.5)).abs() < 1e-12));
+        // share 0 (default taxonomy) reproduces the legacy bound exactly
+        let legacy = assemble(
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
+        )
+        .unwrap();
+        assert!(legacy.lo.iter().all(|&l| l.to_bits() == (-1.0f64).to_bits()));
     }
 
     #[test]
     fn objective_and_solution_consistent() {
         let fc = toy_forecast(true);
         let p = assemble(
-            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0,
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
         )
         .unwrap();
         let delta = [0.0; HOURS_PER_DAY];
@@ -286,7 +328,7 @@ mod tests {
     fn feasibility_checks() {
         let fc = toy_forecast(true);
         let p = assemble(
-            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0,
+            0, &fc, &[0.5; 24], 12000.0, toy_power(), 3800.0, 4000.0, 0.25, -1.0, 3.0, 0.0,
         )
         .unwrap();
         let mut d = [0.0; HOURS_PER_DAY];

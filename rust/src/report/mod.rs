@@ -165,6 +165,7 @@ mod tests {
             flex_backlog_gcuh: 100.0,
             jobs_paused: 2,
             mean_start_delay_ticks: 5.0,
+            class_stats: Vec::new(),
         }
     }
 

@@ -7,7 +7,8 @@
 //! reordering an axis never perturbs the results of pre-existing cells —
 //! sweeps stay comparable across PRs.
 
-use crate::config::{CampusConfig, GridArchetype, ScenarioConfig, SweepMatrix};
+use crate::config::classes::DEFAULT_PRESET;
+use crate::config::{CampusConfig, FlexClasses, GridArchetype, ScenarioConfig, SweepMatrix};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 
@@ -72,6 +73,8 @@ pub struct SweepCell {
     pub grid_code: String,
     pub fleet_size: usize,
     pub flex_share: f64,
+    /// Workload-class preset of the cell (canonical lowercase name).
+    pub classes: String,
     pub solver: SolverChoice,
     pub spatial: bool,
     /// Per-cell seed, derived from the *physical* scenario axes only
@@ -85,18 +88,30 @@ pub struct SweepCell {
 
 /// Derive a well-separated seed from the base seed and the physical
 /// scenario key (exact flex bits — no decimal rounding, no collisions).
-fn cell_seed(base: u64, grid_code: &str, fleet_size: usize, flex_share: f64) -> u64 {
+/// The class preset is a physical axis too (it changes the workload),
+/// but the default `within-day` preset contributes nothing to the hash,
+/// so pre-taxonomy sweeps keep their seeds — and their report bytes.
+fn cell_seed(
+    base: u64,
+    grid_code: &str,
+    fleet_size: usize,
+    flex_share: f64,
+    classes: &str,
+) -> u64 {
     let mut h = grid_code
         .to_ascii_uppercase()
         .bytes()
         .fold(0xC1C5u64, |a, b| splitmix64(a ^ b as u64));
     h = splitmix64(h ^ fleet_size as u64);
     h = splitmix64(h ^ flex_share.to_bits());
+    if classes != DEFAULT_PRESET {
+        h = classes.bytes().fold(h, |a, b| splitmix64(a ^ b as u64));
+    }
     splitmix64(base ^ h)
 }
 
 /// Expand the matrix into cells (cartesian product, fixed axis order:
-/// grids, fleet sizes, flex shares, solvers, spatial).
+/// grids, fleet sizes, flex shares, class presets, solvers, spatial).
 pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
     matrix.validate()?;
     let mut cells = Vec::with_capacity(matrix.n_cells());
@@ -105,50 +120,73 @@ pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
             .ok_or_else(|| crate::err!("unknown grid preset {grid_code:?}"))?;
         for &fleet_size in &matrix.fleet_sizes {
             for &flex_share in &matrix.flex_shares {
-                for solver_name in &matrix.solvers {
-                    let solver = SolverChoice::parse(solver_name)
-                        .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
-                    for &spatial in &matrix.spatial {
-                        let label = format!(
-                            "{} f{} x{} {} sp-{}",
-                            grid_code.to_ascii_uppercase(),
-                            fleet_size,
-                            flex_share,
-                            solver.name(),
-                            if spatial { "on" } else { "off" }
-                        );
-                        let seed =
-                            cell_seed(matrix.seed, grid_code, fleet_size, flex_share);
-                        let mut cfg = ScenarioConfig {
-                            seed,
-                            campuses: vec![CampusConfig {
-                                name: format!("sweep-{}", grid_code.to_ascii_lowercase()),
-                                grid,
-                                clusters: fleet_size,
-                                contract_limit_kw: f64::INFINITY,
-                                // flex_share of clusters are archetype X
-                                // (large flexible share); the rest are Z.
-                                archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
-                            }],
-                            ..ScenarioConfig::default()
-                        };
-                        // Sweeps run many scenarios: trimmed solver budget
-                        // (quality plateaus well before 400 iterations —
-                        // see the optimizer_hotpath ablation) and no
-                        // artifact probing unless the cell asks for it.
-                        cfg.optimizer.iters = 200;
-                        cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
-                        cells.push(SweepCell {
-                            index: cells.len(),
-                            label,
-                            grid_code: grid_code.to_ascii_uppercase(),
-                            fleet_size,
-                            flex_share,
-                            solver,
-                            spatial,
-                            seed,
-                            cfg,
-                        });
+                for classes_code in &matrix.flex_classes {
+                    let classes_code = classes_code.to_ascii_lowercase();
+                    let flex_classes = FlexClasses::preset(&classes_code).ok_or_else(|| {
+                        crate::err!("unknown flex_classes preset {classes_code:?}")
+                    })?;
+                    // The default preset stays invisible in labels (and
+                    // in seeds), so pre-taxonomy sweep reports keep
+                    // their exact bytes.
+                    let class_tag = if classes_code == DEFAULT_PRESET {
+                        String::new()
+                    } else {
+                        format!("{classes_code} ")
+                    };
+                    for solver_name in &matrix.solvers {
+                        let solver = SolverChoice::parse(solver_name)
+                            .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
+                        for &spatial in &matrix.spatial {
+                            let label = format!(
+                                "{} f{} x{} {}{} sp-{}",
+                                grid_code.to_ascii_uppercase(),
+                                fleet_size,
+                                flex_share,
+                                class_tag,
+                                solver.name(),
+                                if spatial { "on" } else { "off" }
+                            );
+                            let seed = cell_seed(
+                                matrix.seed,
+                                grid_code,
+                                fleet_size,
+                                flex_share,
+                                &classes_code,
+                            );
+                            let mut cfg = ScenarioConfig {
+                                seed,
+                                campuses: vec![CampusConfig {
+                                    name: format!("sweep-{}", grid_code.to_ascii_lowercase()),
+                                    grid,
+                                    clusters: fleet_size,
+                                    contract_limit_kw: f64::INFINITY,
+                                    // flex_share of clusters are archetype X
+                                    // (large flexible share); the rest are Z.
+                                    archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
+                                }],
+                                flex_classes: flex_classes.clone(),
+                                ..ScenarioConfig::default()
+                            };
+                            // Sweeps run many scenarios: trimmed solver
+                            // budget (quality plateaus well before 400
+                            // iterations — see the optimizer_hotpath
+                            // ablation) and no artifact probing unless
+                            // the cell asks for it.
+                            cfg.optimizer.iters = 200;
+                            cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
+                            cells.push(SweepCell {
+                                index: cells.len(),
+                                label,
+                                grid_code: grid_code.to_ascii_uppercase(),
+                                fleet_size,
+                                flex_share,
+                                classes: classes_code.clone(),
+                                solver,
+                                spatial,
+                                seed,
+                                cfg,
+                            });
+                        }
                     }
                 }
             }
@@ -223,6 +261,38 @@ mod tests {
         assert_eq!(cells.len(), 2);
         assert_ne!(cells[0].label, cells[1].label);
         assert_ne!(cells[0].seed, cells[1].seed);
+    }
+
+    #[test]
+    fn class_presets_are_a_physical_axis() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
+        m.flex_classes = vec!["within-day".into(), "mixed".into(), "tight-6h".into()];
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 3);
+        // the default preset keeps the pre-taxonomy label and seed shape
+        assert_eq!(cells[0].classes, "within-day");
+        assert_eq!(cells[0].label, "PL f4 x0.5 native sp-off");
+        assert!(cells[0].cfg.flex_classes.is_trivial());
+        // non-default presets are class-tagged and get their own seeds
+        assert_eq!(cells[1].label, "PL f4 x0.5 mixed native sp-off");
+        assert_eq!(cells[2].label, "PL f4 x0.5 tight-6h native sp-off");
+        assert!(!cells[1].cfg.flex_classes.is_trivial());
+        assert_eq!(cells[1].cfg.flex_classes.len(), 3);
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_ne!(cells[0].seed, cells[2].seed);
+        assert_ne!(cells[1].seed, cells[2].seed);
+        // the cell seed is what the scenario simulates
+        for c in &cells {
+            assert_eq!(c.seed, c.cfg.seed);
+            c.cfg.validate().unwrap();
+        }
+        // unknown presets fail loudly
+        let mut bad = SweepMatrix::default();
+        bad.flex_classes = vec!["hourly".into()];
+        assert!(expand(&bad).is_err());
     }
 
     #[test]

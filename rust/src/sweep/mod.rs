@@ -8,7 +8,8 @@
 //!
 //! 1. a declarative [`SweepMatrix`](crate::config::SweepMatrix) names the
 //!    axes (grid-mix presets à la FR/CA/DE/PL, fleet size, flexible-demand
-//!    share, solver backend, spatial shifting on/off);
+//!    share, workload-class preset — deadline/flexibility windows à la
+//!    "Let's Wait Awhile" — solver backend, spatial shifting on/off);
 //! 2. [`matrix::expand`] takes the cartesian product into [`SweepCell`]s
 //!    with deterministic per-cell seeds (derived from axis values, not
 //!    position);
@@ -136,6 +137,8 @@ pub fn run_sweep_engine(
             threadpool::parallel_map_dyn(groups.len(), threads, |g| {
                 warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)
             })
+            .into_iter()
+            .collect::<Result<_>>()?
         }
         WarmupSharing::PerCell => Vec::new(),
     };
@@ -145,16 +148,19 @@ pub fn run_sweep_engine(
     let units = plan_units(&groups);
     let t_units = std::time::Instant::now();
     let inner = inner_for(units.len());
-    let outcomes: Vec<UnitOutcome> = threadpool::parallel_map_dyn(units.len(), threads, |u| {
-        let (g, cell_idx) = units[u];
-        let snap = match sharing {
-            WarmupSharing::Fork => snaps[g].clone(),
-            WarmupSharing::PerCell => {
-                warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)
-            }
-        };
-        run_fork_unit(snap, cell_idx.map(|i| &cells[i]), warmup, measure_days, inner, engine)
-    });
+    let outcomes: Vec<UnitOutcome> =
+        threadpool::parallel_map_dyn(units.len(), threads, |u| -> Result<UnitOutcome> {
+            let (g, cell_idx) = units[u];
+            let snap = match sharing {
+                WarmupSharing::Fork => snaps[g].clone(),
+                WarmupSharing::PerCell => {
+                    warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)?
+                }
+            };
+            run_fork_unit(snap, cell_idx.map(|i| &cells[i]), warmup, measure_days, inner, engine)
+        })
+        .into_iter()
+        .collect::<Result<_>>()?;
     let units_s = t_units.elapsed().as_secs_f64();
 
     // ---- assemble: one report row per cell against its group baseline
@@ -233,7 +239,7 @@ fn warmup_snapshot(
     warmup_days: usize,
     inner_threads: usize,
     engine: SimEngine,
-) -> SimSnapshot {
+) -> Result<SimSnapshot> {
     let mut sim = Simulation::with_options(
         rep.cfg.clone(),
         SimOptions {
@@ -244,8 +250,8 @@ fn warmup_snapshot(
             engine,
         },
     );
-    sim.run_days(warmup_days);
-    sim.snapshot()
+    sim.run_days(warmup_days)?;
+    Ok(sim.snapshot())
 }
 
 /// What a fork unit produced.
@@ -271,7 +277,7 @@ fn run_fork_unit(
     measure_days: usize,
     inner_threads: usize,
     engine: SimEngine,
-) -> UnitOutcome {
+) -> Result<UnitOutcome> {
     let opts = match cell {
         None => SimOptions {
             backend: Some(SolverBackend::Native),
@@ -293,16 +299,16 @@ fn run_fork_unit(
         },
     };
     let mut sim = Simulation::resume(snap, opts);
-    sim.run_days(measure_days);
+    sim.run_days(measure_days)?;
     let window = warmup_days..warmup_days + measure_days;
-    match cell {
+    Ok(match cell {
         None => UnitOutcome::Baseline(sim.metrics.window_aggregate(window)),
         Some(_) => UnitOutcome::Shaped(ShapedOutcome {
             agg: sim.metrics.window_aggregate(window),
             slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
             spatial_moved_gcuh: sim.spatial_totals.0,
         }),
-    }
+    })
 }
 
 fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> CellReport {
@@ -313,6 +319,32 @@ fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> Cell
             0.0
         }
     };
+    // Per-class columns only for non-trivial taxonomies: the default
+    // within-day preset keeps the pre-taxonomy report bytes.
+    let classes = if cell.cfg.flex_classes.is_trivial() {
+        Vec::new()
+    } else {
+        cell.cfg
+            .flex_classes
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let shaped = s.agg.classes.get(i).cloned().unwrap_or_default();
+                let baseline = b.classes.get(i).cloned().unwrap_or_default();
+                report::ClassCellReport {
+                    name: spec.name.clone(),
+                    submitted_gcuh: shaped.submitted_gcuh,
+                    completion: shaped.completion(),
+                    miss_rate: shaped.miss_rate(),
+                    miss_rate_baseline: baseline.miss_rate(),
+                    jobs_dropped: shaped.jobs_dropped,
+                    mean_delay_ticks: shaped.mean_delay_ticks(),
+                    carbon_kg: shaped.carbon_kg,
+                    carbon_baseline_kg: baseline.carbon_kg,
+                }
+            })
+            .collect()
+    };
     CellReport {
         index: cell.index,
         label: cell.label.clone(),
@@ -322,6 +354,7 @@ fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> Cell
         solver: cell.solver.name().to_string(),
         spatial: cell.spatial,
         seed: cell.seed,
+        classes,
         carbon_baseline_kg: b.carbon_kg,
         carbon_shaped_kg: s.agg.carbon_kg,
         carbon_saved_pct: pct(b.carbon_kg, s.agg.carbon_kg),
@@ -377,7 +410,7 @@ pub fn bench_tick_engines(matrix: &SweepMatrix, days: usize) -> Result<TickEngin
             let models: Vec<WorkloadModel> = fleet
                 .clusters
                 .iter()
-                .map(|c| WorkloadModel::for_cluster(cfg.seed, c))
+                .map(|c| WorkloadModel::for_cluster_in(cfg.seed, c, &cfg.flex_classes))
                 .collect();
             let mut scheds: Vec<ClusterScheduler> =
                 fleet.clusters.iter().map(|c| ClusterScheduler::new(c.id)).collect();
@@ -452,6 +485,39 @@ mod tests {
         let json = rep.to_json().to_string();
         assert!(json.contains("cics-sweep-v1"));
         assert!(rep.ascii_table().contains("PL f2 x1 native sp-off"));
+        // default taxonomy: no per-class columns, exactly the
+        // pre-taxonomy document shape
+        assert!(c.classes.is_empty());
+        assert!(!json.contains("\"classes\""));
+    }
+
+    /// The `mixed` class preset runs end-to-end and surfaces per-class
+    /// miss-rate/carbon columns in both report formats.
+    #[test]
+    fn mixed_class_cells_report_per_class_columns() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            flex_classes: vec!["mixed".into()],
+            solvers: vec!["native".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let rep = run_sweep(&m, 3, 2).unwrap();
+        assert_eq!(rep.cells.len(), 1);
+        let c = &rep.cells[0];
+        assert!(c.label.contains("mixed"), "label {}", c.label);
+        assert_eq!(c.classes.len(), 3);
+        assert!(c.classes.iter().any(|cc| cc.name == "tight-6h"));
+        assert!(c.classes.iter().all(|cc| cc.submitted_gcuh > 0.0));
+        assert!(c.classes.iter().all(|cc| (0.0..=1.0).contains(&cc.miss_rate)));
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"classes\""));
+        assert!(json.contains("\"miss_rate\""));
+        assert!(json.contains("\"carbon_kg\""));
+        assert!(rep.ascii_table().contains("tight-6h"));
     }
 
     /// The fork path and the warmup-per-cell path are the same semantics

@@ -39,6 +39,47 @@ pub struct CellReport {
     pub shaped_fraction: f64,
     /// Spatially moved flexible work (GCU-h; 0 with spatial off).
     pub spatial_moved_gcuh: f64,
+    /// Per-workload-class columns (shaped run, baseline where noted).
+    /// Empty for the trivial within-day taxonomy — default cells emit
+    /// exactly the pre-taxonomy document, byte for byte.
+    pub classes: Vec<ClassCellReport>,
+}
+
+/// One workload class's columns in a cell report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassCellReport {
+    pub name: String,
+    /// Work submitted as this class over the window (GCU-h, shaped run).
+    pub submitted_gcuh: f64,
+    /// Completed / submitted work of the class (shaped run).
+    pub completion: f64,
+    /// Deadline misses / submitted jobs (shaped run vs unshaped baseline
+    /// — the carbon/deadline tension readout).
+    pub miss_rate: f64,
+    pub miss_rate_baseline: f64,
+    /// Missed jobs dropped from the queue (drop-on-miss classes).
+    pub jobs_dropped: usize,
+    /// Mean queueing delay per admission event (ticks, shaped run).
+    pub mean_delay_ticks: f64,
+    /// Carbon attributed to the class (kg CO2e), shaped vs baseline.
+    pub carbon_kg: f64,
+    pub carbon_baseline_kg: f64,
+}
+
+impl ClassCellReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("submitted_gcuh", Json::Num(round(self.submitted_gcuh, 3))),
+            ("completion", Json::Num(round(self.completion, 6))),
+            ("miss_rate", Json::Num(round(self.miss_rate, 6))),
+            ("miss_rate_baseline", Json::Num(round(self.miss_rate_baseline, 6))),
+            ("jobs_dropped", Json::Num(self.jobs_dropped as f64)),
+            ("mean_delay_ticks", Json::Num(round(self.mean_delay_ticks, 3))),
+            ("carbon_kg", Json::Num(round(self.carbon_kg, 3))),
+            ("carbon_baseline_kg", Json::Num(round(self.carbon_baseline_kg, 3))),
+        ])
+    }
 }
 
 /// Round to `digits` decimals — keeps the emitted JSON tidy without
@@ -50,7 +91,7 @@ fn round(x: f64, digits: i32) -> f64 {
 
 impl CellReport {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("index", Json::Num(self.index as f64)),
             ("label", Json::Str(self.label.clone())),
             ("grid", Json::Str(self.grid.clone())),
@@ -71,7 +112,17 @@ impl CellReport {
             ("flex_completion", Json::Num(round(self.flex_completion, 6))),
             ("shaped_fraction", Json::Num(round(self.shaped_fraction, 6))),
             ("spatial_moved_gcuh", Json::Num(round(self.spatial_moved_gcuh, 3))),
-        ])
+        ];
+        // Only non-trivial taxonomies carry the key at all, so default
+        // cells serialize to the exact pre-taxonomy bytes (object keys
+        // are BTreeMap-sorted, so position here is irrelevant).
+        if !self.classes.is_empty() {
+            fields.push((
+                "classes",
+                Json::Arr(self.classes.iter().map(ClassCellReport::to_json).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -135,6 +186,32 @@ impl SweepReport {
                 best.label, best.carbon_saved_pct, self.measure_days
             ));
         }
+        // Per-class block (only cells with a non-trivial taxonomy emit
+        // rows, so the default report is byte-identical to pre-taxonomy
+        // output).
+        if self.cells.iter().any(|c| !c.classes.is_empty()) {
+            out.push('\n');
+            out.push_str(&format!(
+                "{:<28} {:<14} {:>10} {:>7} {:>9} {:>7} {:>10} {:>10}\n",
+                "cell", "class", "gcuh", "done%", "miss%", "drops", "delay(t)", "kg"
+            ));
+            out.push_str(&format!("{}\n", "-".repeat(103)));
+            for c in &self.cells {
+                for cc in &c.classes {
+                    out.push_str(&format!(
+                        "{:<28} {:<14} {:>10.0} {:>6.1}% {:>8.2}% {:>7} {:>10.1} {:>10.1}\n",
+                        c.label,
+                        cc.name,
+                        cc.submitted_gcuh,
+                        100.0 * cc.completion,
+                        100.0 * cc.miss_rate,
+                        cc.jobs_dropped,
+                        cc.mean_delay_ticks,
+                        cc.carbon_kg,
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -163,6 +240,7 @@ mod tests {
             flex_completion: 0.97,
             shaped_fraction: 0.8,
             spatial_moved_gcuh: 0.0,
+            classes: Vec::new(),
         }
     }
 
@@ -187,6 +265,41 @@ mod tests {
         assert!(t.contains("best cell"));
         assert!(t.contains("3.25% carbon saved"));
         assert_eq!(rep.best_cell().unwrap().index, 1);
+    }
+
+    #[test]
+    fn class_columns_only_appear_for_tagged_cells() {
+        let plain = SweepReport::new(25, 10, vec![toy_cell(0, 1.0)]);
+        let plain_json = plain.to_json().to_string();
+        assert!(!plain_json.contains("\"classes\""));
+        assert!(!plain.ascii_table().contains("miss%"));
+
+        let mut tagged_cell = toy_cell(1, 2.0);
+        tagged_cell.classes = vec![ClassCellReport {
+            name: "tight-6h".into(),
+            submitted_gcuh: 500.0,
+            completion: 0.9,
+            miss_rate: 0.125,
+            miss_rate_baseline: 0.05,
+            jobs_dropped: 7,
+            mean_delay_ticks: 3.5,
+            carbon_kg: 42.0,
+            carbon_baseline_kg: 45.0,
+        }];
+        let tagged = SweepReport::new(25, 10, vec![toy_cell(0, 1.0), tagged_cell]);
+        let json = tagged.to_json().to_string();
+        assert!(json.contains("\"classes\""));
+        assert!(json.contains("\"miss_rate\":0.125"));
+        let table = tagged.ascii_table();
+        assert!(table.contains("tight-6h"));
+        assert!(table.contains("miss%"));
+        // round-trip: the class array parses back
+        let parsed = Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("classes").is_none());
+        let classes = cells[1].get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].str_or("name", ""), "tight-6h");
     }
 
     #[test]

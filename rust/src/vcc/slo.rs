@@ -104,7 +104,15 @@ impl SloGuard {
     /// `tr_hat`/`tr_actual`: predicted and measured total daily
     /// reservations (GCU-h); `cap_daily`: the pushed curve's daily total;
     /// `flex_unmet`: flexible work submitted but neither completed nor
-    /// carried with headroom (backlog beyond one day's tolerance).
+    /// carried with headroom (backlog beyond one day's tolerance);
+    /// `miss_rate`: fraction of the day's submitted flexible jobs that
+    /// missed their class deadline — the deadline-miss-rate SLO. A day
+    /// above `cfg.max_miss_rate` counts as a near-violation alongside
+    /// the capacity and backlog signals (the guard's response — pause
+    /// shaping, run at machine capacity — is also the right first aid
+    /// for deadline pressure). Always 0 for the default deadline-less
+    /// taxonomy, so the legacy trigger behaviour is unchanged.
+    #[allow(clippy::too_many_arguments)]
     pub fn observe_day(
         &self,
         state: &mut SloState,
@@ -113,6 +121,7 @@ impl SloGuard {
         tr_actual: f64,
         cap_daily: f64,
         flex_unmet: bool,
+        miss_rate: f64,
     ) {
         if tr_hat > 1e-9 {
             state.tr_rel_errors.push((tr_actual - tr_hat) / tr_hat);
@@ -121,7 +130,8 @@ impl SloGuard {
             }
         }
         let near_cap = tr_actual >= self.cfg.near_fraction * cap_daily;
-        if near_cap || flex_unmet {
+        let missed = miss_rate > self.cfg.max_miss_rate;
+        if near_cap || flex_unmet || missed {
             state.near_violation_streak += 1;
         } else {
             state.near_violation_streak = 0;
@@ -195,10 +205,10 @@ mod tests {
     fn two_day_trigger_pauses_a_week() {
         let g = guard();
         let mut s = SloState::default();
-        g.observe_day(&mut s, 10, 1000.0, 999.0, 1000.0, false); // near cap
+        g.observe_day(&mut s, 10, 1000.0, 999.0, 1000.0, false, 0.0); // near cap
         assert_eq!(s.near_violation_streak, 1);
         assert!(g.shaping_allowed(&s, 11, 100));
-        g.observe_day(&mut s, 11, 1000.0, 1000.0, 1000.0, false); // 2nd day
+        g.observe_day(&mut s, 11, 1000.0, 1000.0, 1000.0, false, 0.0); // 2nd day
         assert_eq!(s.pauses_triggered, 1);
         assert!(!g.shaping_allowed(&s, 12, 100));
         assert!(!g.shaping_allowed(&s, 18, 100));
@@ -209,9 +219,9 @@ mod tests {
     fn streak_resets_on_clean_day() {
         let g = guard();
         let mut s = SloState::default();
-        g.observe_day(&mut s, 1, 1000.0, 995.0, 1000.0, false);
-        g.observe_day(&mut s, 2, 1000.0, 700.0, 1000.0, false); // clean
-        g.observe_day(&mut s, 3, 1000.0, 995.0, 1000.0, false);
+        g.observe_day(&mut s, 1, 1000.0, 995.0, 1000.0, false, 0.0);
+        g.observe_day(&mut s, 2, 1000.0, 700.0, 1000.0, false, 0.0); // clean
+        g.observe_day(&mut s, 3, 1000.0, 995.0, 1000.0, false, 0.0);
         assert_eq!(s.pauses_triggered, 0);
     }
 
@@ -219,9 +229,26 @@ mod tests {
     fn flex_unmet_counts_toward_trigger() {
         let g = guard();
         let mut s = SloState::default();
-        g.observe_day(&mut s, 1, 1000.0, 500.0, 1000.0, true);
-        g.observe_day(&mut s, 2, 1000.0, 500.0, 1000.0, true);
+        g.observe_day(&mut s, 1, 1000.0, 500.0, 1000.0, true, 0.0);
+        g.observe_day(&mut s, 2, 1000.0, 500.0, 1000.0, true, 0.0);
         assert_eq!(s.pauses_triggered, 1);
+    }
+
+    #[test]
+    fn miss_rate_counts_toward_trigger() {
+        // The deadline-miss-rate SLO: sustained miss rates above
+        // max_miss_rate pause shaping like any other near-violation.
+        let g = guard();
+        let mut s = SloState::default();
+        let high = g.cfg.max_miss_rate + 0.01;
+        g.observe_day(&mut s, 1, 1000.0, 500.0, 5000.0, false, high);
+        assert_eq!(s.near_violation_streak, 1);
+        g.observe_day(&mut s, 2, 1000.0, 500.0, 5000.0, false, high);
+        assert_eq!(s.pauses_triggered, 1);
+        // at or below the threshold is a clean day
+        let mut s2 = SloState::default();
+        g.observe_day(&mut s2, 1, 1000.0, 500.0, 5000.0, false, g.cfg.max_miss_rate);
+        assert_eq!(s2.near_violation_streak, 0);
     }
 
     #[test]
@@ -237,7 +264,7 @@ mod tests {
         let g = guard();
         let mut s = SloState::default();
         for d in 0..200 {
-            g.observe_day(&mut s, d, 1000.0, 1000.0 + d as f64, 5000.0, false);
+            g.observe_day(&mut s, d, 1000.0, 1000.0 + d as f64, 5000.0, false, 0.0);
         }
         assert_eq!(s.tr_rel_errors.len(), 90);
         // oldest retained error corresponds to day 110

@@ -2,12 +2,17 @@
 
 use crate::timebase::{SimTime, TICKS_PER_HOUR};
 
-/// One temporally-flexible batch job. Tolerates queueing delay as long as
-/// its work completes within ~24h of submission (paper §I).
+/// One temporally-flexible batch job. Tolerates queueing delay within its
+/// class's flexibility window: the legacy "within ~24h of submission"
+/// assumption (paper §I) is the deadline-less default class; classes with
+/// enforced deadlines carry an absolute completion deadline tick.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FlexJob {
     pub id: u64,
     pub cluster_id: usize,
+    /// Workload-class index into the scenario's
+    /// [`FlexClasses`](crate::config::FlexClasses) taxonomy.
+    pub class: usize,
     /// Actual CPU usage while running (GCU).
     pub demand_gcu: f64,
     /// Scheduler reservation (>= demand; the "usage upper bound" of §II-B).
@@ -17,6 +22,13 @@ pub struct FlexJob {
     pub submit: SimTime,
     /// Ticks of work left (decremented while running).
     pub remaining_ticks: usize,
+    /// Absolute tick by which the job must complete; `None` = the legacy
+    /// deadline-less class (never enforced, sorts last under EDF).
+    pub deadline: Option<usize>,
+    /// Whether this job's deadline miss has already been counted (misses
+    /// are detected lazily at the admission window and must be counted
+    /// exactly once for best-effort classes that stay queued).
+    pub missed: bool,
 }
 
 impl FlexJob {
@@ -26,24 +38,31 @@ impl FlexJob {
     /// into "scan to hour 0"), and a job that does no work has no reason
     /// to exist. All job construction funnels through here so the
     /// invariant holds everywhere (`scheduler::ClusterScheduler`
-    /// asserts it in the cap helper).
+    /// asserts it in the cap helper). `deadline_ticks` is relative to
+    /// submission and becomes the absolute completion deadline.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: u64,
         cluster_id: usize,
+        class: usize,
         demand_gcu: f64,
         reservation_gcu: f64,
         duration_ticks: usize,
         submit: SimTime,
+        deadline_ticks: Option<usize>,
     ) -> FlexJob {
         let duration_ticks = duration_ticks.max(1);
         FlexJob {
             id,
             cluster_id,
+            class,
             demand_gcu,
             reservation_gcu,
             duration_ticks,
             submit,
             remaining_ticks: duration_ticks,
+            deadline: deadline_ticks.map(|d| submit.abs_tick() + d),
+            missed: false,
         }
     }
 
@@ -61,6 +80,24 @@ impl FlexJob {
     pub fn delay_ticks(&self, start: SimTime) -> usize {
         start.abs_tick().saturating_sub(self.submit.abs_tick())
     }
+
+    /// Deadline sort key for the EDF admission pass: enforced deadlines
+    /// sort ascending, deadline-less jobs sort last (and therefore keep
+    /// pure FIFO order among themselves — the legacy admission order).
+    #[inline]
+    pub fn deadline_key(&self) -> usize {
+        self.deadline.unwrap_or(usize::MAX)
+    }
+
+    /// Would a start at absolute tick `now` complete past the deadline?
+    /// (A job admitted at `now` finishes at `now + remaining_ticks`.)
+    #[inline]
+    pub fn misses_deadline_at(&self, now: usize) -> bool {
+        match self.deadline {
+            Some(d) => now.saturating_add(self.remaining_ticks) > d,
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -71,11 +108,14 @@ mod tests {
         FlexJob {
             id: 1,
             cluster_id: 0,
+            class: 0,
             demand_gcu: 24.0,
             reservation_gcu: 30.0,
             duration_ticks: 36, // 3 hours
             submit: SimTime::new(1, 100),
             remaining_ticks: 36,
+            deadline: None,
+            missed: false,
         }
     }
 
@@ -98,11 +138,26 @@ mod tests {
 
     #[test]
     fn constructor_clamps_zero_duration() {
-        let j = FlexJob::new(7, 0, 10.0, 12.0, 0, SimTime::new(0, 0));
+        let j = FlexJob::new(7, 0, 0, 10.0, 12.0, 0, SimTime::new(0, 0), None);
         assert_eq!(j.duration_ticks, 1);
         assert_eq!(j.remaining_ticks, 1);
-        let j = FlexJob::new(8, 0, 10.0, 12.0, 36, SimTime::new(0, 0));
+        let j = FlexJob::new(8, 0, 0, 10.0, 12.0, 36, SimTime::new(0, 0), None);
         assert_eq!(j.duration_ticks, 36);
         assert_eq!(j.remaining_ticks, 36);
+    }
+
+    #[test]
+    fn deadline_is_absolute_and_detects_misses() {
+        // submitted day 1 tick 100 (abs 388) with a 72-tick window
+        let j = FlexJob::new(9, 0, 1, 10.0, 12.0, 24, SimTime::new(1, 100), Some(72));
+        assert_eq!(j.deadline, Some(388 + 72));
+        assert_eq!(j.deadline_key(), 460);
+        // starting at abs 436 completes exactly at the deadline: no miss
+        assert!(!j.misses_deadline_at(436));
+        assert!(j.misses_deadline_at(437));
+        // deadline-less jobs never miss and sort last
+        let free = job();
+        assert!(!free.misses_deadline_at(usize::MAX - 100));
+        assert_eq!(free.deadline_key(), usize::MAX);
     }
 }

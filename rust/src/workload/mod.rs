@@ -14,7 +14,7 @@
 
 pub mod job;
 
-use crate::config::Archetype;
+use crate::config::{Archetype, FlexClasses};
 use crate::fleet::Cluster;
 use crate::timebase::{SimTime, HOURS_PER_DAY, TICKS_PER_DAY, TICKS_PER_HOUR};
 use crate::util::rng::Pcg;
@@ -57,11 +57,24 @@ pub struct WorkloadModel {
     pub job_ticks_sigma: f64,
     /// Cluster capacity (GCU), copied from the fleet.
     pub capacity_gcu: f64,
+    /// Workload-class taxonomy of the flexible tier. Each class draws
+    /// its `share` of the daily flexible demand from its own keyed RNG
+    /// stream; class 0's stream is exactly the pre-taxonomy stream, so
+    /// the default single-class taxonomy generates bit-identical jobs.
+    pub classes: FlexClasses,
 }
 
 impl WorkloadModel {
-    /// Archetype-calibrated model for a cluster.
+    /// Archetype-calibrated model for a cluster, with the default
+    /// (single within-day class) taxonomy.
     pub fn for_cluster(seed: u64, cluster: &Cluster) -> WorkloadModel {
+        WorkloadModel::for_cluster_in(seed, cluster, &FlexClasses::default())
+    }
+
+    /// [`for_cluster`](Self::for_cluster) with an explicit workload-class
+    /// taxonomy — the constructor the coordinator uses to thread
+    /// `ScenarioConfig::flex_classes` into job generation.
+    pub fn for_cluster_in(seed: u64, cluster: &Cluster, classes: &FlexClasses) -> WorkloadModel {
         let mut rng = Pcg::keyed(seed, 0x30B5, cluster.id as u64, 0);
         let base = WorkloadModel {
             cluster_id: cluster.id,
@@ -82,6 +95,7 @@ impl WorkloadModel {
             job_ticks_median: rng.uniform(18.0, 30.0),
             job_ticks_sigma: 0.6,
             capacity_gcu: cluster.capacity_gcu,
+            classes: classes.clone(),
         };
         match cluster.archetype {
             // X: large, *predictable* flexible share.
@@ -198,7 +212,9 @@ impl WorkloadModel {
 
     /// Arrivals with the demand rate scaled by `scale` — the hook the
     /// spatial-shifting extension uses to realize cross-campus transfers
-    /// (donor clusters submit less, receivers more, next day).
+    /// (donor clusters submit less, receivers more, next day). Classes
+    /// draw in taxonomy order within the tick, each from its own keyed
+    /// stream, so ids are consumed class-by-class deterministically.
     pub fn flex_arrivals_scaled(
         &self,
         t: SimTime,
@@ -206,46 +222,72 @@ impl WorkloadModel {
         scale: f64,
     ) -> Vec<FlexJob> {
         let daily = self.flex_daily_demand(t.day) * scale;
-        let jobs_per_day = daily / self.mean_job_work();
-        let rate = jobs_per_day / TICKS_PER_DAY as f64 * self.submit_profile(t.hour());
+        let mjw = self.mean_job_work();
         let mut out = Vec::new();
-        self.draw_tick_arrivals(t, rate, next_job_id, &mut out);
+        for class in 0..self.classes.len() {
+            let rate = self.class_tick_rate(class, daily, mjw, t.hour());
+            self.draw_tick_arrivals(class, t, rate, next_job_id, &mut out);
+        }
         out
     }
 
-    /// Draw one tick's job arrivals given the (day-constant) Poisson rate
-    /// for that tick's hour, appending to `out`. The single source of
-    /// truth for the per-tick job stream: both the per-tick path above and
-    /// [`pregenerate_day`](Self::pregenerate_day) call this with the same
-    /// keyed RNG stream, so they produce bit-identical jobs (and consume
-    /// ids in the same order).
+    /// Day-constant per-tick Poisson rate of one class at `hour`, given
+    /// the (already scaled) total daily flexible demand and the hoisted
+    /// mean job work. For the default single class (share 1.0) this is
+    /// bit-identical to the pre-taxonomy rate.
+    fn class_tick_rate(&self, class: usize, daily: f64, mjw: f64, hour: usize) -> f64 {
+        let jobs_per_day = daily * self.classes.get(class).share / mjw;
+        jobs_per_day / TICKS_PER_DAY as f64 * self.submit_profile(hour)
+    }
+
+    /// Draw one tick's job arrivals of one class given the (day-constant)
+    /// Poisson rate for that tick's hour, appending to `out`. The single
+    /// source of truth for the per-tick job stream: both the per-tick
+    /// path above and [`pregenerate_day`](Self::pregenerate_day) call
+    /// this with the same per-class keyed RNG streams, so they produce
+    /// bit-identical jobs (and consume ids in the same order). Class 0's
+    /// key salt is zero, making the default taxonomy's stream exactly
+    /// the pre-taxonomy stream.
     fn draw_tick_arrivals(
         &self,
+        class: usize,
         t: SimTime,
         rate: f64,
         next_job_id: &mut u64,
         out: &mut Vec<FlexJob>,
     ) {
-        let mut rng =
-            Pcg::keyed(self.seed, 0xA881 + self.cluster_id as u64, t.day as u64, t.tick as u64);
+        let salt = (class as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg::keyed(
+            self.seed,
+            (0xA881 + self.cluster_id as u64) ^ salt,
+            t.day as u64,
+            t.tick as u64,
+        );
+        let spec = self.classes.get(class);
         let n = rng.poisson(rate);
         for _ in 0..n {
             let gcu = rng
                 .lognormal(self.job_gcu_median, self.job_gcu_sigma)
                 .min(self.capacity_gcu * 0.05);
-            let ticks = (rng.lognormal(self.job_ticks_median, self.job_ticks_sigma).round()
+            let mut ticks = (rng.lognormal(self.job_ticks_median, self.job_ticks_sigma).round()
                 as usize)
                 .clamp(1, TICKS_PER_DAY / 2);
+            if let Some(d) = spec.deadline_ticks {
+                // users with a deadline submit jobs that can meet it
+                ticks = ticks.min(d);
+            }
             let headroom = rng.uniform(0.10, 0.40);
             let id = *next_job_id;
             *next_job_id += 1;
             out.push(FlexJob::new(
                 id,
                 self.cluster_id,
+                class,
                 gcu,
                 gcu * (1.0 + headroom),
                 ticks,
                 t,
+                spec.deadline_ticks,
             ));
         }
     }
@@ -253,11 +295,11 @@ impl WorkloadModel {
     /// Pre-draw the whole day's arrivals into a reusable buffer, bucketed
     /// by tick — the event engine's day-level pass. The per-tick keyed RNG
     /// streams are exactly those of [`flex_arrivals_scaled`], and ids are
-    /// consumed in tick order, so the jobs are bit-identical to 288
-    /// per-tick calls; what this pass hoists is everything that is
+    /// consumed in (tick, class) order, so the jobs are bit-identical to
+    /// 288 per-tick calls; what this pass hoists is everything that is
     /// constant over the day (the daily-demand draw, the mean-job-work
-    /// exponentials, the per-hour submission profile) plus the per-tick
-    /// `Vec` allocation.
+    /// exponentials, the per-(class, hour) submission rates) plus the
+    /// per-tick `Vec` allocation.
     pub fn pregenerate_day(
         &self,
         day: usize,
@@ -268,16 +310,20 @@ impl WorkloadModel {
         out.jobs.clear();
         out.offsets.clear();
         let daily = self.flex_daily_demand(day) * scale;
-        let jobs_per_day = daily / self.mean_job_work();
-        let per_tick = jobs_per_day / TICKS_PER_DAY as f64;
-        let mut rate_h = [0.0; HOURS_PER_DAY];
-        for (h, r) in rate_h.iter_mut().enumerate() {
-            *r = per_tick * self.submit_profile(h);
+        let mjw = self.mean_job_work();
+        let n_classes = self.classes.len();
+        let mut rate_h = vec![[0.0; HOURS_PER_DAY]; n_classes];
+        for (class, rates) in rate_h.iter_mut().enumerate() {
+            for (h, r) in rates.iter_mut().enumerate() {
+                *r = self.class_tick_rate(class, daily, mjw, h);
+            }
         }
         for tick in 0..TICKS_PER_DAY {
             out.offsets.push(out.jobs.len());
             let t = SimTime::new(day, tick);
-            self.draw_tick_arrivals(t, rate_h[t.hour()], next_job_id, &mut out.jobs);
+            for (class, rates) in rate_h.iter().enumerate() {
+                self.draw_tick_arrivals(class, t, rates[t.hour()], next_job_id, &mut out.jobs);
+            }
         }
         out.offsets.push(out.jobs.len());
     }
@@ -452,6 +498,71 @@ mod tests {
                 assert!(!pre.is_empty());
                 assert_eq!(pre.offsets.len(), TICKS_PER_DAY + 1);
             }
+        }
+    }
+
+    #[test]
+    fn default_taxonomy_jobs_are_class_zero_without_deadlines() {
+        let m = &models()[0];
+        let mut id = 0;
+        for tick in 0..TICKS_PER_DAY {
+            for j in m.flex_arrivals(SimTime::new(1, tick), &mut id) {
+                assert_eq!(j.class, 0);
+                assert_eq!(j.deadline, None);
+                assert!(!j.missed);
+            }
+        }
+    }
+
+    fn mixed_model() -> WorkloadModel {
+        let cfg = ScenarioConfig::default();
+        let fleet = Fleet::build(&cfg);
+        WorkloadModel::for_cluster_in(
+            cfg.seed,
+            &fleet.clusters[0],
+            &crate::config::FlexClasses::preset("mixed").unwrap(),
+        )
+    }
+
+    #[test]
+    fn mixed_taxonomy_tags_classes_and_clamps_durations_to_deadlines() {
+        let m = mixed_model();
+        let mut id = 0;
+        let mut seen = [0usize; 3];
+        for day in 0..3 {
+            for tick in 0..TICKS_PER_DAY {
+                for j in m.flex_arrivals(SimTime::new(day, tick), &mut id) {
+                    seen[j.class] += 1;
+                    let spec = m.classes.get(j.class);
+                    assert_eq!(
+                        j.deadline,
+                        spec.deadline_ticks.map(|d| j.submit.abs_tick() + d)
+                    );
+                    if let Some(d) = spec.deadline_ticks {
+                        assert!(j.duration_ticks <= d, "job longer than its own deadline");
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&n| n > 0), "all three classes submit: {seen:?}");
+        // the within-day class carries ~half the jobs (shares 0.5/0.25/0.25)
+        assert!(seen[0] > seen[1] && seen[0] > seen[2], "{seen:?}");
+    }
+
+    #[test]
+    fn mixed_taxonomy_pregenerate_matches_per_tick_exactly() {
+        let m = mixed_model();
+        let mut id_tick = 500;
+        let mut per_tick: Vec<Vec<FlexJob>> = Vec::new();
+        for tick in 0..TICKS_PER_DAY {
+            per_tick.push(m.flex_arrivals_scaled(SimTime::new(2, tick), &mut id_tick, 0.9));
+        }
+        let mut id_day = 500;
+        let mut pre = DayArrivals::default();
+        m.pregenerate_day(2, 0.9, &mut id_day, &mut pre);
+        assert_eq!(id_tick, id_day, "id counters diverged");
+        for tick in 0..TICKS_PER_DAY {
+            assert_eq!(pre.tick_jobs(tick), per_tick[tick].as_slice(), "tick {tick}");
         }
     }
 

@@ -122,6 +122,7 @@ fn prop_pgd_dominates_unshaped_and_not_worse_than_greedy() {
             rng.uniform(0.05, 1.0),
             -1.0,
             3.0,
+            0.0,
         ) {
             Ok(p) => p,
             Err(_) => return true, // unshapeable draws are out of scope

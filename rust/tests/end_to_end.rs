@@ -20,7 +20,7 @@ fn cfg(clusters: usize) -> ScenarioConfig {
 #[test]
 fn full_stack_shapes_load_and_meets_slo() {
     let mut sim = Simulation::new(cfg(4));
-    sim.run_days(38);
+    sim.run_days(38).unwrap();
 
     // 1. shaping actually happened after warmup
     let shaped_days: usize = sim.metrics.iter().filter(|s| s.shaped).count();
@@ -68,7 +68,7 @@ fn shaped_days_move_power_to_greener_hours() {
         let mut r = cics::util::rng::Pcg::keyed(seed, 0xAB, cid as u64, day as u64);
         r.chance(0.5)
     }));
-    sim.run_days(45);
+    sim.run_days(45).unwrap();
     let res = cics::experiment::summarize(&sim, 30, 44);
     assert!(res.treated_days > 10 && res.control_days > 10);
     // treated power must be lower during the peak-carbon hours
@@ -97,7 +97,7 @@ fn surge_trips_slo_guard_and_pauses_shaping() {
     // inject a 1.8x flexible-demand surge at day 30 on cluster 0
     sim.workloads[0].surge_day = Some(30);
     sim.workloads[0].surge_factor = 1.8;
-    sim.run_days(44);
+    sim.run_days(44).unwrap();
     assert!(
         sim.slo_states[0].pauses_triggered >= 1,
         "surge should trigger the SLO feedback loop"
@@ -112,7 +112,7 @@ fn campus_contract_limits_fleet_peak() {
     base.optimizer.iters = 150;
     // First run unconstrained to learn the natural peak.
     let mut free = Simulation::new(base.clone());
-    free.run_days(34);
+    free.run_days(34).unwrap();
     let mut peaks = Vec::new();
     for d in 28..34 {
         let (power, _) = free.metrics.fleet_day(d).unwrap();
@@ -123,7 +123,7 @@ fn campus_contract_limits_fleet_peak() {
     let mut capped_cfg = base;
     capped_cfg.campuses[0].contract_limit_kw = natural * 0.97;
     let mut capped = Simulation::new(capped_cfg);
-    capped.run_days(34);
+    capped.run_days(34).unwrap();
     let mut capped_peaks = Vec::new();
     for d in 28..34 {
         let (power, _) = capped.metrics.fleet_day(d).unwrap();
@@ -173,10 +173,10 @@ fn spatial_shifting_moves_work_to_cleaner_campuses() {
     cfg.optimizer.iters = 150;
     let days = 40;
     let mut temporal_only = Simulation::new(cfg.clone());
-    temporal_only.run_days(days);
+    temporal_only.run_days(days).unwrap();
     let mut spatial = Simulation::new(cfg);
     spatial.spatial_movable_fraction = Some(0.3);
-    spatial.run_days(days);
+    spatial.run_days(days).unwrap();
 
     let (moved, saved) = spatial.spatial_totals;
     assert!(moved > 0.0, "spatial plan should move work");

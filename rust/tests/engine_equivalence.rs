@@ -22,6 +22,7 @@ fn preset_matrix(grid: &str) -> SweepMatrix {
         grids: vec![grid.into()],
         fleet_sizes: vec![2],
         flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,
@@ -72,6 +73,38 @@ fn engines_agree_across_worker_counts_and_sharing_modes() {
     }
     // shaping engaged, so the measured window actually exercised VCCs
     assert!(reference.cells.iter().any(|c| c.shaped_fraction > 0.0));
+}
+
+#[test]
+fn mixed_class_preset_byte_identical_across_engines_workers_and_sharing() {
+    // The workload-class taxonomy must not break the equivalence
+    // contract: EDF admission, per-class accounting, deadline misses and
+    // drop-on-miss all execute in both engines, under both sharing
+    // modes, at any worker count — and emit identical report bytes.
+    let mut m = preset_matrix("PL");
+    m.flex_classes = vec!["mixed".into()];
+    let (reference, _) =
+        sweep::run_sweep_engine(&m, 3, 1, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    let json = reference.to_json().to_string();
+    assert!(json.contains("\"classes\""), "mixed preset must emit per-class columns");
+    assert!(json.contains("\"miss_rate\""));
+    for (threads, sharing, engine) in [
+        (4, WarmupSharing::Fork, SimEngine::Event),
+        (2, WarmupSharing::PerCell, SimEngine::Event),
+        (3, WarmupSharing::PerCell, SimEngine::Legacy),
+    ] {
+        let (rep, _) = sweep::run_sweep_engine(&m, 3, threads, sharing, engine).unwrap();
+        assert_eq!(
+            json,
+            rep.to_json().to_string(),
+            "mixed preset: {threads} workers, {sharing:?}, {engine:?}"
+        );
+    }
+    // the non-trivial taxonomy actually flowed through: three classes
+    // with real work in each
+    let cell = &reference.cells[0];
+    assert_eq!(cell.classes.len(), 3);
+    assert!(cell.classes.iter().all(|c| c.submitted_gcuh > 0.0));
 }
 
 #[test]

@@ -79,10 +79,10 @@ fn assert_fork_matches_fresh(
             engine: fork_engine,
         },
     );
-    fresh.run_days(WARMUP);
+    fresh.run_days(WARMUP).unwrap();
     fresh.shaping_enabled = true;
     fresh.spatial_movable_fraction = spatial;
-    fresh.run_days(MEASURE);
+    fresh.run_days(MEASURE).unwrap();
 
     // Fork path: warmup under the engine's canonical warmup options
     // (native backend — the solver is never consulted while shaping is
@@ -97,7 +97,7 @@ fn assert_fork_matches_fresh(
             engine: warmup_engine,
         },
     );
-    warm.run_days(WARMUP);
+    warm.run_days(WARMUP).unwrap();
     let mut forked = Simulation::resume(
         warm.snapshot(),
         SimOptions {
@@ -108,7 +108,7 @@ fn assert_fork_matches_fresh(
             engine: fork_engine,
         },
     );
-    forked.run_days(MEASURE);
+    forked.run_days(MEASURE).unwrap();
 
     assert_eq!(fresh.day, forked.day);
     assert_eq!(stream_bytes(&fresh), stream_bytes(&forked), "DaySummary streams diverged");
@@ -150,6 +150,20 @@ fn spatial_fork_reproduces_fresh_run_byte_identically() {
         ])
     };
     assert_fork_matches_fresh(mk, SolverBackend::Native, Some(0.3), SimEngine::Event, SimEngine::Event);
+}
+
+#[test]
+fn mixed_class_fork_reproduces_fresh_run_byte_identically() {
+    // Workload classes live in snapshot state (class-tagged queued and
+    // running jobs, per-class usage accumulators): a checkpoint taken
+    // under one engine must fork byte-identically under the other with
+    // a non-trivial taxonomy too.
+    let mk = || {
+        let mut c = cfg(vec![campus("fork-eq-mixed", GridArchetype::FossilPeaker, 2)]);
+        c.flex_classes = cics::config::FlexClasses::preset("mixed").unwrap();
+        c
+    };
+    assert_fork_matches_fresh(mk, SolverBackend::Native, None, SimEngine::Legacy, SimEngine::Event);
 }
 
 #[test]

@@ -16,6 +16,7 @@ fn small_matrix() -> SweepMatrix {
         grids: vec!["PL".into(), "FR".into()],
         fleet_sizes: vec![2],
         flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,
@@ -58,6 +59,36 @@ fn sweep_is_deterministic_across_reruns_and_worker_counts() {
     let (legacy, _) =
         sweep::run_sweep_engine(&m, 4, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
     assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
+}
+
+#[test]
+fn mixed_class_preset_is_byte_deterministic() {
+    // The new flex_classes axis obeys the same contract as every other
+    // axis: reruns, worker counts and warmup-sharing modes may not move
+    // a byte — including the per-class miss-rate/carbon columns.
+    let mut m = small_matrix();
+    m.grids = vec!["PL".into()];
+    m.flex_classes = vec!["within-day".into(), "mixed".into()];
+    let serial = sweep::run_sweep(&m, 4, 1).unwrap();
+    let wide = sweep::run_sweep(&m, 4, 8).unwrap();
+    let json = serial.to_json().to_string();
+    assert_eq!(json, wide.to_json().to_string(), "1 vs 8 workers");
+    let (per_cell, _) = sweep::run_sweep_mode(&m, 4, 3, WarmupSharing::PerCell).unwrap();
+    assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
+
+    // 2 class presets x 2 solvers: the class presets are distinct
+    // physical scenarios (own seeds, own baselines), while solver
+    // variants within a preset share theirs
+    assert_eq!(serial.cells.len(), 4);
+    let (wd, mixed) = (&serial.cells[0], &serial.cells[2]);
+    assert_ne!(wd.seed, mixed.seed, "class presets must not share workload seeds");
+    assert_eq!(serial.cells[2].seed, serial.cells[3].seed);
+    assert!(wd.classes.is_empty(), "default preset keeps the pre-taxonomy columns");
+    assert_eq!(mixed.classes.len(), 3);
+    assert!(mixed.label.contains("mixed"));
+    // deadline pressure is visible: the tight class reports a defined
+    // miss rate (possibly 0 in a lightly loaded scenario, but present)
+    assert!(mixed.classes.iter().any(|c| c.name == "tight-6h"));
 }
 
 #[test]

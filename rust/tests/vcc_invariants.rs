@@ -65,6 +65,7 @@ fn try_random_problem(seed: u64) -> Option<ClusterProblem> {
         0.25,
         -1.0,
         3.0,
+        0.0,
     )
     .ok()
 }
@@ -136,7 +137,7 @@ fn coordinator_distributed_curves_pass_the_safety_gate() {
     cfg.optimizer.iters = 150;
     cfg.optimizer.use_artifact = false;
     let mut sim = Simulation::new(cfg);
-    sim.run_days(30);
+    sim.run_days(30).unwrap();
     let mut shaped_seen = 0;
     for (cid, v) in sim.today_vccs.iter().enumerate() {
         let v = v.as_ref().expect("planning cycle issues a curve per cluster");
