@@ -191,6 +191,43 @@ impl FlexClasses {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+
+    impl Bin for WorkloadClass {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_str(&self.name);
+            w.put_f64(self.share);
+            self.deadline_ticks.write(w);
+            w.put_bool(self.drop_on_miss);
+        }
+
+        fn read(r: &mut BinReader) -> Result<WorkloadClass> {
+            Ok(WorkloadClass {
+                name: r.str_()?,
+                share: r.f64()?,
+                deadline_ticks: Option::read(r)?,
+                drop_on_miss: r.bool_()?,
+            })
+        }
+    }
+
+    impl Bin for FlexClasses {
+        fn write(&self, w: &mut BinWriter) {
+            self.classes.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<FlexClasses> {
+            // validate on decode: a corrupt taxonomy must not enter the
+            // simulation through the cache path
+            FlexClasses::from_classes(Vec::read(r)?)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -474,6 +474,153 @@ impl SweepMatrix {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+
+    impl Bin for Archetype {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_u8(match self {
+                Archetype::FlexPredictable => 0,
+                Archetype::FlexNoisy => 1,
+                Archetype::MostlyInflexible => 2,
+            });
+        }
+
+        fn read(r: &mut BinReader) -> Result<Archetype> {
+            Ok(match r.u8()? {
+                0 => Archetype::FlexPredictable,
+                1 => Archetype::FlexNoisy,
+                2 => Archetype::MostlyInflexible,
+                t => crate::bail!("Archetype: unknown tag {t}"),
+            })
+        }
+    }
+
+    impl Bin for GridArchetype {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_u8(match self {
+                GridArchetype::SolarHeavy => 0,
+                GridArchetype::WindHeavy => 1,
+                GridArchetype::FossilPeaker => 2,
+                GridArchetype::LowCarbonBase => 3,
+                GridArchetype::Mixed => 4,
+            });
+        }
+
+        fn read(r: &mut BinReader) -> Result<GridArchetype> {
+            Ok(match r.u8()? {
+                0 => GridArchetype::SolarHeavy,
+                1 => GridArchetype::WindHeavy,
+                2 => GridArchetype::FossilPeaker,
+                3 => GridArchetype::LowCarbonBase,
+                4 => GridArchetype::Mixed,
+                t => crate::bail!("GridArchetype: unknown tag {t}"),
+            })
+        }
+    }
+
+    impl Bin for CampusConfig {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_str(&self.name);
+            self.grid.write(w);
+            w.put_usize(self.clusters);
+            w.put_f64(self.contract_limit_kw);
+            w.put_f64(self.archetype_mix.0);
+            w.put_f64(self.archetype_mix.1);
+            w.put_f64(self.archetype_mix.2);
+        }
+
+        fn read(r: &mut BinReader) -> Result<CampusConfig> {
+            Ok(CampusConfig {
+                name: r.str_()?,
+                grid: GridArchetype::read(r)?,
+                clusters: r.usize_()?,
+                contract_limit_kw: r.f64()?,
+                archetype_mix: (r.f64()?, r.f64()?, r.f64()?),
+            })
+        }
+    }
+
+    impl Bin for OptimizerConfig {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_f64(self.lambda_e);
+            w.put_f64(self.lambda_p);
+            w.put_f64(self.gamma);
+            w.put_f64(self.slo_quantile);
+            w.put_f64(self.delta_min);
+            w.put_f64(self.delta_max);
+            w.put_usize(self.iters);
+            w.put_bool(self.use_artifact);
+        }
+
+        fn read(r: &mut BinReader) -> Result<OptimizerConfig> {
+            Ok(OptimizerConfig {
+                lambda_e: r.f64()?,
+                lambda_p: r.f64()?,
+                gamma: r.f64()?,
+                slo_quantile: r.f64()?,
+                delta_min: r.f64()?,
+                delta_max: r.f64()?,
+                iters: r.usize_()?,
+                use_artifact: r.bool_()?,
+            })
+        }
+    }
+
+    impl Bin for SloConfig {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.trigger_days);
+            w.put_usize(self.pause_days);
+            w.put_f64(self.near_fraction);
+            w.put_usize(self.min_history_days);
+            w.put_f64(self.min_buffer);
+            w.put_f64(self.max_miss_rate);
+        }
+
+        fn read(r: &mut BinReader) -> Result<SloConfig> {
+            Ok(SloConfig {
+                trigger_days: r.usize_()?,
+                pause_days: r.usize_()?,
+                near_fraction: r.f64()?,
+                min_history_days: r.usize_()?,
+                min_buffer: r.f64()?,
+                max_miss_rate: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for ScenarioConfig {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_u64(self.seed);
+            self.campuses.write(w);
+            self.optimizer.write(w);
+            self.slo.write(w);
+            self.flex_classes.write(w);
+            w.put_usize(self.pds_per_cluster);
+            w.put_usize(self.machines_per_pd);
+            w.put_usize(self.history_days);
+            w.put_str(&self.artifact_dir);
+        }
+
+        fn read(r: &mut BinReader) -> Result<ScenarioConfig> {
+            Ok(ScenarioConfig {
+                seed: r.u64()?,
+                campuses: Vec::read(r)?,
+                optimizer: OptimizerConfig::read(r)?,
+                slo: SloConfig::read(r)?,
+                flex_classes: FlexClasses::read(r)?,
+                pds_per_cluster: r.usize_()?,
+                machines_per_pd: r.usize_()?,
+                history_days: r.usize_()?,
+                artifact_dir: r.str_()?,
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -121,6 +121,90 @@ pub struct SimSnapshot {
     last_unshapeable: Vec<(usize, Unshapeable)>,
 }
 
+impl SimSnapshot {
+    /// Version of the engine-agnostic snapshot state layout. Part of the
+    /// cross-run cache key: bump it whenever any serialized field (or its
+    /// meaning) changes, and every stale cache entry silently becomes a
+    /// miss instead of decoding into garbage.
+    pub const STATE_VERSION: u32 = 1;
+
+    /// The day boundary this snapshot was taken at (warmup length, for
+    /// snapshots taken by the sweep's warmup phase).
+    pub fn day(&self) -> usize {
+        self.day
+    }
+
+    /// The scenario config the snapshot was built from.
+    pub fn cfg(&self) -> &ScenarioConfig {
+        &self.cfg
+    }
+
+    /// Serialize to the versioned, checksummed `util::binio` envelope —
+    /// the byte format of the persistent snapshot cache. The encoding is
+    /// canonical: `SimSnapshot::from_bytes(s.to_bytes())` round-trips to
+    /// the exact same bytes, and a resumed simulation cannot tell whether
+    /// its snapshot came from memory or from disk.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        crate::util::binio::envelope(Self::STATE_VERSION, &crate::util::binio::to_payload(self))
+    }
+
+    /// Decode a snapshot from [`SimSnapshot::to_bytes`] output. Truncated,
+    /// corrupted or version-mismatched input errors out (the cache treats
+    /// that as a miss and re-simulates).
+    pub fn from_bytes(bytes: &[u8]) -> Result<SimSnapshot> {
+        let payload = crate::util::binio::open_envelope(bytes, Self::STATE_VERSION)?;
+        crate::util::binio::from_payload(payload)
+    }
+}
+
+impl crate::util::binio::Bin for SimSnapshot {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        use crate::util::binio::Bin as _;
+        self.cfg.write(w);
+        self.fleet.write(w);
+        self.zones.write(w);
+        self.workloads.write(w);
+        self.schedulers.write(w);
+        self.forecasters.write(w);
+        self.slo_guard.write(w);
+        self.slo_states.write(w);
+        self.store.write(w);
+        self.ape.write(w);
+        self.carbon_fc.write(w);
+        self.rollout.write(w);
+        self.today_vccs.write(w);
+        self.spatial_scale.write(w);
+        self.spatial_totals.write(w);
+        w.put_usize(self.day);
+        self.metrics.write(w);
+        self.last_unshapeable.write(w);
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> Result<SimSnapshot> {
+        use crate::util::binio::Bin as _;
+        Ok(SimSnapshot {
+            cfg: ScenarioConfig::read(r)?,
+            fleet: Fleet::read(r)?,
+            zones: Vec::read(r)?,
+            workloads: Vec::read(r)?,
+            schedulers: Vec::read(r)?,
+            forecasters: Vec::read(r)?,
+            slo_guard: SloGuard::read(r)?,
+            slo_states: Vec::read(r)?,
+            store: TelemetryStore::read(r)?,
+            ape: ApeCollector::read(r)?,
+            carbon_fc: CarbonForecaster::read(r)?,
+            rollout: Rollout::read(r)?,
+            today_vccs: Vec::read(r)?,
+            spatial_scale: Vec::read(r)?,
+            spatial_totals: <(f64, f64)>::read(r)?,
+            day: r.usize_()?,
+            metrics: FleetMetrics::read(r)?,
+            last_unshapeable: Vec::read(r)?,
+        })
+    }
+}
+
 pub struct Simulation {
     pub cfg: ScenarioConfig,
     pub fleet: Fleet,

@@ -313,6 +313,101 @@ impl WindowAggregate {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for ClassAggregate {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.jobs_submitted);
+            w.put_usize(self.jobs_started);
+            w.put_usize(self.jobs_completed);
+            w.put_usize(self.jobs_missed);
+            w.put_usize(self.jobs_dropped);
+            w.put_f64(self.submitted_gcuh);
+            w.put_f64(self.completed_gcuh);
+            w.put_f64(self.dropped_gcuh);
+            w.put_f64(self.delay_sum_ticks);
+            w.put_f64(self.carbon_kg);
+        }
+
+        fn read(r: &mut BinReader) -> Result<ClassAggregate> {
+            Ok(ClassAggregate {
+                jobs_submitted: r.usize_()?,
+                jobs_started: r.usize_()?,
+                jobs_completed: r.usize_()?,
+                jobs_missed: r.usize_()?,
+                jobs_dropped: r.usize_()?,
+                submitted_gcuh: r.f64()?,
+                completed_gcuh: r.f64()?,
+                dropped_gcuh: r.f64()?,
+                delay_sum_ticks: r.f64()?,
+                carbon_kg: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for DaySummary {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            w.put_usize(self.day);
+            w.put_bool(self.shaped);
+            self.hourly_power.write(w);
+            self.hourly_resv.write(w);
+            self.hourly_usage_if.write(w);
+            self.hourly_usage_flex.write(w);
+            self.carbon_intensity.write(w);
+            self.vcc.write(w);
+            w.put_f64(self.daily_carbon_kg);
+            w.put_f64(self.daily_flex_usage_gcuh);
+            w.put_f64(self.daily_reservations_gcuh);
+            w.put_f64(self.flex_submitted_gcuh);
+            w.put_f64(self.flex_done_gcuh);
+            w.put_f64(self.flex_backlog_gcuh);
+            w.put_usize(self.jobs_paused);
+            w.put_f64(self.mean_start_delay_ticks);
+            self.class_stats.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<DaySummary> {
+            Ok(DaySummary {
+                cluster_id: r.usize_()?,
+                day: r.usize_()?,
+                shaped: r.bool_()?,
+                hourly_power: <[f64; HOURS_PER_DAY]>::read(r)?,
+                hourly_resv: <[f64; HOURS_PER_DAY]>::read(r)?,
+                hourly_usage_if: <[f64; HOURS_PER_DAY]>::read(r)?,
+                hourly_usage_flex: <[f64; HOURS_PER_DAY]>::read(r)?,
+                carbon_intensity: <[f64; HOURS_PER_DAY]>::read(r)?,
+                vcc: Option::read(r)?,
+                daily_carbon_kg: r.f64()?,
+                daily_flex_usage_gcuh: r.f64()?,
+                daily_reservations_gcuh: r.f64()?,
+                flex_submitted_gcuh: r.f64()?,
+                flex_done_gcuh: r.f64()?,
+                flex_backlog_gcuh: r.f64()?,
+                jobs_paused: r.usize_()?,
+                mean_start_delay_ticks: r.f64()?,
+                class_stats: Vec::read(r)?,
+            })
+        }
+    }
+
+    impl Bin for FleetMetrics {
+        fn write(&self, w: &mut BinWriter) {
+            self.per_cluster.write(w);
+            self.tr_hats.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<FleetMetrics> {
+            Ok(FleetMetrics { per_cluster: Vec::read(r)?, tr_hats: Vec::read(r)? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

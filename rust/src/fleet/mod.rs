@@ -188,6 +188,109 @@ fn build_cluster(
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for PowerCurve {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_f64(self.idle_kw);
+            w.put_f64(self.span_kw);
+            w.put_f64(self.k);
+            w.put_f64(self.cap_gcu);
+        }
+
+        fn read(r: &mut BinReader) -> Result<PowerCurve> {
+            Ok(PowerCurve {
+                idle_kw: r.f64()?,
+                span_kw: r.f64()?,
+                k: r.f64()?,
+                cap_gcu: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for PowerDomain {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.id);
+            w.put_usize(self.cluster_id);
+            w.put_usize(self.machines);
+            self.curve.write(w);
+            w.put_f64(self.lambda);
+            w.put_f64(self.meter_noise);
+        }
+
+        fn read(r: &mut BinReader) -> Result<PowerDomain> {
+            Ok(PowerDomain {
+                id: r.usize_()?,
+                cluster_id: r.usize_()?,
+                machines: r.usize_()?,
+                curve: PowerCurve::read(r)?,
+                lambda: r.f64()?,
+                meter_noise: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for Cluster {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.id);
+            w.put_str(&self.name);
+            w.put_usize(self.campus_id);
+            self.archetype.write(w);
+            self.pds.write(w);
+            w.put_f64(self.capacity_gcu);
+            w.put_f64(self.power_cap_gcu);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Cluster> {
+            Ok(Cluster {
+                id: r.usize_()?,
+                name: r.str_()?,
+                campus_id: r.usize_()?,
+                archetype: Archetype::read(r)?,
+                pds: Vec::read(r)?,
+                capacity_gcu: r.f64()?,
+                power_cap_gcu: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for Campus {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.id);
+            w.put_str(&self.name);
+            self.grid.write(w);
+            w.put_f64(self.contract_limit_kw);
+            self.cluster_ids.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Campus> {
+            Ok(Campus {
+                id: r.usize_()?,
+                name: r.str_()?,
+                grid: GridArchetype::read(r)?,
+                contract_limit_kw: r.f64()?,
+                cluster_ids: Vec::read(r)?,
+            })
+        }
+    }
+
+    impl Bin for Fleet {
+        fn write(&self, w: &mut BinWriter) {
+            self.campuses.write(w);
+            self.clusters.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Fleet> {
+            Ok(Fleet { campuses: Vec::read(r)?, clusters: Vec::read(r)? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -407,6 +407,121 @@ impl ApeCollector {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+    use crate::util::stats::Ewma;
+
+    impl Bin for WeeklyDailyModel {
+        fn write(&self, w: &mut BinWriter) {
+            self.weekly_mean.write(w);
+            self.day_factors.write(w);
+            self.week_vals.write(w);
+            self.dev_pairs.write(w);
+            w.put_f64(self.last_dev);
+            w.put_usize(self.weeks_seen);
+        }
+
+        fn read(r: &mut BinReader) -> Result<WeeklyDailyModel> {
+            Ok(WeeklyDailyModel {
+                weekly_mean: Ewma::read(r)?,
+                day_factors: <[Ewma; DAYS_PER_WEEK]>::read(r)?,
+                week_vals: Vec::read(r)?,
+                dev_pairs: Vec::read(r)?,
+                last_dev: r.f64()?,
+                weeks_seen: r.usize_()?,
+            })
+        }
+    }
+
+    impl Bin for WeeklyHourlyModel {
+        fn write(&self, w: &mut BinWriter) {
+            self.weekly_mean.write(w);
+            self.hour_factors.write(w);
+            self.week_hours.write(w);
+            self.dev_pairs.write(w);
+            w.put_f64(self.last_dev);
+            w.put_usize(self.weeks_seen);
+        }
+
+        fn read(r: &mut BinReader) -> Result<WeeklyHourlyModel> {
+            Ok(WeeklyHourlyModel {
+                weekly_mean: Ewma::read(r)?,
+                hour_factors: Vec::read(r)?,
+                week_hours: Vec::read(r)?,
+                dev_pairs: Vec::read(r)?,
+                last_dev: r.f64()?,
+                weeks_seen: r.usize_()?,
+            })
+        }
+    }
+
+    impl Bin for DayAheadForecast {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            w.put_usize(self.day);
+            self.u_if_hat.write(w);
+            w.put_f64(self.tuf_hat);
+            w.put_f64(self.tr_hat);
+            self.ratio_hat.write(w);
+            self.u_if_upper.write(w);
+            w.put_bool(self.mature);
+        }
+
+        fn read(r: &mut BinReader) -> Result<DayAheadForecast> {
+            Ok(DayAheadForecast {
+                cluster_id: r.usize_()?,
+                day: r.usize_()?,
+                u_if_hat: <[f64; HOURS_PER_DAY]>::read(r)?,
+                tuf_hat: r.f64()?,
+                tr_hat: r.f64()?,
+                ratio_hat: <[f64; HOURS_PER_DAY]>::read(r)?,
+                u_if_upper: <[f64; HOURS_PER_DAY]>::read(r)?,
+                mature: r.bool_()?,
+            })
+        }
+    }
+
+    impl Bin for LoadForecaster {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            self.if_model.write(w);
+            self.tuf_model.write(w);
+            self.tr_model.write(w);
+            self.ratio_samples.write(w);
+            self.if_rel_errors.write(w);
+            self.last_pred.write(w);
+            w.put_usize(self.days_observed);
+        }
+
+        fn read(r: &mut BinReader) -> Result<LoadForecaster> {
+            Ok(LoadForecaster {
+                cluster_id: r.usize_()?,
+                if_model: WeeklyHourlyModel::read(r)?,
+                tuf_model: WeeklyDailyModel::read(r)?,
+                tr_model: WeeklyDailyModel::read(r)?,
+                ratio_samples: Vec::read(r)?,
+                if_rel_errors: Vec::read(r)?,
+                last_pred: Option::read(r)?,
+                days_observed: r.usize_()?,
+            })
+        }
+    }
+
+    impl Bin for ApeCollector {
+        fn write(&self, w: &mut BinWriter) {
+            self.data.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<ApeCollector> {
+            Ok(ApeCollector { data: Vec::read(r)? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

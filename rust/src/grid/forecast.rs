@@ -83,6 +83,21 @@ impl GridZone {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+impl crate::util::binio::Bin for CarbonForecaster {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_f64(self.horizon_growth);
+        w.put_usize(self.issue_hour);
+    }
+
+    fn read(
+        r: &mut crate::util::binio::BinReader,
+    ) -> crate::util::error::Result<CarbonForecaster> {
+        Ok(CarbonForecaster { horizon_growth: r.f64()?, issue_hour: r.usize_()? })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

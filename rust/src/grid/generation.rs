@@ -130,6 +130,51 @@ impl WeatherProcess {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for Source {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_u8(match self {
+                Source::Solar => 0,
+                Source::Wind => 1,
+                Source::Hydro => 2,
+                Source::Nuclear => 3,
+                Source::Coal => 4,
+                Source::Gas => 5,
+            });
+        }
+
+        fn read(r: &mut BinReader) -> Result<Source> {
+            Ok(match r.u8()? {
+                0 => Source::Solar,
+                1 => Source::Wind,
+                2 => Source::Hydro,
+                3 => Source::Nuclear,
+                4 => Source::Coal,
+                5 => Source::Gas,
+                t => crate::bail!("Source: unknown tag {t}"),
+            })
+        }
+    }
+
+    impl Bin for WeatherProcess {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_u64(self.seed);
+            w.put_u64(self.zone_id);
+            w.put_f64(self.persistence);
+        }
+
+        fn read(r: &mut BinReader) -> Result<WeatherProcess> {
+            Ok(WeatherProcess { seed: r.u64()?, zone_id: r.u64()?, persistence: r.f64()? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

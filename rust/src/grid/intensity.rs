@@ -153,6 +153,38 @@ impl GridZone {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for GridZone {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_str(&self.name);
+            self.archetype.write(w);
+            self.capacity.write(w);
+            self.weather.write(w);
+            w.put_f64(self.forecast_noise);
+            w.put_u64(self.seed);
+            w.put_u64(self.zone_id);
+        }
+
+        fn read(r: &mut BinReader) -> Result<GridZone> {
+            Ok(GridZone {
+                name: r.str_()?,
+                archetype: GridArchetype::read(r)?,
+                capacity: Vec::read(r)?,
+                weather: WeatherProcess::read(r)?,
+                forecast_noise: r.f64()?,
+                seed: r.u64()?,
+                zone_id: r.u64()?,
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -311,6 +311,43 @@ fn parse_list<T>(flag: &str, raw: &str, parse: impl Fn(&str) -> Option<T>) -> Re
         .collect()
 }
 
+/// Open the persistent cross-run snapshot cache when requested:
+/// `--cache` enables it (as does configuring it via `--cache-dir DIR` or
+/// `--cache-budget-mb N` — a cache setting implies wanting the cache),
+/// `--no-cache` wins over all of them. The budget bounds the directory
+/// (default 1024 MB); the default directory is `<out>/cache` (i.e.
+/// `reports/cache`). Cached and uncached runs emit byte-identical
+/// reports — the cache only skips redundant warmup simulation
+/// (README §sweep).
+fn open_cache(args: &Args, out: &str) -> Result<Option<cics::sweep::SnapshotCache>> {
+    let requested = args.has("cache") || args.has("cache-dir") || args.has("cache-budget-mb");
+    if args.has("no-cache") || !requested {
+        return Ok(None);
+    }
+    let dir = match args.get("cache-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::path::Path::new(out).join("cache"),
+    };
+    let disk_budget = args.usize("cache-budget-mb", 1024) as u64 * 1024 * 1024;
+    let mem_budget = cics::sweep::cache::DEFAULT_MEM_BUDGET;
+    Ok(Some(cics::sweep::SnapshotCache::open(&dir, disk_budget, mem_budget)?))
+}
+
+/// One-line summary of a run's cache traffic.
+fn cache_summary(c: &cics::sweep::CacheStats) -> String {
+    format!(
+        "cache: {} hits / {} incremental / {} misses ({} requests, {:.0}% hit rate), \
+         {:.1} MiB written, {:.1} MiB read",
+        c.hits,
+        c.partial_hits,
+        c.misses,
+        c.requests,
+        100.0 * c.hit_rate(),
+        c.bytes_written as f64 / (1024.0 * 1024.0),
+        c.bytes_read as f64 / (1024.0 * 1024.0),
+    )
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     use cics::config::SweepMatrix;
 
@@ -351,10 +388,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let engine = parse_engine(args)?;
     let threads =
         args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
+    // Create the report root up front so a clean checkout works, and open
+    // the cross-run snapshot cache if requested (creates `<out>/cache`).
+    let out = args.get("out").unwrap_or("reports").to_string();
+    std::fs::create_dir_all(&out)?;
+    let cache = open_cache(args, &out)?;
 
     println!(
         "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} solvers x \
-         {} spatial), {} warmup + {} measured days, {} worker threads, {} engine",
+         {} spatial), {} warmup + {} measured days, {} worker threads, {} engine{}",
         m.n_cells(),
         m.grids.len(),
         m.fleet_sizes.len(),
@@ -365,26 +407,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         m.warmup_days,
         days,
         threads,
-        engine.name()
+        engine.name(),
+        match &cache {
+            Some(c) => format!(", cache {:?}", c.dir()),
+            None => String::new(),
+        }
     );
     let t0 = std::time::Instant::now();
-    let report = cics::sweep::run_sweep_engine(
+    let (report, timing) = cics::sweep::run_sweep_cached(
         &m,
         days,
         threads,
         cics::sweep::WarmupSharing::Fork,
         engine,
-    )
-    .map(|(rep, _)| rep)?;
+        cache.as_ref(),
+    )?;
     println!();
     println!("{}", report.ascii_table());
     println!("(swept {} cells in {:.1?})", report.cells.len(), t0.elapsed());
-
-    let out = args.get("out").unwrap_or("reports");
-    let path = std::path::Path::new(out).join("sweep.json");
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
+    if cache.is_some() {
+        println!("({})", cache_summary(&timing.cache));
     }
+
+    let path = std::path::Path::new(&out).join("sweep.json");
     std::fs::write(&path, report.to_json().to_string())?;
     println!("wrote {path:?}");
     Ok(())
@@ -392,7 +437,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     use cics::config::SweepMatrix;
-    use cics::sweep::{bench_tick_engines, run_sweep_engine, WarmupSharing};
+    use cics::sweep::{bench_tick_engines, run_sweep_cached, run_sweep_engine, WarmupSharing};
     use cics::util::json::Json;
 
     let mut m = match args.get("matrix") {
@@ -427,23 +472,51 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let engine = parse_engine(args)?;
     let threads =
         args.usize("threads", cics::util::threadpool::ThreadPool::default_size());
+    // Create the report root up front (first run in a clean checkout used
+    // to have nowhere to write) and open the snapshot cache if requested.
+    let out = args.get("out").unwrap_or("reports").to_string();
+    std::fs::create_dir_all(&out)?;
+    let cache = open_cache(args, &out)?;
+    // Validate the assertion flags up front — a typo'd threshold must
+    // fail in milliseconds, not after minutes of benchmarking.
+    let assert_speedup: Option<f64> = match args.get("assert-speedup") {
+        Some(s) => {
+            Some(s.parse().map_err(|_| cics::err!("--assert-speedup: cannot parse {s:?}"))?)
+        }
+        None => None,
+    };
+    let assert_hit_rate: Option<f64> = match args.get("assert-hit-rate") {
+        Some(s) => {
+            cics::ensure!(cache.is_some(), "--assert-hit-rate requires --cache");
+            Some(s.parse().map_err(|_| cics::err!("--assert-hit-rate: cannot parse {s:?}"))?)
+        }
+        None => None,
+    };
 
     println!(
-        "cics bench: {} cells, {} warmup + {} measured days, {} worker threads, {} engine",
+        "cics bench: {} cells, {} warmup + {} measured days, {} worker threads, {} engine{}",
         m.n_cells(),
         m.warmup_days,
         days,
         threads,
-        engine.name()
+        engine.name(),
+        match &cache {
+            Some(c) => format!(", cache {:?}", c.dir()),
+            None => String::new(),
+        }
     );
     println!("  [1/3] fork path (shared warmup checkpoints)...");
     let t0 = std::time::Instant::now();
-    let (fork_rep, fork_t) = run_sweep_engine(&m, days, threads, WarmupSharing::Fork, engine)?;
+    let (fork_rep, fork_t) =
+        run_sweep_cached(&m, days, threads, WarmupSharing::Fork, engine, cache.as_ref())?;
     let fork_s = t0.elapsed().as_secs_f64();
     println!(
         "        {:.2}s total ({:.2}s warmup phase, {:.2}s fork units)",
         fork_s, fork_t.warmup_s, fork_t.units_s
     );
+    if cache.is_some() {
+        println!("        {}", cache_summary(&fork_t.cache));
+    }
     println!("  [2/3] no-share path (warmup re-simulated per unit)...");
     let t1 = std::time::Instant::now();
     let (noshare_rep, noshare_t) =
@@ -476,8 +549,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ));
     }
 
+    let cache_doc = match &cache {
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+        Some(c) => {
+            let s = &fork_t.cache;
+            Json::obj(vec![
+                ("enabled", Json::Bool(true)),
+                ("dir", Json::Str(c.dir().to_string_lossy().into_owned())),
+                ("requests", Json::Num(s.requests as f64)),
+                ("hits", Json::Num(s.hits as f64)),
+                ("partial_hits", Json::Num(s.partial_hits as f64)),
+                ("misses", Json::Num(s.misses as f64)),
+                ("hit_rate", Json::Num(s.hit_rate())),
+                ("bytes_written", Json::Num(s.bytes_written as f64)),
+                ("bytes_read", Json::Num(s.bytes_read as f64)),
+                ("entries_on_disk", Json::Num(c.entry_count() as f64)),
+                ("disk_bytes", Json::Num(c.disk_bytes() as f64)),
+            ])
+        }
+    };
     let doc = Json::obj(vec![
-        ("schema", Json::Str("cics-bench-sweep-v1".into())),
+        ("schema", Json::Str("cics-bench-sweep-v2".into())),
         ("cells", Json::Num(m.n_cells() as f64)),
         ("warmup_days", Json::Num(m.warmup_days as f64)),
         ("measure_days", Json::Num(days as f64)),
@@ -490,6 +582,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("noshare_units_phase_s", Json::Num(noshare_t.units_s)),
         ("speedup", Json::Num(speedup)),
         ("reports_identical", Json::Bool(identical)),
+        ("cache", cache_doc),
         (
             "tick_engine",
             Json::obj(vec![
@@ -504,18 +597,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             ]),
         ),
     ]);
-    let out = args.get("out").unwrap_or("reports");
-    let path = std::path::Path::new(out).join("BENCH_sweep.json");
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
+    let path = std::path::Path::new(&out).join("BENCH_sweep.json");
     std::fs::write(&path, doc.to_string())?;
     println!("  wrote {path:?}");
 
-    if let Some(min) = args.get("assert-speedup") {
-        let min: f64 = min
-            .parse()
-            .map_err(|_| cics::err!("--assert-speedup: cannot parse {min:?}"))?;
+    if let Some(min) = assert_speedup {
         if speedup < min {
             return Err(cics::err!(
                 "speedup {speedup:.2}x below required {min:.2}x — warmup sharing regressed"
@@ -526,6 +612,21 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 "tick-engine speedup {:.2}x below required {min:.2}x — the event engine \
                  no longer beats legacy",
                 tick.speedup
+            ));
+        }
+    }
+    if let Some(min) = assert_hit_rate {
+        cics::ensure!(
+            fork_t.cache.requests > 0,
+            "--assert-hit-rate: the run made no cache requests (warmup 0?), nothing to assert"
+        );
+        let rate = fork_t.cache.hit_rate();
+        if rate < min {
+            return Err(cics::err!(
+                "cache hit rate {:.0}% below required {:.0}% — \
+                 the warm-cache path re-simulated warmups",
+                100.0 * rate,
+                100.0 * min
             ));
         }
     }
@@ -555,9 +656,12 @@ fn main() {
                  \u{20}      [--classes within-day,mixed] [--solvers native,greedy]\n\
                  \u{20}      [--spatial off,on] [--threads N]\n\
                  bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
-                 \u{20}      [--tick-days N] [--assert-speedup X] [--out DIR]   (times fork vs\n\
-                 \u{20}      no-share sweep paths and the legacy-vs-event tick engines, and\n\
-                 \u{20}      writes BENCH_sweep.json)"
+                 \u{20}      [--tick-days N] [--assert-speedup X] [--assert-hit-rate X]\n\
+                 \u{20}      [--out DIR]   (times fork vs no-share sweep paths and the\n\
+                 \u{20}      legacy-vs-event tick engines, and writes BENCH_sweep.json)\n\
+                 cache:  sweep/bench take [--cache] [--cache-dir DIR] [--no-cache]\n\
+                 \u{20}      [--cache-budget-mb N]   (persistent cross-run warmup snapshot\n\
+                 \u{20}      cache under <out>/cache; byte-identical reports either way)"
             );
             Ok(())
         }

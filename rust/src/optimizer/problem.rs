@@ -52,6 +52,29 @@ pub enum Unshapeable {
     NoFlex,
 }
 
+impl crate::util::binio::Bin for Unshapeable {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_u8(match self {
+            Unshapeable::InsufficientData => 0,
+            Unshapeable::SloPaused => 1,
+            Unshapeable::NoRoom => 2,
+            Unshapeable::RolloutPending => 3,
+            Unshapeable::NoFlex => 4,
+        });
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> crate::util::error::Result<Unshapeable> {
+        Ok(match r.u8()? {
+            0 => Unshapeable::InsufficientData,
+            1 => Unshapeable::SloPaused,
+            2 => Unshapeable::NoRoom,
+            3 => Unshapeable::RolloutPending,
+            4 => Unshapeable::NoFlex,
+            t => crate::bail!("Unshapeable: unknown tag {t}"),
+        })
+    }
+}
+
 /// Assemble a `ClusterProblem` from pipeline outputs, or explain why the
 /// cluster is unshapeable today.
 ///

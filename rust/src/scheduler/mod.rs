@@ -923,6 +923,49 @@ fn scratch_admit(
     *alive += 1;
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    /// [`DayScratch`] is deliberately absent: it is empty at every day
+    /// boundary (the only place snapshots are taken) and rebuilt from the
+    /// canonical running set each morning, so a decoded scheduler carries
+    /// a fresh default scratch and still resumes byte-identically.
+    impl Bin for ClusterScheduler {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            self.running.write(w);
+            self.queue.write(w);
+            w.put_u64(self.next_job_id);
+            w.put_f64(self.run_resv);
+            w.put_f64(self.run_usage);
+            self.run_usage_class.write(w);
+            self.freed_class.write(w);
+            w.put_usize(self.next_completion);
+            w.put_usize(self.now_tick);
+        }
+
+        fn read(r: &mut BinReader) -> Result<ClusterScheduler> {
+            Ok(ClusterScheduler {
+                cluster_id: r.usize_()?,
+                running: Vec::read(r)?,
+                queue: VecDeque::read(r)?,
+                next_job_id: r.u64()?,
+                run_resv: r.f64()?,
+                run_usage: r.f64()?,
+                run_usage_class: Vec::read(r)?,
+                freed_class: Vec::read(r)?,
+                next_completion: r.usize_()?,
+                now_tick: r.usize_()?,
+                scratch: DayScratch::default(),
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,669 @@
+//! Persistent cross-run snapshot cache: content-addressed warmup
+//! checkpoints under `reports/cache/`.
+//!
+//! PR 2's checkpoint/fork engine pays for each physical scenario's warmup
+//! once *per sweep*; this cache amortizes it across *invocations*. Every
+//! `cics sweep --cache` / `cics bench --cache` run consults the cache
+//! before simulating a warmup:
+//!
+//! * **Exact hit** — an entry for `(config hash, warmup days)` exists:
+//!   decode it and skip the warmup simulation entirely. Snapshots are
+//!   byte-canonical ([`SimSnapshot::to_bytes`]), so a cached fork is
+//!   bit-identical to a freshly simulated one — cached and uncached
+//!   sweeps emit the same report bytes (`tests/snapshot_cache.rs`).
+//! * **Incremental hit** — a *shorter* warmup `W1 < W2` of the same
+//!   scenario is cached: resume it and simulate only the `W2 - W1` day
+//!   delta, then store the `W2` checkpoint too. Ablations that sweep the
+//!   warmup axis pay each day of simulation once, ever.
+//! * **Miss** — simulate from day 0 and store the result.
+//!
+//! **Key derivation.** An entry is addressed by
+//! `(FNV-1a-64 of the scenario config's canonical binio encoding,
+//! warmup length, SimSnapshot::STATE_VERSION)`. The config hash covers
+//! every field of [`ScenarioConfig`] — seed, campuses, optimizer/SLO
+//! parameters, workload-class taxonomy — so any semantic change to the
+//! scenario derives a different address. Warmups are always unshaped
+//! under the native solver, and snapshots are engine-agnostic, so none
+//! of those execution knobs belong in the key. The state version is
+//! baked into the envelope: bumping it (any serialized-state layout or
+//! semantics change) turns every old entry into a clean decode failure,
+//! which the cache treats as a miss. Corrupt or truncated entries are
+//! likewise detected (checksum), evicted and re-simulated — the cache
+//! can only ever cost a warmup, never wrong results.
+//!
+//! **Budgets.** Decoded snapshots are kept in an in-process LRU so a
+//! sweep re-forking the same scenario never re-reads disk; when their
+//! total (encoded-size) footprint exceeds the memory budget, the least
+//! recently used are dropped — they *spill to disk*, whence they reload
+//! on demand. The directory itself is bounded by a disk budget with the
+//! same LRU policy (tracked in `cache_index.json`; the file is advisory —
+//! if it is lost, entries survive with reset recency).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::config::ScenarioConfig;
+use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend};
+use crate::scheduler::SimEngine;
+use crate::util::binio::{fnv1a64, to_payload};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Default cache directory (under the default `--out` root).
+pub const DEFAULT_CACHE_DIR: &str = "reports/cache";
+/// Default on-disk budget (bytes).
+pub const DEFAULT_DISK_BUDGET: u64 = 1024 * 1024 * 1024;
+/// Default in-memory budget for decoded snapshots (bytes, estimated by
+/// encoded size).
+pub const DEFAULT_MEM_BUDGET: u64 = 256 * 1024 * 1024;
+
+/// Cache traffic counters. Cumulative over the cache's lifetime;
+/// [`CacheStats::minus`] yields per-run deltas for `SweepTiming` /
+/// `BENCH_sweep.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Warmup requests served (one per physical scenario per sweep).
+    pub requests: u64,
+    /// Exact `(config, warmup)` hits — warmup simulation skipped.
+    pub hits: u64,
+    /// Incremental hits — resumed a shorter cached warmup, simulated the
+    /// delta only.
+    pub partial_hits: u64,
+    /// Full misses — warmup simulated from day 0.
+    pub misses: u64,
+    /// Envelope bytes written to / read from disk.
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl CacheStats {
+    /// Exact-hit rate over requests. 0.0 for an idle cache — a cache
+    /// that served nothing must not read as performing perfectly
+    /// (`--assert-hit-rate` separately rejects zero-request runs).
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Counter delta `self - earlier` (both from the same cache).
+    pub fn minus(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            requests: self.requests - earlier.requests,
+            hits: self.hits - earlier.hits,
+            partial_hits: self.partial_hits - earlier.partial_hits,
+            misses: self.misses - earlier.misses,
+            bytes_written: self.bytes_written - earlier.bytes_written,
+            bytes_read: self.bytes_read - earlier.bytes_read,
+        }
+    }
+}
+
+/// One on-disk entry.
+#[derive(Clone, Debug)]
+struct Entry {
+    file: String,
+    hash: u64,
+    warmup: usize,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// Mutable cache state behind one lock: the disk index, the in-memory
+/// decoded-snapshot LRU, and the traffic counters. Simulation work never
+/// runs under the lock — only index bookkeeping and file I/O.
+#[derive(Default)]
+struct Inner {
+    counter: u64,
+    entries: Vec<Entry>,
+    /// Decoded-snapshot LRU. `Arc` so the lock only ever guards pointer
+    /// clones and bookkeeping — deep snapshot clones (multi-MB telemetry
+    /// stores) happen outside it, keeping warm warmup phases parallel.
+    mem: HashMap<String, Arc<SimSnapshot>>,
+    mem_bytes: u64,
+    stats: CacheStats,
+}
+
+/// The persistent snapshot cache. Shared by reference across sweep
+/// worker threads (all methods take `&self`).
+pub struct SnapshotCache {
+    dir: PathBuf,
+    disk_budget: u64,
+    mem_budget: u64,
+    inner: Mutex<Inner>,
+}
+
+/// File name of an entry: content hash + warmup length (the state
+/// version lives inside the envelope, not the name — a version bump
+/// makes stale files decode-fail and get evicted, rather than strand
+/// them forever under unreferenced names).
+fn entry_file(hash: u64, warmup: usize) -> String {
+    format!("snap-{hash:016x}-w{warmup}.bin")
+}
+
+/// Parse `snap-<hash>-w<days>.bin` back into `(hash, warmup)`.
+fn parse_entry_file(name: &str) -> Option<(u64, usize)> {
+    let rest = name.strip_prefix("snap-")?.strip_suffix(".bin")?;
+    let (hash_hex, w) = rest.split_once("-w")?;
+    Some((u64::from_str_radix(hash_hex, 16).ok()?, w.parse().ok()?))
+}
+
+const INDEX_FILE: &str = "cache_index.json";
+
+impl SnapshotCache {
+    /// Open (creating if missing) a cache rooted at `dir` with the given
+    /// disk/memory budgets in bytes.
+    pub fn open(dir: impl AsRef<Path>, disk: u64, mem: u64) -> Result<SnapshotCache> {
+        let (disk_budget, mem_budget) = (disk, mem);
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| crate::err!("snapshot cache: creating {dir:?}: {e}"))?;
+        let mut inner = Inner::default();
+        // Advisory recency index; the directory listing is the truth for
+        // existence and size.
+        let recency: HashMap<String, u64> = read_index(&dir.join(INDEX_FILE))
+            .map(|(counter, rec)| {
+                inner.counter = counter;
+                rec
+            })
+            .unwrap_or_default();
+        let listing = std::fs::read_dir(&dir)
+            .map_err(|e| crate::err!("snapshot cache: listing {dir:?}: {e}"))?;
+        for f in listing.flatten() {
+            let name = f.file_name().to_string_lossy().into_owned();
+            if let Some((hash, warmup)) = parse_entry_file(&name) {
+                let bytes = f.metadata().map(|m| m.len()).unwrap_or(0);
+                let last_used = recency.get(&name).copied().unwrap_or(0);
+                inner.entries.push(Entry { file: name, hash, warmup, bytes, last_used });
+            } else if name.contains(".bin.tmp.") {
+                // publish-in-progress file: invisible to the index and the
+                // disk budget. Sweep it only once it is clearly stale — a
+                // fresh one may belong to a concurrently publishing run
+                // (whose store degrades to a warning if we race it anyway).
+                let stale = f
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .is_some_and(|age| age.as_secs() > 3600);
+                if stale {
+                    let _ = std::fs::remove_file(f.path());
+                }
+            }
+        }
+        // Enforce the disk budget up front: a lowered budget, or runs
+        // that only ever hit (store() is where eviction otherwise runs),
+        // must still trim the directory. Keeps the most recently used
+        // entries; a single over-budget entry stays usable.
+        let mut trimmed = false;
+        loop {
+            let total: u64 = inner.entries.iter().map(|e| e.bytes).sum();
+            if total <= disk_budget || inner.entries.len() <= 1 {
+                break;
+            }
+            let i = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("entries checked non-empty");
+            let e = inner.entries.remove(i);
+            let _ = std::fs::remove_file(dir.join(&e.file));
+            trimmed = true;
+        }
+        if trimmed {
+            write_index(&dir, &inner);
+        }
+        Ok(SnapshotCache { dir, disk_budget, mem_budget, inner: Mutex::new(inner) })
+    }
+
+    /// [`SnapshotCache::open`] with the default budgets.
+    pub fn open_default(dir: impl AsRef<Path>) -> Result<SnapshotCache> {
+        SnapshotCache::open(dir, DEFAULT_DISK_BUDGET, DEFAULT_MEM_BUDGET)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Cumulative traffic counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Entries currently on disk.
+    pub fn entry_count(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Total encoded bytes currently on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Produce the warmup checkpoint for `cfg`, consulting the cache:
+    /// exact hit → decode only; shorter cached warmup → resume + simulate
+    /// the delta; miss → simulate from day 0. The returned snapshot is
+    /// bit-identical to what a fresh simulation would produce, whichever
+    /// path served it.
+    pub fn warmup(
+        &self,
+        cfg: &ScenarioConfig,
+        warmup_days: usize,
+        inner_threads: usize,
+        engine: SimEngine,
+    ) -> Result<SimSnapshot> {
+        let cfg = warmup_cfg(cfg);
+        let cfg = &cfg;
+        let cfg_bytes = to_payload(cfg);
+        let hash = fnv1a64(&cfg_bytes);
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.stats.requests += 1;
+        }
+        // ---- exact hit
+        if let Some(snap) = self.load(hash, warmup_days, &cfg_bytes) {
+            let mut g = self.inner.lock().unwrap();
+            g.stats.hits += 1;
+            return Ok(snap);
+        }
+        // ---- incremental hit: longest cached warmup strictly shorter
+        let shorter: Option<usize> = {
+            let g = self.inner.lock().unwrap();
+            g.entries
+                .iter()
+                .filter(|e| e.hash == hash && e.warmup < warmup_days && e.warmup > 0)
+                .map(|e| e.warmup)
+                .max()
+        };
+        if let Some(w1) = shorter {
+            if let Some(base) = self.load(hash, w1, &cfg_bytes) {
+                let mut sim = Simulation::resume(base, warmup_options(inner_threads, engine));
+                sim.run_days(warmup_days - w1)?;
+                let snap = sim.snapshot();
+                self.store_or_warn(hash, warmup_days, &snap);
+                let mut g = self.inner.lock().unwrap();
+                g.stats.partial_hits += 1;
+                return Ok(snap);
+            }
+        }
+        // ---- miss: simulate from scratch and store (cfg is already the
+        // normalized warmup config, so the stored snapshot matches it)
+        let mut sim = Simulation::with_options(cfg.clone(), warmup_options(inner_threads, engine));
+        sim.run_days(warmup_days)?;
+        let snap = sim.snapshot();
+        self.store_or_warn(hash, warmup_days, &snap);
+        let mut g = self.inner.lock().unwrap();
+        g.stats.misses += 1;
+        Ok(snap)
+    }
+
+    /// Store an entry, degrading to a warning on failure: the snapshot in
+    /// hand is already correct, and an unwritable cache (disk full,
+    /// read-only mount, a concurrent cleaner) may cost the *next* run a
+    /// warmup — never this run its results.
+    fn store_or_warn(&self, hash: u64, warmup: usize, snap: &SimSnapshot) {
+        if let Err(e) = self.store(hash, warmup, snap) {
+            let name = entry_file(hash, warmup);
+            eprintln!("snapshot cache: could not store {name}: {e:#} (continuing uncached)");
+        }
+    }
+
+    /// Load an entry, preferring the in-memory LRU over disk. Any
+    /// failure — missing file, bad envelope, version mismatch, config
+    /// (hash-collision) mismatch — evicts the entry and reads as "not
+    /// cached". Never errors: a broken cache degrades to simulation.
+    fn load(&self, hash: u64, warmup: usize, cfg_bytes: &[u8]) -> Option<SimSnapshot> {
+        let name = entry_file(hash, warmup);
+        let mem_hit: Option<Arc<SimSnapshot>> = {
+            let mut g = self.inner.lock().unwrap();
+            // the memory path enforces the same hash-collision guard as
+            // the disk path; a mismatch falls through to the disk load,
+            // which evicts the colliding entry. Recency is bumped in
+            // memory only: the index is advisory, and a blocking file
+            // write per memory hit would put serialized I/O back into
+            // the phase the cache removes.
+            let hit = g.mem.get(&name).filter(|s| to_payload(s.cfg()) == cfg_bytes).cloned();
+            if hit.is_some() {
+                touch(&mut g, &name);
+            }
+            hit
+        };
+        if let Some(snap) = mem_hit {
+            // deep clone outside the lock — a warm phase stays parallel
+            return Some((*snap).clone());
+        }
+        let bytes = match std::fs::read(self.dir.join(&name)) {
+            Ok(b) => b,
+            Err(_) => {
+                // the file is gone (evicted by another process sharing
+                // the directory): retire the stale index row, or it would
+                // keep shadowing shorter entries in the incremental
+                // lookup and inflating the disk-budget accounting
+                let mut g = self.inner.lock().unwrap();
+                if g.entries.iter().any(|en| en.file == name) {
+                    let b = g.entries.iter().find(|en| en.file == name).map_or(0, |en| en.bytes);
+                    g.entries.retain(|en| en.file != name);
+                    if g.mem.remove(&name).is_some() {
+                        g.mem_bytes = g.mem_bytes.saturating_sub(b);
+                    }
+                    write_index(&self.dir, &g);
+                }
+                return None;
+            }
+        };
+        let decoded = SimSnapshot::from_bytes(&bytes).and_then(|snap| {
+            // guard against an FNV collision serving a different scenario
+            crate::ensure!(
+                to_payload(snap.cfg()) == cfg_bytes,
+                "config mismatch (hash collision)"
+            );
+            // ...and against a mislabeled file (renamed/copied by a sync
+            // tool) serving the wrong day boundary
+            crate::ensure!(
+                snap.day() == warmup,
+                "entry at day {} does not match its label w{warmup}",
+                snap.day()
+            );
+            Ok(snap)
+        });
+        match decoded {
+            Ok(snap) => {
+                let arc = Arc::new(snap);
+                let mut g = self.inner.lock().unwrap();
+                g.stats.bytes_read += bytes.len() as u64;
+                // a file another process stored after our open() has no
+                // index row yet — register it, or both eviction loops
+                // (which pick victims from `entries`) could never select
+                // it and the budgets would silently stop binding
+                if !g.entries.iter().any(|e| e.file == name) {
+                    let (file, bytes) = (name.clone(), bytes.len() as u64);
+                    g.entries.push(Entry { file, hash, warmup, bytes, last_used: 0 });
+                }
+                touch(&mut g, &name);
+                insert_mem(&mut g, self.mem_budget, name, bytes.len() as u64, arc.clone());
+                write_index(&self.dir, &g);
+                drop(g);
+                Some((*arc).clone())
+            }
+            Err(e) => {
+                eprintln!("snapshot cache: dropping unusable entry {name}: {e:#}");
+                let _ = std::fs::remove_file(self.dir.join(&name));
+                let mut g = self.inner.lock().unwrap();
+                g.stats.bytes_read += bytes.len() as u64;
+                let b = g.entries.iter().find(|en| en.file == name).map_or(0, |en| en.bytes);
+                g.entries.retain(|en| en.file != name);
+                if g.mem.remove(&name).is_some() {
+                    g.mem_bytes = g.mem_bytes.saturating_sub(b);
+                }
+                write_index(&self.dir, &g);
+                None
+            }
+        }
+    }
+
+    /// Write an entry (atomic tmp + rename), update the index, admit it
+    /// to the memory LRU, and enforce both budgets.
+    fn store(&self, hash: u64, warmup: usize, snap: &SimSnapshot) -> Result<()> {
+        let name = entry_file(hash, warmup);
+        let bytes = snap.to_bytes();
+        let arc = Arc::new(snap.clone()); // deep clone outside the lock
+        let tmp = self.dir.join(format!("{name}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| crate::err!("snapshot cache: writing {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, self.dir.join(&name))
+            .map_err(|e| crate::err!("snapshot cache: publishing {name}: {e}"))?;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.bytes_written += bytes.len() as u64;
+        g.entries.retain(|e| e.file != name);
+        g.counter += 1;
+        let last_used = g.counter;
+        let len = bytes.len() as u64;
+        g.entries.push(Entry { file: name.clone(), hash, warmup, bytes: len, last_used });
+        insert_mem(&mut g, self.mem_budget, name.clone(), len, arc);
+        // disk LRU: evict least recently used until under budget; never
+        // the entry just written (the caller holds a reference to it)
+        loop {
+            let total: u64 = g.entries.iter().map(|e| e.bytes).sum();
+            if total <= self.disk_budget {
+                break;
+            }
+            let victim = g
+                .entries
+                .iter()
+                .filter(|e| e.file != name)
+                .min_by_key(|e| e.last_used)
+                .map(|e| (e.file.clone(), e.bytes));
+            match victim {
+                Some((v, b)) => {
+                    let _ = std::fs::remove_file(self.dir.join(&v));
+                    g.entries.retain(|e| e.file != v);
+                    if g.mem.remove(&v).is_some() {
+                        g.mem_bytes = g.mem_bytes.saturating_sub(b);
+                    }
+                }
+                None => break, // a single over-budget entry stays usable
+            }
+        }
+        write_index(&self.dir, &g);
+        Ok(())
+    }
+}
+
+/// Canonical warmup scenario config: normalize away the one config bit
+/// that varies across solver variants of the same physical scenario
+/// (`use_artifact` is set per solver by matrix expansion) but cannot
+/// influence a warmup — warmups force the native backend, and every fork
+/// resumes with an explicit backend. Hashing and storing the normalized
+/// config is what makes one cache entry serve every variant, whichever
+/// cell happens to be the group's representative; `sweep` applies the
+/// same normalization on its uncached path so snapshots are
+/// representative-independent either way.
+pub(crate) fn warmup_cfg(cfg: &ScenarioConfig) -> ScenarioConfig {
+    let mut cfg = cfg.clone();
+    cfg.optimizer.use_artifact = false;
+    cfg
+}
+
+/// The canonical warmup options: shaping disabled, native solver, no
+/// spatial pass. The single source of truth shared by the cache's
+/// simulate paths *and* `sweep::warmup_snapshot` — cached and uncached
+/// warmups must be configured identically or the byte-identity contract
+/// breaks. (The solver is never consulted while shaping is off, so one
+/// cached warmup serves every variant and every backend.)
+pub(crate) fn warmup_options(inner_threads: usize, engine: SimEngine) -> SimOptions {
+    SimOptions {
+        backend: Some(SolverBackend::Native),
+        threads: Some(inner_threads),
+        shaping_disabled: true,
+        spatial_movable_fraction: None,
+        engine,
+    }
+}
+
+/// Bump an entry's recency under the lock.
+fn touch(g: &mut Inner, name: &str) {
+    g.counter += 1;
+    let c = g.counter;
+    if let Some(e) = g.entries.iter_mut().find(|e| e.file == name) {
+        e.last_used = c;
+    }
+}
+
+/// Admit a decoded snapshot to the memory LRU, spilling the least
+/// recently used residents back to disk-only when over budget.
+fn insert_mem(g: &mut Inner, budget: u64, name: String, bytes: u64, snap: Arc<SimSnapshot>) {
+    if g.mem.insert(name.clone(), snap).is_none() {
+        g.mem_bytes += bytes;
+    }
+    while g.mem_bytes > budget && g.mem.len() > 1 {
+        let victim = g
+            .entries
+            .iter()
+            .filter(|e| g.mem.contains_key(&e.file) && e.file != name)
+            .min_by_key(|e| e.last_used)
+            .map(|e| (e.file.clone(), e.bytes));
+        match victim {
+            Some((v, b)) => {
+                g.mem.remove(&v);
+                g.mem_bytes = g.mem_bytes.saturating_sub(b);
+            }
+            None => break,
+        }
+    }
+}
+
+/// Parse `cache_index.json` → (counter, file → last_used). `None` on any
+/// problem — the index is advisory.
+fn read_index(path: &Path) -> Option<(u64, HashMap<String, u64>)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let counter = j.f64_or("counter", 0.0) as u64;
+    let mut rec = HashMap::new();
+    if let Some(entries) = j.get("entries").and_then(Json::as_arr) {
+        for e in entries {
+            if let Some(file) = e.get("file").and_then(Json::as_str) {
+                rec.insert(file.to_string(), e.f64_or("last_used", 0.0) as u64);
+            }
+        }
+    }
+    Some((counter, rec))
+}
+
+/// Persist the recency index (best effort — an unwritable index only
+/// costs LRU accuracy on the next open, never correctness).
+fn write_index(dir: &Path, g: &Inner) {
+    let entries: Vec<Json> = g
+        .entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("file", Json::Str(e.file.clone())),
+                ("bytes", Json::Num(e.bytes as f64)),
+                ("last_used", Json::Num(e.last_used as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("cics-snapshot-cache-v1".into())),
+        ("state_version", Json::Num(SimSnapshot::STATE_VERSION as f64)),
+        ("counter", Json::Num(g.counter as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let _ = std::fs::write(dir.join(INDEX_FILE), doc.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cics_cache_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_cfg(seed: u64) -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::default();
+        cfg.seed = seed;
+        cfg.campuses[0].clusters = 2;
+        cfg.optimizer.iters = 120;
+        cfg.optimizer.use_artifact = false;
+        cfg
+    }
+
+    #[test]
+    fn entry_file_name_roundtrips() {
+        let name = entry_file(0xDEAD_BEEF_1234_5678, 25);
+        assert_eq!(parse_entry_file(&name), Some((0xDEAD_BEEF_1234_5678, 25)));
+        assert_eq!(parse_entry_file("snap-zz-w3.bin"), None);
+        assert_eq!(parse_entry_file("other.bin"), None);
+        assert_eq!(parse_entry_file("cache_index.json"), None);
+    }
+
+    #[test]
+    fn miss_then_hit_then_reopen_hit() {
+        let dir = tmp_dir("hit");
+        let cfg = small_cfg(11);
+        {
+            let cache = SnapshotCache::open_default(&dir).unwrap();
+            let a = cache.warmup(&cfg, 3, 1, SimEngine::Event).unwrap();
+            let s = cache.stats();
+            assert_eq!((s.requests, s.hits, s.misses), (1, 0, 1));
+            assert!(s.bytes_written > 0);
+            let b = cache.warmup(&cfg, 3, 1, SimEngine::Event).unwrap();
+            let s = cache.stats();
+            assert_eq!((s.requests, s.hits, s.misses), (2, 1, 1));
+            assert_eq!(a.to_bytes(), b.to_bytes(), "cached snapshot must be bit-identical");
+        }
+        // a fresh process (new cache object) hits from disk
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        assert_eq!(cache.entry_count(), 1);
+        let c = cache.warmup(&cfg, 3, 1, SimEngine::Event).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.requests, s.hits, s.misses), (1, 1, 0));
+        assert!(s.bytes_read > 0);
+        assert_eq!(c.day(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn different_configs_do_not_collide() {
+        let dir = tmp_dir("keys");
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        let a = cache.warmup(&small_cfg(1), 2, 1, SimEngine::Event).unwrap();
+        let b = cache.warmup(&small_cfg(2), 2, 1, SimEngine::Event).unwrap();
+        assert_eq!(cache.stats().misses, 2, "distinct seeds are distinct scenarios");
+        assert_ne!(a.to_bytes(), b.to_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_budget_evicts_lru() {
+        let dir = tmp_dir("evict");
+        // budget below two entries: storing the second evicts the first
+        let probe = {
+            let cache = SnapshotCache::open_default(&dir).unwrap();
+            cache.warmup(&small_cfg(5), 2, 1, SimEngine::Event).unwrap();
+            cache.disk_bytes()
+        };
+        std::fs::remove_dir_all(&dir).unwrap();
+        let cache = SnapshotCache::open(&dir, probe + probe / 2, DEFAULT_MEM_BUDGET).unwrap();
+        cache.warmup(&small_cfg(5), 2, 1, SimEngine::Event).unwrap();
+        cache.warmup(&small_cfg(6), 2, 1, SimEngine::Event).unwrap();
+        assert_eq!(cache.entry_count(), 1, "LRU entry evicted to respect the budget");
+        assert!(cache.disk_bytes() <= probe + probe / 2);
+        // the survivor is the most recent scenario
+        let s0 = cache.stats();
+        cache.warmup(&small_cfg(6), 2, 1, SimEngine::Event).unwrap();
+        assert_eq!(cache.stats().hits, s0.hits + 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn memory_budget_spills_to_disk_without_losing_entries() {
+        let dir = tmp_dir("spill");
+        // tiny memory budget: at most one decoded snapshot stays resident
+        let cache = SnapshotCache::open(&dir, DEFAULT_DISK_BUDGET, 1).unwrap();
+        cache.warmup(&small_cfg(7), 2, 1, SimEngine::Event).unwrap();
+        cache.warmup(&small_cfg(8), 2, 1, SimEngine::Event).unwrap();
+        assert_eq!(cache.entry_count(), 2, "spill drops memory copies, not disk entries");
+        {
+            let g = cache.inner.lock().unwrap();
+            assert!(g.mem.len() <= 1, "memory LRU respects the budget");
+        }
+        // both still load (one from memory at most, the rest re-read)
+        let s0 = cache.stats();
+        cache.warmup(&small_cfg(7), 2, 1, SimEngine::Event).unwrap();
+        cache.warmup(&small_cfg(8), 2, 1, SimEngine::Event).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.hits, s0.hits + 2);
+        assert!(s.bytes_read > s0.bytes_read, "spilled snapshot re-read from disk");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

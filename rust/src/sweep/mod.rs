@@ -43,9 +43,11 @@
 //! any worker count, and with either sharing mode — reproduces the report
 //! byte-for-byte.
 
+pub mod cache;
 pub mod matrix;
 pub mod report;
 
+pub use cache::{CacheStats, SnapshotCache};
 pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
 pub use report::{CellReport, SweepReport};
 
@@ -86,6 +88,9 @@ pub struct SweepTiming {
     pub units_s: f64,
     /// Whole `run_sweep` call.
     pub total_s: f64,
+    /// Snapshot-cache traffic of this run (all zero when the run had no
+    /// cache). Like the phase timings, never part of the report bytes.
+    pub cache: CacheStats,
 }
 
 /// Run the whole matrix: `measure_days` measured days per cell after the
@@ -106,7 +111,7 @@ pub fn run_sweep_mode(
     run_sweep_engine(matrix, measure_days, threads, sharing, SimEngine::default())
 }
 
-/// [`run_sweep_mode`] with an explicit per-tick [`SimEngine`] — the full
+/// [`run_sweep_mode`] with an explicit per-tick [`SimEngine`] — the
 /// entry point of the `cics bench` harness. The engine, like the sharing
 /// mode, is an execution strategy: the report bytes are identical either
 /// way (`tests/engine_equivalence.rs`).
@@ -117,8 +122,28 @@ pub fn run_sweep_engine(
     sharing: WarmupSharing,
     engine: SimEngine,
 ) -> Result<(SweepReport, SweepTiming)> {
+    run_sweep_cached(matrix, measure_days, threads, sharing, engine, None)
+}
+
+/// [`run_sweep_engine`] with an optional persistent [`SnapshotCache`]:
+/// when present, the [`WarmupSharing::Fork`] warmup phase is served
+/// through the cache (exact hit → decode, shorter cached warmup → resume
+/// + delta, miss → simulate and store), amortizing warmups across
+/// *invocations* instead of merely across a sweep's variants. Cached and
+/// uncached runs emit byte-identical reports — the cache is an execution
+/// strategy like the sharing mode and the engine, and the reference
+/// [`WarmupSharing::PerCell`] path never consults it.
+pub fn run_sweep_cached(
+    matrix: &SweepMatrix,
+    measure_days: usize,
+    threads: usize,
+    sharing: WarmupSharing,
+    engine: SimEngine,
+    cache: Option<&SnapshotCache>,
+) -> Result<(SweepReport, SweepTiming)> {
     crate::ensure!(measure_days > 0, "sweep needs at least one measured day");
     let t_start = std::time::Instant::now();
+    let stats_before = cache.map(|c| c.stats()).unwrap_or_default();
     let cells = expand(matrix)?;
     let threads = threads.max(1);
     let warmup = matrix.warmup_days;
@@ -135,7 +160,11 @@ pub fn run_sweep_engine(
         WarmupSharing::Fork => {
             let inner = inner_for(groups.len());
             threadpool::parallel_map_dyn(groups.len(), threads, |g| {
-                warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)
+                let rep = &cells[groups[g].rep];
+                match cache {
+                    Some(c) if warmup > 0 => c.warmup(&rep.cfg, warmup, inner, engine),
+                    _ => warmup_snapshot(rep, warmup, inner, engine),
+                }
             })
             .into_iter()
             .collect::<Result<_>>()?
@@ -189,7 +218,12 @@ pub fn run_sweep_engine(
             make_report(cell, s, b)
         })
         .collect();
-    let timing = SweepTiming { warmup_s, units_s, total_s: t_start.elapsed().as_secs_f64() };
+    let timing = SweepTiming {
+        warmup_s,
+        units_s,
+        total_s: t_start.elapsed().as_secs_f64(),
+        cache: cache.map(|c| c.stats().minus(&stats_before)).unwrap_or_default(),
+    };
     Ok((SweepReport::new(warmup, measure_days, reports), timing))
 }
 
@@ -233,7 +267,10 @@ fn plan_units(groups: &[PlanGroup]) -> Vec<(usize, Option<usize>)> {
 }
 
 /// Simulate a physical scenario's warmup — shaping disabled, native
-/// solver, no spatial pass — and checkpoint the state at the boundary.
+/// solver, no spatial pass, representative-independent config
+/// ([`cache::warmup_options`] and [`cache::warmup_cfg`], the single
+/// sources of truth the snapshot cache's paths share) — and checkpoint
+/// the state at the boundary.
 fn warmup_snapshot(
     rep: &SweepCell,
     warmup_days: usize,
@@ -241,14 +278,8 @@ fn warmup_snapshot(
     engine: SimEngine,
 ) -> Result<SimSnapshot> {
     let mut sim = Simulation::with_options(
-        rep.cfg.clone(),
-        SimOptions {
-            backend: Some(SolverBackend::Native),
-            threads: Some(inner_threads),
-            shaping_disabled: true,
-            spatial_movable_fraction: None,
-            engine,
-        },
+        cache::warmup_cfg(&rep.cfg),
+        cache::warmup_options(inner_threads, engine),
     );
     sim.run_days(warmup_days)?;
     Ok(sim.snapshot())

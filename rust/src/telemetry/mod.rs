@@ -215,6 +215,60 @@ impl TelemetryStore {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for ClusterDayRecord {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            w.put_usize(self.day);
+            self.usage_if.write(w);
+            self.usage_flex.write(w);
+            self.resv_if.write(w);
+            self.resv_flex.write(w);
+            self.pd_power.write(w);
+            self.pd_usage.write(w);
+            self.carbon_hourly.write(w);
+            w.put_f64(self.flex_backlog_gcuh);
+            w.put_f64(self.flex_done_gcuh);
+            w.put_f64(self.flex_submitted_gcuh);
+            w.put_bool(self.shaped);
+        }
+
+        fn read(r: &mut BinReader) -> Result<ClusterDayRecord> {
+            Ok(ClusterDayRecord {
+                cluster_id: r.usize_()?,
+                day: r.usize_()?,
+                usage_if: Vec::read(r)?,
+                usage_flex: Vec::read(r)?,
+                resv_if: Vec::read(r)?,
+                resv_flex: Vec::read(r)?,
+                pd_power: Vec::read(r)?,
+                pd_usage: Vec::read(r)?,
+                carbon_hourly: <[f64; HOURS_PER_DAY]>::read(r)?,
+                flex_backlog_gcuh: r.f64()?,
+                flex_done_gcuh: r.f64()?,
+                flex_submitted_gcuh: r.f64()?,
+                shaped: r.bool_()?,
+            })
+        }
+    }
+
+    impl Bin for TelemetryStore {
+        fn write(&self, w: &mut BinWriter) {
+            self.records.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<TelemetryStore> {
+            Ok(TelemetryStore { records: Vec::read(r)? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

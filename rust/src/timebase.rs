@@ -75,6 +75,22 @@ pub fn is_weekend(day: usize) -> bool {
     day % DAYS_PER_WEEK >= 5
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+impl crate::util::binio::Bin for SimTime {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_usize(self.day);
+        w.put_usize(self.tick);
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> crate::util::error::Result<SimTime> {
+        let day = r.usize_()?;
+        let tick = r.usize_()?;
+        crate::ensure!(tick < TICKS_PER_DAY, "SimTime: tick {tick} out of range");
+        Ok(SimTime { day, tick })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,496 @@
+//! Hand-rolled, dependency-free binary serialization — the substrate of
+//! the cross-run snapshot cache (the offline build has no `serde`/
+//! `bincode`; DESIGN.md §Substitutions).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Byte-exactness.** Every `f64` travels as its IEEE-754 bit
+//!    pattern (`to_bits`/`from_bits`), so `decode(encode(x))` is not
+//!    merely "equal" but *bit-identical* — the warmup checkpoint/fork
+//!    engine's contract is that a resumed simulation reproduces the
+//!    uninterrupted `DaySummary` stream byte for byte, and a snapshot
+//!    that went through disk must be indistinguishable from one that
+//!    stayed in memory. Encoding is also canonical: re-encoding a
+//!    decoded value reproduces the input bytes exactly, which is what
+//!    lets the cache content-address entries by hashing their encoding.
+//! 2. **Honest failure.** Truncated, corrupted or version-mismatched
+//!    input returns an `Err` describing what went wrong — never a
+//!    panic, never garbage data. The cache treats any decode error as
+//!    a miss and falls back to a fresh simulation.
+//! 3. **No cleverness.** Fixed little-endian primitives, length-prefixed
+//!    sequences, one-byte enum tags. No varints, no schema evolution
+//!    machinery — the envelope's version field is bumped instead
+//!    (a version bump simply invalidates old cache entries, which are
+//!    reproducible by construction).
+//!
+//! The [`envelope`]/[`open_envelope`] pair adds the file-level framing:
+//! an 8-byte magic, a format version, the payload length, and an
+//! FNV-1a-64 checksum over the payload.
+
+use crate::util::error::Result;
+use std::collections::VecDeque;
+
+/// File magic of every binio envelope (`CICS` + `BIN1`).
+pub const MAGIC: [u8; 8] = *b"CICSBIN1";
+
+/// Envelope header size: magic + version (u32) + payload len (u64) +
+/// checksum (u64).
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// FNV-1a 64-bit hash — the envelope checksum and the cache's
+/// content-address hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Wrap a payload in the versioned, checksummed envelope.
+pub fn envelope(version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate an envelope and return its payload slice. Rejects bad magic,
+/// version mismatches, truncation, trailing bytes and checksum failures
+/// with a descriptive error.
+pub fn open_envelope(bytes: &[u8], expect_version: u32) -> Result<&[u8]> {
+    crate::ensure!(
+        bytes.len() >= HEADER_LEN,
+        "binio: truncated envelope ({} bytes, header needs {HEADER_LEN})",
+        bytes.len()
+    );
+    crate::ensure!(bytes[..8] == MAGIC, "binio: bad magic (not a CICS binary snapshot)");
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    crate::ensure!(
+        version == expect_version,
+        "binio: version mismatch (file v{version}, expected v{expect_version})"
+    );
+    let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+    let payload = &bytes[HEADER_LEN..];
+    crate::ensure!(
+        payload.len() == len,
+        "binio: payload length mismatch (header says {len}, got {})",
+        payload.len()
+    );
+    let sum = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let actual = fnv1a64(payload);
+    crate::ensure!(
+        sum == actual,
+        "binio: checksum mismatch (header {sum:#018x}, payload {actual:#018x}) — corrupt entry"
+    );
+    Ok(payload)
+}
+
+/// Append-only byte sink for encoding.
+#[derive(Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> BinWriter {
+        BinWriter { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as u64 so 32- and 64-bit encoders agree.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Exact IEEE-754 bits — NaN payloads and -0.0 survive unchanged.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Cursor over an encoded payload; every read checks bounds.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BinReader<'a> {
+        BinReader { buf, pos: 0 }
+    }
+
+    /// Bytes left unread.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Every decode must consume its payload exactly; leftover bytes mean
+    /// the encoder and decoder disagree about the schema.
+    pub fn finish(self) -> Result<()> {
+        crate::ensure!(
+            self.remaining() == 0,
+            "binio: {} trailing bytes after decode (schema drift?)",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.remaining() >= n,
+            "binio: truncated input (need {n} bytes at offset {}, have {})",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize_(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        crate::ensure!(v <= usize::MAX as u64, "binio: usize overflow ({v})");
+        Ok(v as usize)
+    }
+
+    pub fn bool_(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(crate::err!("binio: invalid bool byte {b:#04x}")),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str_(&mut self) -> Result<String> {
+        let n = self.usize_()?;
+        // guard against a corrupt length prefix asking for gigabytes
+        crate::ensure!(n <= self.remaining(), "binio: string length {n} exceeds input");
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|e| crate::err!("binio: invalid utf-8 string: {e}"))
+    }
+
+    /// Length prefix for a sequence whose elements take at least
+    /// `min_elem_bytes` each — rejects corrupt lengths before a huge
+    /// `Vec::with_capacity` can abort the process.
+    pub fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.usize_()?;
+        crate::ensure!(
+            n.saturating_mul(min_elem_bytes.max(1)) <= self.remaining(),
+            "binio: sequence length {n} exceeds remaining input"
+        );
+        Ok(n)
+    }
+}
+
+/// A type with a canonical binary encoding. Implementations live next to
+/// their type (private fields stay private); each must write and read
+/// fields in the same order, and the encoding must be canonical:
+/// `write(read(bytes)) == bytes`.
+pub trait Bin: Sized {
+    fn write(&self, w: &mut BinWriter);
+    fn read(r: &mut BinReader) -> Result<Self>;
+}
+
+impl Bin for u8 {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_u8(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<u8> {
+        r.u8()
+    }
+}
+
+impl Bin for u32 {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_u32(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<u32> {
+        r.u32()
+    }
+}
+
+impl Bin for u64 {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_u64(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<u64> {
+        r.u64()
+    }
+}
+
+impl Bin for usize {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_usize(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<usize> {
+        r.usize_()
+    }
+}
+
+impl Bin for bool {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_bool(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<bool> {
+        r.bool_()
+    }
+}
+
+impl Bin for f64 {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_f64(*self);
+    }
+    fn read(r: &mut BinReader) -> Result<f64> {
+        r.f64()
+    }
+}
+
+impl Bin for String {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_str(self);
+    }
+    fn read(r: &mut BinReader) -> Result<String> {
+        r.str_()
+    }
+}
+
+impl<T: Bin> Bin for Option<T> {
+    fn write(&self, w: &mut BinWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.write(w);
+            }
+        }
+    }
+    fn read(r: &mut BinReader) -> Result<Option<T>> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::read(r)?)),
+            b => Err(crate::err!("binio: invalid Option tag {b:#04x}")),
+        }
+    }
+}
+
+impl<T: Bin> Bin for Vec<T> {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_usize(self.len());
+        for v in self {
+            v.write(w);
+        }
+    }
+    fn read(r: &mut BinReader) -> Result<Vec<T>> {
+        let n = r.seq_len(1)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::read(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Bin> Bin for VecDeque<T> {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_usize(self.len());
+        for v in self {
+            v.write(w);
+        }
+    }
+    fn read(r: &mut BinReader) -> Result<VecDeque<T>> {
+        let n = r.seq_len(1)?;
+        let mut out = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            out.push_back(T::read(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<A: Bin, B: Bin> Bin for (A, B) {
+    fn write(&self, w: &mut BinWriter) {
+        self.0.write(w);
+        self.1.write(w);
+    }
+    fn read(r: &mut BinReader) -> Result<(A, B)> {
+        Ok((A::read(r)?, B::read(r)?))
+    }
+}
+
+impl<T: Bin, const N: usize> Bin for [T; N] {
+    fn write(&self, w: &mut BinWriter) {
+        for v in self {
+            v.write(w);
+        }
+    }
+    fn read(r: &mut BinReader) -> Result<[T; N]> {
+        let mut out = Vec::with_capacity(N);
+        for _ in 0..N {
+            out.push(T::read(r)?);
+        }
+        out.try_into().map_err(|_| crate::err!("binio: array length mismatch"))
+    }
+}
+
+/// Encode a value to its canonical payload bytes (no envelope).
+pub fn to_payload<T: Bin>(v: &T) -> Vec<u8> {
+    let mut w = BinWriter::new();
+    v.write(&mut w);
+    w.into_bytes()
+}
+
+/// Decode a value from payload bytes, requiring full consumption.
+pub fn from_payload<T: Bin>(bytes: &[u8]) -> Result<T> {
+    let mut r = BinReader::new(bytes);
+    let v = T::read(&mut r)?;
+    r.finish()?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip_bit_exactly() {
+        let mut w = BinWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_usize(288);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_f64(1.0 / 3.0);
+        w.put_str("cics — snapshot");
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize_().unwrap(), 288);
+        assert!(r.bool_().unwrap());
+        assert!(!r.bool_().unwrap());
+        // -0.0 and NaN survive as exact bit patterns
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.f64().unwrap(), 1.0 / 3.0);
+        assert_eq!(r.str_().unwrap(), "cics — snapshot");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn containers_roundtrip_canonically() {
+        type T = (Vec<f64>, (Option<String>, VecDeque<u64>));
+        let v: T = (
+            vec![1.5, -2.5, 0.0],
+            (Some("x".to_string()), VecDeque::from(vec![1u64, 2, 3])),
+        );
+        let bytes = to_payload(&v);
+        let back: T = from_payload(&bytes).unwrap();
+        assert_eq!(back.0, v.0);
+        assert_eq!(back.1, v.1);
+        // canonical: re-encoding reproduces the exact bytes
+        assert_eq!(to_payload(&back), bytes);
+        let arr: [f64; 4] = from_payload(&to_payload(&[9.0, 8.0, 7.0, 6.0])).unwrap();
+        assert_eq!(arr, [9.0, 8.0, 7.0, 6.0]);
+        let none: Option<String> = from_payload(&to_payload(&None::<String>)).unwrap();
+        assert_eq!(none, None);
+    }
+
+    #[test]
+    fn truncated_and_trailing_inputs_fail() {
+        let bytes = to_payload(&vec![1.0f64, 2.0]);
+        assert!(from_payload::<Vec<f64>>(&bytes[..bytes.len() - 1]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(from_payload::<Vec<f64>>(&extra).is_err());
+        // corrupt length prefix must not allocate terabytes
+        let mut huge = bytes;
+        huge[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(from_payload::<Vec<f64>>(&huge).is_err());
+    }
+
+    #[test]
+    fn envelope_rejects_tampering() {
+        let payload = to_payload(&vec![3.0f64; 8]);
+        let enc = envelope(2, &payload);
+        assert_eq!(open_envelope(&enc, 2).unwrap(), &payload[..]);
+        // wrong version
+        assert!(open_envelope(&enc, 3).unwrap_err().to_string().contains("version"));
+        // bad magic
+        let mut bad = enc.clone();
+        bad[0] ^= 0xFF;
+        assert!(open_envelope(&bad, 2).unwrap_err().to_string().contains("magic"));
+        // flipped payload byte -> checksum failure
+        let mut corrupt = enc.clone();
+        *corrupt.last_mut().unwrap() ^= 0x01;
+        assert!(open_envelope(&corrupt, 2).unwrap_err().to_string().contains("checksum"));
+        // truncation at every boundary fails cleanly
+        for cut in [0, 7, HEADER_LEN - 1, HEADER_LEN + 3, enc.len() - 1] {
+            assert!(open_envelope(&enc[..cut], 2).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -5,6 +5,7 @@
 //! these are implemented from scratch (see DESIGN.md §Substitutions).
 
 pub mod ascii;
+pub mod binio;
 pub mod error;
 pub mod json;
 pub mod prop;

@@ -106,6 +106,19 @@ impl Ewma {
     }
 }
 
+impl crate::util::binio::Bin for Ewma {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        use crate::util::binio::Bin as _;
+        w.put_f64(self.alpha);
+        self.value.write(w);
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> crate::util::error::Result<Ewma> {
+        use crate::util::binio::Bin as _;
+        Ok(Ewma { alpha: r.f64()?, value: Option::read(r)? })
+    }
+}
+
 /// Simple ordinary least squares for `y = a + b x`.
 /// Returns (intercept a, slope b). Degenerate inputs give (mean(y), 0).
 pub fn ols(x: &[f64], y: &[f64]) -> (f64, f64) {

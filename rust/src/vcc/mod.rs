@@ -104,6 +104,50 @@ impl Rollout {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for Vcc {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            w.put_usize(self.day);
+            self.hourly.write(w);
+            w.put_bool(self.shaped);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Vcc> {
+            Ok(Vcc {
+                cluster_id: r.usize_()?,
+                day: r.usize_()?,
+                hourly: <[f64; HOURS_PER_DAY]>::read(r)?,
+                shaped: r.bool_()?,
+            })
+        }
+    }
+
+    impl Bin for Rollout {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.waves);
+            w.put_usize(self.wave_gap_days);
+            w.put_usize(self.start_day);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Rollout> {
+            let rollout = Rollout {
+                waves: r.usize_()?,
+                wave_gap_days: r.usize_()?,
+                start_day: r.usize_()?,
+            };
+            crate::ensure!(rollout.waves > 0, "Rollout: zero waves");
+            Ok(rollout)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

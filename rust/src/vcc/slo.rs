@@ -149,6 +149,43 @@ impl SloGuard {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for SloState {
+        fn write(&self, w: &mut BinWriter) {
+            self.tr_rel_errors.write(w);
+            w.put_usize(self.near_violation_streak);
+            w.put_usize(self.paused_until);
+            w.put_usize(self.pauses_triggered);
+        }
+
+        fn read(r: &mut BinReader) -> Result<SloState> {
+            Ok(SloState {
+                tr_rel_errors: Vec::read(r)?,
+                near_violation_streak: r.usize_()?,
+                paused_until: r.usize_()?,
+                pauses_triggered: r.usize_()?,
+            })
+        }
+    }
+
+    impl Bin for SloGuard {
+        fn write(&self, w: &mut BinWriter) {
+            self.cfg.write(w);
+            w.put_f64(self.quantile);
+        }
+
+        fn read(r: &mut BinReader) -> Result<SloGuard> {
+            Ok(SloGuard { cfg: SloConfig::read(r)?, quantile: r.f64()? })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

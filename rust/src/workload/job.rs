@@ -100,6 +100,40 @@ impl FlexJob {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+impl crate::util::binio::Bin for FlexJob {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        use crate::util::binio::Bin as _;
+        w.put_u64(self.id);
+        w.put_usize(self.cluster_id);
+        w.put_usize(self.class);
+        w.put_f64(self.demand_gcu);
+        w.put_f64(self.reservation_gcu);
+        w.put_usize(self.duration_ticks);
+        self.submit.write(w);
+        w.put_usize(self.remaining_ticks);
+        self.deadline.write(w);
+        w.put_bool(self.missed);
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> crate::util::error::Result<FlexJob> {
+        use crate::util::binio::Bin as _;
+        Ok(FlexJob {
+            id: r.u64()?,
+            cluster_id: r.usize_()?,
+            class: r.usize_()?,
+            demand_gcu: r.f64()?,
+            reservation_gcu: r.f64()?,
+            duration_ticks: r.usize_()?,
+            submit: SimTime::read(r)?,
+            remaining_ticks: r.usize_()?,
+            deadline: Option::read(r)?,
+            missed: r.bool_()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -363,6 +363,62 @@ impl DayArrivals {
     }
 }
 
+// ---- binary serialization (util::binio, snapshot cache) ----------------
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for WorkloadModel {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.cluster_id);
+            w.put_u64(self.seed);
+            w.put_f64(self.if_level);
+            w.put_f64(self.if_diurnal_amp);
+            w.put_f64(self.if_weekend);
+            w.put_f64(self.if_day_noise);
+            w.put_f64(self.if_tick_noise);
+            w.put_f64(self.flex_level);
+            w.put_f64(self.flex_day_noise);
+            w.put_f64(self.flex_weekend);
+            w.put_f64(self.growth_per_day);
+            self.surge_day.write(w);
+            w.put_f64(self.surge_factor);
+            w.put_f64(self.job_gcu_median);
+            w.put_f64(self.job_gcu_sigma);
+            w.put_f64(self.job_ticks_median);
+            w.put_f64(self.job_ticks_sigma);
+            w.put_f64(self.capacity_gcu);
+            self.classes.write(w);
+        }
+
+        fn read(r: &mut BinReader) -> Result<WorkloadModel> {
+            Ok(WorkloadModel {
+                cluster_id: r.usize_()?,
+                seed: r.u64()?,
+                if_level: r.f64()?,
+                if_diurnal_amp: r.f64()?,
+                if_weekend: r.f64()?,
+                if_day_noise: r.f64()?,
+                if_tick_noise: r.f64()?,
+                flex_level: r.f64()?,
+                flex_day_noise: r.f64()?,
+                flex_weekend: r.f64()?,
+                growth_per_day: r.f64()?,
+                surge_day: Option::read(r)?,
+                surge_factor: r.f64()?,
+                job_gcu_median: r.f64()?,
+                job_gcu_sigma: r.f64()?,
+                job_ticks_median: r.f64()?,
+                job_ticks_sigma: r.f64()?,
+                capacity_gcu: r.f64()?,
+                classes: FlexClasses::read(r)?,
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

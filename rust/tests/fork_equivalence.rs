@@ -201,3 +201,55 @@ fn event_warmup_forks_byte_identically_under_legacy_engine() {
         SimEngine::Legacy,
     );
 }
+
+/// The snapshot cache's serialization leg of the fork contract: a
+/// checkpoint that went through `to_bytes`/`from_bytes` (as every cached
+/// warmup does) must fork into the exact same measured window as the
+/// in-memory checkpoint — and the incremental path (resume a shorter
+/// warmup, simulate the delta, re-checkpoint) must land on the same
+/// bytes as warming up in one go.
+#[test]
+fn serialized_and_incremental_checkpoints_fork_byte_identically() {
+    use cics::coordinator::SimSnapshot;
+
+    let mk = || cfg(vec![campus("fork-eq", GridArchetype::FossilPeaker, 2)]);
+    let warmup_opts = || SimOptions {
+        backend: Some(SolverBackend::Native),
+        threads: Some(2),
+        shaping_disabled: true,
+        spatial_movable_fraction: None,
+        engine: SimEngine::Event,
+    };
+    // one uninterrupted warmup vs (shorter warmup → serialize → resume →
+    // delta days → serialize): checkpoint bytes must agree exactly
+    let mut full = Simulation::with_options(mk(), warmup_opts());
+    full.run_days(WARMUP).unwrap();
+    let full_bytes = full.snapshot().to_bytes();
+
+    let mut short = Simulation::with_options(mk(), warmup_opts());
+    short.run_days(WARMUP - 5).unwrap();
+    let short_roundtrip = SimSnapshot::from_bytes(&short.snapshot().to_bytes()).unwrap();
+    let mut extended = Simulation::resume(short_roundtrip, warmup_opts());
+    extended.run_days(5).unwrap();
+    assert_eq!(
+        extended.snapshot().to_bytes(),
+        full_bytes,
+        "incremental warmup diverged from the uninterrupted warmup"
+    );
+
+    // forking the deserialized checkpoint matches forking the live one
+    let fork_opts = SimOptions {
+        backend: Some(SolverBackend::Native),
+        threads: Some(1),
+        shaping_disabled: false,
+        spatial_movable_fraction: None,
+        engine: SimEngine::Event,
+    };
+    let mut live = Simulation::resume(full.snapshot(), fork_opts.clone());
+    let mut thawed =
+        Simulation::resume(SimSnapshot::from_bytes(&full_bytes).unwrap(), fork_opts);
+    live.run_days(MEASURE).unwrap();
+    thawed.run_days(MEASURE).unwrap();
+    assert_eq!(live.today_vccs, thawed.today_vccs);
+    assert_eq!(stream_bytes(&live), stream_bytes(&thawed), "disk fork diverged from live fork");
+}

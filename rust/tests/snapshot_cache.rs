@@ -1,0 +1,266 @@
+//! The persistent snapshot cache's correctness contract:
+//!
+//! 1. `SimSnapshot` binary serialization is **byte-exact and canonical**:
+//!    decode(encode(s)) re-encodes to the same bytes, and a simulation
+//!    resumed from a disk round-trip is bit-identical to one resumed
+//!    from the in-memory snapshot.
+//! 2. Corrupted, truncated or version-mismatched cache entries are
+//!    rejected at decode and the cache falls back to a fresh warmup —
+//!    a broken cache can cost time, never correctness.
+//! 3. Incremental checkpoints: resuming a cached `W1` warmup and
+//!    simulating `W2 - W1` days produces the same snapshot bytes as a
+//!    fresh `W2` warmup.
+//! 4. Sweep reports are byte-identical across cache-off, cache-cold and
+//!    cache-warm runs, and the warm run serves every warmup from cache
+//!    (hit rate 1.0) — the property CI's cold-then-warm perf-smoke
+//!    asserts on the real `cics bench --quick`.
+
+use std::path::PathBuf;
+
+use cics::config::{CampusConfig, GridArchetype, ScenarioConfig, SweepMatrix};
+use cics::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend};
+use cics::scheduler::SimEngine;
+use cics::sweep::{self, SnapshotCache, WarmupSharing};
+
+fn small_cfg() -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::default();
+    cfg.seed = 31337;
+    cfg.campuses = vec![CampusConfig {
+        name: "cache-eq".into(),
+        grid: GridArchetype::FossilPeaker,
+        clusters: 2,
+        contract_limit_kw: f64::INFINITY,
+        archetype_mix: (1.0, 0.0, 0.0),
+    }];
+    cfg.optimizer.iters = 150;
+    cfg.optimizer.use_artifact = false;
+    cfg
+}
+
+fn warmup_opts(engine: SimEngine) -> SimOptions {
+    SimOptions {
+        backend: Some(SolverBackend::Native),
+        threads: Some(2),
+        shaping_disabled: true,
+        spatial_movable_fraction: None,
+        engine,
+    }
+}
+
+fn warmed(days: usize, engine: SimEngine) -> Simulation {
+    let mut sim = Simulation::with_options(small_cfg(), warmup_opts(engine));
+    sim.run_days(days).unwrap();
+    sim
+}
+
+/// Unique scratch dir per test (no tempfile crate in the offline build).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cics_snapcache_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Debug-printed DaySummary stream: f64s render at round-trip precision,
+/// so equal strings mean bit-identical metric streams.
+fn stream_bytes(sim: &Simulation) -> String {
+    let mut out = String::new();
+    for cid in 0..sim.fleet.clusters.len() {
+        for s in sim.metrics.all(cid) {
+            out.push_str(&format!("{s:?}\n"));
+        }
+    }
+    out
+}
+
+#[test]
+fn snapshot_binary_roundtrip_is_byte_exact_and_canonical() {
+    // a warmup long enough to populate every state component: telemetry,
+    // forecaster histories, SLO errors, carried-over queues
+    let sim = warmed(9, SimEngine::Event);
+    let snap = sim.snapshot();
+    let bytes = snap.to_bytes();
+    let decoded = SimSnapshot::from_bytes(&bytes).unwrap();
+    assert_eq!(decoded.day(), 9);
+    // canonical: re-encoding the decoded snapshot reproduces the input
+    assert_eq!(decoded.to_bytes(), bytes, "encoding must be canonical");
+}
+
+#[test]
+fn resume_from_disk_equals_resume_from_memory() {
+    let warm = warmed(8, SimEngine::Legacy);
+    let snap_mem = warm.snapshot();
+    let snap_disk = SimSnapshot::from_bytes(&snap_mem.to_bytes()).unwrap();
+    // fork both under shaped options (and the other engine — snapshots
+    // are engine-agnostic) and compare the full metric streams
+    let opts = SimOptions {
+        backend: Some(SolverBackend::Native),
+        threads: Some(1),
+        shaping_disabled: false,
+        spatial_movable_fraction: None,
+        engine: SimEngine::Event,
+    };
+    let mut a = Simulation::resume(snap_mem, opts.clone());
+    let mut b = Simulation::resume(snap_disk, opts);
+    a.run_days(4).unwrap();
+    b.run_days(4).unwrap();
+    assert_eq!(a.day, b.day);
+    assert_eq!(a.today_vccs, b.today_vccs);
+    assert_eq!(stream_bytes(&a), stream_bytes(&b), "disk round-trip changed the simulation");
+}
+
+#[test]
+fn corrupt_truncated_and_mismatched_snapshots_are_rejected() {
+    let bytes = warmed(3, SimEngine::Event).snapshot().to_bytes();
+    // flip one payload byte: checksum must catch it
+    let mut corrupt = bytes.clone();
+    let last = corrupt.len() - 1;
+    corrupt[last] ^= 0x40;
+    let e = SimSnapshot::from_bytes(&corrupt).unwrap_err().to_string();
+    assert!(e.contains("checksum"), "{e}");
+    // truncate at several offsets: never panics, always errors
+    for cut in [0, 5, 27, 28, bytes.len() / 2, bytes.len() - 1] {
+        assert!(SimSnapshot::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+    }
+    // version bump: decode refuses old state
+    let mut wrong_version = bytes.clone();
+    wrong_version[8] = wrong_version[8].wrapping_add(1);
+    let e = SimSnapshot::from_bytes(&wrong_version).unwrap_err().to_string();
+    assert!(e.contains("version"), "{e}");
+    // foreign file
+    assert!(SimSnapshot::from_bytes(b"not a snapshot at all").is_err());
+}
+
+#[test]
+fn incremental_w1_to_w2_resume_matches_fresh_w2_bytes() {
+    const W1: usize = 6;
+    const W2: usize = 10;
+    let fresh = warmed(W2, SimEngine::Event).snapshot().to_bytes();
+    // resume the shorter warmup under the same warmup options and run
+    // only the delta — the exact path a cache "incremental hit" takes
+    let base = warmed(W1, SimEngine::Event).snapshot();
+    let mut resumed = Simulation::resume(base, warmup_opts(SimEngine::Event));
+    resumed.run_days(W2 - W1).unwrap();
+    assert_eq!(
+        resumed.snapshot().to_bytes(),
+        fresh,
+        "W1→W2 incremental warmup must be byte-identical to a fresh W2 warmup"
+    );
+}
+
+#[test]
+fn cache_serves_incremental_warmups_and_extends_entries() {
+    let dir = tmp_dir("incremental");
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let cfg = small_cfg();
+    let w1 = cache.warmup(&cfg, 6, 1, SimEngine::Event).unwrap();
+    assert_eq!(w1.day(), 6);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.partial_hits, s.misses), (0, 0, 1));
+    // longer warmup: resumes the cached 6-day snapshot, simulates 4 days
+    let w2 = cache.warmup(&cfg, 10, 1, SimEngine::Event).unwrap();
+    assert_eq!(w2.day(), 10);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.partial_hits, s.misses), (0, 1, 1));
+    // ...and the result is bit-identical to a fresh 10-day warmup
+    assert_eq!(w2.to_bytes(), warmed(10, SimEngine::Event).snapshot().to_bytes());
+    // the extended checkpoint is now cached in its own right
+    let w2_again = cache.warmup(&cfg, 10, 1, SimEngine::Event).unwrap();
+    assert_eq!(cache.stats().hits, 1);
+    assert_eq!(w2_again.to_bytes(), w2.to_bytes());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cache_falls_back_to_fresh_warmup_on_corrupt_entry() {
+    let dir = tmp_dir("fallback");
+    let cfg = small_cfg();
+    let reference = {
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        cache.warmup(&cfg, 4, 1, SimEngine::Event).unwrap()
+    };
+    // corrupt the single cache entry on disk in place
+    let entry = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .find(|f| f.file_name().to_string_lossy().ends_with(".bin"))
+        .expect("one snapshot entry on disk")
+        .path();
+    let mut bytes = std::fs::read(&entry).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&entry, &bytes).unwrap();
+    // a fresh cache rejects the entry, evicts it, and re-simulates
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let snap = cache.warmup(&cfg, 4, 1, SimEngine::Event).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (0, 1), "corrupt entry must read as a miss");
+    assert_eq!(snap.to_bytes(), reference.to_bytes(), "fallback result is still exact");
+    // the rebuilt entry now hits
+    cache.warmup(&cfg, 4, 1, SimEngine::Event).unwrap();
+    assert_eq!(cache.stats().hits, 1);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn quickish_matrix() -> SweepMatrix {
+    SweepMatrix {
+        seed: 20210212,
+        grids: vec!["PL".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into(), "mixed".into()],
+        solvers: vec!["native".into(), "greedy".into()],
+        spatial: vec![false],
+        warmup_days: 24,
+    }
+}
+
+#[test]
+fn sweep_reports_identical_across_cache_off_cold_and_warm() {
+    let dir = tmp_dir("sweep3way");
+    let m = quickish_matrix();
+    let (off, _) = sweep::run_sweep_mode(&m, 3, 4, WarmupSharing::Fork).unwrap();
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let engine = SimEngine::default();
+    let (cold, cold_t) =
+        sweep::run_sweep_cached(&m, 3, 4, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    let (warm, warm_t) =
+        sweep::run_sweep_cached(&m, 3, 4, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    let json = off.to_json().to_string();
+    assert_eq!(json, cold.to_json().to_string(), "cache-off vs cache-cold");
+    assert_eq!(json, warm.to_json().to_string(), "cache-off vs cache-warm");
+    // cold pass: every physical scenario missed and was stored
+    assert_eq!(cold_t.cache.requests, 2, "two physical scenarios (within-day, mixed)");
+    assert_eq!(cold_t.cache.misses, 2);
+    assert!(cold_t.cache.bytes_written > 0);
+    // warm pass: 100% exact hits, no simulation, nothing new written
+    assert_eq!(warm_t.cache.requests, 2);
+    assert_eq!(warm_t.cache.hits, 2);
+    assert_eq!(warm_t.cache.misses, 0);
+    assert_eq!(warm_t.cache.partial_hits, 0);
+    assert_eq!(warm_t.cache.bytes_written, 0);
+    assert!((warm_t.cache.hit_rate() - 1.0).abs() < 1e-12);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_cache_survives_process_boundaries_via_disk() {
+    // simulate two `cics bench` invocations: separate SnapshotCache
+    // objects over the same directory (the second must hit from disk)
+    let dir = tmp_dir("crossrun");
+    let m = quickish_matrix();
+    let engine = SimEngine::default();
+    let first = {
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        let (rep, t) =
+            sweep::run_sweep_cached(&m, 3, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+        assert_eq!(t.cache.misses, 2);
+        rep.to_json().to_string()
+    };
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let (rep, t) =
+        sweep::run_sweep_cached(&m, 3, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!(t.cache.hits, 2, "second run must hit from disk");
+    assert!(t.cache.bytes_read > 0);
+    assert_eq!(rep.to_json().to_string(), first);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -59,6 +59,37 @@ fn sweep_is_deterministic_across_reruns_and_worker_counts() {
     let (legacy, _) =
         sweep::run_sweep_engine(&m, 4, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
     assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
+
+    // ...and so is the cross-run snapshot cache: a cold-cache run (miss →
+    // simulate → store) and a warm-cache run (pure decode) of the same
+    // matrix may not move a byte (tests/snapshot_cache.rs pins the cache
+    // internals; this guards the determinism contract end to end)
+    let dir = std::env::temp_dir()
+        .join(format!("cics_sweep_det_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = sweep::SnapshotCache::open_default(&dir).unwrap();
+    let (cold, _) = sweep::run_sweep_cached(
+        &m,
+        4,
+        3,
+        WarmupSharing::Fork,
+        SimEngine::default(),
+        Some(&cache),
+    )
+    .unwrap();
+    let (warm, warm_t) = sweep::run_sweep_cached(
+        &m,
+        4,
+        6,
+        WarmupSharing::Fork,
+        SimEngine::default(),
+        Some(&cache),
+    )
+    .unwrap();
+    assert_eq!(json, cold.to_json().to_string(), "uncached vs cold cache");
+    assert_eq!(json, warm.to_json().to_string(), "uncached vs warm cache");
+    assert_eq!(warm_t.cache.misses, 0, "warm pass must not re-simulate warmups");
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
