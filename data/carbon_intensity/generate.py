@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Deterministic generator for the embedded carbon-intensity sample years.
+
+Produces one hourly gCO2eq/kWh CSV per region under
+``data/carbon_intensity/REGION/YEAR/REGION_YEAR_hourly.csv`` in the
+Electricity-Maps-style layout the `grid::trace` module ingests. The
+shapes are calibrated to published regional statistics (see README):
+a diurnal cosine peaking in the evening demand ramp, a midday solar
+dip where PV penetration is high, a weekend demand drop, a mild
+seasonal term, and AR(1) day-to-day noise. Regeneration is
+byte-reproducible: every stream is seeded per region, so re-running
+this script must not change a single committed byte.
+"""
+
+import math
+import os
+import random
+from datetime import datetime, timedelta, timezone
+
+YEAR = 2021
+
+# region, seed, annual mean, diurnal amp, solar dip, weekend drop, seasonal amp, noise sd, persistence
+REGIONS = [
+    ("SE", 0x5E01, 45.0, 6.0, 0.00, 0.04, 4.0, 0.05, 0.55),
+    ("FR", 0xF401, 60.0, 14.0, 0.05, 0.06, 10.0, 0.09, 0.60),
+    ("CA", 0xCA01, 230.0, 55.0, 0.30, 0.05, 20.0, 0.10, 0.55),
+    ("GB", 0x6B01, 250.0, 60.0, 0.08, 0.07, 35.0, 0.14, 0.60),
+    ("DE", 0xDE01, 350.0, 80.0, 0.18, 0.08, 45.0, 0.13, 0.60),
+    ("TX", 0x7E01, 430.0, 70.0, 0.12, 0.04, 50.0, 0.11, 0.55),
+    ("PL", 0x9101, 650.0, 60.0, 0.03, 0.05, 40.0, 0.07, 0.65),
+    ("IN", 0x1D01, 710.0, 45.0, 0.06, 0.02, 30.0, 0.06, 0.60),
+    ("CN", 0xC501, 790.0, 40.0, 0.04, 0.02, 25.0, 0.05, 0.60),
+    ("ZA", 0x2A01, 850.0, 35.0, 0.02, 0.03, 20.0, 0.05, 0.60),
+]
+
+PEAK_HOUR = 18.0  # evening demand ramp
+DIP_HOUR = 13.0  # solar midday dip centre
+
+
+def hours_in_year(year):
+    start = datetime(year, 1, 1, tzinfo=timezone.utc)
+    end = datetime(year + 1, 1, 1, tzinfo=timezone.utc)
+    return int((end - start).total_seconds() // 3600)
+
+
+def generate(region, seed, mean, diurnal, dip, weekend, seasonal, noise, rho):
+    rng = random.Random(seed)
+    n = hours_in_year(YEAR)
+    start = datetime(YEAR, 1, 1, tzinfo=timezone.utc)
+    day_factor = 0.0  # AR(1) state, zero-mean
+    rows = []
+    for i in range(n):
+        ts = start + timedelta(hours=i)
+        h = i % 24
+        day = i // 24
+        if h == 0:
+            day_factor = rho * day_factor + (1.0 - rho) * rng.gauss(0.0, noise)
+        v = mean
+        v += diurnal * math.cos((h - PEAK_HOUR) / 24.0 * 2.0 * math.pi)
+        v -= dip * mean * max(0.0, math.cos((h - DIP_HOUR) / 9.0 * math.pi))
+        # mild winter-high seasonality (northern-hemisphere phase)
+        v += seasonal * math.cos(day / 365.0 * 2.0 * math.pi)
+        if ts.weekday() >= 5:
+            v *= 1.0 - weekend
+        v *= 1.0 + day_factor
+        v *= 1.0 + rng.gauss(0.0, 0.012)
+        rows.append((ts, max(1.0, v)))
+    return rows
+
+
+def main():
+    base = os.path.dirname(os.path.abspath(__file__))
+    for region, seed, mean, diurnal, dip, weekend, seasonal, noise, rho in REGIONS:
+        rows = generate(region, seed, mean, diurnal, dip, weekend, seasonal, noise, rho)
+        out_dir = os.path.join(base, region, str(YEAR))
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{region}_{YEAR}_hourly.csv")
+        with open(path, "w", newline="\n") as f:
+            f.write("datetime,carbon_intensity_gco2_per_kwh\n")
+            for ts, v in rows:
+                f.write(f"{ts.strftime('%Y-%m-%dT%H:%M:%SZ')},{v:.1f}\n")
+        vals = [v for _, v in rows]
+        print(
+            f"{region}: {len(rows)} rows, mean {sum(vals)/len(vals):7.1f}, "
+            f"min {min(vals):7.1f}, max {max(vals):7.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

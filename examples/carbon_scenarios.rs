@@ -73,6 +73,7 @@ fn main() {
         cics::config::CampusConfig {
             name: "dirty".into(),
             grid: GridArchetype::FossilPeaker,
+            grid_source: Default::default(),
             clusters: 4,
             contract_limit_kw: f64::INFINITY,
             archetype_mix: (1.0, 0.0, 0.0),
@@ -80,6 +81,7 @@ fn main() {
         cics::config::CampusConfig {
             name: "clean".into(),
             grid: GridArchetype::LowCarbonBase,
+            grid_source: Default::default(),
             clusters: 4,
             contract_limit_kw: f64::INFINITY,
             archetype_mix: (1.0, 0.0, 0.0),

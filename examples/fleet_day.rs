@@ -16,6 +16,7 @@ fn main() -> cics::util::error::Result<()> {
         .map(|&grid| CampusConfig {
             name: format!("campus-{}", grid.name()),
             grid,
+            grid_source: Default::default(),
             clusters: 12,
             contract_limit_kw: f64::INFINITY,
             archetype_mix: (0.5, 0.3, 0.2),

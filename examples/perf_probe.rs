@@ -11,6 +11,7 @@ fn cfg() -> ScenarioConfig {
     cfg.campuses = vec![CampusConfig {
         name: "perf".into(),
         grid: GridArchetype::FossilPeaker,
+        grid_source: Default::default(),
         clusters: 48,
         contract_limit_kw: f64::INFINITY,
         archetype_mix: (0.5, 0.3, 0.2),

@@ -28,6 +28,7 @@ fn main() {
     .map(|&grid| CampusConfig {
         name: format!("fig7-{}", grid.name()),
         grid,
+        grid_source: Default::default(),
         clusters: 24,
         contract_limit_kw: f64::INFINITY,
         archetype_mix: (0.5, 0.3, 0.2),

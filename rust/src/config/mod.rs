@@ -90,11 +90,67 @@ impl GridArchetype {
     ];
 }
 
+/// Where a campus's hourly carbon-intensity signal comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GridSource {
+    /// The built-in portfolio dispatch model driven by the campus's
+    /// [`GridArchetype`] (the default; pre-trace behavior, byte for byte).
+    Dispatch,
+    /// An embedded real-trace region (see `grid::trace`), code like `PL`.
+    Trace(String),
+    /// A synthetic profile calibrated to an embedded region's shape
+    /// (see `grid::trace::SyntheticProfile`), code like `DE`.
+    Synthetic(String),
+}
+
+impl GridSource {
+    /// Parse `"dispatch"`, `"trace:CODE"` or `"synthetic:CODE"`
+    /// (case-insensitive; region codes are normalized to uppercase).
+    pub fn parse(s: &str) -> Option<GridSource> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("dispatch") {
+            return Some(GridSource::Dispatch);
+        }
+        let (kind, code) = t.split_once(':')?;
+        let code = code.trim();
+        if code.is_empty() {
+            return None;
+        }
+        match kind.trim().to_ascii_lowercase().as_str() {
+            "trace" => Some(GridSource::Trace(code.to_ascii_uppercase())),
+            "synthetic" => Some(GridSource::Synthetic(code.to_ascii_uppercase())),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling, inverse of [`GridSource::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            GridSource::Dispatch => "dispatch".to_string(),
+            GridSource::Trace(r) => format!("trace:{r}"),
+            GridSource::Synthetic(p) => format!("synthetic:{p}"),
+        }
+    }
+
+    pub fn is_dispatch(&self) -> bool {
+        matches!(self, GridSource::Dispatch)
+    }
+}
+
+impl Default for GridSource {
+    fn default() -> Self {
+        GridSource::Dispatch
+    }
+}
+
 /// One campus (datacenter site) in the scenario.
 #[derive(Clone, Debug)]
 pub struct CampusConfig {
     pub name: String,
     pub grid: GridArchetype,
+    /// Carbon-intensity backend for the campus's zone. `Dispatch` keeps the
+    /// portfolio model (and thereby all pre-trace bytes) unchanged.
+    pub grid_source: GridSource,
     /// Number of clusters on the campus.
     pub clusters: usize,
     /// Contractual power limit (kW); `f64::INFINITY` = uncapped.
@@ -207,6 +263,7 @@ impl Default for ScenarioConfig {
             campuses: vec![CampusConfig {
                 name: "campus-a".into(),
                 grid: GridArchetype::FossilPeaker,
+                grid_source: GridSource::Dispatch,
                 clusters: 12,
                 contract_limit_kw: f64::INFINITY,
                 archetype_mix: (0.5, 0.3, 0.2),
@@ -245,16 +302,27 @@ impl ScenarioConfig {
                     let mixv = |k: usize, d: f64| {
                         mix.and_then(|m| m.get(k)).and_then(Json::as_f64).unwrap_or(d)
                     };
-                    CampusConfig {
+                    // A mistyped grid_source must fail loudly: silently
+                    // falling back to the dispatch model would simulate a
+                    // different world than the one asked for.
+                    let source_str = c.str_or("grid_source", "dispatch");
+                    let grid_source = GridSource::parse(source_str).ok_or_else(|| {
+                        crate::err!(
+                            "campus {i}: bad grid_source {source_str:?} \
+                             (want dispatch | trace:CODE | synthetic:CODE)"
+                        )
+                    })?;
+                    Ok(CampusConfig {
                         name: c.str_or("name", &format!("campus-{i}")).to_string(),
                         grid: GridArchetype::parse(c.str_or("grid", "mixed"))
                             .unwrap_or(GridArchetype::Mixed),
+                        grid_source,
                         clusters: c.usize_or("clusters", 8),
                         contract_limit_kw: c.f64_or("contract_limit_kw", f64::INFINITY),
                         archetype_mix: (mixv(0, 0.5), mixv(1, 0.3), mixv(2, 0.2)),
-                    }
+                    })
                 })
-                .collect();
+                .collect::<Result<Vec<_>>>()?;
         }
         if let Some(o) = j.get("optimizer") {
             cfg.optimizer.lambda_e = o.f64_or("lambda_e", cfg.optimizer.lambda_e);
@@ -306,6 +374,21 @@ impl ScenarioConfig {
         self.flex_classes.validate()?;
         for c in &self.campuses {
             crate::ensure!(c.clusters > 0, "campus {} has no clusters", c.name);
+            // Resolve trace regions / synthetic profiles now so a typo'd
+            // code fails at config time, not mid-simulation.
+            match &c.grid_source {
+                GridSource::Dispatch => {}
+                GridSource::Trace(region) => {
+                    crate::grid::trace::embedded(region)
+                        .map(|_| ())
+                        .map_err(|e| e.context(format!("campus {}", c.name)))?;
+                }
+                GridSource::Synthetic(profile) => {
+                    crate::grid::trace::SyntheticProfile::calibrated(profile)
+                        .map(|_| ())
+                        .map_err(|e| e.context(format!("campus {}", c.name)))?;
+                }
+            }
         }
         Ok(())
     }
@@ -522,10 +605,36 @@ mod binio_impls {
         }
     }
 
+    impl Bin for GridSource {
+        fn write(&self, w: &mut BinWriter) {
+            match self {
+                GridSource::Dispatch => w.put_u8(0),
+                GridSource::Trace(region) => {
+                    w.put_u8(1);
+                    w.put_str(region);
+                }
+                GridSource::Synthetic(profile) => {
+                    w.put_u8(2);
+                    w.put_str(profile);
+                }
+            }
+        }
+
+        fn read(r: &mut BinReader) -> Result<GridSource> {
+            Ok(match r.u8()? {
+                0 => GridSource::Dispatch,
+                1 => GridSource::Trace(r.str_()?),
+                2 => GridSource::Synthetic(r.str_()?),
+                t => crate::bail!("GridSource: unknown tag {t}"),
+            })
+        }
+    }
+
     impl Bin for CampusConfig {
         fn write(&self, w: &mut BinWriter) {
             w.put_str(&self.name);
             self.grid.write(w);
+            self.grid_source.write(w);
             w.put_usize(self.clusters);
             w.put_f64(self.contract_limit_kw);
             w.put_f64(self.archetype_mix.0);
@@ -537,6 +646,7 @@ mod binio_impls {
             Ok(CampusConfig {
                 name: r.str_()?,
                 grid: GridArchetype::read(r)?,
+                grid_source: GridSource::read(r)?,
                 clusters: r.usize_()?,
                 contract_limit_kw: r.f64()?,
                 archetype_mix: (r.f64()?, r.f64()?, r.f64()?),
@@ -665,6 +775,53 @@ mod tests {
         assert!(ScenarioConfig::from_json(r#"{"flex_classes": "hourly"}"#).is_err());
         // default config carries the trivial within-day taxonomy
         assert!(ScenarioConfig::default().flex_classes.is_trivial());
+    }
+
+    #[test]
+    fn grid_source_parses_and_round_trips() {
+        assert_eq!(GridSource::parse("dispatch"), Some(GridSource::Dispatch));
+        assert_eq!(GridSource::parse("Dispatch"), Some(GridSource::Dispatch));
+        assert_eq!(GridSource::parse("trace:pl"), Some(GridSource::Trace("PL".into())));
+        assert_eq!(
+            GridSource::parse("synthetic:De"),
+            Some(GridSource::Synthetic("DE".into()))
+        );
+        assert_eq!(GridSource::parse("trace:"), None);
+        assert_eq!(GridSource::parse("csv:PL"), None);
+        assert_eq!(GridSource::parse("PL"), None);
+        for s in ["dispatch", "trace:PL", "synthetic:DE"] {
+            let parsed = GridSource::parse(s).unwrap();
+            assert_eq!(parsed.name(), s);
+            assert_eq!(GridSource::parse(&parsed.name()), Some(parsed));
+        }
+        assert!(GridSource::Dispatch.is_dispatch());
+        assert!(!GridSource::Trace("PL".into()).is_dispatch());
+    }
+
+    #[test]
+    fn campus_grid_source_from_json_and_validation() {
+        // default stays the dispatch model
+        let cfg = ScenarioConfig::from_json(r#"{"campuses": [{"name": "a"}]}"#).unwrap();
+        assert_eq!(cfg.campuses[0].grid_source, GridSource::Dispatch);
+        // explicit trace region resolves against the embedded set
+        let cfg = ScenarioConfig::from_json(
+            r#"{"campuses": [{"name": "a", "grid_source": "trace:PL"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.campuses[0].grid_source, GridSource::Trace("PL".into()));
+        // mistyped or unknown sources fail loudly at config time
+        assert!(ScenarioConfig::from_json(
+            r#"{"campuses": [{"name": "a", "grid_source": "traces:PL"}]}"#
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_json(
+            r#"{"campuses": [{"name": "a", "grid_source": "trace:ATLANTIS"}]}"#
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_json(
+            r#"{"campuses": [{"name": "a", "grid_source": "synthetic:NOPE"}]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -126,7 +126,9 @@ impl SimSnapshot {
     /// cross-run cache key: bump it whenever any serialized field (or its
     /// meaning) changes, and every stale cache entry silently becomes a
     /// miss instead of decoding into garbage.
-    pub const STATE_VERSION: u32 = 1;
+    ///
+    /// v2: campuses/zones carry a `GridSource` (trace-driven backend).
+    pub const STATE_VERSION: u32 = 2;
 
     /// The day boundary this snapshot was taken at (warmup length, for
     /// snapshots taken by the sweep's warmup phase).
@@ -259,7 +261,10 @@ impl Simulation {
         let zones = fleet
             .campuses
             .iter()
-            .map(|c| GridZone::new(cfg.seed, c.id as u64, &c.name, c.grid, c.id as f64 * 0.23 % 1.0))
+            .map(|c| {
+                crate::grid::campus_zone(cfg.seed, c.id, &c.name, c.grid, &c.grid_source)
+                    .expect("campus grid source resolves (checked by ScenarioConfig::validate)")
+            })
             .collect();
         let workloads = fleet
             .clusters

@@ -7,7 +7,7 @@
 //! does from PDU meter data). Clusters are the job-scheduling domain;
 //! campuses carry contractual power limits.
 
-use crate::config::{Archetype, CampusConfig, GridArchetype, ScenarioConfig};
+use crate::config::{Archetype, CampusConfig, GridArchetype, GridSource, ScenarioConfig};
 use crate::util::rng::Pcg;
 
 /// Ground-truth power curve of one power domain. Smooth saturating curve
@@ -82,6 +82,8 @@ pub struct Campus {
     pub id: usize,
     pub name: String,
     pub grid: GridArchetype,
+    /// Carbon-intensity backend of the campus's zone (config passthrough).
+    pub grid_source: GridSource,
     pub contract_limit_kw: f64,
     pub cluster_ids: Vec<usize>,
 }
@@ -109,6 +111,7 @@ impl Fleet {
                 id: campus_id,
                 name: cc.name.clone(),
                 grid: cc.grid,
+                grid_source: cc.grid_source.clone(),
                 contract_limit_kw: cc.contract_limit_kw,
                 cluster_ids: ids,
             });
@@ -264,6 +267,7 @@ mod binio_impls {
             w.put_usize(self.id);
             w.put_str(&self.name);
             self.grid.write(w);
+            self.grid_source.write(w);
             w.put_f64(self.contract_limit_kw);
             self.cluster_ids.write(w);
         }
@@ -273,6 +277,7 @@ mod binio_impls {
                 id: r.usize_()?,
                 name: r.str_()?,
                 grid: GridArchetype::read(r)?,
+                grid_source: GridSource::read(r)?,
                 contract_limit_kw: r.f64()?,
                 cluster_ids: Vec::read(r)?,
             })

@@ -6,6 +6,8 @@
 //! intensity shapes the paper exploits (Fig 1, Fig 3).
 
 use crate::util::rng::Pcg;
+use std::fmt;
+use std::sync::Mutex;
 
 /// A generation technology.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -87,6 +89,32 @@ pub struct WeatherDay {
     pub wind_state: f64,
 }
 
+/// Memoized per-day AR(1) states. The chain itself is fully determined by
+/// `(seed, zone_id, persistence)`, so this is a pure evaluation cache: it
+/// never travels through `Bin` serialization, and a clone (fork) simply
+/// copies whatever prefix has been materialized so far. Entry `d` holds the
+/// *unclamped* `(cloud, wind)` state after day `d`'s update — clamping
+/// stays a read-side concern, exactly as in the unrolled recurrence.
+pub struct DayCache(Mutex<Vec<(f64, f64)>>);
+
+impl DayCache {
+    fn new() -> DayCache {
+        DayCache(Mutex::new(Vec::new()))
+    }
+}
+
+impl Clone for DayCache {
+    fn clone(&self) -> DayCache {
+        DayCache(Mutex::new(self.0.lock().unwrap().clone()))
+    }
+}
+
+impl fmt::Debug for DayCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DayCache({} days)", self.0.lock().unwrap().len())
+    }
+}
+
 /// AR(1) weather process across days for a zone.
 #[derive(Clone, Debug)]
 pub struct WeatherProcess {
@@ -94,26 +122,34 @@ pub struct WeatherProcess {
     zone_id: u64,
     /// Day-to-day persistence of the weather states.
     pub persistence: f64,
+    /// Evaluation cache for the day-state chain; not serialized.
+    cache: DayCache,
 }
 
 impl WeatherProcess {
     pub fn new(seed: u64, zone_id: u64) -> Self {
-        WeatherProcess { seed, zone_id, persistence: 0.6 }
+        WeatherProcess { seed, zone_id, persistence: 0.6, cache: DayCache::new() }
     }
 
-    /// The true weather on `day`. Computed by unrolling the AR(1) from a
-    /// deterministic start so that any day is reproducible in O(day) —
-    /// days are small in simulations, and results must not depend on query
-    /// order.
+    /// The true weather on `day`. The AR(1) chain starts from a
+    /// deterministic state, so any day is reproducible regardless of query
+    /// order; materialized day states are cached, making a fresh query for
+    /// day `d` cost O(d - longest_cached_prefix) instead of re-unrolling
+    /// the whole chain from day 0 on every call.
     pub fn truth(&self, day: usize) -> WeatherDay {
-        let mut cloud = 0.45;
-        let mut wind = 0.55;
-        for d in 0..=day {
-            let mut rng = Pcg::keyed(self.seed, self.zone_id, d as u64, 0x77EA);
-            cloud = self.persistence * cloud
-                + (1.0 - self.persistence) * rng.uniform(0.0, 1.0);
-            wind = self.persistence * wind + (1.0 - self.persistence) * rng.uniform(0.1, 1.0);
+        let mut states = self.cache.0.lock().unwrap();
+        if states.len() <= day {
+            let (mut cloud, mut wind) = states.last().copied().unwrap_or((0.45, 0.55));
+            for d in states.len()..=day {
+                let mut rng = Pcg::keyed(self.seed, self.zone_id, d as u64, 0x77EA);
+                cloud = self.persistence * cloud
+                    + (1.0 - self.persistence) * rng.uniform(0.0, 1.0);
+                wind =
+                    self.persistence * wind + (1.0 - self.persistence) * rng.uniform(0.1, 1.0);
+                states.push((cloud, wind));
+            }
         }
+        let (cloud, wind) = states[day];
         WeatherDay { cloud: cloud.clamp(0.0, 1.0), wind_state: wind.clamp(0.0, 1.0) }
     }
 
@@ -170,7 +206,14 @@ mod binio_impls {
         }
 
         fn read(r: &mut BinReader) -> Result<WeatherProcess> {
-            Ok(WeatherProcess { seed: r.u64()?, zone_id: r.u64()?, persistence: r.f64()? })
+            // The day-state cache is derived data: a decoded process starts
+            // with an empty cache and re-materializes identical states.
+            Ok(WeatherProcess {
+                seed: r.u64()?,
+                zone_id: r.u64()?,
+                persistence: r.f64()?,
+                cache: DayCache::new(),
+            })
         }
     }
 }
@@ -212,6 +255,36 @@ mod tests {
             far += (p.truth(d).cloud - p.truth(d + 10).cloud).abs();
         }
         assert!(near < far, "near {near} far {far}");
+    }
+
+    #[test]
+    fn cached_truth_matches_unrolled_recurrence() {
+        // The day-state cache is an evaluation strategy, not a semantics
+        // change: every queried day must equal the original O(day)
+        // unroll-from-zero recurrence bit for bit, in any query order.
+        let unrolled = |p: &WeatherProcess, day: usize| -> WeatherDay {
+            let mut cloud = 0.45;
+            let mut wind = 0.55;
+            for d in 0..=day {
+                let mut rng = Pcg::keyed(9, 3, d as u64, 0x77EA);
+                cloud = p.persistence * cloud + (1.0 - p.persistence) * rng.uniform(0.0, 1.0);
+                wind = p.persistence * wind + (1.0 - p.persistence) * rng.uniform(0.1, 1.0);
+            }
+            WeatherDay { cloud: cloud.clamp(0.0, 1.0), wind_state: wind.clamp(0.0, 1.0) }
+        };
+        let p = WeatherProcess::new(9, 3);
+        // out-of-order queries: far day first, then backfill
+        for &d in &[40usize, 3, 17, 0, 40, 25] {
+            let got = p.truth(d);
+            let want = unrolled(&p, d);
+            assert_eq!(got.cloud, want.cloud, "day {d} cloud");
+            assert_eq!(got.wind_state, want.wind_state, "day {d} wind");
+        }
+        // a clone carries the cache but stays independent and identical
+        let q = p.clone();
+        for d in 0..45 {
+            assert_eq!(q.truth(d).cloud, unrolled(&q, d).cloud, "clone day {d}");
+        }
     }
 
     #[test]

@@ -7,13 +7,17 @@
 //! Tomorrow/electricityMap feed provides (§III-B3 discusses the
 //! average-vs-marginal choice).
 
-use crate::config::GridArchetype;
+use crate::config::{GridArchetype, GridSource};
 use crate::timebase::HOURS_PER_DAY;
+use crate::util::error::Result;
 use crate::util::rng::Pcg;
 
 use super::generation::{availability, Source, WeatherDay, WeatherProcess};
+use super::trace::{SyntheticProfile, TraceSeries};
 
-/// A grid zone: a capacity portfolio plus demand and weather processes.
+/// A grid zone: a capacity portfolio plus demand and weather processes,
+/// or — when backed by a [`GridSource::Trace`]/[`GridSource::Synthetic`] —
+/// a real-trace or calibrated-profile intensity signal.
 #[derive(Clone, Debug)]
 pub struct GridZone {
     pub name: String,
@@ -22,10 +26,28 @@ pub struct GridZone {
     pub capacity: Vec<(Source, f64)>,
     pub weather: WeatherProcess,
     /// Forecast skill: weather-forecast noise for this zone. Spans the
-    /// paper's observed day-ahead carbon MAPE band (0.4–26%).
+    /// paper's observed day-ahead carbon MAPE band (0.4–26%). For series
+    /// backends it is derived from the series' own volatility.
     pub forecast_noise: f64,
+    /// Which backend produces hourly intensities for this zone.
+    pub source: GridSource,
+    /// `capacity` stable-sorted by merit order — derived at construction
+    /// (and on decode) so `dispatch` does not clone + sort every hour.
+    stack: Vec<(Source, f64)>,
+    /// Resolved embedded trace when `source` is `Trace`.
+    series: Option<TraceSeries>,
+    /// Resolved calibrated profile when `source` is `Synthetic`.
+    profile: Option<SyntheticProfile>,
     seed: u64,
     zone_id: u64,
+}
+
+/// `capacity` stable-sorted by merit order, preserving portfolio order
+/// within a merit class.
+fn merit_stack(capacity: &[(Source, f64)]) -> Vec<(Source, f64)> {
+    let mut stack = capacity.to_vec();
+    stack.sort_by_key(|(s, _)| s.merit());
+    stack
 }
 
 impl GridZone {
@@ -82,15 +104,69 @@ impl GridZone {
             GridArchetype::SolarHeavy => 0.06,
             GridArchetype::WindHeavy => 0.09,
         };
+        let stack = merit_stack(&capacity);
         GridZone {
             name: name.to_string(),
             archetype,
             capacity,
             weather: WeatherProcess::new(seed, zone_id),
             forecast_noise: base_noise * (0.5 + skill),
+            source: GridSource::Dispatch,
+            stack,
+            series: None,
+            profile: None,
             seed,
             zone_id,
         }
+    }
+
+    /// Build a zone whose intensities come from `source` instead of the
+    /// dispatch model. `GridSource::Dispatch` is exactly [`GridZone::new`];
+    /// trace/synthetic zones keep the archetype portfolio around (labels,
+    /// serialization) but never dispatch it, and derive their forecast
+    /// noise from the series' own volatility rather than from weather
+    /// skill. Unknown region/profile codes error.
+    pub fn with_source(
+        seed: u64,
+        zone_id: u64,
+        name: &str,
+        archetype: GridArchetype,
+        skill: f64,
+        source: GridSource,
+    ) -> Result<GridZone> {
+        let mut zone = GridZone::new(seed, zone_id, name, archetype, skill);
+        zone.resolve_source(source)?;
+        Ok(zone)
+    }
+
+    /// Resolve `source` into the zone's series/profile fields and
+    /// recalibrate `forecast_noise` for series backends. Shared by
+    /// construction and snapshot decode.
+    fn resolve_source(&mut self, source: GridSource) -> Result<()> {
+        match &source {
+            GridSource::Dispatch => {
+                self.series = None;
+                self.profile = None;
+            }
+            GridSource::Trace(region) => {
+                let series = super::trace::embedded(region)
+                    .map_err(|e| e.context(format!("zone {}", self.name)))?;
+                // Hour-to-hour volatility stands in for forecast difficulty,
+                // mapped into the dispatch zones' noise band.
+                self.forecast_noise = (series.volatility() * 0.8).clamp(0.005, 0.12);
+                self.series = Some(series);
+                self.profile = None;
+            }
+            GridSource::Synthetic(code) => {
+                let profile = SyntheticProfile::calibrated(code)
+                    .map_err(|e| e.context(format!("zone {}", self.name)))?;
+                self.forecast_noise = (profile.noise * 0.8).clamp(0.005, 0.12);
+                self.profile = Some(profile);
+                self.series = None;
+            }
+        }
+        self.source = source;
+        Ok(())
     }
 
     /// Grid demand at `hour` (peak-normalized): morning ramp, midday/evening
@@ -117,11 +193,10 @@ impl GridZone {
         let mut remaining = demand - reserve;
         let mut energy = reserve;
         let mut carbon = reserve * Source::Gas.intensity();
-        // Stable sort by merit order, preserving portfolio order within a
-        // merit class.
-        let mut stack = self.capacity.clone();
-        stack.sort_by_key(|(s, _)| s.merit());
-        for (src, cap) in stack {
+        // The merit-sorted stack is hoisted to construction: sorting is
+        // stable and deterministic, so dispatching the precomputed stack
+        // is byte-identical to sorting a fresh clone every hour.
+        for &(src, cap) in &self.stack {
             if remaining <= 0.0 {
                 break;
             }
@@ -142,14 +217,29 @@ impl GridZone {
         (carbon / energy, energy)
     }
 
-    /// True average carbon intensity for every hour of `day` (kg CO2e/kWh).
+    /// True average carbon intensity for every hour of `day` (kg CO2e/kWh):
+    /// the trace sample, the synthetic profile, or the dispatch model,
+    /// per the zone's [`GridSource`].
     pub fn intensity_day(&self, day: usize) -> [f64; HOURS_PER_DAY] {
+        if let Some(series) = &self.series {
+            return series.day(day);
+        }
+        if let Some(profile) = &self.profile {
+            return profile.hourly(self.seed, self.zone_id, day);
+        }
         let w = self.weather.truth(day);
         let mut out = [0.0; HOURS_PER_DAY];
         for (h, o) in out.iter_mut().enumerate() {
             *o = self.dispatch(day, h, &w).0;
         }
         out
+    }
+
+    /// Whether intensities come from a stored/closed-form series (trace or
+    /// synthetic) rather than the weather-driven dispatch model. Series
+    /// zones get history-based (persistence/seasonal-naive) forecasts.
+    pub fn is_series_backed(&self) -> bool {
+        self.series.is_some() || self.profile.is_some()
     }
 }
 
@@ -167,20 +257,41 @@ mod binio_impls {
             self.capacity.write(w);
             self.weather.write(w);
             w.put_f64(self.forecast_noise);
+            self.source.write(w);
             w.put_u64(self.seed);
             w.put_u64(self.zone_id);
         }
 
         fn read(r: &mut BinReader) -> Result<GridZone> {
-            Ok(GridZone {
-                name: r.str_()?,
-                archetype: GridArchetype::read(r)?,
-                capacity: Vec::read(r)?,
-                weather: WeatherProcess::read(r)?,
-                forecast_noise: r.f64()?,
-                seed: r.u64()?,
-                zone_id: r.u64()?,
-            })
+            // The merit stack and the series/profile handles are derived
+            // state: recompute the stack from the decoded capacity and
+            // re-resolve the source against the embedded registry. The
+            // serialized forecast_noise wins over recalibration so a
+            // decoded zone is field-identical to the encoded one.
+            let name = r.str_()?;
+            let archetype = GridArchetype::read(r)?;
+            let capacity: Vec<(Source, f64)> = Vec::read(r)?;
+            let weather = WeatherProcess::read(r)?;
+            let forecast_noise = r.f64()?;
+            let source = GridSource::read(r)?;
+            let (seed, zone_id) = (r.u64()?, r.u64()?);
+            let stack = merit_stack(&capacity);
+            let mut zone = GridZone {
+                name,
+                archetype,
+                capacity,
+                weather,
+                forecast_noise,
+                source: GridSource::Dispatch,
+                stack,
+                series: None,
+                profile: None,
+                seed,
+                zone_id,
+            };
+            zone.resolve_source(source)?;
+            zone.forecast_noise = forecast_noise;
+            Ok(zone)
         }
     }
 }
@@ -257,5 +368,138 @@ mod tests {
         let z1 = zone(GridArchetype::WindHeavy);
         let z2 = zone(GridArchetype::WindHeavy);
         assert_eq!(z1.intensity_day(7), z2.intensity_day(7));
+    }
+
+    #[test]
+    fn hoisted_merit_stack_matches_per_hour_resort() {
+        // The precomputed stack must dispatch byte-identically to the old
+        // clone-and-stable-sort-every-hour implementation.
+        for a in GridArchetype::ALL {
+            let z = zone(a);
+            for d in 0..3 {
+                let w = z.weather.truth(d);
+                for h in 0..24 {
+                    let mut resorted = z.capacity.clone();
+                    resorted.sort_by_key(|(s, _)| s.merit());
+                    let demand = z.demand(d, h);
+                    let reserve = 0.06 * demand;
+                    let mut remaining = demand - reserve;
+                    let mut energy = reserve;
+                    let mut carbon = reserve * Source::Gas.intensity();
+                    for (src, cap) in resorted {
+                        if remaining <= 0.0 {
+                            break;
+                        }
+                        let avail = cap * availability(src, h, &w);
+                        let used = avail.min(remaining);
+                        if used > 0.0 {
+                            energy += used;
+                            carbon += used * src.intensity();
+                            remaining -= used;
+                        }
+                    }
+                    if remaining > 0.0 {
+                        energy += remaining;
+                        carbon += remaining * Source::Gas.intensity() * 1.2;
+                    }
+                    let (got_i, got_e) = z.dispatch(d, h, &w);
+                    assert_eq!(got_i, carbon / energy, "{a:?} d{d} h{h}");
+                    assert_eq!(got_e, energy, "{a:?} d{d} h{h}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_source_is_byte_identical_to_plain_new() {
+        let a = GridZone::new(42, 1, "z", GridArchetype::Mixed, 0.5);
+        let b = GridZone::with_source(42, 1, "z", GridArchetype::Mixed, 0.5, GridSource::Dispatch)
+            .unwrap();
+        assert_eq!(a.forecast_noise, b.forecast_noise);
+        assert!(!b.is_series_backed());
+        for d in 0..5 {
+            assert_eq!(a.intensity_day(d), b.intensity_day(d));
+        }
+    }
+
+    #[test]
+    fn trace_zone_serves_embedded_samples() {
+        let z = GridZone::with_source(
+            42,
+            1,
+            "z-pl",
+            GridArchetype::Mixed,
+            0.5,
+            GridSource::Trace("PL".into()),
+        )
+        .unwrap();
+        assert!(z.is_series_backed());
+        let want = super::super::trace::embedded("PL").unwrap();
+        assert_eq!(z.intensity_day(0), want.day(0));
+        assert_eq!(z.intensity_day(400), want.day(400)); // wraps the year
+        assert!(z.forecast_noise >= 0.005 && z.forecast_noise <= 0.12);
+        // unknown regions error instead of panicking
+        assert!(GridZone::with_source(
+            42,
+            1,
+            "z",
+            GridArchetype::Mixed,
+            0.5,
+            GridSource::Trace("ATLANTIS".into()),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn synthetic_zone_matches_profile_closed_form() {
+        let z = GridZone::with_source(
+            9,
+            4,
+            "z-syn",
+            GridArchetype::Mixed,
+            0.5,
+            GridSource::Synthetic("DE".into()),
+        )
+        .unwrap();
+        let p = SyntheticProfile::calibrated("DE").unwrap();
+        assert_eq!(z.intensity_day(12), p.hourly(9, 4, 12));
+        assert!(z.is_series_backed());
+    }
+
+    #[test]
+    fn zone_bin_round_trip_preserves_every_backend() {
+        use crate::util::binio::{from_payload, to_payload};
+        let zones = [
+            GridZone::new(42, 1, "zd", GridArchetype::WindHeavy, 0.5),
+            GridZone::with_source(
+                42,
+                2,
+                "zt",
+                GridArchetype::Mixed,
+                0.5,
+                GridSource::Trace("FR".into()),
+            )
+            .unwrap(),
+            GridZone::with_source(
+                42,
+                3,
+                "zs",
+                GridArchetype::Mixed,
+                0.5,
+                GridSource::Synthetic("ZA".into()),
+            )
+            .unwrap(),
+        ];
+        for z in &zones {
+            let bytes = to_payload(z);
+            let back: GridZone = from_payload(&bytes).unwrap();
+            assert_eq!(back.source, z.source, "{}", z.name);
+            assert_eq!(back.forecast_noise, z.forecast_noise, "{}", z.name);
+            for d in [0usize, 7, 30] {
+                assert_eq!(back.intensity_day(d), z.intensity_day(d), "{} day {d}", z.name);
+            }
+            // decode is canonical: re-encoding emits the same bytes
+            assert_eq!(to_payload(&back), bytes, "{}", z.name);
+        }
     }
 }

@@ -5,7 +5,32 @@
 pub mod forecast;
 pub mod generation;
 pub mod intensity;
+pub mod trace;
 
 pub use forecast::{CarbonForecast, CarbonForecaster};
 pub use generation::{Source, WeatherDay, WeatherProcess};
 pub use intensity::GridZone;
+pub use trace::{SyntheticProfile, TraceSeries};
+
+use crate::config::{CampusConfig, GridSource};
+use crate::util::error::Result;
+
+/// Build the grid zone for a campus, encapsulating the simulator's
+/// campus→zone conventions (zone id = campus id, forecast skill derived
+/// from the id) so the coordinator and the sweep reporter construct
+/// byte-identical zones. `campus_id` doubles as the zone id.
+pub fn campus_zone(
+    seed: u64,
+    campus_id: usize,
+    name: &str,
+    grid: crate::config::GridArchetype,
+    source: &GridSource,
+) -> Result<GridZone> {
+    let skill = campus_id as f64 * 0.23 % 1.0;
+    GridZone::with_source(seed, campus_id as u64, name, grid, skill, source.clone())
+}
+
+/// [`campus_zone`] from a campus config (same conventions, fewer knobs).
+pub fn zone_for_campus(seed: u64, campus_id: usize, cfg: &CampusConfig) -> Result<GridZone> {
+    campus_zone(seed, campus_id, &cfg.name, cfg.grid, &cfg.grid_source)
+}

@@ -84,6 +84,35 @@ fn load_config(args: &Args) -> Result<ScenarioConfig> {
             cics::err!("--classes: unknown preset {code:?} (within-day|tight-6h|multi-day-3d|mixed)")
         })?;
     }
+    // `--region PL` puts every campus on the PL trace; `--grid-source`
+    // picks the backend explicitly (`dispatch`, `trace:PL`,
+    // `synthetic:PL`, or a bare `trace`/`synthetic` combined with
+    // `--region`). Validation below rejects unknown regions loudly.
+    let (source_flag, region_flag) = (args.get("grid-source"), args.get("region"));
+    if source_flag.is_some() || region_flag.is_some() {
+        let code = match (source_flag, region_flag) {
+            (None, Some(r)) => format!("trace:{r}"),
+            (Some(gs), None) => gs.to_string(),
+            (Some(gs), Some(r)) => {
+                cics::ensure!(
+                    !gs.contains(':'),
+                    "--grid-source {gs:?} already names a region; drop --region"
+                );
+                format!("{gs}:{r}")
+            }
+            (None, None) => unreachable!("guarded by the is_some checks"),
+        };
+        let source = cics::config::GridSource::parse(&code).ok_or_else(|| {
+            cics::err!(
+                "--grid-source/--region: cannot parse {code:?} \
+                 (want dispatch | trace:CODE | synthetic:CODE)"
+            )
+        })?;
+        for c in &mut cfg.campuses {
+            c.grid_source = source.clone();
+        }
+        cfg.validate()?;
+    }
     Ok(cfg)
 }
 
@@ -445,12 +474,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         None => SweepMatrix::default(),
     };
     if args.has("quick") {
-        // CI-sized matrix: two physical scenarios (the default taxonomy
-        // and the mixed workload-class preset), four variants each —
-        // enough to exercise grouping, forking, both sharing modes and
-        // the deadline/EDF path fast, and to keep the mixed-class cells
+        // CI-sized matrix: four physical scenarios (dispatch-model PL and
+        // the PL trace, each under the default taxonomy and the mixed
+        // workload-class preset), four variants each — enough to exercise
+        // grouping, forking, both sharing modes, the deadline/EDF path
+        // and the trace-backed grid fast, and to keep both grid backends
         // perf-tracked in BENCH_sweep.json.
-        m.grids = vec!["PL".into()];
+        m.grids = vec!["PL".into(), "trace:PL".into()];
         m.fleet_sizes = vec![2];
         m.flex_shares = vec![1.0];
         m.flex_classes = vec!["within-day".into(), "mixed".into()];
@@ -652,9 +682,14 @@ fn main() {
                  \u{20}      [--config FILE] [--seed N] [--no-artifact] [--artifacts DIR] [--out DIR]\n\
                  \u{20}      [--warmup N] [--measure N] [--engine legacy|event]\n\
                  \u{20}      [--classes within-day|tight-6h|multi-day-3d|mixed]\n\
-                 sweep:  [--matrix FILE] [--grids FR,CA,DE,PL] [--fleets 4,8] [--flex 0.3,0.6]\n\
-                 \u{20}      [--classes within-day,mixed] [--solvers native,greedy]\n\
-                 \u{20}      [--spatial off,on] [--threads N]\n\
+                 sweep:  [--matrix FILE] [--grids FR,trace:PL,synthetic:DE] [--fleets 4,8]\n\
+                 \u{20}      [--flex 0.3,0.6] [--classes within-day,mixed]\n\
+                 \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
+                 grids:  archetype presets (FR|CA|DE|PL), real hourly traces\n\
+                 \u{20}      (trace:SE..ZA — see data/carbon_intensity/) or calibrated\n\
+                 \u{20}      synthetic profiles (synthetic:CODE); simulate/experiment/\n\
+                 \u{20}      report take [--region CODE] [--grid-source dispatch|trace:CODE\n\
+                 \u{20}      |synthetic:CODE] to put every campus on that backend\n\
                  bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
                  \u{20}      [--tick-days N] [--assert-speedup X] [--assert-hit-rate X]\n\
                  \u{20}      [--out DIR]   (times fork vs no-share sweep paths and the\n\

@@ -119,10 +119,15 @@ struct Entry {
 struct Inner {
     counter: u64,
     entries: Vec<Entry>,
-    /// Decoded-snapshot LRU. `Arc` so the lock only ever guards pointer
+    /// Decoded-snapshot LRU, each resident tagged with the encoded size
+    /// it was admitted at. `Arc` so the lock only ever guards pointer
     /// clones and bookkeeping — deep snapshot clones (multi-MB telemetry
     /// stores) happen outside it, keeping warm warmup phases parallel.
-    mem: HashMap<String, Arc<SimSnapshot>>,
+    /// The size lives *here*, not in `entries`: a re-stored entry can
+    /// change encoded size, and `mem_bytes` must always subtract exactly
+    /// what was added for a resident, or the ledger drifts and the
+    /// memory budget quietly stops (or over-) binding.
+    mem: HashMap<String, (u64, Arc<SimSnapshot>)>,
     mem_bytes: u64,
     stats: CacheStats,
 }
@@ -327,7 +332,11 @@ impl SnapshotCache {
             // memory only: the index is advisory, and a blocking file
             // write per memory hit would put serialized I/O back into
             // the phase the cache removes.
-            let hit = g.mem.get(&name).filter(|s| to_payload(s.cfg()) == cfg_bytes).cloned();
+            let hit = g
+                .mem
+                .get(&name)
+                .filter(|(_, s)| to_payload(s.cfg()) == cfg_bytes)
+                .map(|(_, s)| s.clone());
             if hit.is_some() {
                 touch(&mut g, &name);
             }
@@ -346,9 +355,8 @@ impl SnapshotCache {
                 // lookup and inflating the disk-budget accounting
                 let mut g = self.inner.lock().unwrap();
                 if g.entries.iter().any(|en| en.file == name) {
-                    let b = g.entries.iter().find(|en| en.file == name).map_or(0, |en| en.bytes);
                     g.entries.retain(|en| en.file != name);
-                    if g.mem.remove(&name).is_some() {
+                    if let Some((b, _)) = g.mem.remove(&name) {
                         g.mem_bytes = g.mem_bytes.saturating_sub(b);
                     }
                     write_index(&self.dir, &g);
@@ -395,9 +403,8 @@ impl SnapshotCache {
                 let _ = std::fs::remove_file(self.dir.join(&name));
                 let mut g = self.inner.lock().unwrap();
                 g.stats.bytes_read += bytes.len() as u64;
-                let b = g.entries.iter().find(|en| en.file == name).map_or(0, |en| en.bytes);
                 g.entries.retain(|en| en.file != name);
-                if g.mem.remove(&name).is_some() {
+                if let Some((b, _)) = g.mem.remove(&name) {
                     g.mem_bytes = g.mem_bytes.saturating_sub(b);
                 }
                 write_index(&self.dir, &g);
@@ -437,12 +444,12 @@ impl SnapshotCache {
                 .iter()
                 .filter(|e| e.file != name)
                 .min_by_key(|e| e.last_used)
-                .map(|e| (e.file.clone(), e.bytes));
+                .map(|e| e.file.clone());
             match victim {
-                Some((v, b)) => {
+                Some(v) => {
                     let _ = std::fs::remove_file(self.dir.join(&v));
                     g.entries.retain(|e| e.file != v);
-                    if g.mem.remove(&v).is_some() {
+                    if let Some((b, _)) = g.mem.remove(&v) {
                         g.mem_bytes = g.mem_bytes.saturating_sub(b);
                     }
                 }
@@ -496,21 +503,30 @@ fn touch(g: &mut Inner, name: &str) {
 
 /// Admit a decoded snapshot to the memory LRU, spilling the least
 /// recently used residents back to disk-only when over budget.
+///
+/// Re-admitting a resident whose encoded size changed (an entry
+/// re-stored after a longer incremental warmup, or re-read after an
+/// external rewrite) accounts the *delta*: the old recorded size comes
+/// off the ledger and the new one goes on. The previous code skipped
+/// the ledger entirely on replacement, so `mem_bytes` drifted away from
+/// the map's true footprint and the spill loop stopped binding.
 fn insert_mem(g: &mut Inner, budget: u64, name: String, bytes: u64, snap: Arc<SimSnapshot>) {
-    if g.mem.insert(name.clone(), snap).is_none() {
-        g.mem_bytes += bytes;
+    if let Some((old, _)) = g.mem.insert(name.clone(), (bytes, snap)) {
+        g.mem_bytes = g.mem_bytes.saturating_sub(old);
     }
+    g.mem_bytes += bytes;
     while g.mem_bytes > budget && g.mem.len() > 1 {
         let victim = g
             .entries
             .iter()
             .filter(|e| g.mem.contains_key(&e.file) && e.file != name)
             .min_by_key(|e| e.last_used)
-            .map(|e| (e.file.clone(), e.bytes));
+            .map(|e| e.file.clone());
         match victim {
-            Some((v, b)) => {
-                g.mem.remove(&v);
-                g.mem_bytes = g.mem_bytes.saturating_sub(b);
+            Some(v) => {
+                if let Some((b, _)) = g.mem.remove(&v) {
+                    g.mem_bytes = g.mem_bytes.saturating_sub(b);
+                }
             }
             None => break,
         }
@@ -642,6 +658,41 @@ mod tests {
         let s0 = cache.stats();
         cache.warmup(&small_cfg(6), 2, 1, SimEngine::Event).unwrap();
         assert_eq!(cache.stats().hits, s0.hits + 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resized_reinsert_keeps_memory_accounting_exact() {
+        // Drive insert_mem directly with claimed sizes: the ledger must
+        // track the recorded size of each resident through re-admissions
+        // at different sizes, and the spill loop must subtract exactly
+        // what the map recorded for its victim.
+        let dir = tmp_dir("account");
+        let cache = SnapshotCache::open(&dir, DEFAULT_DISK_BUDGET, 1000).unwrap();
+        let snap = Arc::new({
+            let mut sim = Simulation::with_options(
+                warmup_cfg(&small_cfg(9)),
+                warmup_options(1, SimEngine::Event),
+            );
+            sim.run_days(1).unwrap();
+            sim.snapshot()
+        });
+        let mut g = cache.inner.lock().unwrap();
+        g.entries.push(Entry { file: "a".into(), hash: 1, warmup: 1, bytes: 600, last_used: 1 });
+        g.entries.push(Entry { file: "b".into(), hash: 2, warmup: 1, bytes: 800, last_used: 2 });
+        insert_mem(&mut g, 1000, "a".into(), 600, snap.clone());
+        assert_eq!(g.mem_bytes, 600);
+        // the same entry re-admitted at a grown, then shrunk, size
+        insert_mem(&mut g, 1000, "a".into(), 700, snap.clone());
+        assert_eq!(g.mem_bytes, 700, "regrown resident must replace its old ledger figure");
+        insert_mem(&mut g, 1000, "a".into(), 300, snap.clone());
+        assert_eq!(g.mem_bytes, 300, "shrunk resident must release the difference");
+        // admitting "b" overflows the budget: "a" spills, and the ledger
+        // ends at exactly b's recorded size — the budget still binds
+        insert_mem(&mut g, 1000, "b".into(), 800, snap.clone());
+        assert!(g.mem.contains_key("b") && !g.mem.contains_key("a"));
+        assert_eq!(g.mem_bytes, 800);
+        drop(g);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

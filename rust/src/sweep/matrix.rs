@@ -8,7 +8,9 @@
 //! sweeps stay comparable across PRs.
 
 use crate::config::classes::DEFAULT_PRESET;
-use crate::config::{CampusConfig, FlexClasses, GridArchetype, ScenarioConfig, SweepMatrix};
+use crate::config::{
+    CampusConfig, FlexClasses, GridArchetype, GridSource, ScenarioConfig, SweepMatrix,
+};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 
@@ -58,6 +60,23 @@ pub fn grid_preset(code: &str) -> Option<GridArchetype> {
         "MIX" | "GLOBAL" => Some(GridArchetype::Mixed),
         _ => GridArchetype::parse(&code.to_ascii_lowercase()),
     }
+}
+
+/// Resolve a sweep grid code into (archetype, intensity source). Plain
+/// archetype/region codes keep the dispatch model — and thereby every
+/// pre-trace report byte. `trace:CODE` / `synthetic:CODE` select the
+/// series backends of `grid::trace`; their zones carry the Mixed
+/// portfolio for labeling/serialization but never dispatch it.
+pub fn grid_source_preset(code: &str) -> Option<(GridArchetype, GridSource)> {
+    if let Some(source) = GridSource::parse(code) {
+        // a bare "dispatch" names a backend, not a portfolio — reject it
+        // as a grid axis value
+        if source.is_dispatch() {
+            return None;
+        }
+        return Some((GridArchetype::Mixed, source));
+    }
+    grid_preset(code).map(|a| (a, GridSource::Dispatch))
 }
 
 /// One expanded cell: a concrete scenario plus the axis values that
@@ -116,8 +135,23 @@ pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
     matrix.validate()?;
     let mut cells = Vec::with_capacity(matrix.n_cells());
     for grid_code in &matrix.grids {
-        let grid = grid_preset(grid_code)
+        let (grid, grid_source) = grid_source_preset(grid_code)
             .ok_or_else(|| crate::err!("unknown grid preset {grid_code:?}"))?;
+        // Resolve trace regions / synthetic profiles once per grid code so
+        // a typo'd region fails the whole sweep up front, not mid-run.
+        match &grid_source {
+            GridSource::Dispatch => {}
+            GridSource::Trace(region) => {
+                crate::grid::trace::embedded(region)
+                    .map(|_| ())
+                    .map_err(|e| e.context(format!("grid {grid_code:?}")))?;
+            }
+            GridSource::Synthetic(profile) => {
+                crate::grid::trace::SyntheticProfile::calibrated(profile)
+                    .map(|_| ())
+                    .map_err(|e| e.context(format!("grid {grid_code:?}")))?;
+            }
+        }
         for &fleet_size in &matrix.fleet_sizes {
             for &flex_share in &matrix.flex_shares {
                 for classes_code in &matrix.flex_classes {
@@ -158,6 +192,7 @@ pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
                                 campuses: vec![CampusConfig {
                                     name: format!("sweep-{}", grid_code.to_ascii_lowercase()),
                                     grid,
+                                    grid_source: grid_source.clone(),
                                     clusters: fleet_size,
                                     contract_limit_kw: f64::INFINITY,
                                     // flex_share of clusters are archetype X
@@ -293,6 +328,48 @@ mod tests {
         let mut bad = SweepMatrix::default();
         bad.flex_classes = vec!["hourly".into()];
         assert!(expand(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_codes_are_a_physical_axis() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into(), "trace:PL".into(), "synthetic:PL".into()];
+        m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 3);
+        // the dispatch cell keeps the pre-trace label/seed/config shape
+        assert_eq!(cells[0].label, "PL f4 x0.5 native sp-off");
+        assert!(cells[0].cfg.campuses[0].grid_source.is_dispatch());
+        // series cells carry their full code in label and grid_code,
+        // giving them their own (physical) seeds automatically
+        assert_eq!(cells[1].label, "TRACE:PL f4 x0.5 native sp-off");
+        assert_eq!(cells[1].grid_code, "TRACE:PL");
+        assert_eq!(cells[1].cfg.campuses[0].grid_source, GridSource::Trace("PL".into()));
+        assert_eq!(
+            cells[2].cfg.campuses[0].grid_source,
+            GridSource::Synthetic("PL".into())
+        );
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_ne!(cells[1].seed, cells[2].seed);
+        for c in &cells {
+            c.cfg.validate().unwrap();
+        }
+        // every embedded region expands cleanly as a trace axis value
+        let mut world = SweepMatrix::default();
+        world.grids =
+            crate::grid::trace::embedded_regions().iter().map(|r| format!("trace:{r}")).collect();
+        world.solvers = vec!["native".into()];
+        world.spatial = vec![false];
+        let world_cells = expand(&world).unwrap();
+        assert!(world_cells.len() >= 8);
+        // unknown regions and the bare backend name fail loudly
+        let mut bad = SweepMatrix::default();
+        bad.grids = vec!["trace:ATLANTIS".into()];
+        assert!(expand(&bad).is_err());
+        let mut bare = SweepMatrix::default();
+        bare.grids = vec!["dispatch".into()];
+        assert!(expand(&bare).is_err());
     }
 
     #[test]

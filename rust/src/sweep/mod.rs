@@ -215,7 +215,7 @@ pub fn run_sweep_cached(
             let b = baselines[group_of[cell.index]]
                 .as_ref()
                 .expect("every group ran a baseline unit");
-            make_report(cell, s, b)
+            make_report(cell, s, b, warmup, measure_days)
         })
         .collect();
     let timing = SweepTiming {
@@ -342,7 +342,19 @@ fn run_fork_unit(
     })
 }
 
-fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> CellReport {
+/// Held-out window length (days) for the per-cell forecast-skill score.
+/// The window starts right after the cell's simulated horizon
+/// (warmup + measured days), so a series-backed forecaster is scored on
+/// days the simulation never touched and never trained on.
+const HELDOUT_DAYS: usize = 28;
+
+fn make_report(
+    cell: &SweepCell,
+    s: &ShapedOutcome,
+    b: &WindowAggregate,
+    warmup_days: usize,
+    measure_days: usize,
+) -> CellReport {
     let pct = |base: f64, now: f64| {
         if base.abs() > 1e-9 {
             100.0 * (base - now) / base
@@ -376,6 +388,17 @@ fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> Cell
             })
             .collect()
     };
+    // Forecast-skill column only for trace/synthetic cells: dispatch-model
+    // cells keep the pre-trace report bytes, and their forecast accuracy is
+    // already pinned by the forecast-layer tests.
+    let forecast_mape = if cell.cfg.campuses.iter().all(|c| c.grid_source.is_dispatch()) {
+        None
+    } else {
+        let zone = crate::grid::zone_for_campus(cell.cfg.seed, 0, &cell.cfg.campuses[0])
+            .expect("sweep cells carry validated grid sources");
+        let fcster = crate::grid::CarbonForecaster::default();
+        Some(fcster.heldout_mape(&zone, warmup_days + measure_days, HELDOUT_DAYS))
+    };
     CellReport {
         index: cell.index,
         label: cell.label.clone(),
@@ -396,6 +419,7 @@ fn make_report(cell: &SweepCell, s: &ShapedOutcome, b: &WindowAggregate) -> Cell
         flex_completion: s.agg.flex_completion(),
         shaped_fraction: s.agg.shaped_fraction(),
         spatial_moved_gcuh: s.spatial_moved_gcuh,
+        forecast_mape,
     }
 }
 
@@ -520,6 +544,10 @@ mod tests {
         // pre-taxonomy document shape
         assert!(c.classes.is_empty());
         assert!(!json.contains("\"classes\""));
+        // dispatch-model cells carry no forecast-skill column either —
+        // exactly the pre-trace document shape
+        assert!(c.forecast_mape.is_none());
+        assert!(!json.contains("\"forecast_mape\""));
     }
 
     /// The `mixed` class preset runs end-to-end and surfaces per-class

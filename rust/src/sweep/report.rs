@@ -43,6 +43,11 @@ pub struct CellReport {
     /// Empty for the trivial within-day taxonomy — default cells emit
     /// exactly the pre-taxonomy document, byte for byte.
     pub classes: Vec<ClassCellReport>,
+    /// Held-out day-ahead forecast skill (mean APE, %) for trace- and
+    /// synthetic-backed cells, scored on days past the simulated horizon.
+    /// `None` for dispatch-model cells — they emit exactly the pre-trace
+    /// document, byte for byte.
+    pub forecast_mape: Option<f64>,
 }
 
 /// One workload class's columns in a cell report.
@@ -121,6 +126,11 @@ impl CellReport {
                 "classes",
                 Json::Arr(self.classes.iter().map(ClassCellReport::to_json).collect()),
             ));
+        }
+        // Same byte-compatibility rule: only series-backed cells carry the
+        // forecast-skill key.
+        if let Some(mape) = self.forecast_mape {
+            fields.push(("forecast_mape", Json::Num(round(mape, 4))));
         }
         Json::obj(fields)
     }
@@ -212,6 +222,18 @@ impl SweepReport {
                 }
             }
         }
+        // Forecast-skill block (only series-backed cells emit rows, so a
+        // dispatch-only report is byte-identical to pre-trace output).
+        if self.cells.iter().any(|c| c.forecast_mape.is_some()) {
+            out.push('\n');
+            out.push_str(&format!("{:<28} {:>10}\n", "cell", "fc mape%"));
+            out.push_str(&format!("{}\n", "-".repeat(39)));
+            for c in &self.cells {
+                if let Some(m) = c.forecast_mape {
+                    out.push_str(&format!("{:<28} {:>9.2}%\n", c.label, m));
+                }
+            }
+        }
         out
     }
 }
@@ -241,6 +263,7 @@ mod tests {
             shaped_fraction: 0.8,
             spatial_moved_gcuh: 0.0,
             classes: Vec::new(),
+            forecast_mape: None,
         }
     }
 
@@ -300,6 +323,26 @@ mod tests {
         let classes = cells[1].get("classes").unwrap().as_arr().unwrap();
         assert_eq!(classes.len(), 1);
         assert_eq!(classes[0].str_or("name", ""), "tight-6h");
+    }
+
+    #[test]
+    fn forecast_skill_only_appears_for_series_backed_cells() {
+        let plain = SweepReport::new(25, 10, vec![toy_cell(0, 1.0)]);
+        assert!(!plain.to_json().to_string().contains("\"forecast_mape\""));
+        assert!(!plain.ascii_table().contains("fc mape%"));
+
+        let mut traced = toy_cell(1, 2.0);
+        traced.forecast_mape = Some(12.34567);
+        let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.0), traced]);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"forecast_mape\":12.3457"));
+        let parsed = Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("forecast_mape").is_none());
+        assert_eq!(cells[1].f64_or("forecast_mape", 0.0), 12.3457);
+        let table = rep.ascii_table();
+        assert!(table.contains("fc mape%"));
+        assert!(table.contains("12.35%"));
     }
 
     #[test]

@@ -123,7 +123,6 @@ impl crate::util::binio::Bin for Ewma {
 /// Returns (intercept a, slope b). Degenerate inputs give (mean(y), 0).
 pub fn ols(x: &[f64], y: &[f64]) -> (f64, f64) {
     assert_eq!(x.len(), y.len());
-    let n = x.len() as f64;
     if x.len() < 2 {
         return (mean(y), 0.0);
     }
@@ -131,11 +130,20 @@ pub fn ols(x: &[f64], y: &[f64]) -> (f64, f64) {
     let my = mean(y);
     let mut sxx = 0.0;
     let mut sxy = 0.0;
+    let mut msq = 0.0;
     for i in 0..x.len() {
         sxx += (x[i] - mx) * (x[i] - mx);
         sxy += (x[i] - mx) * (y[i] - my);
+        msq += x[i] * x[i];
     }
-    if sxx / n < 1e-12 {
+    // Degeneracy must be judged relative to x's magnitude, not on an
+    // absolute threshold: regressors measured in tiny units (e.g. kg/kWh
+    // intensities ~1e-4 of variance 1e-8 per sample) are perfectly well
+    // conditioned, while an absolute `sxx/n < 1e-12` cutoff silently
+    // flattened their slope to 0. A truly constant x has sxx == 0 and is
+    // still caught (msq may be large, 0 <= 0 holds only when sxx is 0 or
+    // ~eps² of x's own scale).
+    if sxx <= 1e-12 * msq {
         return (my, 0.0);
     }
     let b = sxy / sxx;
@@ -231,6 +239,25 @@ mod tests {
         let (a, b) = ols(&[1.0, 1.0, 1.0], &[3.0, 4.0, 5.0]);
         assert!((a - 4.0).abs() < 1e-12);
         assert_eq!(b, 0.0);
+        // all-zero x is degenerate too (msq == 0, so the relative guard
+        // must still catch it)
+        let (a0, b0) = ols(&[0.0, 0.0, 0.0], &[1.0, 2.0, 3.0]);
+        assert!((a0 - 2.0).abs() < 1e-12);
+        assert_eq!(b0, 0.0);
+    }
+
+    #[test]
+    fn ols_is_scale_invariant() {
+        // A well-conditioned regressor in tiny units (carbon intensities
+        // in kg/kWh ~1e-4 scale) must not trip the degeneracy guard: the
+        // fit has to recover the same line at any unit scale.
+        for scale in [1.0, 1e-4, 1e-6] {
+            let x: Vec<f64> = (0..50).map(|i| i as f64 * scale).collect();
+            let y: Vec<f64> = x.iter().map(|&v| 3.0 + 2.0 * v).collect();
+            let (a, b) = ols(&x, &y);
+            assert!((a - 3.0).abs() < 1e-6, "scale {scale}: intercept {a}");
+            assert!((b - 2.0).abs() < 1e-6, "scale {scale}: slope {b}");
+        }
     }
 
     #[test]

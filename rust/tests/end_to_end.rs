@@ -158,6 +158,7 @@ fn spatial_shifting_moves_work_to_cleaner_campuses() {
         cics::config::CampusConfig {
             name: "dirty".into(),
             grid: GridArchetype::FossilPeaker,
+            grid_source: Default::default(),
             clusters: 3,
             contract_limit_kw: f64::INFINITY,
             archetype_mix: (1.0, 0.0, 0.0),
@@ -165,6 +166,7 @@ fn spatial_shifting_moves_work_to_cleaner_campuses() {
         cics::config::CampusConfig {
             name: "clean".into(),
             grid: GridArchetype::LowCarbonBase,
+            grid_source: Default::default(),
             clusters: 3,
             contract_limit_kw: f64::INFINITY,
             archetype_mix: (1.0, 0.0, 0.0),

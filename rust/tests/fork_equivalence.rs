@@ -29,6 +29,7 @@ fn campus(name: &str, grid: GridArchetype, clusters: usize) -> CampusConfig {
     CampusConfig {
         name: name.into(),
         grid,
+        grid_source: Default::default(),
         clusters,
         contract_limit_kw: f64::INFINITY,
         archetype_mix: (1.0, 0.0, 0.0),

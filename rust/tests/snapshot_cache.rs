@@ -28,6 +28,7 @@ fn small_cfg() -> ScenarioConfig {
     cfg.campuses = vec![CampusConfig {
         name: "cache-eq".into(),
         grid: GridArchetype::FossilPeaker,
+        grid_source: Default::default(),
         clusters: 2,
         contract_limit_kw: f64::INFINITY,
         archetype_mix: (1.0, 0.0, 0.0),

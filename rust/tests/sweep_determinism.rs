@@ -123,6 +123,46 @@ fn mixed_class_preset_is_byte_deterministic() {
 }
 
 #[test]
+fn trace_backed_cells_are_byte_deterministic_with_forecast_skill() {
+    // Trace- and synthetic-backed grids are physical axis values under
+    // the same determinism contract: reruns, worker counts, sharing
+    // modes and tick engines may not move a byte — including the
+    // forecast-skill column those cells (and only those cells) carry.
+    let mut m = small_matrix();
+    m.grids = vec!["PL".into(), "trace:PL".into(), "synthetic:FR".into()];
+    m.solvers = vec!["native".into()];
+    let serial = sweep::run_sweep(&m, 4, 1).unwrap();
+    let wide = sweep::run_sweep(&m, 4, 8).unwrap();
+    let json = serial.to_json().to_string();
+    assert_eq!(json, wide.to_json().to_string(), "1 vs 8 workers");
+    let (per_cell, _) = sweep::run_sweep_mode(&m, 4, 3, WarmupSharing::PerCell).unwrap();
+    assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
+    let (legacy, _) =
+        sweep::run_sweep_engine(&m, 4, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
+
+    // three distinct physical scenarios: the dispatch PL model, the PL
+    // trace and the FR synthetic profile must not share seeds or results
+    assert_eq!(serial.cells.len(), 3);
+    let (pl, tr, sy) = (&serial.cells[0], &serial.cells[1], &serial.cells[2]);
+    assert_eq!(tr.grid, "TRACE:PL");
+    assert_eq!(sy.grid, "SYNTHETIC:FR");
+    assert_ne!(pl.seed, tr.seed, "trace:PL is a different scenario than PL");
+    assert_ne!(tr.carbon_baseline_kg, pl.carbon_baseline_kg);
+    // the forecast-skill column appears exactly on the series-backed
+    // cells, and is a sane held-out MAPE
+    assert!(pl.forecast_mape.is_none(), "dispatch cells keep the pre-trace shape");
+    for c in [tr, sy] {
+        let mape = c.forecast_mape.expect("series-backed cells report forecast skill");
+        assert!(mape > 0.1 && mape < 40.0, "{}: held-out MAPE {mape:.2}%", c.label);
+    }
+    assert!(json.contains("\"forecast_mape\""));
+    // all cells simulated real days: carbon flows on every backend
+    assert!(serial.cells.iter().all(|c| c.carbon_baseline_kg > 0.0));
+    assert!(serial.cells.iter().any(|c| c.shaped_fraction > 0.0));
+}
+
+#[test]
 fn per_cell_seeds_survive_matrix_extension() {
     // Adding an axis value must not change the metrics of existing cells:
     // cell seeds are content-derived, not position-derived.
