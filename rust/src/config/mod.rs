@@ -8,6 +8,7 @@
 
 pub mod classes;
 
+use crate::faults::FaultConfig;
 use crate::util::error::Result;
 use crate::util::json::Json;
 use std::path::Path;
@@ -254,6 +255,10 @@ pub struct ScenarioConfig {
     pub history_days: usize,
     /// Directory with AOT artifacts.
     pub artifact_dir: String,
+    /// Deterministic fault-injection schedule for the day-ahead pipeline
+    /// (see `crate::faults`). The default (no faults) reproduces the
+    /// happy-path pipeline byte-for-byte.
+    pub faults: FaultConfig,
 }
 
 impl Default for ScenarioConfig {
@@ -275,6 +280,7 @@ impl Default for ScenarioConfig {
             machines_per_pd: 2000,
             history_days: 35,
             artifact_dir: "artifacts".into(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -344,6 +350,12 @@ impl ScenarioConfig {
         }
         if let Some(v) = j.get("flex_classes") {
             cfg.flex_classes = FlexClasses::from_json(v)?;
+        }
+        if let Some(v) = j.get("faults") {
+            let spec = v
+                .as_str()
+                .ok_or_else(|| crate::err!("faults: expected a spec string, got {v}"))?;
+            cfg.faults = FaultConfig::parse(spec)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -425,6 +437,12 @@ pub struct SweepMatrix {
     /// the workload itself, so non-default presets derive their own cell
     /// seeds.
     pub flex_classes: Vec<String>,
+    /// Fault-injection specs per cell (see [`FaultConfig::parse`]):
+    /// `none` (default), `chaos`, or `code:rate` lists like
+    /// `feed-outage:0.05,solve-fail:0.02`. A *physical* axis: faults
+    /// perturb the scenario's world, so non-`none` specs derive their
+    /// own cell seeds.
+    pub faults: Vec<String>,
     /// Solver backends per cell: "native", "greedy" or "artifact".
     pub solvers: Vec<String>,
     /// Spatial-shifting variants (on/off) to sweep.
@@ -442,6 +460,7 @@ impl Default for SweepMatrix {
             fleet_sizes: vec![4],
             flex_shares: vec![0.5],
             flex_classes: vec![classes::DEFAULT_PRESET.into()],
+            faults: vec!["none".into()],
             solvers: vec!["native".into(), "greedy".into()],
             // Both spatial variants by default: the §V extension is part
             // of the paper's headline story, and the four policy variants
@@ -512,6 +531,9 @@ impl SweepMatrix {
         if let Some(v) = axis(&j, "flex_classes", |v| v.as_str().map(str::to_string))? {
             m.flex_classes = v;
         }
+        if let Some(v) = axis(&j, "faults", |v| v.as_str().map(str::to_string))? {
+            m.faults = v;
+        }
         if let Some(v) = axis(&j, "solvers", |v| v.as_str().map(str::to_string))? {
             m.solvers = v;
         }
@@ -533,6 +555,7 @@ impl SweepMatrix {
         crate::ensure!(!self.fleet_sizes.is_empty(), "sweep matrix: no fleet sizes");
         crate::ensure!(!self.flex_shares.is_empty(), "sweep matrix: no flex shares");
         crate::ensure!(!self.flex_classes.is_empty(), "sweep matrix: no flex classes");
+        crate::ensure!(!self.faults.is_empty(), "sweep matrix: no fault specs");
         crate::ensure!(!self.solvers.is_empty(), "sweep matrix: no solvers");
         crate::ensure!(!self.spatial.is_empty(), "sweep matrix: no spatial variants");
         crate::ensure!(
@@ -552,6 +575,7 @@ impl SweepMatrix {
             * self.fleet_sizes.len()
             * self.flex_shares.len()
             * self.flex_classes.len()
+            * self.faults.len()
             * self.solvers.len()
             * self.spatial.len()
     }
@@ -713,6 +737,9 @@ mod binio_impls {
             w.put_usize(self.machines_per_pd);
             w.put_usize(self.history_days);
             w.put_str(&self.artifact_dir);
+            // appended in STATE_VERSION 3 — new fields go at the end so
+            // the frozen prefix above never moves
+            self.faults.write(w);
         }
 
         fn read(r: &mut BinReader) -> Result<ScenarioConfig> {
@@ -726,6 +753,7 @@ mod binio_impls {
                 machines_per_pd: r.usize_()?,
                 history_days: r.usize_()?,
                 artifact_dir: r.str_()?,
+                faults: FaultConfig::read(r)?,
             })
         }
     }
@@ -822,6 +850,22 @@ mod tests {
             r#"{"campuses": [{"name": "a", "grid_source": "synthetic:NOPE"}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn faults_parse_in_config_and_matrix() {
+        // default carries the inert schedule and a fault-free matrix axis
+        assert!(ScenarioConfig::default().faults.is_none());
+        assert_eq!(SweepMatrix::default().faults, vec!["none".to_string()]);
+        let cfg = ScenarioConfig::from_json(r#"{"faults": "feed-outage:0.1"}"#).unwrap();
+        assert_eq!(cfg.faults.rates[0], 0.1);
+        assert!(ScenarioConfig::from_json(r#"{"faults": "volcano:0.1"}"#).is_err());
+        assert!(ScenarioConfig::from_json(r#"{"faults": 3}"#).is_err());
+        let m = SweepMatrix::from_json(r#"{"faults": ["none", "chaos"]}"#).unwrap();
+        assert_eq!(m.faults, vec!["none".to_string(), "chaos".to_string()]);
+        assert_eq!(m.n_cells(), 16, "faults double the default 8-cell matrix");
+        assert!(SweepMatrix::from_json(r#"{"faults": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"faults": [4]}"#).is_err());
     }
 
     #[test]

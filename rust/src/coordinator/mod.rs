@@ -16,6 +16,7 @@
 pub mod summary;
 
 use crate::config::ScenarioConfig;
+use crate::faults::{FallbackEvent, FaultKind, FaultOutcome, FaultPlan, Rung};
 use crate::fleet::Fleet;
 use crate::forecast::{ApeCollector, LoadForecaster};
 use crate::grid::{CarbonForecaster, GridZone};
@@ -119,6 +120,8 @@ pub struct SimSnapshot {
     day: usize,
     metrics: FleetMetrics,
     last_unshapeable: Vec<(usize, Unshapeable)>,
+    last_good: Vec<Option<(Vcc, usize)>>,
+    fallbacks: Vec<FallbackEvent>,
 }
 
 impl SimSnapshot {
@@ -128,7 +131,10 @@ impl SimSnapshot {
     /// miss instead of decoding into garbage.
     ///
     /// v2: campuses/zones carry a `GridSource` (trace-driven backend).
-    pub const STATE_VERSION: u32 = 2;
+    /// v3: fault-injection state appended — `ScenarioConfig` carries a
+    ///     `FaultConfig`, and the snapshot carries the per-cluster
+    ///     `last_good` reusable VCCs plus the fallback-event log.
+    pub const STATE_VERSION: u32 = 3;
 
     /// The day boundary this snapshot was taken at (warmup length, for
     /// snapshots taken by the sweep's warmup phase).
@@ -180,6 +186,9 @@ impl crate::util::binio::Bin for SimSnapshot {
         w.put_usize(self.day);
         self.metrics.write(w);
         self.last_unshapeable.write(w);
+        // appended in STATE_VERSION 3 — the frozen prefix above never moves
+        self.last_good.write(w);
+        self.fallbacks.write(w);
     }
 
     fn read(r: &mut crate::util::binio::BinReader) -> Result<SimSnapshot> {
@@ -203,6 +212,8 @@ impl crate::util::binio::Bin for SimSnapshot {
             day: r.usize_()?,
             metrics: FleetMetrics::read(r)?,
             last_unshapeable: Vec::read(r)?,
+            last_good: Vec::read(r)?,
+            fallbacks: Vec::read(r)?,
         })
     }
 }
@@ -241,9 +252,24 @@ pub struct Simulation {
     pub metrics: FleetMetrics,
     /// Unshapeable-cause counters for the most recent planning cycle.
     pub last_unshapeable: Vec<(usize, Unshapeable)>,
+    /// Fault-injection schedule derived from `cfg.faults` (stateless —
+    /// rebuilt from the config on resume, never serialized).
+    fault_plan: FaultPlan,
+    /// Per cluster: the last fresh, safety-checked, successfully pushed
+    /// VCC and the day it was planned for — the degradation ladder's
+    /// stale-reuse rung (paper §II-C Reliability).
+    pub last_good: Vec<Option<(Vcc, usize)>>,
+    /// Degradation/fallback events recorded by the day-ahead pipeline,
+    /// appended in cluster order within each planning cycle, so the log
+    /// is deterministic regardless of thread count or engine.
+    pub fallbacks: Vec<FallbackEvent>,
     /// Per-tick simulation core for the real-time day.
     pub engine: SimEngine,
     threads: usize,
+    /// Test-only worker-death injection: the real-time worker for this
+    /// cluster panics, pinning the clean-error path of `run_day`.
+    #[cfg(test)]
+    pub panic_inject: Option<usize>,
 }
 
 impl Simulation {
@@ -302,6 +328,7 @@ impl Simulation {
             .threads
             .unwrap_or_else(crate::util::threadpool::ThreadPool::default_size)
             .max(1);
+        let fault_plan = FaultPlan::new(cfg.faults.clone(), cfg.seed);
         Simulation {
             fleet,
             zones,
@@ -325,8 +352,13 @@ impl Simulation {
             day: 0,
             metrics: FleetMetrics::new(n),
             last_unshapeable: Vec::new(),
+            fault_plan,
+            last_good: vec![None; n],
+            fallbacks: Vec::new(),
             engine: opts.engine,
             threads,
+            #[cfg(test)]
+            panic_inject: None,
             cfg,
         }
     }
@@ -355,6 +387,8 @@ impl Simulation {
             day: self.day,
             metrics: self.metrics.clone(),
             last_unshapeable: self.last_unshapeable.clone(),
+            last_good: self.last_good.clone(),
+            fallbacks: self.fallbacks.clone(),
         }
     }
 
@@ -392,6 +426,7 @@ impl Simulation {
             .threads
             .unwrap_or_else(crate::util::threadpool::ThreadPool::default_size)
             .max(1);
+        let fault_plan = FaultPlan::new(snap.cfg.faults.clone(), snap.cfg.seed);
         Simulation {
             cfg: snap.cfg,
             fleet: snap.fleet,
@@ -416,8 +451,13 @@ impl Simulation {
             day: snap.day,
             metrics: snap.metrics,
             last_unshapeable: snap.last_unshapeable,
+            fault_plan,
+            last_good: snap.last_good,
+            fallbacks: snap.fallbacks,
             engine: opts.engine,
             threads,
+            #[cfg(test)]
+            panic_inject: None,
         }
     }
 
@@ -463,6 +503,8 @@ impl Simulation {
             let chunk = n.div_ceil(threads);
             let mut out: Vec<Option<(ClusterDayRecord, DayOutcome)>> =
                 (0..n).map(|_| None).collect();
+            #[cfg(test)]
+            let panic_inject = self.panic_inject;
             std::thread::scope(|s| {
                 for ((sched_chunk, out_chunk), base) in scheds
                     .chunks_mut(chunk)
@@ -474,22 +516,38 @@ impl Simulation {
                             sched_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
                         {
                             let cid = base + i;
-                            let cluster = &fleet.clusters[cid];
-                            let model = &workloads[cid];
-                            let vcc = vccs[cid].as_ref();
-                            let mut rec = ClusterDayRecord::new(cluster, day);
-                            let mut outc = DayOutcome::default();
-                            let scale = spatial_scale[cid];
-                            sched.run_day(
-                                cluster, model, vcc, day, &mut rec, &mut outc, scale, engine,
-                            );
-                            sched.end_day(&mut outc);
-                            rec.flex_backlog_gcuh = outc.queued_end_gcuh;
-                            rec.flex_done_gcuh = outc.completed_gcuh;
-                            rec.flex_submitted_gcuh = outc.submitted_gcuh;
-                            rec.shaped = vcc.map(|v| v.shaped).unwrap_or(false);
-                            let _ = seed;
-                            *slot = Some((rec, outc));
+                            // Contain a panicking cluster worker: its slot
+                            // stays empty and run_day reports a clean error
+                            // below, instead of the unwind tearing down the
+                            // scope (and the process) at join. Siblings in
+                            // the same chunk still run.
+                            let done =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    #[cfg(test)]
+                                    if panic_inject == Some(cid) {
+                                        panic!("injected worker panic (cluster {cid})");
+                                    }
+                                    let cluster = &fleet.clusters[cid];
+                                    let model = &workloads[cid];
+                                    let vcc = vccs[cid].as_ref();
+                                    let mut rec = ClusterDayRecord::new(cluster, day);
+                                    let mut outc = DayOutcome::default();
+                                    let scale = spatial_scale[cid];
+                                    sched.run_day(
+                                        cluster, model, vcc, day, &mut rec, &mut outc, scale,
+                                        engine,
+                                    );
+                                    sched.end_day(&mut outc);
+                                    rec.flex_backlog_gcuh = outc.queued_end_gcuh;
+                                    rec.flex_done_gcuh = outc.completed_gcuh;
+                                    rec.flex_submitted_gcuh = outc.submitted_gcuh;
+                                    rec.shaped = vcc.map(|v| v.shaped).unwrap_or(false);
+                                    let _ = seed;
+                                    (rec, outc)
+                                }));
+                            if let Ok(pair) = done {
+                                *slot = Some(pair);
+                            }
                         }
                     });
                 }
@@ -575,9 +633,11 @@ impl Simulation {
         let next = self.day + 1;
         let n = self.fleet.clusters.len();
         self.last_unshapeable.clear();
+        let plan = self.fault_plan.clone();
+        let faults_active = !plan.cfg.is_none();
 
         // Carbon fetching pipeline: day-ahead forecast per campus zone.
-        let carbon: Vec<[f64; HOURS_PER_DAY]> = self
+        let mut carbon: Vec<[f64; HOURS_PER_DAY]> = self
             .zones
             .iter()
             .map(|z| self.carbon_fc.day_ahead(z, next).hourly)
@@ -598,6 +658,76 @@ impl Simulation {
             })
             .collect();
 
+        // Fault injection against the carbon feed, per zone. A zone is
+        // engaged only when a shapeable cluster actually plans on it, so
+        // warmups (shaping disabled) and zero-fault runs take none of
+        // these branches and consult no fault stream.
+        let mut zone_down: Vec<Option<&'static str>> = vec![None; self.zones.len()];
+        let mut zone_degraded: Vec<Vec<&'static str>> = vec![Vec::new(); self.zones.len()];
+        if faults_active {
+            for zid in 0..self.zones.len() {
+                let engaged = (0..n)
+                    .any(|cid| shapeable[cid] && self.fleet.clusters[cid].campus_id == zid);
+                if !engaged {
+                    continue;
+                }
+                match plan.check(FaultKind::FeedOutage, next, zid) {
+                    FaultOutcome::Faulted => zone_down[zid] = Some("feed-outage"),
+                    FaultOutcome::RecoveredAfter(_) => {
+                        zone_degraded[zid].push("feed-outage+retry");
+                    }
+                    FaultOutcome::Clear => {}
+                }
+                if zone_down[zid].is_none() {
+                    match plan.check(FaultKind::StaleData, next, zid) {
+                        FaultOutcome::Faulted => {
+                            // the feed answers, but with yesterday's issue of
+                            // the day-ahead curve: plan on stale data
+                            carbon[zid] =
+                                self.carbon_fc.day_ahead(&self.zones[zid], next - 1).hourly;
+                            zone_degraded[zid].push("stale-data");
+                        }
+                        FaultOutcome::RecoveredAfter(_) => {
+                            zone_degraded[zid].push("stale-data+retry");
+                        }
+                        FaultOutcome::Clear => {}
+                    }
+                }
+                if zone_down[zid].is_none() {
+                    match plan.check(FaultKind::PoisonedForecast, next, zid) {
+                        FaultOutcome::Faulted => {
+                            plan.poison(&mut carbon[zid], next, zid);
+                            if !carbon_valid(&carbon[zid]) {
+                                zone_down[zid] = Some("poison-forecast");
+                            }
+                        }
+                        FaultOutcome::RecoveredAfter(_) => {
+                            zone_degraded[zid].push("poison-forecast+retry");
+                        }
+                        FaultOutcome::Clear => {}
+                    }
+                }
+                if zone_down[zid].is_some() {
+                    // Keep the curve finite for residual consumers (the
+                    // spatial bookkeeping); clusters on a down zone never
+                    // optimize on it — they take the fallback ladder below.
+                    carbon[zid] = self.carbon_fc.day_ahead(&self.zones[zid], next - 1).hourly;
+                }
+            }
+        }
+
+        // Demand-model training faults, resolved serially up front so the
+        // parallel retrain fan-out stays a pure function of its inputs.
+        let train_status: Vec<FaultOutcome> = (0..n)
+            .map(|cid| {
+                if faults_active && shapeable[cid] {
+                    plan.check(FaultKind::TrainFail, next, cid)
+                } else {
+                    FaultOutcome::Clear
+                }
+            })
+            .collect();
+
         // Power models pipeline: retrain per cluster (parallel fan-out).
         // Perf: retraining is ~half the per-cluster-day cost, so skip it
         // for clusters that cannot shape tomorrow — their VCC is the
@@ -606,9 +736,10 @@ impl Simulation {
         let store = &self.store;
         let day = self.day;
         let shapeable_ref = &shapeable;
+        let train_status_ref = &train_status;
         let cluster_power: Vec<Option<ClusterPowerModel>> =
             crate::util::threadpool::parallel_map(n, self.threads, |cid| {
-                if !shapeable_ref[cid] {
+                if !shapeable_ref[cid] || train_status_ref[cid] == FaultOutcome::Faulted {
                     return None;
                 }
                 let reports =
@@ -641,7 +772,11 @@ impl Simulation {
                         cid,
                         cluster.campus_id,
                         fc.tuf_hat,
-                        if shapeable[cid] { movable } else { 0.0 },
+                        if shapeable[cid] && zone_down[cluster.campus_id].is_none() {
+                            movable
+                        } else {
+                            0.0
+                        },
                         &carbon[cluster.campus_id],
                         cluster.capacity_gcu,
                         u_if_mean,
@@ -685,6 +820,41 @@ impl Simulation {
                 };
                 self.last_unshapeable.push((cid, cause));
                 vccs[cid] = Some(Vcc::unshaped(cid, next, cluster.capacity_gcu));
+                continue;
+            }
+            // Degraded near-misses (stale feed, recovered retries) are
+            // recorded here, once per cluster-day, in cluster order.
+            let zid = cluster.campus_id;
+            let capacity_gcu = cluster.capacity_gcu;
+            for &trig in &zone_degraded[zid] {
+                self.fallbacks.push(FallbackEvent {
+                    day: next,
+                    cluster_id: cid,
+                    trigger: trig.to_string(),
+                    rung: Rung::Degraded,
+                    stale_age: 0,
+                });
+            }
+            if let FaultOutcome::RecoveredAfter(_) = train_status[cid] {
+                self.fallbacks.push(FallbackEvent {
+                    day: next,
+                    cluster_id: cid,
+                    trigger: "train-fail+retry".to_string(),
+                    rung: Rung::Degraded,
+                    stale_age: 0,
+                });
+            }
+            // Hard faults that leave no fresh plan to assemble: walk the
+            // degradation ladder instead of the optimizer.
+            let ladder_trigger = match (zone_down[zid], &train_status[cid]) {
+                (Some(trig), _) => Some(trig),
+                (None, FaultOutcome::Faulted) => Some("train-fail"),
+                _ => None,
+            };
+            if let Some(trig) = ladder_trigger {
+                let min_daily: f64 =
+                    fc.u_if_hat.iter().zip(fc.ratio_hat.iter()).map(|(&u, &r)| u * r).sum();
+                vccs[cid] = Some(self.apply_ladder(cid, next, trig, min_daily, capacity_gcu));
                 continue;
             }
             // Risk-aware daily flexible usage tau (Theta + alpha, eq. (3)).
@@ -754,7 +924,10 @@ impl Simulation {
                             match solved {
                                 Ok(s) => s,
                                 Err(e) => {
-                                    eprintln!("artifact solve failed ({e:#}); native fallback");
+                                    crate::util::log::warn(
+                                        "solver",
+                                        format!("artifact solve failed ({e:#}); native fallback"),
+                                    );
                                     ps.iter().map(|p| pgd::solve(p, lambda_e, iters)).collect()
                                 }
                             }
@@ -774,22 +947,15 @@ impl Simulation {
             all
         };
 
-        // VCC construction + safety checks + distribution.
+        // VCC construction + safety checks + distribution. Faulted stages
+        // (solver, push) and safety rejections drop onto the degradation
+        // ladder; a fresh curve that clears all of them becomes the
+        // cluster's new last-good VCC.
         for (p, sol) in problems.iter().zip(solutions.iter()) {
             debug_assert_eq!(p.cluster_id, sol.cluster_id);
-            let cluster = &self.fleet.clusters[p.cluster_id];
-            let mut delta = [0.0; HOURS_PER_DAY];
-            delta.copy_from_slice(&sol.delta);
-            let vcc = Vcc::from_deltas(
-                p.cluster_id,
-                next,
-                &p.u_if_hat,
-                p.tau,
-                &delta,
-                &p.ratio_hat,
-                cluster.capacity_gcu,
-            );
-            // Safety check: curve must carry at least the inflexible
+            let cid = p.cluster_id;
+            let capacity_gcu = self.fleet.clusters[cid].capacity_gcu;
+            // Safety floor: curve must carry at least the inflexible
             // reservations plus the (non-inflated) flexible forecast.
             let min_daily: f64 = p
                 .u_if_hat
@@ -797,16 +963,126 @@ impl Simulation {
                 .zip(p.ratio_hat.iter())
                 .map(|(&u, &r)| u * r)
                 .sum::<f64>();
-            match vcc.safety_check(cluster.capacity_gcu, min_daily) {
-                Ok(()) => vccs[p.cluster_id] = Some(vcc),
-                Err(msg) => {
-                    eprintln!("cluster {}: VCC failed safety check ({msg}); unshaped", p.cluster_id);
-                    vccs[p.cluster_id] =
-                        Some(Vcc::unshaped(p.cluster_id, next, cluster.capacity_gcu));
+            if faults_active {
+                match plan.check(FaultKind::SolveFail, next, cid) {
+                    FaultOutcome::Faulted => {
+                        vccs[cid] =
+                            Some(self.apply_ladder(cid, next, "solve-fail", min_daily, capacity_gcu));
+                        continue;
+                    }
+                    FaultOutcome::RecoveredAfter(_) => self.fallbacks.push(FallbackEvent {
+                        day: next,
+                        cluster_id: cid,
+                        trigger: "solve-fail+retry".to_string(),
+                        rung: Rung::Degraded,
+                        stale_age: 0,
+                    }),
+                    FaultOutcome::Clear => {}
+                }
+            }
+            let mut delta = [0.0; HOURS_PER_DAY];
+            delta.copy_from_slice(&sol.delta);
+            let vcc =
+                Vcc::from_deltas(cid, next, &p.u_if_hat, p.tau, &delta, &p.ratio_hat, capacity_gcu);
+            match vcc.safety_check(capacity_gcu, min_daily) {
+                Ok(()) => {
+                    if faults_active {
+                        match plan.check(FaultKind::PushFail, next, cid) {
+                            FaultOutcome::Faulted => {
+                                vccs[cid] = Some(self.apply_ladder(
+                                    cid,
+                                    next,
+                                    "push-fail",
+                                    min_daily,
+                                    capacity_gcu,
+                                ));
+                                continue;
+                            }
+                            FaultOutcome::RecoveredAfter(_) => self.fallbacks.push(FallbackEvent {
+                                day: next,
+                                cluster_id: cid,
+                                trigger: "push-fail+retry".to_string(),
+                                rung: Rung::Degraded,
+                                stale_age: 0,
+                            }),
+                            FaultOutcome::Clear => {}
+                        }
+                    }
+                    self.last_good[cid] = Some((vcc.clone(), next));
+                    vccs[cid] = Some(vcc);
+                }
+                Err(violation) => {
+                    crate::util::log::warn(
+                        "safety",
+                        format!("cluster {cid}: VCC failed safety check ({violation}); fallback ladder"),
+                    );
+                    vccs[cid] = Some(self.apply_ladder(
+                        cid,
+                        next,
+                        &format!("safety:{}", violation.code()),
+                        min_daily,
+                        capacity_gcu,
+                    ));
                 }
             }
         }
         self.today_vccs = vccs;
+    }
+
+    /// Walk the graceful-degradation ladder (paper §II-C "Reliability",
+    /// see `crate::faults`) for a cluster whose fresh day-ahead plan
+    /// failed: reuse the last good VCC while it is within the staleness
+    /// bound and still passes the safety check, else fall back to the
+    /// built-in default curve, else to unshaped machine capacity. The
+    /// rung taken is recorded with its trigger in `self.fallbacks`.
+    fn apply_ladder(
+        &mut self,
+        cid: usize,
+        next: usize,
+        trigger: &str,
+        min_daily: f64,
+        capacity_gcu: f64,
+    ) -> Vcc {
+        if let Some((last, planned_for)) = &self.last_good[cid] {
+            let age = next.saturating_sub(*planned_for);
+            if age <= self.fault_plan.cfg.max_stale_days {
+                let reused = Vcc { cluster_id: cid, day: next, hourly: last.hourly, shaped: true };
+                if reused.safety_check(capacity_gcu, min_daily).is_ok() {
+                    self.fallbacks.push(FallbackEvent {
+                        day: next,
+                        cluster_id: cid,
+                        trigger: trigger.to_string(),
+                        rung: Rung::StaleVcc,
+                        stale_age: age,
+                    });
+                    return reused;
+                }
+            }
+        }
+        let curve = Vcc::default_curve(cid, next, capacity_gcu);
+        if curve.safety_check(capacity_gcu, min_daily).is_ok() {
+            self.fallbacks.push(FallbackEvent {
+                day: next,
+                cluster_id: cid,
+                trigger: trigger.to_string(),
+                rung: Rung::DefaultCurve,
+                stale_age: 0,
+            });
+            return curve;
+        }
+        self.fallbacks.push(FallbackEvent {
+            day: next,
+            cluster_id: cid,
+            trigger: trigger.to_string(),
+            rung: Rung::Unshaped,
+            stale_age: 0,
+        });
+        Vcc::unshaped(cid, next, capacity_gcu)
+    }
+
+    /// Fallback events whose day falls in `days` (report windowing).
+    pub fn fallbacks_in(&self, days: std::ops::Range<usize>) -> Vec<FallbackEvent> {
+        self.fallbacks.iter().filter(|e| days.contains(&e.day)).cloned().collect()
     }
 
     /// Fraction of clusters left unshaped in the last planning cycle.
@@ -818,6 +1094,13 @@ impl Simulation {
             .count();
         unshaped as f64 / self.today_vccs.len() as f64
     }
+}
+
+/// Accept a day-ahead intensity curve for planning: finite, non-negative,
+/// and below an implausible 5 kg CO2e/kWh ceiling (the dirtiest embedded
+/// grids peak well under 1). Poisoned feeds fail this and take the ladder.
+fn carbon_valid(hourly: &[f64; HOURS_PER_DAY]) -> bool {
+    hourly.iter().all(|&v| v.is_finite() && v >= 0.0 && v < 5.0)
 }
 
 #[cfg(test)]
@@ -934,5 +1217,120 @@ mod tests {
         let s = sim.metrics.summary(0, 2).unwrap();
         assert!(s.daily_carbon_kg > 0.0);
         assert!(s.hourly_power.iter().all(|&p| p > 0.0));
+    }
+
+    fn faulted_cfg(spec: &str) -> ScenarioConfig {
+        let mut cfg = small_cfg();
+        cfg.faults = crate::faults::FaultConfig::parse(spec).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn zero_fault_run_records_no_fallbacks() {
+        let mut sim = Simulation::new(small_cfg());
+        sim.run_days(30).unwrap();
+        assert!(sim.fallbacks.is_empty(), "{:?}", sim.fallbacks);
+        assert!(sim.last_good.iter().any(|g| g.is_some()), "fresh successes tracked");
+    }
+
+    #[test]
+    fn ladder_rungs_engage_in_order_and_record_causes() {
+        let mut sim = Simulation::new(faulted_cfg("solve-fail:1.0"));
+        let cap = sim.fleet.clusters[0].capacity_gcu;
+        // no last-good VCC yet: the stale rung is skipped, default curve lands
+        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        assert!(v.shaped && v.day == 5);
+        assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::DefaultCurve);
+        assert_eq!(sim.fallbacks.last().unwrap().cause(), "solve-fail->default-curve");
+        // a last-good VCC within the staleness bound: reused, age recorded
+        sim.last_good[0] = Some((Vcc::unshaped(0, 4, cap), 4));
+        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        assert!(v.shaped && v.day == 5);
+        let e = sim.fallbacks.last().unwrap();
+        assert_eq!((e.rung, e.stale_age), (Rung::StaleVcc, 1));
+        // beyond max_stale_days (default 3): back to the default curve
+        sim.last_good[0] = Some((Vcc::unshaped(0, 0, cap), 0));
+        sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::DefaultCurve);
+        // impossible daily minimum: terminal unshaped rung
+        sim.last_good[0] = None;
+        let v = sim.apply_ladder(0, 5, "solve-fail", cap * 24.0 + 1.0, cap);
+        assert!(!v.shaped);
+        assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::Unshaped);
+        // exactly one event per ladder walk
+        assert_eq!(sim.fallbacks.len(), 4);
+    }
+
+    #[test]
+    fn injected_faults_walk_the_ladder_and_stay_deterministic() {
+        let mut cfg = faulted_cfg("solve-fail:0.5,feed-outage:0.2");
+        cfg.faults.retries = 0;
+        let mut a = Simulation::with_options(
+            cfg.clone(),
+            SimOptions { threads: Some(3), ..SimOptions::default() },
+        );
+        a.run_days(40).unwrap();
+        assert!(!a.fallbacks.is_empty(), "heavy fault rates over 40 days must fire");
+        // stale reuse engaged, and never beyond the staleness bound
+        let stale: Vec<_> = a.fallbacks.iter().filter(|e| e.rung == Rung::StaleVcc).collect();
+        assert!(!stale.is_empty(), "no stale-VCC reuse in {:?}", a.fallbacks);
+        assert!(stale
+            .iter()
+            .all(|e| e.stale_age >= 1 && e.stale_age <= cfg.faults.max_stale_days));
+        // both fault triggers appear in the cause taxonomy
+        assert!(a.fallbacks.iter().any(|e| e.trigger == "solve-fail"));
+        assert!(a.fallbacks.iter().any(|e| e.trigger == "feed-outage"));
+        // fault scheduling is byte-deterministic across thread budgets
+        // and engines: the event log and final curves match exactly
+        let mut b = Simulation::with_options(
+            cfg,
+            SimOptions {
+                backend: Some(SolverBackend::Native),
+                threads: Some(1),
+                shaping_disabled: false,
+                spatial_movable_fraction: None,
+                engine: SimEngine::Legacy,
+            },
+        );
+        b.run_days(40).unwrap();
+        assert_eq!(a.fallbacks, b.fallbacks);
+        assert_eq!(a.today_vccs, b.today_vccs);
+    }
+
+    #[test]
+    fn snapshot_carries_fault_state_and_resume_continues_identically() {
+        let mut sim = Simulation::new(faulted_cfg("chaos"));
+        sim.run_days(30).unwrap();
+        assert!(!sim.fallbacks.is_empty(), "chaos preset must trigger fallbacks");
+        let bytes = sim.snapshot().to_bytes();
+        let back = SimSnapshot::from_bytes(&bytes).unwrap();
+        let mut resumed = Simulation::resume(back, SimOptions::default());
+        assert_eq!(resumed.fallbacks, sim.fallbacks);
+        assert_eq!(resumed.last_good, sim.last_good);
+        resumed.run_days(5).unwrap();
+        sim.run_days(5).unwrap();
+        assert_eq!(resumed.fallbacks, sim.fallbacks);
+        assert_eq!(resumed.today_vccs, sim.today_vccs);
+    }
+
+    #[test]
+    fn worker_panic_errors_cleanly_and_machinery_survives() {
+        let mut sim = Simulation::with_options(
+            small_cfg(),
+            SimOptions { threads: Some(2), ..SimOptions::default() },
+        );
+        sim.panic_inject = Some(1);
+        let err = sim.run_day().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cluster 1 day 0"), "{msg}");
+        assert!(msg.contains("produced no result"), "{msg}");
+        // the failed Simulation is poisoned by contract, but the process
+        // and the thread machinery live on: a fresh run still works...
+        let mut fresh = Simulation::new(small_cfg());
+        fresh.run_days(2).unwrap();
+        assert_eq!(fresh.day, 2);
+        // ...and so does the shared fan-out helper
+        let out = crate::util::threadpool::parallel_map(8, 4, |i| i * 2);
+        assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,452 @@
+//! Deterministic fault injection for the day-ahead VCC pipeline.
+//!
+//! The paper's §II-C (Safety and Reliability) describes a production
+//! system that must keep clusters safe when the carbon-intensity feed,
+//! demand models, optimizer, or VCC push fail. This module supplies the
+//! failure side of that story: a seeded [`FaultPlan`] schedules per-day,
+//! per-stage faults from independent keyed RNG streams, so a
+//! fault-injected sweep is byte-reproducible across reruns, worker
+//! counts, engines, and warmup-sharing modes — fault rate becomes a
+//! physical scenario axis exactly like the grid or the workload-class
+//! taxonomy.
+//!
+//! The coordinator reacts to faults by walking a graceful-degradation
+//! ladder (see `coordinator::plan_next_day`) instead of collapsing
+//! straight to the unshaped machine-capacity fallback:
+//!
+//! ```text
+//! fault ──► bounded deterministic retry
+//!             │ still failing
+//!             ▼
+//!           reuse yesterday's VCC        (age ≤ max_stale_days,
+//!             │ too stale / unsafe        safety_check re-run)
+//!             ▼
+//!           default capacity curve       (mild evening dip, safety-checked)
+//!             │ unsafe
+//!             ▼
+//!           unshaped machine capacity    (always safe)
+//! ```
+//!
+//! Every rung taken is recorded as a [`FallbackEvent`] in the
+//! simulation's telemetry and aggregated into per-cell report columns
+//! (fallback rate, cause taxonomy, carbon-savings delta vs the
+//! zero-fault twin). The zero-fault default draws no random numbers and
+//! records no events, so default reports stay byte-identical.
+
+use crate::util::binio::{Bin, BinReader, BinWriter};
+use crate::util::error::Result;
+use crate::util::rng::Pcg;
+
+/// Stream salt separating fault draws from every other keyed consumer
+/// of the scenario seed (workload, weather, telemetry...).
+const FAULT_SALT: u64 = 0xFA17_B07E_D00D_5EED;
+
+/// The injectable fault stages, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Carbon-intensity feed outage: the zone's day-ahead forecast is
+    /// unavailable for the whole planning day.
+    FeedOutage,
+    /// Stale feed: today's forecast issue failed; yesterday's day-ahead
+    /// curve is substituted (a degraded plan, not a fallback).
+    StaleData,
+    /// Poisoned forecast: NaN or spike-corrupted intensity values that
+    /// the coordinator's validator must catch before optimizing on them.
+    PoisonedForecast,
+    /// Demand-model training failure: the nightly power/load retrain
+    /// dies; the cluster plans on its previous model.
+    TrainFail,
+    /// Optimizer solve failure/timeout for one cluster's VCC problem.
+    SolveFail,
+    /// VCC push failure: a fresh curve was computed but could not be
+    /// delivered to the cluster scheduler.
+    PushFail,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::FeedOutage,
+        FaultKind::StaleData,
+        FaultKind::PoisonedForecast,
+        FaultKind::TrainFail,
+        FaultKind::SolveFail,
+        FaultKind::PushFail,
+    ];
+
+    /// Stable spec/report code.
+    pub fn code(self) -> &'static str {
+        match self {
+            FaultKind::FeedOutage => "feed-outage",
+            FaultKind::StaleData => "stale-data",
+            FaultKind::PoisonedForecast => "poison-forecast",
+            FaultKind::TrainFail => "train-fail",
+            FaultKind::SolveFail => "solve-fail",
+            FaultKind::PushFail => "push-fail",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultKind::FeedOutage => 0,
+            FaultKind::StaleData => 1,
+            FaultKind::PoisonedForecast => 2,
+            FaultKind::TrainFail => 3,
+            FaultKind::SolveFail => 4,
+            FaultKind::PushFail => 5,
+        }
+    }
+
+    fn from_code(code: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.code() == code)
+    }
+}
+
+/// Per-stage daily fault rates plus the ladder's knobs. Part of
+/// [`crate::config::ScenarioConfig`]; the default (all rates zero) is
+/// the exact pre-fault pipeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Daily fault probability per stage, indexed by `FaultKind::index`.
+    pub rates: [f64; 6],
+    /// Ladder bound: a stale VCC older than this many days is not
+    /// reused (the paper keeps curves conservative; an old curve may no
+    /// longer reflect cluster demand).
+    pub max_stale_days: usize,
+    /// Bounded retry budget: each fault gets this many deterministic
+    /// retry attempts (each clears with probability 1/2) before the
+    /// ladder engages.
+    pub retries: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig { rates: [0.0; 6], max_stale_days: 3, retries: 1 }
+    }
+}
+
+impl FaultConfig {
+    /// True when no stage can ever fault — the plan is inert and draws
+    /// no random numbers.
+    pub fn is_none(&self) -> bool {
+        self.rates.iter().all(|&r| r == 0.0)
+    }
+
+    pub fn rate(&self, kind: FaultKind) -> f64 {
+        self.rates[kind.index()]
+    }
+
+    /// Parse a `--faults` spec: `"none"` (or empty) for the inert
+    /// default, the `"chaos"` preset (every stage at 20%/day), or a
+    /// comma list of `code:rate` pairs, e.g.
+    /// `"feed-outage:0.05,solve-fail:0.02"`. Rates must lie in [0, 1].
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let spec = spec.trim();
+        let mut cfg = FaultConfig::default();
+        if spec.is_empty() || spec == "none" {
+            return Ok(cfg);
+        }
+        if spec == "chaos" {
+            cfg.rates = [0.2; 6];
+            return Ok(cfg);
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (code, rate) = part
+                .split_once(':')
+                .ok_or_else(|| crate::err!("faults: expected code:rate, got {part:?}"))?;
+            let kind = FaultKind::from_code(code.trim()).ok_or_else(|| {
+                crate::err!(
+                    "faults: unknown stage {code:?} (expected one of {}, or none/chaos)",
+                    FaultKind::ALL.map(|k| k.code()).join("/")
+                )
+            })?;
+            let rate: f64 = rate
+                .trim()
+                .parse()
+                .map_err(|_| crate::err!("faults: bad rate in {part:?}"))?;
+            crate::ensure!(
+                (0.0..=1.0).contains(&rate) && rate.is_finite(),
+                "faults: rate {rate} for {code:?} outside [0, 1]"
+            );
+            cfg.rates[kind.index()] = rate;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Outcome of a fault check for one (stage, day, unit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// No fault scheduled.
+    Clear,
+    /// A fault occurred but a bounded retry recovered it; the pipeline
+    /// proceeds normally (the recovery is reported as a `Degraded`
+    /// ladder event so telemetry still sees the near-miss).
+    RecoveredAfter(usize),
+    /// The fault persisted through the retry budget; the ladder engages.
+    Faulted,
+}
+
+/// A deterministic per-scenario fault schedule. Stateless: every check
+/// is a pure function of `(seed, stage, day, unit)`, so checks can run
+/// from any thread, in any order, under either engine, and fork/resume
+/// needs no serialized RNG position.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub cfg: FaultConfig,
+    seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig, seed: u64) -> FaultPlan {
+        FaultPlan { cfg, seed }
+    }
+
+    /// Does `kind` fault on `day` for `unit` (a cluster or zone index),
+    /// and if so, does a bounded retry recover it? Zero-rate stages
+    /// short-circuit without touching an RNG.
+    pub fn check(&self, kind: FaultKind, day: usize, unit: usize) -> FaultOutcome {
+        let rate = self.cfg.rate(kind);
+        if rate == 0.0 {
+            return FaultOutcome::Clear;
+        }
+        let key = FAULT_SALT ^ kind.index() as u64;
+        if !Pcg::keyed(self.seed, key, day as u64, unit as u64).chance(rate) {
+            return FaultOutcome::Clear;
+        }
+        for attempt in 0..self.cfg.retries {
+            let retry_key = key ^ (0x5E17 + attempt as u64).rotate_left(17);
+            if Pcg::keyed(self.seed, retry_key, day as u64, unit as u64).chance(0.5) {
+                return FaultOutcome::RecoveredAfter(attempt + 1);
+            }
+        }
+        FaultOutcome::Faulted
+    }
+
+    /// Deterministically corrupt a day-ahead intensity curve in place:
+    /// 1–3 hours get either a NaN or a ×50 spike. The coordinator's
+    /// validator must reject the result; this models a poisoned feed,
+    /// not a plausible one.
+    pub fn poison(&self, hourly: &mut [f64; 24], day: usize, unit: usize) {
+        let key = FAULT_SALT ^ FaultKind::PoisonedForecast.index() as u64;
+        let mut rng = Pcg::keyed(self.seed, key ^ 0x9015_0000, day as u64, unit as u64);
+        let n = 1 + rng.below(3) as usize;
+        for _ in 0..n {
+            let h = rng.below(24) as usize;
+            hourly[h] = if rng.chance(0.5) { f64::NAN } else { hourly[h].abs() * 50.0 + 50.0 };
+        }
+    }
+}
+
+/// The degradation ladder's rungs, in descending order of service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// Pipeline completed with degraded inputs (stale feed, skipped
+    /// retrain, retried fault) — a fresh VCC was still produced.
+    Degraded,
+    /// Yesterday's (or an older) pushed VCC reused within the staleness
+    /// bound, re-validated by `safety_check`.
+    StaleVcc,
+    /// The built-in default capacity curve (mild evening dip).
+    DefaultCurve,
+    /// Unshaped machine capacity — the terminal, always-safe fallback.
+    Unshaped,
+}
+
+impl Rung {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rung::Degraded => "degraded",
+            Rung::StaleVcc => "stale-vcc",
+            Rung::DefaultCurve => "default-curve",
+            Rung::Unshaped => "unshaped",
+        }
+    }
+}
+
+impl Bin for Rung {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_u8(match self {
+            Rung::Degraded => 0,
+            Rung::StaleVcc => 1,
+            Rung::DefaultCurve => 2,
+            Rung::Unshaped => 3,
+        });
+    }
+    fn read(r: &mut BinReader) -> Result<Rung> {
+        Ok(match r.u8()? {
+            0 => Rung::Degraded,
+            1 => Rung::StaleVcc,
+            2 => Rung::DefaultCurve,
+            3 => Rung::Unshaped,
+            t => crate::bail!("unknown Rung tag {t}"),
+        })
+    }
+}
+
+/// One recorded degradation: on `day`, `cluster_id`'s planning hit
+/// `trigger` and landed on `rung`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FallbackEvent {
+    /// The day being planned *for*.
+    pub day: usize,
+    pub cluster_id: usize,
+    /// Cause code: a fault code (`"feed-outage"`, ...), a retried one
+    /// (`"solve-fail+retry"`), or `"safety:<violation>"`.
+    pub trigger: String,
+    pub rung: Rung,
+    /// For `StaleVcc`: age in days of the reused curve. 0 otherwise.
+    pub stale_age: usize,
+}
+
+impl FallbackEvent {
+    /// Report taxonomy key, e.g. `"feed-outage->stale-vcc"`.
+    pub fn cause(&self) -> String {
+        format!("{}->{}", self.trigger, self.rung.name())
+    }
+}
+
+impl Bin for FallbackEvent {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_usize(self.day);
+        w.put_usize(self.cluster_id);
+        w.put_str(&self.trigger);
+        self.rung.write(w);
+        w.put_usize(self.stale_age);
+    }
+    fn read(r: &mut BinReader) -> Result<FallbackEvent> {
+        Ok(FallbackEvent {
+            day: r.usize_()?,
+            cluster_id: r.usize_()?,
+            trigger: r.str_()?,
+            rung: Rung::read(r)?,
+            stale_age: r.usize_()?,
+        })
+    }
+}
+
+impl Bin for FaultConfig {
+    fn write(&self, w: &mut BinWriter) {
+        self.rates.write(w);
+        w.put_usize(self.max_stale_days);
+        w.put_usize(self.retries);
+    }
+    fn read(r: &mut BinReader) -> Result<FaultConfig> {
+        Ok(FaultConfig {
+            rates: <[f64; 6]>::read(r)?,
+            max_stale_days: r.usize_()?,
+            retries: r.usize_()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::binio::{from_payload, to_payload};
+
+    #[test]
+    fn parse_none_chaos_and_lists() {
+        assert!(FaultConfig::parse("none").unwrap().is_none());
+        assert!(FaultConfig::parse("").unwrap().is_none());
+        let chaos = FaultConfig::parse("chaos").unwrap();
+        assert!(FaultKind::ALL.iter().all(|&k| chaos.rate(k) == 0.2));
+        let cfg = FaultConfig::parse("feed-outage:0.05, solve-fail:0.02").unwrap();
+        assert_eq!(cfg.rate(FaultKind::FeedOutage), 0.05);
+        assert_eq!(cfg.rate(FaultKind::SolveFail), 0.02);
+        assert_eq!(cfg.rate(FaultKind::PushFail), 0.0);
+        assert!(!cfg.is_none());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultConfig::parse("volcano:0.1").is_err());
+        assert!(FaultConfig::parse("feed-outage").is_err());
+        assert!(FaultConfig::parse("feed-outage:1.5").is_err());
+        assert!(FaultConfig::parse("feed-outage:-0.1").is_err());
+        assert!(FaultConfig::parse("feed-outage:NaN").is_err());
+    }
+
+    #[test]
+    fn zero_rate_is_always_clear() {
+        let plan = FaultPlan::new(FaultConfig::default(), 42);
+        for day in 0..200 {
+            for unit in 0..8 {
+                for &k in &FaultKind::ALL {
+                    assert_eq!(plan.check(k, day, unit), FaultOutcome::Clear);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checks_are_pure_and_seed_sensitive() {
+        let cfg = FaultConfig::parse("chaos").unwrap();
+        let a = FaultPlan::new(cfg.clone(), 7);
+        let b = FaultPlan::new(cfg.clone(), 7);
+        let c = FaultPlan::new(cfg, 8);
+        let mut diverged = false;
+        for day in 0..100 {
+            for &k in &FaultKind::ALL {
+                assert_eq!(a.check(k, day, 0), b.check(k, day, 0), "same seed, same schedule");
+                diverged |= a.check(k, day, 0) != c.check(k, day, 0);
+            }
+        }
+        assert!(diverged, "different seeds yield different schedules");
+    }
+
+    #[test]
+    fn rate_one_faults_daily_and_retries_bound() {
+        let mut cfg = FaultConfig::parse("solve-fail:1.0").unwrap();
+        cfg.retries = 0;
+        let plan = FaultPlan::new(cfg, 3);
+        for day in 0..50 {
+            assert_eq!(plan.check(FaultKind::SolveFail, day, 1), FaultOutcome::Faulted);
+        }
+    }
+
+    #[test]
+    fn retries_sometimes_recover() {
+        let mut cfg = FaultConfig::parse("solve-fail:1.0").unwrap();
+        cfg.retries = 3;
+        let plan = FaultPlan::new(cfg, 3);
+        let outcomes: Vec<FaultOutcome> =
+            (0..100).map(|day| plan.check(FaultKind::SolveFail, day, 1)).collect();
+        assert!(outcomes.iter().any(|o| matches!(o, FaultOutcome::RecoveredAfter(_))));
+        assert!(outcomes.iter().any(|o| *o == FaultOutcome::Faulted));
+    }
+
+    #[test]
+    fn poison_corrupts_deterministically() {
+        let plan = FaultPlan::new(FaultConfig::parse("poison-forecast:1.0").unwrap(), 5);
+        let clean = [0.3f64; 24];
+        let mut a = clean;
+        let mut b = clean;
+        plan.poison(&mut a, 10, 2);
+        plan.poison(&mut b, 10, 2);
+        assert!(a.iter().zip(b.iter()).all(|(x, y)| (x.is_nan() && y.is_nan()) || x == y));
+        assert!(
+            a.iter().any(|v| v.is_nan() || *v >= 5.0),
+            "poison must trip the coordinator's validator"
+        );
+    }
+
+    #[test]
+    fn binio_roundtrips() {
+        let cfg = FaultConfig::parse("feed-outage:0.05,push-fail:0.5").unwrap();
+        let back: FaultConfig = from_payload(&to_payload(&cfg)).unwrap();
+        assert_eq!(back, cfg);
+        let ev = FallbackEvent {
+            day: 31,
+            cluster_id: 4,
+            trigger: "feed-outage".into(),
+            rung: Rung::StaleVcc,
+            stale_age: 2,
+        };
+        let back: FallbackEvent = from_payload(&to_payload(&ev)).unwrap();
+        assert_eq!(back, ev);
+        for rung in [Rung::Degraded, Rung::StaleVcc, Rung::DefaultCurve, Rung::Unshaped] {
+            assert_eq!(from_payload::<Rung>(&to_payload(&rung)).unwrap(), rung);
+        }
+    }
+}

@@ -21,6 +21,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod experiment;
+pub mod faults;
 pub mod fleet;
 pub mod forecast;
 pub mod grid;

@@ -411,6 +411,23 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             _ => None,
         })?;
     }
+    // Fault-injection axis. A spec itself is comma-separated
+    // (`--faults feed-outage:0.05,solve-fail:0.02` is ONE spec, the
+    // `FaultConfig::parse` syntax), so axis entries are separated by ';'
+    // when any spec carries rates: `--faults none;chaos` sweeps a clean
+    // and a chaotic variant. A value with neither ';' nor ':' is a plain
+    // preset list, comma-separated like every other axis. Specs are
+    // validated at matrix expansion.
+    if let Some(s) = args.get("faults") {
+        m.faults = if s.contains(';') {
+            s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
+        } else if s.contains(':') {
+            vec![s.trim().to_string()]
+        } else {
+            parse_list("faults", s, |x| Some(x.to_string()))?
+        };
+        cics::ensure!(!m.faults.is_empty(), "--faults: no fault specs given");
+    }
     m.warmup_days = args.usize("warmup", m.warmup_days);
     m.validate()?;
     let days = args.usize("days", 20);
@@ -424,13 +441,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let cache = open_cache(args, &out)?;
 
     println!(
-        "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} solvers x \
-         {} spatial), {} warmup + {} measured days, {} worker threads, {} engine{}",
+        "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} faults x \
+         {} solvers x {} spatial), {} warmup + {} measured days, {} worker threads, {} engine{}",
         m.n_cells(),
         m.grids.len(),
         m.fleet_sizes.len(),
         m.flex_shares.len(),
         m.flex_classes.len(),
+        m.faults.len(),
         m.solvers.len(),
         m.spatial.len(),
         m.warmup_days,
@@ -685,6 +703,9 @@ fn main() {
                  sweep:  [--matrix FILE] [--grids FR,trace:PL,synthetic:DE] [--fleets 4,8]\n\
                  \u{20}      [--flex 0.3,0.6] [--classes within-day,mixed]\n\
                  \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
+                 \u{20}      [--faults none;chaos | --faults feed-outage:0.05,solve-fail:0.02]\n\
+                 \u{20}      (fault-injection axis: kind:daily-rate streams or the chaos\n\
+                 \u{20}      preset; ';' separates axis entries, ',' joins one spec's kinds)\n\
                  grids:  archetype presets (FR|CA|DE|PL), real hourly traces\n\
                  \u{20}      (trace:SE..ZA — see data/carbon_intensity/) or calibrated\n\
                  \u{20}      synthetic profiles (synthetic:CODE); simulate/experiment/\n\

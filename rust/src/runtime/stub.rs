@@ -49,7 +49,10 @@ impl Runtime {
             match Runtime::load(&p) {
                 Ok(r) => Some(r),
                 Err(e) => {
-                    eprintln!("warning: artifacts unusable ({e:#}); using native solver");
+                    crate::util::log::warn(
+                        "runtime",
+                        format!("warning: artifacts unusable ({e:#}); using native solver"),
+                    );
                     None
                 }
             }

@@ -314,7 +314,10 @@ impl SnapshotCache {
     fn store_or_warn(&self, hash: u64, warmup: usize, snap: &SimSnapshot) {
         if let Err(e) = self.store(hash, warmup, snap) {
             let name = entry_file(hash, warmup);
-            eprintln!("snapshot cache: could not store {name}: {e:#} (continuing uncached)");
+            crate::util::log::warn(
+                "snapshot-cache",
+                format!("snapshot cache: could not store {name}: {e:#} (continuing uncached)"),
+            );
         }
     }
 
@@ -399,7 +402,10 @@ impl SnapshotCache {
                 Some((*arc).clone())
             }
             Err(e) => {
-                eprintln!("snapshot cache: dropping unusable entry {name}: {e:#}");
+                crate::util::log::warn(
+                    "snapshot-cache",
+                    format!("snapshot cache: dropping unusable entry {name}: {e:#}"),
+                );
                 let _ = std::fs::remove_file(self.dir.join(&name));
                 let mut g = self.inner.lock().unwrap();
                 g.stats.bytes_read += bytes.len() as u64;

@@ -11,8 +11,12 @@ use crate::config::classes::DEFAULT_PRESET;
 use crate::config::{
     CampusConfig, FlexClasses, GridArchetype, GridSource, ScenarioConfig, SweepMatrix,
 };
+use crate::faults::FaultConfig;
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
+
+/// The inert fault-axis value (no injection, no label tag, no seed fold).
+const NO_FAULTS: &str = "none";
 
 /// Solver backend choice for one cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,6 +98,9 @@ pub struct SweepCell {
     pub flex_share: f64,
     /// Workload-class preset of the cell (canonical lowercase name).
     pub classes: String,
+    /// Fault-injection spec of the cell (canonical lowercase form;
+    /// `"none"` for the inert default).
+    pub faults: String,
     pub solver: SolverChoice,
     pub spatial: bool,
     /// Per-cell seed, derived from the *physical* scenario axes only
@@ -107,15 +114,17 @@ pub struct SweepCell {
 
 /// Derive a well-separated seed from the base seed and the physical
 /// scenario key (exact flex bits — no decimal rounding, no collisions).
-/// The class preset is a physical axis too (it changes the workload),
-/// but the default `within-day` preset contributes nothing to the hash,
-/// so pre-taxonomy sweeps keep their seeds — and their report bytes.
+/// The class preset and the fault spec are physical axes too (they
+/// change the simulated world), but their defaults (`within-day`,
+/// `none`) contribute nothing to the hash, so pre-existing sweeps keep
+/// their seeds — and their report bytes.
 fn cell_seed(
     base: u64,
     grid_code: &str,
     fleet_size: usize,
     flex_share: f64,
     classes: &str,
+    faults: &str,
 ) -> u64 {
     let mut h = grid_code
         .to_ascii_uppercase()
@@ -126,11 +135,16 @@ fn cell_seed(
     if classes != DEFAULT_PRESET {
         h = classes.bytes().fold(h, |a, b| splitmix64(a ^ b as u64));
     }
+    if faults != NO_FAULTS {
+        h = faults.bytes().fold(splitmix64(h ^ 0xFA17), |a, b| splitmix64(a ^ b as u64));
+    }
     splitmix64(base ^ h)
 }
 
 /// Expand the matrix into cells (cartesian product, fixed axis order:
-/// grids, fleet sizes, flex shares, class presets, solvers, spatial).
+/// grids, fleet sizes, flex shares, class presets, fault specs, solvers,
+/// spatial — solvers and spatial innermost, so the policy variants of a
+/// physical scenario stay contiguous and share one warmup fork group).
 pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
     matrix.validate()?;
     let mut cells = Vec::with_capacity(matrix.n_cells());
@@ -167,60 +181,79 @@ pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
                     } else {
                         format!("{classes_code} ")
                     };
-                    for solver_name in &matrix.solvers {
-                        let solver = SolverChoice::parse(solver_name)
-                            .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
-                        for &spatial in &matrix.spatial {
-                            let label = format!(
-                                "{} f{} x{} {}{} sp-{}",
-                                grid_code.to_ascii_uppercase(),
-                                fleet_size,
-                                flex_share,
-                                class_tag,
-                                solver.name(),
-                                if spatial { "on" } else { "off" }
-                            );
-                            let seed = cell_seed(
-                                matrix.seed,
-                                grid_code,
-                                fleet_size,
-                                flex_share,
-                                &classes_code,
-                            );
-                            let mut cfg = ScenarioConfig {
-                                seed,
-                                campuses: vec![CampusConfig {
-                                    name: format!("sweep-{}", grid_code.to_ascii_lowercase()),
-                                    grid,
-                                    grid_source: grid_source.clone(),
-                                    clusters: fleet_size,
-                                    contract_limit_kw: f64::INFINITY,
-                                    // flex_share of clusters are archetype X
-                                    // (large flexible share); the rest are Z.
-                                    archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
-                                }],
-                                flex_classes: flex_classes.clone(),
-                                ..ScenarioConfig::default()
-                            };
-                            // Sweeps run many scenarios: trimmed solver
-                            // budget (quality plateaus well before 400
-                            // iterations — see the optimizer_hotpath
-                            // ablation) and no artifact probing unless
-                            // the cell asks for it.
-                            cfg.optimizer.iters = 200;
-                            cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
-                            cells.push(SweepCell {
-                                index: cells.len(),
-                                label,
-                                grid_code: grid_code.to_ascii_uppercase(),
-                                fleet_size,
-                                flex_share,
-                                classes: classes_code.clone(),
-                                solver,
-                                spatial,
-                                seed,
-                                cfg,
-                            });
+                    for faults_spec in &matrix.faults {
+                        let faults_spec = faults_spec.trim().to_ascii_lowercase();
+                        let fault_cfg = FaultConfig::parse(&faults_spec)?;
+                        // Like the class preset, the inert default stays
+                        // invisible in labels and seeds, so fault-free
+                        // sweeps keep their exact bytes.
+                        let fault_tag = if faults_spec == NO_FAULTS {
+                            String::new()
+                        } else {
+                            format!("{faults_spec} ")
+                        };
+                        for solver_name in &matrix.solvers {
+                            let solver = SolverChoice::parse(solver_name)
+                                .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
+                            for &spatial in &matrix.spatial {
+                                let label = format!(
+                                    "{} f{} x{} {}{}{} sp-{}",
+                                    grid_code.to_ascii_uppercase(),
+                                    fleet_size,
+                                    flex_share,
+                                    class_tag,
+                                    fault_tag,
+                                    solver.name(),
+                                    if spatial { "on" } else { "off" }
+                                );
+                                let seed = cell_seed(
+                                    matrix.seed,
+                                    grid_code,
+                                    fleet_size,
+                                    flex_share,
+                                    &classes_code,
+                                    &faults_spec,
+                                );
+                                let mut cfg = ScenarioConfig {
+                                    seed,
+                                    campuses: vec![CampusConfig {
+                                        name: format!(
+                                            "sweep-{}",
+                                            grid_code.to_ascii_lowercase()
+                                        ),
+                                        grid,
+                                        grid_source: grid_source.clone(),
+                                        clusters: fleet_size,
+                                        contract_limit_kw: f64::INFINITY,
+                                        // flex_share of clusters are archetype X
+                                        // (large flexible share); the rest are Z.
+                                        archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
+                                    }],
+                                    flex_classes: flex_classes.clone(),
+                                    faults: fault_cfg.clone(),
+                                    ..ScenarioConfig::default()
+                                };
+                                // Sweeps run many scenarios: trimmed solver
+                                // budget (quality plateaus well before 400
+                                // iterations — see the optimizer_hotpath
+                                // ablation) and no artifact probing unless
+                                // the cell asks for it.
+                                cfg.optimizer.iters = 200;
+                                cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
+                                cells.push(SweepCell {
+                                    index: cells.len(),
+                                    label,
+                                    grid_code: grid_code.to_ascii_uppercase(),
+                                    fleet_size,
+                                    flex_share,
+                                    classes: classes_code.clone(),
+                                    faults: faults_spec.clone(),
+                                    solver,
+                                    spatial,
+                                    seed,
+                                    cfg,
+                                });
+                            }
                         }
                     }
                 }
@@ -327,6 +360,38 @@ mod tests {
         // unknown presets fail loudly
         let mut bad = SweepMatrix::default();
         bad.flex_classes = vec!["hourly".into()];
+        assert!(expand(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_specs_are_a_physical_axis() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
+        m.faults = vec!["none".into(), "chaos".into(), "Feed-Outage:0.1".into()];
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 3);
+        // the inert default keeps the pre-fault label and seed shape
+        assert_eq!(cells[0].faults, "none");
+        assert_eq!(cells[0].label, "PL f4 x0.5 native sp-off");
+        assert!(cells[0].cfg.faults.is_none());
+        // non-default specs are tagged (canonical lowercase) and derive
+        // their own seeds
+        assert_eq!(cells[1].label, "PL f4 x0.5 chaos native sp-off");
+        assert_eq!(cells[2].label, "PL f4 x0.5 feed-outage:0.1 native sp-off");
+        assert!(!cells[1].cfg.faults.is_none());
+        assert_eq!(cells[2].cfg.faults.rates[0], 0.1);
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_ne!(cells[0].seed, cells[2].seed);
+        assert_ne!(cells[1].seed, cells[2].seed);
+        for c in &cells {
+            assert_eq!(c.seed, c.cfg.seed);
+            c.cfg.validate().unwrap();
+        }
+        // bad specs fail loudly
+        let mut bad = SweepMatrix::default();
+        bad.faults = vec!["volcano:0.1".into()];
         assert!(expand(&bad).is_err());
     }
 

@@ -49,7 +49,7 @@ pub mod report;
 
 pub use cache::{CacheStats, SnapshotCache};
 pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
-pub use report::{CellReport, SweepReport};
+pub use report::{CellReport, FallbackCellReport, SweepReport};
 
 use crate::config::SweepMatrix;
 use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend, WindowAggregate};
@@ -208,7 +208,7 @@ pub fn run_sweep_cached(
             group_of[ci] = g;
         }
     }
-    let reports = cells
+    let mut reports: Vec<CellReport> = cells
         .iter()
         .map(|cell| {
             let s = shaped[cell.index].as_ref().expect("every cell ran a shaped unit");
@@ -218,6 +218,21 @@ pub fn run_sweep_cached(
             make_report(cell, s, b, warmup, measure_days)
         })
         .collect();
+    // Fault-injected cells get a carbon-savings delta against their
+    // zero-fault twin — the cell with the same label minus the fault tag
+    // (same grid, fleet, flex share, classes, solver, spatial).
+    for i in 0..reports.len() {
+        if cells[i].faults == "none" {
+            continue;
+        }
+        let twin_label = cells[i].label.replace(&format!("{} ", cells[i].faults), "");
+        if let Some(twin) = cells.iter().position(|c| c.label == twin_label) {
+            let delta = reports[i].carbon_saved_pct - reports[twin].carbon_saved_pct;
+            if let Some(fb) = reports[i].fallback.as_mut() {
+                fb.savings_delta_pct = Some(delta);
+            }
+        }
+    }
     let timing = SweepTiming {
         warmup_s,
         units_s,
@@ -296,6 +311,8 @@ struct ShapedOutcome {
     agg: WindowAggregate,
     slo_pauses: usize,
     spatial_moved_gcuh: f64,
+    /// Degradation-ladder events whose day falls in the measured window.
+    fallbacks: Vec<crate::faults::FallbackEvent>,
 }
 
 /// Resume a warmup checkpoint as one fork unit and simulate the measured
@@ -335,9 +352,10 @@ fn run_fork_unit(
     Ok(match cell {
         None => UnitOutcome::Baseline(sim.metrics.window_aggregate(window)),
         Some(_) => UnitOutcome::Shaped(ShapedOutcome {
-            agg: sim.metrics.window_aggregate(window),
+            agg: sim.metrics.window_aggregate(window.clone()),
             slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
             spatial_moved_gcuh: sim.spatial_totals.0,
+            fallbacks: sim.fallbacks_in(window),
         }),
     })
 }
@@ -399,6 +417,34 @@ fn make_report(
         let fcster = crate::grid::CarbonForecaster::default();
         Some(fcster.heldout_mape(&zone, warmup_days + measure_days, HELDOUT_DAYS))
     };
+    // Degradation-ladder columns only for fault-injected cells (or the
+    // vanishingly rare zero-fault run that still hit the ladder): default
+    // cells emit exactly the pre-fault document bytes. The savings delta
+    // against the zero-fault twin is filled in post-assembly by
+    // `run_sweep_cached`, which can see the whole report.
+    let fallback = if cell.faults != "none" || !s.fallbacks.is_empty() {
+        let mut hard: Vec<(usize, usize)> = s
+            .fallbacks
+            .iter()
+            .filter(|e| e.rung != crate::faults::Rung::Degraded)
+            .map(|e| (e.day, e.cluster_id))
+            .collect();
+        hard.sort_unstable();
+        hard.dedup();
+        let n_clusters: usize = cell.cfg.campuses.iter().map(|c| c.clusters).sum();
+        let cluster_days = (n_clusters * measure_days).max(1);
+        let mut causes = std::collections::BTreeMap::new();
+        for e in &s.fallbacks {
+            *causes.entry(e.cause()).or_insert(0usize) += 1;
+        }
+        Some(FallbackCellReport {
+            fallback_rate: hard.len() as f64 / cluster_days as f64,
+            causes: causes.into_iter().collect(),
+            savings_delta_pct: None,
+        })
+    } else {
+        None
+    };
     CellReport {
         index: cell.index,
         label: cell.label.clone(),
@@ -420,6 +466,8 @@ fn make_report(
         shaped_fraction: s.agg.shaped_fraction(),
         spatial_moved_gcuh: s.spatial_moved_gcuh,
         forecast_mape,
+        faults: cell.faults.clone(),
+        fallback,
     }
 }
 
@@ -548,6 +596,50 @@ mod tests {
         // exactly the pre-trace document shape
         assert!(c.forecast_mape.is_none());
         assert!(!json.contains("\"forecast_mape\""));
+        // and zero-fault cells carry no fault columns — exactly the
+        // pre-fault document shape
+        assert_eq!(c.faults, "none");
+        assert!(c.fallback.is_none());
+        assert!(!json.contains("\"faults\""));
+        assert!(!json.contains("\"fallback\""));
+        assert!(!rep.ascii_table().contains("fb-rate%"));
+    }
+
+    /// The fault axis is physical: a chaos cell reports fallback telemetry
+    /// and a savings delta against its zero-fault twin, both sharing modes
+    /// agree byte-for-byte, and the clean cell's row stays fault-free.
+    #[test]
+    fn faulted_cells_report_fallbacks_and_stay_deterministic() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            faults: vec!["none".into(), "chaos".into()],
+            solvers: vec!["native".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let (fork, _) = run_sweep_mode(&m, 8, 4, WarmupSharing::Fork).unwrap();
+        let (per_cell, _) = run_sweep_mode(&m, 8, 4, WarmupSharing::PerCell).unwrap();
+        assert_eq!(fork.to_json().to_string(), per_cell.to_json().to_string());
+        assert_eq!(fork.cells.len(), 2);
+        let clean = &fork.cells[0];
+        let chaotic = &fork.cells[1];
+        assert_eq!(clean.faults, "none");
+        assert!(clean.fallback.is_none());
+        assert_eq!(chaotic.faults, "chaos");
+        let fb = chaotic.fallback.as_ref().expect("chaos cell reports fallback telemetry");
+        assert!(fb.fallback_rate > 0.0, "chaos preset must trigger hard fallbacks");
+        assert!(!fb.causes.is_empty());
+        assert!(
+            fb.savings_delta_pct.is_some(),
+            "zero-fault twin exists, so the delta must be filled"
+        );
+        let json = fork.to_json().to_string();
+        assert!(json.contains("\"faults\":\"chaos\""));
+        assert!(json.contains("\"fallback\""));
+        assert!(fork.ascii_table().contains("fb-rate%"));
     }
 
     /// The `mixed` class preset runs end-to-end and surfaces per-class

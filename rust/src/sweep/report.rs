@@ -48,6 +48,52 @@ pub struct CellReport {
     /// `None` for dispatch-model cells — they emit exactly the pre-trace
     /// document, byte for byte.
     pub forecast_mape: Option<f64>,
+    /// Fault-injection spec of the cell (`"none"` when the axis is off —
+    /// those cells emit exactly the pre-fault document, byte for byte).
+    pub faults: String,
+    /// Degradation-ladder telemetry; `None` for zero-fault cells with a
+    /// clean run (same byte-compatibility rule as `classes`).
+    pub fallback: Option<FallbackCellReport>,
+}
+
+/// Degradation-ladder columns of one cell (see `crate::faults`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FallbackCellReport {
+    /// Distinct cluster-days that took a hard ladder rung (stale reuse,
+    /// default curve or unshaped — degraded near-misses excluded) over
+    /// all measured cluster-days.
+    pub fallback_rate: f64,
+    /// Fallback-cause taxonomy: `trigger->rung` strings with counts,
+    /// sorted by cause for deterministic output.
+    pub causes: Vec<(String, usize)>,
+    /// Carbon-savings delta vs the cell's zero-fault twin (same grid,
+    /// fleet, flex share, classes, solver, spatial): `saved% - twin
+    /// saved%`, negative when faults cost savings. `None` when the matrix
+    /// has no zero-fault twin for this cell.
+    pub savings_delta_pct: Option<f64>,
+}
+
+impl FallbackCellReport {
+    fn to_json(&self) -> Json {
+        let causes = self
+            .causes
+            .iter()
+            .map(|(cause, count)| {
+                Json::obj(vec![
+                    ("cause", Json::Str(cause.clone())),
+                    ("count", Json::Num(*count as f64)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("fallback_rate", Json::Num(round(self.fallback_rate, 6))),
+            ("causes", Json::Arr(causes)),
+        ];
+        if let Some(delta) = self.savings_delta_pct {
+            fields.push(("savings_delta_pct", Json::Num(round(delta, 4))));
+        }
+        Json::obj(fields)
+    }
 }
 
 /// One workload class's columns in a cell report.
@@ -131,6 +177,13 @@ impl CellReport {
         // forecast-skill key.
         if let Some(mape) = self.forecast_mape {
             fields.push(("forecast_mape", Json::Num(round(mape, 4))));
+        }
+        // And only fault-injected cells carry the fault keys.
+        if self.faults != "none" {
+            fields.push(("faults", Json::Str(self.faults.clone())));
+        }
+        if let Some(fb) = &self.fallback {
+            fields.push(("fallback", fb.to_json()));
         }
         Json::obj(fields)
     }
@@ -234,6 +287,32 @@ impl SweepReport {
                 }
             }
         }
+        // Degradation-ladder block (only fault-injected cells emit rows,
+        // so a zero-fault report is byte-identical to pre-fault output).
+        if self.cells.iter().any(|c| c.fallback.is_some()) {
+            out.push('\n');
+            out.push_str(&format!(
+                "{:<28} {:>9} {:>9}  {}\n",
+                "cell", "fb-rate%", "dSaved%", "causes"
+            ));
+            out.push_str(&format!("{}\n", "-".repeat(95)));
+            for c in &self.cells {
+                if let Some(fb) = &c.fallback {
+                    let causes: Vec<String> =
+                        fb.causes.iter().map(|(cause, n)| format!("{cause}:{n}")).collect();
+                    let delta = fb
+                        .savings_delta_pct
+                        .map(|d| format!("{d:>8.2}%"))
+                        .unwrap_or_else(|| format!("{:>9}", "n/a"));
+                    out.push_str(&format!(
+                        "{:<28} {:>8.2}% {delta}  {}\n",
+                        c.label,
+                        100.0 * fb.fallback_rate,
+                        causes.join(" "),
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -264,6 +343,8 @@ mod tests {
             spatial_moved_gcuh: 0.0,
             classes: Vec::new(),
             forecast_mape: None,
+            faults: "none".into(),
+            fallback: None,
         }
     }
 
@@ -343,6 +424,41 @@ mod tests {
         let table = rep.ascii_table();
         assert!(table.contains("fc mape%"));
         assert!(table.contains("12.35%"));
+    }
+
+    #[test]
+    fn fault_columns_only_appear_for_faulted_cells() {
+        let plain = SweepReport::new(25, 10, vec![toy_cell(0, 1.0)]);
+        let plain_json = plain.to_json().to_string();
+        assert!(!plain_json.contains("\"faults\""));
+        assert!(!plain_json.contains("\"fallback\""));
+        assert!(!plain.ascii_table().contains("fb-rate%"));
+
+        let mut faulted = toy_cell(1, 2.0);
+        faulted.faults = "feed-outage:0.1".into();
+        faulted.fallback = Some(FallbackCellReport {
+            fallback_rate: 0.125,
+            causes: vec![
+                ("feed-outage->default-curve".into(), 2),
+                ("feed-outage->stale-vcc".into(), 3),
+            ],
+            savings_delta_pct: Some(-1.25),
+        });
+        let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.0), faulted]);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"faults\":\"feed-outage:0.1\""));
+        assert!(json.contains("\"fallback_rate\":0.125"));
+        assert!(json.contains("\"cause\":\"feed-outage->stale-vcc\""));
+        assert!(json.contains("\"savings_delta_pct\":-1.25"));
+        let parsed = Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("fallback").is_none());
+        let fb = cells[1].get("fallback").unwrap();
+        assert_eq!(fb.get("causes").unwrap().as_arr().unwrap().len(), 2);
+        let table = rep.ascii_table();
+        assert!(table.contains("fb-rate%"));
+        assert!(table.contains("feed-outage->stale-vcc:3"));
+        assert!(table.contains("12.50%"));
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Thread-safe warning sink. The repo's warning paths (solver fallback,
+//! runtime artifact problems, snapshot-cache store/evict, threadpool
+//! panic notices) used to `eprintln!` directly, which tests cannot
+//! observe and telemetry cannot count. `warn` still prints to stderr —
+//! the operator-facing text is unchanged — but also records a
+//! categorized [`Event`] in a bounded global buffer that tests drain
+//! and assert on. Recording order is the lock-acquisition order, so
+//! single-threaded paths (the coordinator's serial planning loops) get
+//! deterministic event sequences.
+
+use std::sync::Mutex;
+
+/// Cap on buffered events: a pathological run (e.g. a chaos sweep with
+/// thousands of cluster-days) must not grow memory without bound. Older
+/// events win — the head of a failure story matters more than its tail.
+const CAPACITY: usize = 4096;
+
+/// One recorded warning.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Stable category tag: "solver", "safety", "runtime",
+    /// "snapshot-cache", or "threadpool".
+    pub category: &'static str,
+    /// The human-readable message, exactly as printed to stderr.
+    pub message: String,
+}
+
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+/// Record a warning under `category` and print it to stderr.
+pub fn warn(category: &'static str, message: String) {
+    eprintln!("{message}");
+    let mut g = SINK.lock().unwrap();
+    if g.len() < CAPACITY {
+        g.push(Event { category, message });
+    }
+}
+
+/// Take every buffered event, leaving the sink empty. Tests drain at the
+/// start of a scenario (to shed unrelated noise) and again at the end to
+/// inspect what the scenario logged.
+pub fn drain() -> Vec<Event> {
+    std::mem::take(&mut *SINK.lock().unwrap())
+}
+
+/// Number of buffered events in `category` (without draining).
+pub fn count(category: &str) -> usize {
+    SINK.lock().unwrap().iter().filter(|e| e.category == category).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warn_records_and_drain_empties() {
+        warn("threadpool", "unit-test warning A".into());
+        warn("solver", "unit-test warning B".into());
+        assert!(count("threadpool") >= 1);
+        let events = drain();
+        // the test harness runs tests concurrently in one process, so the
+        // sink may interleave other tests' warnings; ours must both be
+        // present and in order relative to each other
+        let ours: Vec<&Event> =
+            events.iter().filter(|e| e.message.starts_with("unit-test warning")).collect();
+        assert_eq!(ours.len(), 2);
+        assert_eq!(ours[0].category, "threadpool");
+        assert_eq!(ours[1].category, "solver");
+        assert!(
+            !drain().iter().any(|e| e.message.starts_with("unit-test warning")),
+            "drained events do not reappear"
+        );
+    }
+}

@@ -8,6 +8,7 @@ pub mod ascii;
 pub mod binio;
 pub mod error;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -46,7 +46,10 @@ impl ThreadPool {
                         Ok(job) => {
                             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                             if r.is_err() {
-                                eprintln!("threadpool: job panicked; worker continues");
+                                crate::util::log::warn(
+                                    "threadpool",
+                                    "threadpool: job panicked; worker continues".to_string(),
+                                );
                             }
                         }
                         Err(_) => break,

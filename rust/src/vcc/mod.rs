@@ -53,29 +53,86 @@ impl Vcc {
         self.hourly.iter().sum()
     }
 
+    /// Built-in conservative capacity curve, the degradation ladder's
+    /// last shaped rung (see `crate::faults`): machine capacity with a
+    /// mild dip over the typical evening carbon peak (hours 17–22).
+    /// Nearly as permissive as unshaped, so it passes `safety_check`
+    /// for any minimum an unshaped day would satisfy with 2% headroom.
+    pub fn default_curve(cluster_id: usize, day: usize, capacity_gcu: f64) -> Vcc {
+        let mut hourly = [capacity_gcu; HOURS_PER_DAY];
+        for h in 17..=22 {
+            hourly[h] = capacity_gcu * 0.92;
+        }
+        Vcc { cluster_id, day, hourly, shaped: true }
+    }
+
     /// Sanity/safety checks run by the cluster operating system before a
-    /// pushed curve is accepted (paper §II-C "Safety"). Returns an error
-    /// string describing the first violated check.
+    /// pushed curve is accepted (paper §II-C "Safety"). Returns the first
+    /// violated check as a typed [`SafetyViolation`].
     pub fn safety_check(
         &self,
         capacity_gcu: f64,
         min_daily_gcuh: f64,
-    ) -> Result<(), String> {
+    ) -> Result<(), SafetyViolation> {
         for (h, &v) in self.hourly.iter().enumerate() {
             if !v.is_finite() || v < 0.0 {
-                return Err(format!("hour {h}: non-finite or negative cap {v}"));
+                return Err(SafetyViolation::NonFinite { hour: h, value: v });
             }
             if v > capacity_gcu * 1.0001 {
-                return Err(format!("hour {h}: cap {v} above machine capacity {capacity_gcu}"));
+                return Err(SafetyViolation::AboveCapacity {
+                    hour: h,
+                    value: v,
+                    capacity: capacity_gcu,
+                });
             }
         }
         if self.daily_total() < min_daily_gcuh {
-            return Err(format!(
-                "daily capacity {} below required minimum {min_daily_gcuh}",
-                self.daily_total()
-            ));
+            return Err(SafetyViolation::BelowMinimum {
+                total: self.daily_total(),
+                min: min_daily_gcuh,
+            });
         }
         Ok(())
+    }
+}
+
+/// A violated VCC safety check, typed so telemetry and the degradation
+/// ladder can classify rejections instead of parsing strings. `Display`
+/// renders the same messages the stringly-typed checks used to return.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SafetyViolation {
+    /// An hourly cap is NaN, infinite, or negative.
+    NonFinite { hour: usize, value: f64 },
+    /// An hourly cap exceeds machine capacity.
+    AboveCapacity { hour: usize, value: f64, capacity: f64 },
+    /// The curve's daily total falls short of the required minimum.
+    BelowMinimum { total: f64, min: f64 },
+}
+
+impl SafetyViolation {
+    /// Stable taxonomy code for telemetry / fallback-cause counts.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SafetyViolation::NonFinite { .. } => "non-finite",
+            SafetyViolation::AboveCapacity { .. } => "above-capacity",
+            SafetyViolation::BelowMinimum { .. } => "below-minimum",
+        }
+    }
+}
+
+impl std::fmt::Display for SafetyViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SafetyViolation::NonFinite { hour, value } => {
+                write!(f, "hour {hour}: non-finite or negative cap {value}")
+            }
+            SafetyViolation::AboveCapacity { hour, value, capacity } => {
+                write!(f, "hour {hour}: cap {value} above machine capacity {capacity}")
+            }
+            SafetyViolation::BelowMinimum { total, min } => {
+                write!(f, "daily capacity {total} below required minimum {min}")
+            }
+        }
     }
 }
 
@@ -186,6 +243,38 @@ mod tests {
         let mut nan = ok.clone();
         nan.hourly[0] = f64::NAN;
         assert!(nan.safety_check(100.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn safety_violations_are_typed() {
+        let ok = Vcc::unshaped(0, 0, 100.0);
+        let mut neg = ok.clone();
+        neg.hourly[3] = -1.0;
+        let v = neg.safety_check(100.0, 0.0).unwrap_err();
+        assert_eq!(v, SafetyViolation::NonFinite { hour: 3, value: -1.0 });
+        assert_eq!(v.code(), "non-finite");
+        assert_eq!(v.to_string(), "hour 3: non-finite or negative cap -1");
+        let mut over = ok.clone();
+        over.hourly[5] = 150.0;
+        let v = over.safety_check(100.0, 0.0).unwrap_err();
+        assert_eq!(v.code(), "above-capacity");
+        assert_eq!(v.to_string(), "hour 5: cap 150 above machine capacity 100");
+        let v = ok.safety_check(100.0, 100.0 * 24.0 + 1.0).unwrap_err();
+        assert_eq!(v.code(), "below-minimum");
+        assert!(v.to_string().starts_with("daily capacity 2400 below required minimum"));
+    }
+
+    #[test]
+    fn default_curve_is_safe_and_shaped() {
+        let vcc = Vcc::default_curve(2, 9, 100.0);
+        assert!(vcc.shaped);
+        assert_eq!(vcc.cluster_id, 2);
+        assert_eq!(vcc.hourly[0], 100.0);
+        assert_eq!(vcc.hourly[20], 92.0);
+        vcc.safety_check(100.0, 0.0).unwrap();
+        // passes any minimum an unshaped day satisfies with 2% headroom
+        vcc.safety_check(100.0, vcc.daily_total()).unwrap();
+        assert!(vcc.daily_total() > 0.97 * 24.0 * 100.0);
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn preset_matrix(grid: &str) -> SweepMatrix {
         fleet_sizes: vec![2],
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,

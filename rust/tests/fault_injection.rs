@@ -1,0 +1,162 @@
+//! The fault-injection robustness contract, end to end: hostile trace
+//! CSVs never panic the parser (errors only), fault-injected sweeps are
+//! byte-deterministic across worker counts, warmup-sharing modes and tick
+//! engines (faults are keyed draws, not stream-positional ones), and the
+//! zero-fault default emits exactly the pre-fault report bytes — no
+//! `faults`/`fallback` keys, no degradation table.
+
+use cics::config::SweepMatrix;
+use cics::grid::trace::TraceSeries;
+use cics::scheduler::SimEngine;
+use cics::sweep::{self, WarmupSharing};
+use cics::util::prop;
+use cics::util::rng::Pcg;
+
+/// A syntactically valid Electricity-Maps-style CSV covering `days` whole
+/// days of January 2021 (hourly cadence, plausible intensities).
+fn valid_csv(rng: &mut Pcg, days: usize) -> String {
+    let mut s = String::from("datetime,carbon_intensity_gco2_per_kwh\n");
+    for d in 0..days {
+        for h in 0..24 {
+            let g = rng.uniform(20.0, 900.0);
+            s.push_str(&format!("2021-01-{:02}T{:02}:00:00Z,{:.1}\n", d + 1, h, g));
+        }
+    }
+    s
+}
+
+/// Adversarial CSV generator: raw garbage, bit-flipped valid files,
+/// truncations, and valid files with poisoned rows spliced in.
+fn hostile_csv(rng: &mut Pcg) -> String {
+    match rng.below(4) {
+        // arbitrary printable-ish bytes, newlines included
+        0 => {
+            let n = rng.below(400) as usize;
+            (0..n)
+                .map(|_| {
+                    let c = rng.below(96) as u8;
+                    let b = if c == 95 { b'\n' } else { 32 + c };
+                    b as char
+                })
+                .collect()
+        }
+        // valid file with one character overwritten
+        1 => {
+            let mut s = valid_csv(rng, 1 + rng.below(3) as usize).into_bytes();
+            let i = rng.below(s.len() as u64) as usize;
+            s[i] = 32 + rng.below(96) as u8;
+            String::from_utf8_lossy(&s).into_owned()
+        }
+        // valid file cut off mid-stream
+        2 => {
+            let s = valid_csv(rng, 1 + rng.below(3) as usize);
+            let cut = rng.below(s.len() as u64 + 1) as usize;
+            s[..cut].to_string()
+        }
+        // valid rows with a poisoned line spliced in
+        _ => {
+            let mut s = valid_csv(rng, 2);
+            let poison = [
+                "2021-01-01T25:00:00Z,100.0",
+                "2021-01-01T03:00:00Z,NaN",
+                "2021-01-01T03:00:00Z,-5.0",
+                "2021-01-01T03:00:00Z,inf",
+                "not,a,row,at,all",
+                "2021-01-01T03:30:00Z,100.0",
+                "2021-13-01T03:00:00Z,100.0",
+                ",",
+            ];
+            s.push_str(poison[rng.below(poison.len() as u64) as usize]);
+            s.push('\n');
+            s
+        }
+    }
+}
+
+/// Hostile input never panics the trace parser: every byte sequence is
+/// either a well-formed series or a clean `util::error` rejection.
+#[test]
+fn prop_trace_csv_parser_never_panics_on_hostile_input() {
+    prop::for_all_cases(1312, 256, hostile_csv, |text: &String| {
+        match TraceSeries::from_csv("XX", 2021, text) {
+            // whatever survives parsing must uphold the series invariants
+            Ok(t) => {
+                t.days() > 0
+                    && (0..t.days())
+                        .all(|d| t.day(d).iter().all(|&v| v.is_finite() && v >= 0.0))
+            }
+            Err(_) => true, // rejection is the expected outcome, panics are not
+        }
+    });
+    // the generator isn't vacuous: unmangled output parses
+    let mut rng = Pcg::keyed(7, 0xC5F, 0, 0);
+    let clean = valid_csv(&mut rng, 2);
+    assert_eq!(TraceSeries::from_csv("XX", 2021, &clean).unwrap().days(), 2);
+}
+
+fn fault_matrix() -> SweepMatrix {
+    SweepMatrix {
+        seed: 2027,
+        grids: vec!["PL".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into(), "chaos".into()],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 24,
+    }
+}
+
+/// Fault-injected sweeps obey the full determinism contract: worker
+/// counts, warmup-sharing modes and tick engines may not move a byte —
+/// including the fallback telemetry the chaos cell (and only that cell)
+/// carries.
+#[test]
+fn fault_injected_sweep_is_byte_deterministic_across_everything() {
+    let m = fault_matrix();
+    let serial = sweep::run_sweep(&m, 6, 1).unwrap();
+    let wide = sweep::run_sweep(&m, 6, 8).unwrap();
+    let json = serial.to_json().to_string();
+    assert_eq!(json, wide.to_json().to_string(), "1 vs 8 workers");
+    let (per_cell, _) = sweep::run_sweep_mode(&m, 6, 3, WarmupSharing::PerCell).unwrap();
+    assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
+    let (legacy, _) =
+        sweep::run_sweep_engine(&m, 6, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
+
+    // fault specs are a physical axis: the chaos cell derives its own
+    // seed (like class presets and trace grids), while the clean cell
+    // keeps the pre-fault seed and report shape
+    assert_eq!(serial.cells.len(), 2);
+    let (clean, chaos) = (&serial.cells[0], &serial.cells[1]);
+    assert_eq!(clean.faults, "none");
+    assert!(clean.fallback.is_none(), "clean cell must not grow fault columns");
+    assert_eq!(chaos.faults, "chaos");
+    assert_ne!(clean.seed, chaos.seed, "fault specs derive their own cell seed");
+    let fb = chaos.fallback.as_ref().expect("chaos cell reports fallback telemetry");
+    assert!(fb.fallback_rate > 0.0, "chaos at 20%/kind/day must trip the ladder");
+    assert!(!fb.causes.is_empty());
+    assert!(
+        fb.savings_delta_pct.is_some(),
+        "clean twin in the same sweep anchors the savings delta"
+    );
+    assert!(json.contains("\"faults\":\"chaos\""));
+    assert!(json.contains("\"fallback\""));
+}
+
+/// The zero-fault default is byte-compatible with the pre-fault report
+/// shape: no `faults` key, no `fallback` block, no degradation table.
+#[test]
+fn zero_fault_sweep_keeps_the_pre_fault_report_shape() {
+    let mut m = fault_matrix();
+    m.faults = vec!["none".into()];
+    let rep = sweep::run_sweep(&m, 4, 2).unwrap();
+    let json = rep.to_json().to_string();
+    assert_eq!(rep.cells.len(), 1);
+    assert_eq!(rep.cells[0].faults, "none");
+    assert!(rep.cells[0].fallback.is_none());
+    assert!(!json.contains("\"faults\""), "zero-fault JSON must not grow keys");
+    assert!(!json.contains("\"fallback\""), "zero-fault JSON must not grow keys");
+    assert!(!rep.ascii_table().contains("fb-rate%"));
+}

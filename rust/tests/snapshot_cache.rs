@@ -209,6 +209,7 @@ fn quickish_matrix() -> SweepMatrix {
         fleet_sizes: vec![2],
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into(), "mixed".into()],
+        faults: vec!["none".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,

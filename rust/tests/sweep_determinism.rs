@@ -17,6 +17,7 @@ fn small_matrix() -> SweepMatrix {
         fleet_sizes: vec![2],
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,
