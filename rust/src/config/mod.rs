@@ -357,6 +357,12 @@ impl ScenarioConfig {
                 .ok_or_else(|| crate::err!("faults: expected a spec string, got {v}"))?;
             cfg.faults = FaultConfig::parse(spec)?;
         }
+        if let Some(v) = j.get("fault_policy") {
+            let spec = v
+                .as_str()
+                .ok_or_else(|| crate::err!("fault_policy: expected a spec string, got {v}"))?;
+            crate::faults::PolicySpec::parse(spec)?.apply(&mut cfg.faults);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -443,6 +449,13 @@ pub struct SweepMatrix {
     /// perturb the scenario's world, so non-`none` specs derive their
     /// own cell seeds.
     pub faults: Vec<String>,
+    /// Fallback-policy specs per cell (see `faults::PolicySpec::parse`):
+    /// a policy name (`conservative`, `sla-aware`, `aggressive`)
+    /// optionally combined with `stale:<days>` / `retries:<n>` overrides,
+    /// e.g. `aggressive,stale:6`. A *physical* axis like `faults`:
+    /// non-default specs derive their own cell seeds, while the default
+    /// `conservative` keeps pre-policy seeds and report bytes.
+    pub policies: Vec<String>,
     /// Solver backends per cell: "native", "greedy" or "artifact".
     pub solvers: Vec<String>,
     /// Spatial-shifting variants (on/off) to sweep.
@@ -461,6 +474,7 @@ impl Default for SweepMatrix {
             flex_shares: vec![0.5],
             flex_classes: vec![classes::DEFAULT_PRESET.into()],
             faults: vec!["none".into()],
+            policies: vec![crate::faults::DEFAULT_POLICY_SPEC.into()],
             solvers: vec!["native".into(), "greedy".into()],
             // Both spatial variants by default: the §V extension is part
             // of the paper's headline story, and the four policy variants
@@ -534,6 +548,9 @@ impl SweepMatrix {
         if let Some(v) = axis(&j, "faults", |v| v.as_str().map(str::to_string))? {
             m.faults = v;
         }
+        if let Some(v) = axis(&j, "policies", |v| v.as_str().map(str::to_string))? {
+            m.policies = v;
+        }
         if let Some(v) = axis(&j, "solvers", |v| v.as_str().map(str::to_string))? {
             m.solvers = v;
         }
@@ -556,6 +573,11 @@ impl SweepMatrix {
         crate::ensure!(!self.flex_shares.is_empty(), "sweep matrix: no flex shares");
         crate::ensure!(!self.flex_classes.is_empty(), "sweep matrix: no flex classes");
         crate::ensure!(!self.faults.is_empty(), "sweep matrix: no fault specs");
+        crate::ensure!(!self.policies.is_empty(), "sweep matrix: no fallback policies");
+        for spec in &self.policies {
+            crate::faults::PolicySpec::parse(spec)
+                .map_err(|e| e.context("sweep matrix: policies"))?;
+        }
         crate::ensure!(!self.solvers.is_empty(), "sweep matrix: no solvers");
         crate::ensure!(!self.spatial.is_empty(), "sweep matrix: no spatial variants");
         crate::ensure!(
@@ -576,6 +598,7 @@ impl SweepMatrix {
             * self.flex_shares.len()
             * self.flex_classes.len()
             * self.faults.len()
+            * self.policies.len()
             * self.solvers.len()
             * self.spatial.len()
     }
@@ -863,9 +886,36 @@ mod tests {
         assert!(ScenarioConfig::from_json(r#"{"faults": 3}"#).is_err());
         let m = SweepMatrix::from_json(r#"{"faults": ["none", "chaos"]}"#).unwrap();
         assert_eq!(m.faults, vec!["none".to_string(), "chaos".to_string()]);
-        assert_eq!(m.n_cells(), 16, "faults double the default 8-cell matrix");
+        assert_eq!(
+            m.n_cells(),
+            2 * SweepMatrix::default().n_cells(),
+            "faults double the default matrix"
+        );
         assert!(SweepMatrix::from_json(r#"{"faults": []}"#).is_err());
         assert!(SweepMatrix::from_json(r#"{"faults": [4]}"#).is_err());
+    }
+
+    #[test]
+    fn policies_parse_in_config_and_matrix() {
+        // default carries the conservative policy and a single-policy axis
+        assert_eq!(SweepMatrix::default().policies, vec!["conservative".to_string()]);
+        let cfg = ScenarioConfig::from_json(
+            r#"{"faults": "chaos", "fault_policy": "aggressive,stale:6"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.policy, crate::faults::FallbackPolicy::Aggressive);
+        assert_eq!(cfg.faults.max_stale_days, 6);
+        assert!(ScenarioConfig::from_json(r#"{"fault_policy": "yolo"}"#).is_err());
+        let m =
+            SweepMatrix::from_json(r#"{"policies": ["conservative", "sla-aware"]}"#).unwrap();
+        assert_eq!(
+            m.n_cells(),
+            2 * SweepMatrix::default().n_cells(),
+            "policies double the default matrix"
+        );
+        assert!(SweepMatrix::from_json(r#"{"policies": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"policies": ["bogus"]}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"policies": ["sla-aware,stale:x"]}"#).is_err());
     }
 
     #[test]
@@ -880,7 +930,7 @@ mod tests {
     fn sweep_matrix_defaults_and_json() {
         let d = SweepMatrix::default();
         d.validate().unwrap();
-        assert_eq!(d.n_cells(), 8); // 4 grids x 2 solvers
+        assert_eq!(d.n_cells(), 16); // 4 grids x 2 solvers x 2 spatial
         assert_eq!(d.flex_classes, vec!["within-day".to_string()]);
         let m = SweepMatrix::from_json(
             r#"{

@@ -16,10 +16,10 @@
 pub mod summary;
 
 use crate::config::ScenarioConfig;
-use crate::faults::{FallbackEvent, FaultKind, FaultOutcome, FaultPlan, Rung};
+use crate::faults::{FallbackEvent, FaultKind, FaultOutcome, FaultPlan, LadderPolicy as _, Rung};
 use crate::fleet::Fleet;
 use crate::forecast::{ApeCollector, LoadForecaster};
-use crate::grid::{CarbonForecaster, GridZone};
+use crate::grid::{forecast, CarbonForecaster, GridZone};
 use crate::optimizer::{self, baselines, campus, pgd, ClusterProblem, ClusterSolution, Unshapeable};
 use crate::power::{self, ClusterPowerModel};
 use crate::runtime::Runtime;
@@ -46,6 +46,44 @@ pub enum SolverBackend {
 /// Per-cluster-day treatment decision for controlled experiments
 /// (Fig 12): `true` = receive shaping.
 pub type TreatmentFn = Box<dyn Fn(usize, usize) -> bool + Send + Sync>;
+
+/// Recovery-quality counters over closed outage episodes. An episode
+/// opens at a cluster's first degradation-ladder walk and closes when
+/// the next fresh, safety-checked, successfully pushed VCC lands — its
+/// length is the cluster's time-to-fresh-VCC in days.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Episodes closed by a fresh VCC so far.
+    pub episodes: usize,
+    /// Sum of closed-episode lengths in days.
+    pub total_days: usize,
+    /// Longest single closed episode in days.
+    pub max_days: usize,
+}
+
+impl RecoveryStats {
+    /// Mean days from first fallback to the next fresh VCC (0 when no
+    /// episode has closed).
+    pub fn mean_days(&self) -> f64 {
+        if self.episodes == 0 {
+            0.0
+        } else {
+            self.total_days as f64 / self.episodes as f64
+        }
+    }
+}
+
+impl crate::util::binio::Bin for RecoveryStats {
+    fn write(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_usize(self.episodes);
+        w.put_usize(self.total_days);
+        w.put_usize(self.max_days);
+    }
+
+    fn read(r: &mut crate::util::binio::BinReader) -> Result<RecoveryStats> {
+        Ok(RecoveryStats { episodes: r.usize_()?, total_days: r.usize_()?, max_days: r.usize_()? })
+    }
+}
 
 /// Construction options for headless runs — everything the CLI and the
 /// sweep engine need to set up a scenario without poking `Simulation`
@@ -122,6 +160,9 @@ pub struct SimSnapshot {
     last_unshapeable: Vec<(usize, Unshapeable)>,
     last_good: Vec<Option<(Vcc, usize)>>,
     fallbacks: Vec<FallbackEvent>,
+    fallback_archive: Vec<(String, u64)>,
+    outage_start: Vec<Option<usize>>,
+    recovery: RecoveryStats,
 }
 
 impl SimSnapshot {
@@ -134,7 +175,11 @@ impl SimSnapshot {
     /// v3: fault-injection state appended — `ScenarioConfig` carries a
     ///     `FaultConfig`, and the snapshot carries the per-cluster
     ///     `last_good` reusable VCCs plus the fallback-event log.
-    pub const STATE_VERSION: u32 = 3;
+    /// v4: incident-model state appended — the compacted fallback-cause
+    ///     archive, per-cluster open-outage markers and closed
+    ///     recovery-episode counters; `FaultConfig` itself grew
+    ///     hour-granular / correlation / policy / log-cap knobs.
+    pub const STATE_VERSION: u32 = 4;
 
     /// The day boundary this snapshot was taken at (warmup length, for
     /// snapshots taken by the sweep's warmup phase).
@@ -189,6 +234,10 @@ impl crate::util::binio::Bin for SimSnapshot {
         // appended in STATE_VERSION 3 — the frozen prefix above never moves
         self.last_good.write(w);
         self.fallbacks.write(w);
+        // appended in STATE_VERSION 4
+        self.fallback_archive.write(w);
+        self.outage_start.write(w);
+        self.recovery.write(w);
     }
 
     fn read(r: &mut crate::util::binio::BinReader) -> Result<SimSnapshot> {
@@ -214,6 +263,9 @@ impl crate::util::binio::Bin for SimSnapshot {
             last_unshapeable: Vec::read(r)?,
             last_good: Vec::read(r)?,
             fallbacks: Vec::read(r)?,
+            fallback_archive: Vec::read(r)?,
+            outage_start: Vec::read(r)?,
+            recovery: RecoveryStats::read(r)?,
         })
     }
 }
@@ -263,6 +315,16 @@ pub struct Simulation {
     /// appended in cluster order within each planning cycle, so the log
     /// is deterministic regardless of thread count or engine.
     pub fallbacks: Vec<FallbackEvent>,
+    /// `(cause, count)` counters for events compacted out of the bounded
+    /// log once it exceeds `cfg.faults.log_cap` (oldest first): multi-
+    /// year chaos runs keep bounded memory and snapshot size while the
+    /// cause taxonomy stays lossless.
+    pub fallback_archive: Vec<(String, u64)>,
+    /// Per cluster: the day its current outage streak began (first
+    /// ladder walk since the last fresh VCC); `None` = healthy.
+    outage_start: Vec<Option<usize>>,
+    /// Closed recovery episodes accumulated over the run.
+    recovery: RecoveryStats,
     /// Per-tick simulation core for the real-time day.
     pub engine: SimEngine,
     threads: usize,
@@ -355,6 +417,9 @@ impl Simulation {
             fault_plan,
             last_good: vec![None; n],
             fallbacks: Vec::new(),
+            fallback_archive: Vec::new(),
+            outage_start: vec![None; n],
+            recovery: RecoveryStats::default(),
             engine: opts.engine,
             threads,
             #[cfg(test)]
@@ -389,6 +454,9 @@ impl Simulation {
             last_unshapeable: self.last_unshapeable.clone(),
             last_good: self.last_good.clone(),
             fallbacks: self.fallbacks.clone(),
+            fallback_archive: self.fallback_archive.clone(),
+            outage_start: self.outage_start.clone(),
+            recovery: self.recovery,
         }
     }
 
@@ -454,6 +522,9 @@ impl Simulation {
             fault_plan,
             last_good: snap.last_good,
             fallbacks: snap.fallbacks,
+            fallback_archive: snap.fallback_archive,
+            outage_start: snap.outage_start,
+            recovery: snap.recovery,
             engine: opts.engine,
             threads,
             #[cfg(test)]
@@ -635,6 +706,7 @@ impl Simulation {
         self.last_unshapeable.clear();
         let plan = self.fault_plan.clone();
         let faults_active = !plan.cfg.is_none();
+        let log_cap = plan.cfg.log_cap;
 
         // Carbon fetching pipeline: day-ahead forecast per campus zone.
         let mut carbon: Vec<[f64; HOURS_PER_DAY]> = self
@@ -661,9 +733,13 @@ impl Simulation {
         // Fault injection against the carbon feed, per zone. A zone is
         // engaged only when a shapeable cluster actually plans on it, so
         // warmups (shaping disabled) and zero-fault runs take none of
-        // these branches and consult no fault stream.
+        // these branches and consult no fault stream. With correlation
+        // configured, zones sharing a provider group consume one keyed
+        // draw, so a single upstream incident hits every dependent
+        // campus on the same days (and, hour-granular, the same hours).
         let mut zone_down: Vec<Option<&'static str>> = vec![None; self.zones.len()];
         let mut zone_degraded: Vec<Vec<&'static str>> = vec![Vec::new(); self.zones.len()];
+        let mut zone_mask: Vec<Option<(usize, usize)>> = vec![None; self.zones.len()];
         if faults_active {
             for zid in 0..self.zones.len() {
                 let engaged = (0..n)
@@ -671,20 +747,47 @@ impl Simulation {
                 if !engaged {
                     continue;
                 }
-                match plan.check(FaultKind::FeedOutage, next, zid) {
-                    FaultOutcome::Faulted => zone_down[zid] = Some("feed-outage"),
+                let unit = plan.cfg.fault_unit(zid);
+                match plan.check(FaultKind::FeedOutage, next, unit) {
+                    FaultOutcome::Faulted => {
+                        let window = plan
+                            .cfg
+                            .hour_granular
+                            .then(|| plan.hour_window(FaultKind::FeedOutage, next, unit));
+                        match window {
+                            Some((start, len)) if len < HOURS_PER_DAY => {
+                                // partial outage: the feed goes blind for a
+                                // contiguous window — repaired or rejected
+                                // once the other feed faults have landed
+                                for h in start..start + len {
+                                    carbon[zid][h] = f64::NAN;
+                                }
+                                zone_mask[zid] = Some((start, len));
+                            }
+                            _ => zone_down[zid] = Some("feed-outage"),
+                        }
+                    }
                     FaultOutcome::RecoveredAfter(_) => {
                         zone_degraded[zid].push("feed-outage+retry");
                     }
                     FaultOutcome::Clear => {}
                 }
                 if zone_down[zid].is_none() {
-                    match plan.check(FaultKind::StaleData, next, zid) {
+                    match plan.check(FaultKind::StaleData, next, unit) {
                         FaultOutcome::Faulted => {
                             // the feed answers, but with yesterday's issue of
-                            // the day-ahead curve: plan on stale data
-                            carbon[zid] =
+                            // the day-ahead curve: plan on stale data (only
+                            // inside the faulted window when hour-granular)
+                            let stale =
                                 self.carbon_fc.day_ahead(&self.zones[zid], next - 1).hourly;
+                            if plan.cfg.hour_granular {
+                                let (start, len) =
+                                    plan.hour_window(FaultKind::StaleData, next, unit);
+                                carbon[zid][start..start + len]
+                                    .copy_from_slice(&stale[start..start + len]);
+                            } else {
+                                carbon[zid] = stale;
+                            }
                             zone_degraded[zid].push("stale-data");
                         }
                         FaultOutcome::RecoveredAfter(_) => {
@@ -693,10 +796,10 @@ impl Simulation {
                         FaultOutcome::Clear => {}
                     }
                 }
-                if zone_down[zid].is_none() {
-                    match plan.check(FaultKind::PoisonedForecast, next, zid) {
+                if zone_down[zid].is_none() && zone_mask[zid].is_none() {
+                    match plan.check(FaultKind::PoisonedForecast, next, unit) {
                         FaultOutcome::Faulted => {
-                            plan.poison(&mut carbon[zid], next, zid);
+                            plan.poison(&mut carbon[zid], next, unit);
                             if !carbon_valid(&carbon[zid]) {
                                 zone_down[zid] = Some("poison-forecast");
                             }
@@ -707,7 +810,33 @@ impl Simulation {
                         FaultOutcome::Clear => {}
                     }
                 }
-                if zone_down[zid].is_some() {
+                // Partial-outage resolution (interpolate-or-reject): small
+                // blind windows are linearly bridged from their finite
+                // neighbors and the zone merely degrades; wider ones
+                // reject the curve, and the mask survives so the ladder's
+                // PatchedCurve rung can fill exactly those hours.
+                if zone_down[zid].is_none() && zone_mask[zid].is_some() {
+                    match forecast::repair_hourly_gaps(
+                        &mut carbon[zid],
+                        forecast::MAX_INTERP_GAP_HOURS,
+                    ) {
+                        Some(patched) => {
+                            if patched > 0 {
+                                zone_degraded[zid].push("feed-outage+interp");
+                            }
+                            zone_mask[zid] = None;
+                        }
+                        None => zone_down[zid] = Some("feed-outage"),
+                    }
+                }
+                if let Some(trig) = zone_down[zid] {
+                    crate::util::log::warn(
+                        "faults",
+                        format!(
+                            "zone {zid} day {next}: carbon feed unusable ({trig}); \
+                             dependent clusters take the fallback ladder"
+                        ),
+                    );
                     // Keep the curve finite for residual consumers (the
                     // spatial bookkeeping); clusters on a down zone never
                     // optimize on it — they take the fallback ladder below.
@@ -827,22 +956,32 @@ impl Simulation {
             let zid = cluster.campus_id;
             let capacity_gcu = cluster.capacity_gcu;
             for &trig in &zone_degraded[zid] {
-                self.fallbacks.push(FallbackEvent {
-                    day: next,
-                    cluster_id: cid,
-                    trigger: trig.to_string(),
-                    rung: Rung::Degraded,
-                    stale_age: 0,
-                });
+                log_fallback(
+                    &mut self.fallbacks,
+                    &mut self.fallback_archive,
+                    log_cap,
+                    FallbackEvent {
+                        day: next,
+                        cluster_id: cid,
+                        trigger: trig.to_string(),
+                        rung: Rung::Degraded,
+                        stale_age: 0,
+                    },
+                );
             }
             if let FaultOutcome::RecoveredAfter(_) = train_status[cid] {
-                self.fallbacks.push(FallbackEvent {
-                    day: next,
-                    cluster_id: cid,
-                    trigger: "train-fail+retry".to_string(),
-                    rung: Rung::Degraded,
-                    stale_age: 0,
-                });
+                log_fallback(
+                    &mut self.fallbacks,
+                    &mut self.fallback_archive,
+                    log_cap,
+                    FallbackEvent {
+                        day: next,
+                        cluster_id: cid,
+                        trigger: "train-fail+retry".to_string(),
+                        rung: Rung::Degraded,
+                        stale_age: 0,
+                    },
+                );
             }
             // Hard faults that leave no fresh plan to assemble: walk the
             // degradation ladder instead of the optimizer.
@@ -854,7 +993,8 @@ impl Simulation {
             if let Some(trig) = ladder_trigger {
                 let min_daily: f64 =
                     fc.u_if_hat.iter().zip(fc.ratio_hat.iter()).map(|(&u, &r)| u * r).sum();
-                vccs[cid] = Some(self.apply_ladder(cid, next, trig, min_daily, capacity_gcu));
+                vccs[cid] =
+                    Some(self.apply_ladder(cid, next, trig, min_daily, capacity_gcu, zone_mask[zid]));
                 continue;
             }
             // Risk-aware daily flexible usage tau (Theta + alpha, eq. (3)).
@@ -966,17 +1106,28 @@ impl Simulation {
             if faults_active {
                 match plan.check(FaultKind::SolveFail, next, cid) {
                     FaultOutcome::Faulted => {
-                        vccs[cid] =
-                            Some(self.apply_ladder(cid, next, "solve-fail", min_daily, capacity_gcu));
+                        vccs[cid] = Some(self.apply_ladder(
+                            cid,
+                            next,
+                            "solve-fail",
+                            min_daily,
+                            capacity_gcu,
+                            None,
+                        ));
                         continue;
                     }
-                    FaultOutcome::RecoveredAfter(_) => self.fallbacks.push(FallbackEvent {
-                        day: next,
-                        cluster_id: cid,
-                        trigger: "solve-fail+retry".to_string(),
-                        rung: Rung::Degraded,
-                        stale_age: 0,
-                    }),
+                    FaultOutcome::RecoveredAfter(_) => log_fallback(
+                        &mut self.fallbacks,
+                        &mut self.fallback_archive,
+                        log_cap,
+                        FallbackEvent {
+                            day: next,
+                            cluster_id: cid,
+                            trigger: "solve-fail+retry".to_string(),
+                            rung: Rung::Degraded,
+                            stale_age: 0,
+                        },
+                    ),
                     FaultOutcome::Clear => {}
                 }
             }
@@ -995,18 +1146,32 @@ impl Simulation {
                                     "push-fail",
                                     min_daily,
                                     capacity_gcu,
+                                    None,
                                 ));
                                 continue;
                             }
-                            FaultOutcome::RecoveredAfter(_) => self.fallbacks.push(FallbackEvent {
-                                day: next,
-                                cluster_id: cid,
-                                trigger: "push-fail+retry".to_string(),
-                                rung: Rung::Degraded,
-                                stale_age: 0,
-                            }),
+                            FaultOutcome::RecoveredAfter(_) => log_fallback(
+                                &mut self.fallbacks,
+                                &mut self.fallback_archive,
+                                log_cap,
+                                FallbackEvent {
+                                    day: next,
+                                    cluster_id: cid,
+                                    trigger: "push-fail+retry".to_string(),
+                                    rung: Rung::Degraded,
+                                    stale_age: 0,
+                                },
+                            ),
                             FaultOutcome::Clear => {}
                         }
+                    }
+                    // A fresh, safety-checked, pushed VCC closes any open
+                    // outage episode: its length feeds the recovery report.
+                    if let Some(since) = self.outage_start[cid].take() {
+                        let days = next.saturating_sub(since);
+                        self.recovery.episodes += 1;
+                        self.recovery.total_days += days;
+                        self.recovery.max_days = self.recovery.max_days.max(days);
                     }
                     self.last_good[cid] = Some((vcc.clone(), next));
                     vccs[cid] = Some(vcc);
@@ -1022,6 +1187,7 @@ impl Simulation {
                         &format!("safety:{}", violation.code()),
                         min_daily,
                         capacity_gcu,
+                        None,
                     ));
                 }
             }
@@ -1031,10 +1197,14 @@ impl Simulation {
 
     /// Walk the graceful-degradation ladder (paper §II-C "Reliability",
     /// see `crate::faults`) for a cluster whose fresh day-ahead plan
-    /// failed: reuse the last good VCC while it is within the staleness
-    /// bound and still passes the safety check, else fall back to the
-    /// built-in default curve, else to unshaped machine capacity. The
-    /// rung taken is recorded with its trigger in `self.fallbacks`.
+    /// failed. The active [`crate::faults::FallbackPolicy`] sets the
+    /// budgets: while the last good VCC is inside its staleness bound
+    /// (and still passes the safety check), a partial feed outage
+    /// patches only the blind hours from it (`PatchedCurve`) and a full
+    /// failure reuses it whole (`StaleVcc`); then the built-in default
+    /// curve; then unshaped machine capacity. The rung taken is recorded
+    /// with its trigger in `self.fallbacks`, and a cluster's first walk
+    /// since its last fresh VCC opens its recovery episode.
     fn apply_ladder(
         &mut self,
         cid: usize,
@@ -1042,47 +1212,107 @@ impl Simulation {
         trigger: &str,
         min_daily: f64,
         capacity_gcu: f64,
+        mask: Option<(usize, usize)>,
     ) -> Vcc {
-        if let Some((last, planned_for)) = &self.last_good[cid] {
+        if self.outage_start[cid].is_none() {
+            self.outage_start[cid] = Some(next);
+        }
+        let tight = self.cfg.flex_classes.nondeferrable_share() > 0.0;
+        let policy = self.fault_plan.cfg.policy.as_policy();
+        let stale_budget = policy.stale_budget(&self.fault_plan.cfg, tight);
+        let try_default = policy.try_default_curve(tight);
+        let log_cap = self.fault_plan.cfg.log_cap;
+        if let (Some(budget), Some((last, planned_for))) = (stale_budget, &self.last_good[cid]) {
             let age = next.saturating_sub(*planned_for);
-            if age <= self.fault_plan.cfg.max_stale_days {
+            if age <= budget {
+                if let Some((start, len)) = mask {
+                    // partial outage: trust the live hours at machine
+                    // capacity and patch only the feed's blind window
+                    // from the last good shape
+                    let mut hourly = [capacity_gcu; HOURS_PER_DAY];
+                    hourly[start..start + len].copy_from_slice(&last.hourly[start..start + len]);
+                    let patched = Vcc { cluster_id: cid, day: next, hourly, shaped: true };
+                    if patched.safety_check(capacity_gcu, min_daily).is_ok() {
+                        log_fallback(
+                            &mut self.fallbacks,
+                            &mut self.fallback_archive,
+                            log_cap,
+                            FallbackEvent {
+                                day: next,
+                                cluster_id: cid,
+                                trigger: trigger.to_string(),
+                                rung: Rung::PatchedCurve,
+                                stale_age: age,
+                            },
+                        );
+                        return patched;
+                    }
+                }
                 let reused = Vcc { cluster_id: cid, day: next, hourly: last.hourly, shaped: true };
                 if reused.safety_check(capacity_gcu, min_daily).is_ok() {
-                    self.fallbacks.push(FallbackEvent {
-                        day: next,
-                        cluster_id: cid,
-                        trigger: trigger.to_string(),
-                        rung: Rung::StaleVcc,
-                        stale_age: age,
-                    });
+                    log_fallback(
+                        &mut self.fallbacks,
+                        &mut self.fallback_archive,
+                        log_cap,
+                        FallbackEvent {
+                            day: next,
+                            cluster_id: cid,
+                            trigger: trigger.to_string(),
+                            rung: Rung::StaleVcc,
+                            stale_age: age,
+                        },
+                    );
                     return reused;
                 }
             }
         }
-        let curve = Vcc::default_curve(cid, next, capacity_gcu);
-        if curve.safety_check(capacity_gcu, min_daily).is_ok() {
-            self.fallbacks.push(FallbackEvent {
+        if try_default {
+            let curve = Vcc::default_curve(cid, next, capacity_gcu);
+            if curve.safety_check(capacity_gcu, min_daily).is_ok() {
+                log_fallback(
+                    &mut self.fallbacks,
+                    &mut self.fallback_archive,
+                    log_cap,
+                    FallbackEvent {
+                        day: next,
+                        cluster_id: cid,
+                        trigger: trigger.to_string(),
+                        rung: Rung::DefaultCurve,
+                        stale_age: 0,
+                    },
+                );
+                return curve;
+            }
+        }
+        log_fallback(
+            &mut self.fallbacks,
+            &mut self.fallback_archive,
+            log_cap,
+            FallbackEvent {
                 day: next,
                 cluster_id: cid,
                 trigger: trigger.to_string(),
-                rung: Rung::DefaultCurve,
+                rung: Rung::Unshaped,
                 stale_age: 0,
-            });
-            return curve;
-        }
-        self.fallbacks.push(FallbackEvent {
-            day: next,
-            cluster_id: cid,
-            trigger: trigger.to_string(),
-            rung: Rung::Unshaped,
-            stale_age: 0,
-        });
+            },
+        );
         Vcc::unshaped(cid, next, capacity_gcu)
     }
 
     /// Fallback events whose day falls in `days` (report windowing).
     pub fn fallbacks_in(&self, days: std::ops::Range<usize>) -> Vec<FallbackEvent> {
         self.fallbacks.iter().filter(|e| days.contains(&e.day)).cloned().collect()
+    }
+
+    /// Recovery-quality counters over the episodes closed so far.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery
+    }
+
+    /// Clusters currently inside an open outage episode — no fresh VCC
+    /// has landed since their first fallback.
+    pub fn open_outages(&self) -> usize {
+        self.outage_start.iter().filter(|s| s.is_some()).count()
     }
 
     /// Fraction of clusters left unshaped in the last planning cycle.
@@ -1101,6 +1331,31 @@ impl Simulation {
 /// grids peak well under 1). Poisoned feeds fail this and take the ladder.
 fn carbon_valid(hourly: &[f64; HOURS_PER_DAY]) -> bool {
     hourly.iter().all(|&v| v.is_finite() && v >= 0.0 && v < 5.0)
+}
+
+/// Append a fallback event to the bounded log. Beyond `cap`, the oldest
+/// events are compacted into `(cause, count)` archive counters, so
+/// multi-year chaos runs keep bounded memory and snapshot size while
+/// the cause taxonomy stays lossless. A free function (not a method)
+/// so call sites can hold other `&self` field borrows across it.
+fn log_fallback(
+    log: &mut Vec<FallbackEvent>,
+    archive: &mut Vec<(String, u64)>,
+    cap: usize,
+    event: FallbackEvent,
+) {
+    log.push(event);
+    let cap = cap.max(1);
+    if log.len() > cap {
+        let overflow = log.len() - cap;
+        for old in log.drain(..overflow) {
+            let cause = old.cause();
+            match archive.iter_mut().find(|(c, _)| *c == cause) {
+                Some((_, count)) => *count += 1,
+                None => archive.push((cause, 1)),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1238,23 +1493,23 @@ mod tests {
         let mut sim = Simulation::new(faulted_cfg("solve-fail:1.0"));
         let cap = sim.fleet.clusters[0].capacity_gcu;
         // no last-good VCC yet: the stale rung is skipped, default curve lands
-        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap, None);
         assert!(v.shaped && v.day == 5);
         assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::DefaultCurve);
         assert_eq!(sim.fallbacks.last().unwrap().cause(), "solve-fail->default-curve");
         // a last-good VCC within the staleness bound: reused, age recorded
         sim.last_good[0] = Some((Vcc::unshaped(0, 4, cap), 4));
-        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap, None);
         assert!(v.shaped && v.day == 5);
         let e = sim.fallbacks.last().unwrap();
         assert_eq!((e.rung, e.stale_age), (Rung::StaleVcc, 1));
         // beyond max_stale_days (default 3): back to the default curve
         sim.last_good[0] = Some((Vcc::unshaped(0, 0, cap), 0));
-        sim.apply_ladder(0, 5, "solve-fail", 0.0, cap);
+        sim.apply_ladder(0, 5, "solve-fail", 0.0, cap, None);
         assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::DefaultCurve);
         // impossible daily minimum: terminal unshaped rung
         sim.last_good[0] = None;
-        let v = sim.apply_ladder(0, 5, "solve-fail", cap * 24.0 + 1.0, cap);
+        let v = sim.apply_ladder(0, 5, "solve-fail", cap * 24.0 + 1.0, cap, None);
         assert!(!v.shaped);
         assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::Unshaped);
         // exactly one event per ladder walk
@@ -1311,6 +1566,154 @@ mod tests {
         sim.run_days(5).unwrap();
         assert_eq!(resumed.fallbacks, sim.fallbacks);
         assert_eq!(resumed.today_vccs, sim.today_vccs);
+    }
+
+    #[test]
+    fn partial_outage_patches_blind_hours_from_last_good() {
+        let mut sim = Simulation::new(faulted_cfg("incident"));
+        let cap = sim.fleet.clusters[0].capacity_gcu;
+        let last =
+            Vcc { cluster_id: 0, day: 4, hourly: [cap * 0.5; HOURS_PER_DAY], shaped: true };
+        sim.last_good[0] = Some((last, 4));
+        let v = sim.apply_ladder(0, 5, "feed-outage", 0.0, cap, Some((6, 8)));
+        assert!(v.shaped);
+        assert!(v.hourly[..6].iter().all(|&x| x == cap), "live hours stay at capacity");
+        assert!(v.hourly[6..14].iter().all(|&x| x == cap * 0.5), "blind hours take last good");
+        assert!(v.hourly[14..].iter().all(|&x| x == cap));
+        let e = sim.fallbacks.last().unwrap();
+        assert_eq!((e.rung, e.stale_age), (Rung::PatchedCurve, 1));
+        assert_eq!(e.cause(), "feed-outage->patched-curve");
+        assert_eq!(sim.open_outages(), 1, "ladder walk opens a recovery episode");
+    }
+
+    /// A reused VCC that now violates the safety floor falls through to
+    /// the default curve, with the `safety:<code>` trigger preserved on
+    /// the recorded rung.
+    #[test]
+    fn stale_vcc_failing_safety_recheck_falls_to_default_curve() {
+        let mut sim = Simulation::new(faulted_cfg("push-fail:1.0"));
+        let cap = sim.fleet.clusters[0].capacity_gcu;
+        // the last-good curve carries almost nothing, so today's real
+        // daily minimum violates BelowMinimum on the stale re-check
+        let weak =
+            Vcc { cluster_id: 0, day: 4, hourly: [cap * 0.01; HOURS_PER_DAY], shaped: true };
+        sim.last_good[0] = Some((weak, 4));
+        let min_daily = cap * 6.0; // default curve (~23.5 * cap) clears this easily
+        let v = sim.apply_ladder(0, 5, "safety:below-minimum", min_daily, cap, None);
+        assert!(v.shaped);
+        let e = sim.fallbacks.last().unwrap();
+        assert_eq!(e.rung, Rung::DefaultCurve);
+        assert_eq!(e.cause(), "safety:below-minimum->default-curve");
+    }
+
+    #[test]
+    fn sla_aware_policy_skips_stale_reuse_for_tight_classes() {
+        let mut cfg = faulted_cfg("chaos");
+        cfg.faults.policy = crate::faults::FallbackPolicy::SlaAware;
+        cfg.flex_classes = crate::config::FlexClasses::preset("tight-6h").unwrap();
+        let mut sim = Simulation::new(cfg);
+        let cap = sim.fleet.clusters[0].capacity_gcu;
+        sim.last_good[0] = Some((Vcc::unshaped(0, 4, cap), 4));
+        let v = sim.apply_ladder(0, 5, "solve-fail", 0.0, cap, None);
+        assert!(!v.shaped, "tight deadlines must not run on stale or default plans");
+        assert_eq!(sim.fallbacks.last().unwrap().rung, Rung::Unshaped);
+        // the conservative policy on the same state reuses the stale plan
+        let mut cfg2 = faulted_cfg("chaos");
+        cfg2.flex_classes = crate::config::FlexClasses::preset("tight-6h").unwrap();
+        let mut sim2 = Simulation::new(cfg2);
+        sim2.last_good[0] = Some((Vcc::unshaped(0, 4, cap), 4));
+        let v2 = sim2.apply_ladder(0, 5, "solve-fail", 0.0, cap, None);
+        assert!(v2.shaped);
+        assert_eq!(sim2.fallbacks.last().unwrap().rung, Rung::StaleVcc);
+    }
+
+    /// The fallback log is bounded: beyond `log_cap` the oldest events
+    /// compact into cause counters, and a snapshot taken right at the
+    /// boundary round-trips both halves exactly.
+    #[test]
+    fn fallback_log_compacts_beyond_cap_and_roundtrips() {
+        let mut sim = Simulation::new(faulted_cfg("solve-fail:1.0,cap:5"));
+        let cap = sim.fleet.clusters[0].capacity_gcu;
+        for day in 1..=9 {
+            sim.apply_ladder(0, day, "solve-fail", 0.0, cap, None);
+        }
+        assert_eq!(sim.fallbacks.len(), 5, "log bounded at cap");
+        assert_eq!(sim.fallbacks.first().unwrap().day, 5, "oldest events compacted first");
+        assert_eq!(sim.fallback_archive, vec![("solve-fail->default-curve".to_string(), 4)]);
+        let bytes = sim.snapshot().to_bytes();
+        let back = SimSnapshot::from_bytes(&bytes).unwrap();
+        let resumed = Simulation::resume(back, SimOptions::default());
+        assert_eq!(resumed.fallbacks, sim.fallbacks);
+        assert_eq!(resumed.fallback_archive, sim.fallback_archive);
+        assert_eq!(resumed.open_outages(), 1, "open episode survives the snapshot");
+    }
+
+    #[test]
+    fn recovery_episodes_close_on_fresh_vcc_and_survive_snapshots() {
+        let mut sim = Simulation::new(faulted_cfg("solve-fail:0.5"));
+        sim.run_days(40).unwrap();
+        let stats = sim.recovery_stats();
+        assert!(stats.episodes > 0, "50% solve failure over 40 days must close episodes");
+        assert!(stats.total_days >= stats.episodes && stats.max_days >= 1);
+        assert!(stats.mean_days() >= 1.0);
+        let resumed = Simulation::resume(sim.snapshot(), SimOptions::default());
+        assert_eq!(resumed.recovery_stats(), stats);
+        assert_eq!(resumed.open_outages(), sim.open_outages());
+    }
+
+    /// A poisoned-forecast day that takes a zone down leaves a drainable
+    /// `util::log` warning for the CLI to surface at end of run.
+    #[test]
+    fn poisoned_forecast_day_leaves_a_drainable_warning() {
+        let mut sim = Simulation::new(faulted_cfg("poison-forecast:1.0"));
+        sim.run_days(32).unwrap();
+        assert!(
+            sim.fallbacks.iter().any(|e| e.trigger == "poison-forecast"),
+            "certain poisoning must take the ladder: {:?}",
+            sim.fallbacks
+        );
+        // the sink is global and other tests log concurrently: filter
+        // for this scenario's marker instead of asserting exact counts
+        let drained = crate::util::log::drain();
+        assert!(
+            drained
+                .iter()
+                .any(|e| e.category == "faults" && e.message.contains("poison-forecast")),
+            "{drained:?}"
+        );
+    }
+
+    #[test]
+    fn hour_granular_correlated_incidents_walk_new_rungs_deterministically() {
+        let cfg = faulted_cfg("incident");
+        let mut a = Simulation::with_options(
+            cfg.clone(),
+            SimOptions { threads: Some(4), ..SimOptions::default() },
+        );
+        a.run_days(40).unwrap();
+        let patched = a.fallbacks.iter().any(|e| e.rung == Rung::PatchedCurve);
+        let interp = a.fallbacks.iter().any(|e| e.trigger == "feed-outage+interp");
+        assert!(
+            patched || interp,
+            "partial outages must engage the hour-granular machinery: {:?}",
+            a.fallbacks
+        );
+        // thread budget and engine must not move a byte of the incident
+        // stream: hour windows are keyed draws, not stream-positional
+        let mut b = Simulation::with_options(
+            cfg,
+            SimOptions {
+                backend: Some(SolverBackend::Native),
+                threads: Some(1),
+                shaping_disabled: false,
+                spatial_movable_fraction: None,
+                engine: SimEngine::Legacy,
+            },
+        );
+        b.run_days(40).unwrap();
+        assert_eq!(a.fallbacks, b.fallbacks);
+        assert_eq!(a.today_vccs, b.today_vccs);
+        assert_eq!(a.recovery_stats(), b.recovery_stats());
     }
 
     #[test]

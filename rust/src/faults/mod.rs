@@ -18,7 +18,11 @@
 //! fault ──► bounded deterministic retry
 //!             │ still failing
 //!             ▼
-//!           reuse yesterday's VCC        (age ≤ max_stale_days,
+//!           patch blind hours from the   (partial outages only: unmasked
+//!           last good VCC                 hours at capacity, ≤ stale budget)
+//!             │ no mask / unsafe
+//!             ▼
+//!           reuse yesterday's VCC        (age ≤ policy stale budget,
 //!             │ too stale / unsafe        safety_check re-run)
 //!             ▼
 //!           default capacity curve       (mild evening dip, safety-checked)
@@ -27,11 +31,21 @@
 //!           unshaped machine capacity    (always safe)
 //! ```
 //!
+//! Which rungs are tried, and how far a stale plan may be trusted, is a
+//! [`FallbackPolicy`] (`conservative` / `sla-aware` / `aggressive`) —
+//! a sweepable axis, not a frozen constant. Faults themselves model
+//! *incidents*, not just independent whole-day coin flips: feed-level
+//! stages can blank a contiguous 1–24 h window (`hourly`), and zones
+//! can be grouped behind shared upstream providers (`corr:<g>`) so one
+//! incident faults every dependent campus the same hours. Both remain
+//! pure functions of the cell seed.
+//!
 //! Every rung taken is recorded as a [`FallbackEvent`] in the
 //! simulation's telemetry and aggregated into per-cell report columns
-//! (fallback rate, cause taxonomy, carbon-savings delta vs the
-//! zero-fault twin). The zero-fault default draws no random numbers and
-//! records no events, so default reports stay byte-identical.
+//! (fallback rate, cause taxonomy, recovery quality, carbon-savings
+//! delta vs the zero-fault twin). The zero-fault default draws no
+//! random numbers and records no events, so default reports stay
+//! byte-identical.
 
 use crate::util::binio::{Bin, BinReader, BinWriter};
 use crate::util::error::Result;
@@ -40,6 +54,15 @@ use crate::util::rng::Pcg;
 /// Stream salt separating fault draws from every other keyed consumer
 /// of the scenario seed (workload, weather, telemetry...).
 const FAULT_SALT: u64 = 0xFA17_B07E_D00D_5EED;
+
+/// Salt separating the hour-window draw from the schedule/poison draws
+/// of the same `(kind, day, unit)`.
+const HOUR_SALT: u64 = 0x04D2_0442_11AC_AB1E;
+
+/// Default bound on the in-memory/serialized fallback-event log; events
+/// pushed beyond it compact into the cause-taxonomy counters
+/// (`cap:<n>` in a fault spec overrides it).
+pub const DEFAULT_LOG_CAP: usize = 10_000;
 
 /// The injectable fault stages, in pipeline order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,11 +139,37 @@ pub struct FaultConfig {
     /// retry attempts (each clears with probability 1/2) before the
     /// ladder engages.
     pub retries: usize,
+    /// Hour-granular incidents: feed-level stages (feed-outage,
+    /// stale-data) hit a contiguous 1–24 h window drawn by
+    /// [`FaultPlan::hour_window`] instead of the whole planning day.
+    /// Off by default — the PR 7 day-granular model is byte-pinned.
+    pub hour_granular: bool,
+    /// Provider-group count for correlated incidents: zones sharing
+    /// `zid % correlation` sit behind one upstream provider and share
+    /// every zone-level keyed draw (and hour window), so a single
+    /// incident faults all of them the same hours. 0 = fully
+    /// independent zones (the default).
+    pub correlation: usize,
+    /// Degradation-ladder policy (stale-reuse budget, default-curve
+    /// preference). [`FallbackPolicy::Conservative`] is today's
+    /// behavior, byte-pinned.
+    pub policy: FallbackPolicy,
+    /// Fallback-event log bound: events beyond it compact into cause
+    /// counters so multi-year chaos runs keep bounded snapshots.
+    pub log_cap: usize,
 }
 
 impl Default for FaultConfig {
     fn default() -> FaultConfig {
-        FaultConfig { rates: [0.0; 6], max_stale_days: 3, retries: 1 }
+        FaultConfig {
+            rates: [0.0; 6],
+            max_stale_days: 3,
+            retries: 1,
+            hour_granular: false,
+            correlation: 0,
+            policy: FallbackPolicy::Conservative,
+            log_cap: DEFAULT_LOG_CAP,
+        }
     }
 }
 
@@ -135,10 +184,25 @@ impl FaultConfig {
         self.rates[kind.index()]
     }
 
+    /// Draw unit for zone-level stages: with `correlation = g ≥ 1`,
+    /// zones sharing `zid % g` share one keyed draw per stage per day;
+    /// with 0 every zone draws independently (the PR 7 behavior).
+    pub fn fault_unit(&self, zid: usize) -> usize {
+        if self.correlation == 0 {
+            zid
+        } else {
+            zid % self.correlation
+        }
+    }
+
     /// Parse a `--faults` spec: `"none"` (or empty) for the inert
-    /// default, the `"chaos"` preset (every stage at 20%/day), or a
-    /// comma list of `code:rate` pairs, e.g.
-    /// `"feed-outage:0.05,solve-fail:0.02"`. Rates must lie in [0, 1].
+    /// default, the `"chaos"` preset (every stage at 20%/day,
+    /// day-granular), the `"incident"` preset (correlated hour-granular
+    /// feed incidents), or a comma list of `code:rate` pairs plus
+    /// optional incident tokens, e.g.
+    /// `"feed-outage:0.25,stale-data:0.1,hourly,corr:2"`. Rates must
+    /// lie in [0, 1]; duplicate stage codes or tokens are rejected
+    /// loudly (a silently-overwritten rate is a sweep-axis typo).
     pub fn parse(spec: &str) -> Result<FaultConfig> {
         let spec = spec.trim();
         let mut cfg = FaultConfig::default();
@@ -149,19 +213,60 @@ impl FaultConfig {
             cfg.rates = [0.2; 6];
             return Ok(cfg);
         }
+        if spec == "incident" {
+            // one upstream provider serving every zone, losing a
+            // contiguous window of feed hours on a quarter of days
+            cfg.rates[FaultKind::FeedOutage.index()] = 0.25;
+            cfg.rates[FaultKind::StaleData.index()] = 0.15;
+            cfg.hour_granular = true;
+            cfg.correlation = 1;
+            return Ok(cfg);
+        }
+        let mut seen = [false; 6];
+        let (mut seen_hourly, mut seen_corr, mut seen_cap) = (false, false, false);
         for part in spec.split(',') {
             let part = part.trim();
-            let (code, rate) = part
+            if part == "hourly" {
+                crate::ensure!(!seen_hourly, "faults: duplicate token \"hourly\" in {spec:?}");
+                seen_hourly = true;
+                cfg.hour_granular = true;
+                continue;
+            }
+            let (code, value) = part
                 .split_once(':')
                 .ok_or_else(|| crate::err!("faults: expected code:rate, got {part:?}"))?;
-            let kind = FaultKind::from_code(code.trim()).ok_or_else(|| {
+            let (code, value) = (code.trim(), value.trim());
+            if code == "corr" {
+                crate::ensure!(!seen_corr, "faults: duplicate token \"corr\" in {spec:?}");
+                seen_corr = true;
+                let groups: usize =
+                    value.parse().map_err(|_| crate::err!("faults: bad group count in {part:?}"))?;
+                crate::ensure!(groups >= 1, "faults: corr needs >= 1 provider group (got 0)");
+                cfg.correlation = groups;
+                continue;
+            }
+            if code == "cap" {
+                crate::ensure!(!seen_cap, "faults: duplicate token \"cap\" in {spec:?}");
+                seen_cap = true;
+                let cap: usize =
+                    value.parse().map_err(|_| crate::err!("faults: bad log cap in {part:?}"))?;
+                crate::ensure!(cap >= 1, "faults: log cap must be >= 1");
+                cfg.log_cap = cap;
+                continue;
+            }
+            let kind = FaultKind::from_code(code).ok_or_else(|| {
                 crate::err!(
-                    "faults: unknown stage {code:?} (expected one of {}, or none/chaos)",
+                    "faults: unknown stage {code:?} (expected one of {}, \
+                     hourly/corr:<g>/cap:<n>, or none/chaos/incident)",
                     FaultKind::ALL.map(|k| k.code()).join("/")
                 )
             })?;
-            let rate: f64 = rate
-                .trim()
+            crate::ensure!(
+                !seen[kind.index()],
+                "faults: duplicate stage {code:?} in {spec:?} (rates are not additive)"
+            );
+            seen[kind.index()] = true;
+            let rate: f64 = value
                 .parse()
                 .map_err(|_| crate::err!("faults: bad rate in {part:?}"))?;
             crate::ensure!(
@@ -223,6 +328,18 @@ impl FaultPlan {
         FaultOutcome::Faulted
     }
 
+    /// The contiguous hour window an hour-granular incident blanks:
+    /// `(start, len)` with `1 ≤ len ≤ 24`, a pure keyed function of
+    /// `(seed, kind, day, unit)` — correlated zones pass the same
+    /// provider-group unit and therefore lose the same hours.
+    pub fn hour_window(&self, kind: FaultKind, day: usize, unit: usize) -> (usize, usize) {
+        let key = FAULT_SALT ^ HOUR_SALT ^ ((kind.index() as u64) << 8);
+        let mut rng = Pcg::keyed(self.seed, key, day as u64, unit as u64);
+        let len = 1 + rng.below(24) as usize;
+        let start = rng.below((24 - len + 1) as u64) as usize;
+        (start, len)
+    }
+
     /// Deterministically corrupt a day-ahead intensity curve in place:
     /// 1–3 hours get either a NaN or a ×50 spike. The coordinator's
     /// validator must reject the result; this models a poisoned feed,
@@ -244,6 +361,10 @@ pub enum Rung {
     /// Pipeline completed with degraded inputs (stale feed, skipped
     /// retrain, retried fault) — a fresh VCC was still produced.
     Degraded,
+    /// Partial-outage patch: only the feed's blind hours reuse the last
+    /// good VCC's shape; every hour with live data runs at machine
+    /// capacity. Less stale exposure than a whole-day reuse.
+    PatchedCurve,
     /// Yesterday's (or an older) pushed VCC reused within the staleness
     /// bound, re-validated by `safety_check`.
     StaleVcc,
@@ -257,9 +378,22 @@ impl Rung {
     pub fn name(self) -> &'static str {
         match self {
             Rung::Degraded => "degraded",
+            Rung::PatchedCurve => "patched-curve",
             Rung::StaleVcc => "stale-vcc",
             Rung::DefaultCurve => "default-curve",
             Rung::Unshaped => "unshaped",
+        }
+    }
+
+    /// Ladder depth for the recovery report: 0 for a near-miss that
+    /// still produced a fresh plan, then 1..=4 down the service order.
+    pub fn depth(self) -> usize {
+        match self {
+            Rung::Degraded => 0,
+            Rung::PatchedCurve => 1,
+            Rung::StaleVcc => 2,
+            Rung::DefaultCurve => 3,
+            Rung::Unshaped => 4,
         }
     }
 }
@@ -271,6 +405,9 @@ impl Bin for Rung {
             Rung::StaleVcc => 1,
             Rung::DefaultCurve => 2,
             Rung::Unshaped => 3,
+            // appended tag: decoders predating PatchedCurve reject it
+            // cleanly instead of misreading an old rung
+            Rung::PatchedCurve => 4,
         });
     }
     fn read(r: &mut BinReader) -> Result<Rung> {
@@ -279,8 +416,212 @@ impl Bin for Rung {
             1 => Rung::StaleVcc,
             2 => Rung::DefaultCurve,
             3 => Rung::Unshaped,
+            4 => Rung::PatchedCurve,
             t => crate::bail!("unknown Rung tag {t}"),
         })
+    }
+}
+
+// ---- fallback policies --------------------------------------------------
+
+/// Decision hooks for the degradation ladder: how far a stale plan may
+/// be trusted, and whether the shaped default curve is preferable to
+/// honest unshaped capacity. `tight_deadlines` is true when the
+/// scenario's workload taxonomy carries a sub-day-deadline class (the
+/// workloads "Let's Wait Awhile" shows are hurt most by stale plans).
+pub trait LadderPolicy {
+    fn name(&self) -> &'static str;
+    /// Maximum reusable age (days) for the stale-VCC / patched-curve
+    /// rungs, or `None` to skip stale reuse entirely.
+    fn stale_budget(&self, cfg: &FaultConfig, tight_deadlines: bool) -> Option<usize>;
+    /// Whether to try the shaped default capacity curve before the
+    /// terminal unshaped rung.
+    fn try_default_curve(&self, tight_deadlines: bool) -> bool;
+}
+
+/// The PR 7 ladder, byte-pinned: reuse up to `max_stale_days`, then the
+/// default curve, regardless of the workload taxonomy.
+pub struct Conservative;
+
+/// SLA-aware: for deadline-tight taxonomies, skip stale reuse *and* the
+/// shaped default curve — a curve tuned to old demand risks pushing
+/// tight work past its deadline, so jump straight to unshaped capacity.
+pub struct SlaAware;
+
+/// Availability-of-shaping first: stale curves are reused twice as long
+/// before the ladder gives up on shaped service.
+pub struct Aggressive;
+
+impl LadderPolicy for Conservative {
+    fn name(&self) -> &'static str {
+        "conservative"
+    }
+    fn stale_budget(&self, cfg: &FaultConfig, _tight: bool) -> Option<usize> {
+        Some(cfg.max_stale_days)
+    }
+    fn try_default_curve(&self, _tight: bool) -> bool {
+        true
+    }
+}
+
+impl LadderPolicy for SlaAware {
+    fn name(&self) -> &'static str {
+        "sla-aware"
+    }
+    fn stale_budget(&self, cfg: &FaultConfig, tight: bool) -> Option<usize> {
+        if tight {
+            None
+        } else {
+            Some(cfg.max_stale_days)
+        }
+    }
+    fn try_default_curve(&self, tight: bool) -> bool {
+        !tight
+    }
+}
+
+impl LadderPolicy for Aggressive {
+    fn name(&self) -> &'static str {
+        "aggressive"
+    }
+    fn stale_budget(&self, cfg: &FaultConfig, _tight: bool) -> Option<usize> {
+        Some(cfg.max_stale_days * 2)
+    }
+    fn try_default_curve(&self, _tight: bool) -> bool {
+        true
+    }
+}
+
+/// The selectable ladder policies (`--fault-policy`, the sweep's
+/// `policies:` axis). An enum façade over the [`LadderPolicy`] impls so
+/// configs stay `Copy`, comparable and binio-serializable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FallbackPolicy {
+    #[default]
+    Conservative,
+    SlaAware,
+    Aggressive,
+}
+
+impl FallbackPolicy {
+    pub fn name(self) -> &'static str {
+        self.as_policy().name()
+    }
+
+    pub fn as_policy(self) -> &'static dyn LadderPolicy {
+        match self {
+            FallbackPolicy::Conservative => &Conservative,
+            FallbackPolicy::SlaAware => &SlaAware,
+            FallbackPolicy::Aggressive => &Aggressive,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<FallbackPolicy> {
+        match name {
+            "conservative" => Some(FallbackPolicy::Conservative),
+            "sla-aware" => Some(FallbackPolicy::SlaAware),
+            "aggressive" => Some(FallbackPolicy::Aggressive),
+            _ => None,
+        }
+    }
+}
+
+impl Bin for FallbackPolicy {
+    fn write(&self, w: &mut BinWriter) {
+        w.put_u8(match self {
+            FallbackPolicy::Conservative => 0,
+            FallbackPolicy::SlaAware => 1,
+            FallbackPolicy::Aggressive => 2,
+        });
+    }
+    fn read(r: &mut BinReader) -> Result<FallbackPolicy> {
+        Ok(match r.u8()? {
+            0 => FallbackPolicy::Conservative,
+            1 => FallbackPolicy::SlaAware,
+            2 => FallbackPolicy::Aggressive,
+            t => crate::bail!("unknown FallbackPolicy tag {t}"),
+        })
+    }
+}
+
+/// The canonical default value of the `policies:` sweep axis. Cells
+/// carrying exactly this spec contribute no label tag and no seed fold —
+/// the policy axis is invisible until it is actually swept.
+pub const DEFAULT_POLICY_SPEC: &str = "conservative";
+
+/// A parsed `--fault-policy` / `policies:` axis value: a ladder policy
+/// plus optional overrides of the fault-config ladder knobs, e.g.
+/// `"sla-aware"`, `"aggressive,stale:6"`, `"retries:0"` (policy name
+/// defaults to `conservative`, so the knobs sweep as continuous axes on
+/// their own).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicySpec {
+    pub policy: FallbackPolicy,
+    pub max_stale_days: Option<usize>,
+    pub retries: Option<usize>,
+}
+
+impl PolicySpec {
+    pub fn parse(spec: &str) -> Result<PolicySpec> {
+        let spec = spec.trim();
+        let mut out = PolicySpec {
+            policy: FallbackPolicy::Conservative,
+            max_stale_days: None,
+            retries: None,
+        };
+        if spec.is_empty() {
+            return Ok(out);
+        }
+        let mut seen_name = false;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if let Some((key, value)) = part.split_once(':') {
+                let value: usize = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| crate::err!("policy: bad value in {part:?}"))?;
+                match key.trim() {
+                    "stale" => {
+                        crate::ensure!(
+                            out.max_stale_days.is_none(),
+                            "policy: duplicate \"stale\" in {spec:?}"
+                        );
+                        out.max_stale_days = Some(value);
+                    }
+                    "retries" => {
+                        crate::ensure!(
+                            out.retries.is_none(),
+                            "policy: duplicate \"retries\" in {spec:?}"
+                        );
+                        out.retries = Some(value);
+                    }
+                    key => crate::bail!(
+                        "policy: unknown knob {key:?} (expected stale:<days> or retries:<n>)"
+                    ),
+                }
+            } else {
+                crate::ensure!(!seen_name, "policy: more than one policy name in {spec:?}");
+                seen_name = true;
+                out.policy = FallbackPolicy::from_name(part).ok_or_else(|| {
+                    crate::err!(
+                        "policy: unknown policy {part:?} \
+                         (expected conservative/sla-aware/aggressive)"
+                    )
+                })?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fold the spec into a scenario's fault config.
+    pub fn apply(&self, cfg: &mut FaultConfig) {
+        cfg.policy = self.policy;
+        if let Some(days) = self.max_stale_days {
+            cfg.max_stale_days = days;
+        }
+        if let Some(retries) = self.retries {
+            cfg.retries = retries;
+        }
     }
 }
 
@@ -330,12 +671,22 @@ impl Bin for FaultConfig {
         self.rates.write(w);
         w.put_usize(self.max_stale_days);
         w.put_usize(self.retries);
+        // appended in SimSnapshot::STATE_VERSION 4 — the prefix above
+        // is frozen
+        w.put_bool(self.hour_granular);
+        w.put_usize(self.correlation);
+        self.policy.write(w);
+        w.put_usize(self.log_cap);
     }
     fn read(r: &mut BinReader) -> Result<FaultConfig> {
         Ok(FaultConfig {
             rates: <[f64; 6]>::read(r)?,
             max_stale_days: r.usize_()?,
             retries: r.usize_()?,
+            hour_granular: r.bool_()?,
+            correlation: r.usize_()?,
+            policy: FallbackPolicy::read(r)?,
+            log_cap: r.usize_()?,
         })
     }
 }
@@ -365,6 +716,121 @@ mod tests {
         assert!(FaultConfig::parse("feed-outage:1.5").is_err());
         assert!(FaultConfig::parse("feed-outage:-0.1").is_err());
         assert!(FaultConfig::parse("feed-outage:NaN").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicates_loudly() {
+        // a silently-overwritten rate is a sweep-axis typo: reject
+        let err = FaultConfig::parse("feed-outage:0.1,feed-outage:0.2").unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        assert!(FaultConfig::parse("hourly,hourly").is_err());
+        assert!(FaultConfig::parse("corr:2,corr:3").is_err());
+        assert!(FaultConfig::parse("cap:10,cap:20").is_err());
+        // the non-duplicated forms parse
+        assert!(FaultConfig::parse("feed-outage:0.1,stale-data:0.2").is_ok());
+    }
+
+    #[test]
+    fn parse_incident_tokens_and_preset() {
+        let cfg = FaultConfig::parse("feed-outage:0.3,hourly,corr:2,cap:500").unwrap();
+        assert_eq!(cfg.rate(FaultKind::FeedOutage), 0.3);
+        assert!(cfg.hour_granular);
+        assert_eq!(cfg.correlation, 2);
+        assert_eq!(cfg.log_cap, 500);
+        assert_eq!(cfg.fault_unit(0), 0);
+        assert_eq!(cfg.fault_unit(5), 1);
+
+        let incident = FaultConfig::parse("incident").unwrap();
+        assert!(incident.hour_granular);
+        assert_eq!(incident.correlation, 1);
+        assert!(incident.rate(FaultKind::FeedOutage) > 0.0);
+        // one provider group: every zone maps to unit 0
+        for zid in 0..7 {
+            assert_eq!(incident.fault_unit(zid), 0);
+        }
+        // independent default: the unit is the zone itself
+        let indep = FaultConfig::parse("chaos").unwrap();
+        for zid in 0..7 {
+            assert_eq!(indep.fault_unit(zid), zid);
+        }
+
+        assert!(FaultConfig::parse("corr:0").is_err());
+        assert!(FaultConfig::parse("cap:0").is_err());
+        assert!(FaultConfig::parse("corr:x").is_err());
+    }
+
+    #[test]
+    fn hour_windows_are_pure_and_in_range() {
+        let plan = FaultPlan::new(FaultConfig::parse("incident").unwrap(), 11);
+        let mut lens = [false; 25];
+        for day in 0..300 {
+            let (s, len) = plan.hour_window(FaultKind::FeedOutage, day, 0);
+            assert_eq!(plan.hour_window(FaultKind::FeedOutage, day, 0), (s, len), "pure");
+            assert!((1..=24).contains(&len), "len {len}");
+            assert!(s + len <= 24, "window [{s}, {}] past midnight", s + len);
+            lens[len] = true;
+        }
+        assert!(lens[1..].iter().filter(|&&l| l).count() > 12, "window lengths span 1..=24");
+        // distinct per kind and per unit (different providers, different
+        // incidents)
+        let a: Vec<_> = (0..50).map(|d| plan.hour_window(FaultKind::FeedOutage, d, 0)).collect();
+        let b: Vec<_> = (0..50).map(|d| plan.hour_window(FaultKind::StaleData, d, 0)).collect();
+        let c: Vec<_> = (0..50).map(|d| plan.hour_window(FaultKind::FeedOutage, d, 1)).collect();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn policy_specs_parse_and_apply() {
+        let d = PolicySpec::parse("conservative").unwrap();
+        assert_eq!(d.policy, FallbackPolicy::Conservative);
+        assert_eq!(d, PolicySpec::parse("").unwrap());
+
+        let spec = PolicySpec::parse("aggressive, stale:6, retries:0").unwrap();
+        assert_eq!(spec.policy, FallbackPolicy::Aggressive);
+        let mut cfg = FaultConfig::default();
+        spec.apply(&mut cfg);
+        assert_eq!(cfg.policy, FallbackPolicy::Aggressive);
+        assert_eq!(cfg.max_stale_days, 6);
+        assert_eq!(cfg.retries, 0);
+
+        // knobs sweep on their own, policy name defaulting
+        let knobs = PolicySpec::parse("stale:1").unwrap();
+        assert_eq!(knobs.policy, FallbackPolicy::Conservative);
+        assert_eq!(knobs.max_stale_days, Some(1));
+
+        assert!(PolicySpec::parse("yolo").is_err());
+        assert!(PolicySpec::parse("conservative,aggressive").is_err());
+        assert!(PolicySpec::parse("stale:2,stale:3").is_err());
+        assert!(PolicySpec::parse("stale:x").is_err());
+        assert!(PolicySpec::parse("depth:9").is_err());
+    }
+
+    #[test]
+    fn policies_shape_the_ladder_budgets() {
+        let cfg = FaultConfig::default(); // max_stale_days 3
+        let cons = FallbackPolicy::Conservative.as_policy();
+        let sla = FallbackPolicy::SlaAware.as_policy();
+        let aggr = FallbackPolicy::Aggressive.as_policy();
+        for tight in [false, true] {
+            assert_eq!(cons.stale_budget(&cfg, tight), Some(3));
+            assert!(cons.try_default_curve(tight));
+            assert_eq!(aggr.stale_budget(&cfg, tight), Some(6));
+        }
+        // SLA-aware only diverges for deadline-tight taxonomies
+        assert_eq!(sla.stale_budget(&cfg, false), Some(3));
+        assert!(sla.try_default_curve(false));
+        assert_eq!(sla.stale_budget(&cfg, true), None);
+        assert!(!sla.try_default_curve(true));
+        for (policy, name) in [
+            (FallbackPolicy::Conservative, "conservative"),
+            (FallbackPolicy::SlaAware, "sla-aware"),
+            (FallbackPolicy::Aggressive, "aggressive"),
+        ] {
+            assert_eq!(policy.name(), name);
+            assert_eq!(FallbackPolicy::from_name(name), Some(policy));
+        }
+        assert_eq!(FallbackPolicy::from_name("bold"), None);
     }
 
     #[test]
@@ -433,7 +899,9 @@ mod tests {
 
     #[test]
     fn binio_roundtrips() {
-        let cfg = FaultConfig::parse("feed-outage:0.05,push-fail:0.5").unwrap();
+        let mut cfg = FaultConfig::parse("feed-outage:0.05,push-fail:0.5,hourly,corr:3").unwrap();
+        cfg.policy = FallbackPolicy::SlaAware;
+        cfg.log_cap = 77;
         let back: FaultConfig = from_payload(&to_payload(&cfg)).unwrap();
         assert_eq!(back, cfg);
         let ev = FallbackEvent {
@@ -445,8 +913,19 @@ mod tests {
         };
         let back: FallbackEvent = from_payload(&to_payload(&ev)).unwrap();
         assert_eq!(back, ev);
-        for rung in [Rung::Degraded, Rung::StaleVcc, Rung::DefaultCurve, Rung::Unshaped] {
+        let rungs =
+            [Rung::Degraded, Rung::PatchedCurve, Rung::StaleVcc, Rung::DefaultCurve, Rung::Unshaped];
+        for rung in rungs {
             assert_eq!(from_payload::<Rung>(&to_payload(&rung)).unwrap(), rung);
+        }
+        // depths follow the service order the rungs are declared in
+        for pair in rungs.windows(2) {
+            assert!(pair[0].depth() < pair[1].depth());
+        }
+        for policy in
+            [FallbackPolicy::Conservative, FallbackPolicy::SlaAware, FallbackPolicy::Aggressive]
+        {
+            assert_eq!(from_payload::<FallbackPolicy>(&to_payload(&policy)).unwrap(), policy);
         }
     }
 }

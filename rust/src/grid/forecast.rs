@@ -156,6 +156,58 @@ impl GridZone {
     }
 }
 
+/// Widest contiguous run of missing feed hours [`repair_hourly_gaps`]
+/// will bridge by interpolation. Wider blackouts are rejected — a
+/// half-day straight line through a duck curve is not a forecast.
+pub const MAX_INTERP_GAP_HOURS: usize = 4;
+
+/// Interpolate-or-reject for partially-missing day-ahead curves
+/// (hour-granular feed outages): every maximal run of non-finite hours
+/// no longer than `max_gap` is filled — linearly between its finite
+/// neighbours, or flat from the single neighbour when the run touches
+/// midnight. Returns the number of hours patched, or `None` (curve
+/// untouched beyond the attempted fills is irrelevant — the caller
+/// falls back) when any run is wider than `max_gap` or the whole day
+/// is missing.
+pub fn repair_hourly_gaps(
+    hourly: &mut [f64; HOURS_PER_DAY],
+    max_gap: usize,
+) -> Option<usize> {
+    let mut patched = 0usize;
+    let mut h = 0;
+    while h < HOURS_PER_DAY {
+        if hourly[h].is_finite() {
+            h += 1;
+            continue;
+        }
+        let start = h;
+        while h < HOURS_PER_DAY && !hourly[h].is_finite() {
+            h += 1;
+        }
+        let len = h - start;
+        if len > max_gap {
+            return None;
+        }
+        let before = start.checked_sub(1).map(|i| hourly[i]);
+        let after = (h < HOURS_PER_DAY).then(|| hourly[h]);
+        match (before, after) {
+            (Some(lo), Some(hi)) => {
+                for (k, slot) in hourly[start..start + len].iter_mut().enumerate() {
+                    let t = (k + 1) as f64 / (len + 1) as f64;
+                    *slot = lo + (hi - lo) * t;
+                }
+            }
+            (Some(edge), None) | (None, Some(edge)) => {
+                hourly[start..start + len].iter_mut().for_each(|slot| *slot = edge);
+            }
+            // all 24 hours missing: nothing to anchor an interpolation
+            (None, None) => return None,
+        }
+        patched += len;
+    }
+    Some(patched)
+}
+
 // ---- binary serialization (util::binio, snapshot cache) ----------------
 
 impl crate::util::binio::Bin for CarbonForecaster {
@@ -307,6 +359,46 @@ mod tests {
         let a = fcster.day_ahead(&z, 12);
         let b = fcster.day_ahead(&z, 12);
         assert_eq!(a.hourly, b.hourly);
+    }
+
+    #[test]
+    fn gap_repair_interpolates_or_rejects() {
+        // interior gap: linear bridge between the finite neighbours
+        let mut curve = [0.0; HOURS_PER_DAY];
+        for (h, v) in curve.iter_mut().enumerate() {
+            *v = 0.1 + h as f64 * 0.01;
+        }
+        let clean = curve;
+        curve[5] = f64::NAN;
+        curve[6] = f64::NAN;
+        assert_eq!(repair_hourly_gaps(&mut curve, MAX_INTERP_GAP_HOURS), Some(2));
+        for h in 0..HOURS_PER_DAY {
+            assert!(
+                (curve[h] - clean[h]).abs() < 1e-12,
+                "hour {h}: {} vs {}",
+                curve[h],
+                clean[h]
+            );
+        }
+        // edge gaps extend the nearest good hour flat
+        let mut edge = clean;
+        edge[0] = f64::NAN;
+        edge[23] = f64::NAN;
+        assert_eq!(repair_hourly_gaps(&mut edge, MAX_INTERP_GAP_HOURS), Some(2));
+        assert_eq!(edge[0], clean[1]);
+        assert_eq!(edge[23], clean[22]);
+        // a clean curve is a no-op
+        let mut untouched = clean;
+        assert_eq!(repair_hourly_gaps(&mut untouched, MAX_INTERP_GAP_HOURS), Some(0));
+        assert_eq!(untouched, clean);
+        // gaps wider than the bound reject, as does a fully-blank day
+        let mut wide = clean;
+        for v in wide.iter_mut().take(10).skip(2) {
+            *v = f64::NAN;
+        }
+        assert_eq!(repair_hourly_gaps(&mut wide, MAX_INTERP_GAP_HOURS), None);
+        let mut blank = [f64::NAN; HOURS_PER_DAY];
+        assert_eq!(repair_hourly_gaps(&mut blank, HOURS_PER_DAY), None);
     }
 
     #[test]

@@ -113,7 +113,38 @@ fn load_config(args: &Args) -> Result<ScenarioConfig> {
         }
         cfg.validate()?;
     }
+    // `--fault-policy sla-aware,stale:6` tunes the degradation ladder of a
+    // single run (sweeps treat the same syntax as an axis — see cmd_sweep).
+    if let Some(spec) = args.get("fault-policy") {
+        cics::faults::PolicySpec::parse(spec)
+            .map_err(|e| e.context("--fault-policy"))?
+            .apply(&mut cfg.faults);
+    }
     Ok(cfg)
+}
+
+/// Drain the warnings `cics::util::log` buffered during the run into the
+/// command's stdout: a per-category count always, each message under
+/// `--verbose`. Warnings already went to stderr as they happened — this
+/// is the end-of-run roll-up that survives stream redirection.
+fn drain_warnings(verbose: bool) {
+    let events = cics::util::log::drain();
+    if events.is_empty() {
+        return;
+    }
+    let mut counts = std::collections::BTreeMap::new();
+    for e in &events {
+        *counts.entry(e.category).or_insert(0usize) += 1;
+    }
+    let summary: Vec<String> = counts.into_iter().map(|(cat, n)| format!("{cat}: {n}")).collect();
+    println!("warnings during run: {}", summary.join(", "));
+    if verbose {
+        for e in &events {
+            println!("  [{}] {}", e.category, e.message);
+        }
+    } else {
+        println!("(rerun with --verbose to list each warning)");
+    }
 }
 
 /// `--engine legacy|event` (default: the event engine). Both engines are
@@ -175,6 +206,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         shaped_carbon.len(),
         unshaped_carbon.len()
     );
+    drain_warnings(args.has("verbose"));
     Ok(())
 }
 
@@ -428,6 +460,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         };
         cics::ensure!(!m.faults.is_empty(), "--faults: no fault specs given");
     }
+    // Fallback-policy axis, same ';' vs ',' convention as --faults: one
+    // spec may carry comma-joined knobs (`aggressive,stale:6` is ONE
+    // spec), so ';' separates axis entries whenever a spec carries knobs;
+    // a value with neither ';' nor ':' is a plain name list.
+    if let Some(s) = args.get("fault-policy") {
+        m.policies = if s.contains(';') {
+            s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
+        } else if s.contains(':') {
+            vec![s.trim().to_string()]
+        } else {
+            parse_list("fault-policy", s, |x| Some(x.to_string()))?
+        };
+        cics::ensure!(!m.policies.is_empty(), "--fault-policy: no policy specs given");
+    }
     m.warmup_days = args.usize("warmup", m.warmup_days);
     m.validate()?;
     let days = args.usize("days", 20);
@@ -442,13 +488,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     println!(
         "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} faults x \
-         {} solvers x {} spatial), {} warmup + {} measured days, {} worker threads, {} engine{}",
+         {} policies x {} solvers x {} spatial), {} warmup + {} measured days, \
+         {} worker threads, {} engine{}",
         m.n_cells(),
         m.grids.len(),
         m.fleet_sizes.len(),
         m.flex_shares.len(),
         m.flex_classes.len(),
         m.faults.len(),
+        m.policies.len(),
         m.solvers.len(),
         m.spatial.len(),
         m.warmup_days,
@@ -479,6 +527,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let path = std::path::Path::new(&out).join("sweep.json");
     std::fs::write(&path, report.to_json().to_string())?;
     println!("wrote {path:?}");
+    drain_warnings(args.has("verbose"));
     Ok(())
 }
 
@@ -704,8 +753,15 @@ fn main() {
                  \u{20}      [--flex 0.3,0.6] [--classes within-day,mixed]\n\
                  \u{20}      [--solvers native,greedy] [--spatial off,on] [--threads N]\n\
                  \u{20}      [--faults none;chaos | --faults feed-outage:0.05,solve-fail:0.02]\n\
-                 \u{20}      (fault-injection axis: kind:daily-rate streams or the chaos\n\
-                 \u{20}      preset; ';' separates axis entries, ',' joins one spec's kinds)\n\
+                 \u{20}      (fault-injection axis: kind:daily-rate streams or the chaos/\n\
+                 \u{20}      incident presets; ';' separates axis entries, ',' joins one\n\
+                 \u{20}      spec's kinds — add hourly / corr:G / cap:N for hour-granular\n\
+                 \u{20}      windows, correlated zone groups and the fallback-log cap)\n\
+                 \u{20}      [--fault-policy conservative;sla-aware;aggressive,stale:6]\n\
+                 \u{20}      (fallback-policy axis — conservative|sla-aware|aggressive plus\n\
+                 \u{20}      stale:N / retries:N knobs; same ';' vs ',' rule as --faults;\n\
+                 \u{20}      simulate takes the same flag as a single spec)\n\
+                 \u{20}      [--verbose]   (list each buffered warning at end of run)\n\
                  grids:  archetype presets (FR|CA|DE|PL), real hourly traces\n\
                  \u{20}      (trace:SE..ZA — see data/carbon_intensity/) or calibrated\n\
                  \u{20}      synthetic profiles (synthetic:CODE); simulate/experiment/\n\

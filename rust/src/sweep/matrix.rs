@@ -11,7 +11,7 @@ use crate::config::classes::DEFAULT_PRESET;
 use crate::config::{
     CampusConfig, FlexClasses, GridArchetype, GridSource, ScenarioConfig, SweepMatrix,
 };
-use crate::faults::FaultConfig;
+use crate::faults::{FaultConfig, PolicySpec, DEFAULT_POLICY_SPEC};
 use crate::util::error::Result;
 use crate::util::rng::splitmix64;
 
@@ -101,6 +101,9 @@ pub struct SweepCell {
     /// Fault-injection spec of the cell (canonical lowercase form;
     /// `"none"` for the inert default).
     pub faults: String,
+    /// Fallback-policy spec of the cell (canonical lowercase form;
+    /// `"conservative"` for the byte-pinned default ladder).
+    pub policy: String,
     pub solver: SolverChoice,
     pub spatial: bool,
     /// Per-cell seed, derived from the *physical* scenario axes only
@@ -125,6 +128,7 @@ fn cell_seed(
     flex_share: f64,
     classes: &str,
     faults: &str,
+    policy: &str,
 ) -> u64 {
     let mut h = grid_code
         .to_ascii_uppercase()
@@ -138,13 +142,17 @@ fn cell_seed(
     if faults != NO_FAULTS {
         h = faults.bytes().fold(splitmix64(h ^ 0xFA17), |a, b| splitmix64(a ^ b as u64));
     }
+    if policy != DEFAULT_POLICY_SPEC {
+        h = policy.bytes().fold(splitmix64(h ^ 0x7011C7), |a, b| splitmix64(a ^ b as u64));
+    }
     splitmix64(base ^ h)
 }
 
 /// Expand the matrix into cells (cartesian product, fixed axis order:
-/// grids, fleet sizes, flex shares, class presets, fault specs, solvers,
-/// spatial — solvers and spatial innermost, so the policy variants of a
-/// physical scenario stay contiguous and share one warmup fork group).
+/// grids, fleet sizes, flex shares, class presets, fault specs, fallback
+/// policies, solvers, spatial — solvers and spatial innermost, so the
+/// policy variants of a physical scenario stay contiguous and share one
+/// warmup fork group).
 pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
     matrix.validate()?;
     let mut cells = Vec::with_capacity(matrix.n_cells());
@@ -192,67 +200,86 @@ pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
                         } else {
                             format!("{faults_spec} ")
                         };
-                        for solver_name in &matrix.solvers {
-                            let solver = SolverChoice::parse(solver_name)
-                                .ok_or_else(|| crate::err!("unknown solver {solver_name:?}"))?;
-                            for &spatial in &matrix.spatial {
-                                let label = format!(
-                                    "{} f{} x{} {}{}{} sp-{}",
-                                    grid_code.to_ascii_uppercase(),
-                                    fleet_size,
-                                    flex_share,
-                                    class_tag,
-                                    fault_tag,
-                                    solver.name(),
-                                    if spatial { "on" } else { "off" }
-                                );
-                                let seed = cell_seed(
-                                    matrix.seed,
-                                    grid_code,
-                                    fleet_size,
-                                    flex_share,
-                                    &classes_code,
-                                    &faults_spec,
-                                );
-                                let mut cfg = ScenarioConfig {
-                                    seed,
-                                    campuses: vec![CampusConfig {
-                                        name: format!(
-                                            "sweep-{}",
-                                            grid_code.to_ascii_lowercase()
-                                        ),
-                                        grid,
-                                        grid_source: grid_source.clone(),
-                                        clusters: fleet_size,
-                                        contract_limit_kw: f64::INFINITY,
-                                        // flex_share of clusters are archetype X
-                                        // (large flexible share); the rest are Z.
-                                        archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
-                                    }],
-                                    flex_classes: flex_classes.clone(),
-                                    faults: fault_cfg.clone(),
-                                    ..ScenarioConfig::default()
-                                };
-                                // Sweeps run many scenarios: trimmed solver
-                                // budget (quality plateaus well before 400
-                                // iterations — see the optimizer_hotpath
-                                // ablation) and no artifact probing unless
-                                // the cell asks for it.
-                                cfg.optimizer.iters = 200;
-                                cfg.optimizer.use_artifact = solver == SolverChoice::Artifact;
-                                cells.push(SweepCell {
-                                    index: cells.len(),
-                                    label,
-                                    grid_code: grid_code.to_ascii_uppercase(),
-                                    fleet_size,
-                                    flex_share,
-                                    classes: classes_code.clone(),
-                                    faults: faults_spec.clone(),
-                                    solver,
-                                    spatial,
-                                    seed,
-                                    cfg,
-                                });
+                        for policy_spec in &matrix.policies {
+                            let policy_spec = policy_spec.trim().to_ascii_lowercase();
+                            let policy = PolicySpec::parse(&policy_spec)?;
+                            let mut policy_faults = fault_cfg.clone();
+                            policy.apply(&mut policy_faults);
+                            // Like the fault spec, the default policy stays
+                            // invisible in labels and seeds, so pre-policy
+                            // sweeps keep their exact bytes.
+                            let policy_tag = if policy_spec == DEFAULT_POLICY_SPEC {
+                                String::new()
+                            } else {
+                                format!("{policy_spec} ")
+                            };
+                            for solver_name in &matrix.solvers {
+                                let solver = SolverChoice::parse(solver_name).ok_or_else(
+                                    || crate::err!("unknown solver {solver_name:?}"),
+                                )?;
+                                for &spatial in &matrix.spatial {
+                                    let label = format!(
+                                        "{} f{} x{} {}{}{}{} sp-{}",
+                                        grid_code.to_ascii_uppercase(),
+                                        fleet_size,
+                                        flex_share,
+                                        class_tag,
+                                        fault_tag,
+                                        policy_tag,
+                                        solver.name(),
+                                        if spatial { "on" } else { "off" }
+                                    );
+                                    let seed = cell_seed(
+                                        matrix.seed,
+                                        grid_code,
+                                        fleet_size,
+                                        flex_share,
+                                        &classes_code,
+                                        &faults_spec,
+                                        &policy_spec,
+                                    );
+                                    let mut cfg = ScenarioConfig {
+                                        seed,
+                                        campuses: vec![CampusConfig {
+                                            name: format!(
+                                                "sweep-{}",
+                                                grid_code.to_ascii_lowercase()
+                                            ),
+                                            grid,
+                                            grid_source: grid_source.clone(),
+                                            clusters: fleet_size,
+                                            contract_limit_kw: f64::INFINITY,
+                                            // flex_share of clusters are archetype X
+                                            // (large flexible share); the rest are Z.
+                                            archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
+                                        }],
+                                        flex_classes: flex_classes.clone(),
+                                        faults: policy_faults.clone(),
+                                        ..ScenarioConfig::default()
+                                    };
+                                    // Sweeps run many scenarios: trimmed solver
+                                    // budget (quality plateaus well before 400
+                                    // iterations — see the optimizer_hotpath
+                                    // ablation) and no artifact probing unless
+                                    // the cell asks for it.
+                                    cfg.optimizer.iters = 200;
+                                    cfg.optimizer.use_artifact =
+                                        solver == SolverChoice::Artifact;
+                                    cells.push(SweepCell {
+                                        index: cells.len(),
+                                        label,
+                                        grid_code: grid_code.to_ascii_uppercase(),
+                                        fleet_size,
+                                        flex_share,
+                                        classes: classes_code.clone(),
+                                        faults: faults_spec.clone(),
+                                        policy: policy_spec.clone(),
+                                        solver,
+                                        spatial,
+                                        seed,
+                                        cfg,
+                                    });
+                                }
                             }
                         }
                     }
@@ -392,6 +419,42 @@ mod tests {
         // bad specs fail loudly
         let mut bad = SweepMatrix::default();
         bad.faults = vec!["volcano:0.1".into()];
+        assert!(expand(&bad).is_err());
+    }
+
+    #[test]
+    fn fallback_policies_are_a_physical_axis() {
+        use crate::faults::FallbackPolicy;
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
+        m.faults = vec!["chaos".into()];
+        m.policies =
+            vec!["conservative".into(), "sla-aware".into(), "aggressive,stale:6".into()];
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 3);
+        // the default policy keeps the pre-policy label and seed shape
+        assert_eq!(cells[0].policy, "conservative");
+        assert_eq!(cells[0].label, "PL f4 x0.5 chaos native sp-off");
+        assert_eq!(cells[0].cfg.faults.policy, FallbackPolicy::Conservative);
+        // non-default policies are tagged (canonical lowercase) and derive
+        // their own seeds
+        assert_eq!(cells[1].label, "PL f4 x0.5 chaos sla-aware native sp-off");
+        assert_eq!(cells[1].cfg.faults.policy, FallbackPolicy::SlaAware);
+        assert_eq!(cells[2].label, "PL f4 x0.5 chaos aggressive,stale:6 native sp-off");
+        assert_eq!(cells[2].cfg.faults.policy, FallbackPolicy::Aggressive);
+        assert_eq!(cells[2].cfg.faults.max_stale_days, 6);
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_ne!(cells[0].seed, cells[2].seed);
+        assert_ne!(cells[1].seed, cells[2].seed);
+        for c in &cells {
+            assert_eq!(c.seed, c.cfg.seed);
+            c.cfg.validate().unwrap();
+        }
+        // unknown policies fail loudly
+        let mut bad = SweepMatrix::default();
+        bad.policies = vec!["heroic".into()];
         assert!(expand(&bad).is_err());
     }
 

@@ -49,10 +49,12 @@ pub mod report;
 
 pub use cache::{CacheStats, SnapshotCache};
 pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
-pub use report::{CellReport, FallbackCellReport, SweepReport};
+pub use report::{CellReport, FallbackCellReport, RecoveryReport, SweepReport};
 
 use crate::config::SweepMatrix;
-use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend, WindowAggregate};
+use crate::coordinator::{
+    RecoveryStats, SimOptions, SimSnapshot, Simulation, SolverBackend, WindowAggregate,
+};
 use crate::fleet::Fleet;
 use crate::scheduler::{ClusterScheduler, DayOutcome, SimEngine};
 use crate::telemetry::ClusterDayRecord;
@@ -227,9 +229,17 @@ pub fn run_sweep_cached(
         }
         let twin_label = cells[i].label.replace(&format!("{} ", cells[i].faults), "");
         if let Some(twin) = cells.iter().position(|c| c.label == twin_label) {
-            let delta = reports[i].carbon_saved_pct - reports[twin].carbon_saved_pct;
+            let saved = reports[i].carbon_saved_pct;
+            let twin_saved = reports[twin].carbon_saved_pct;
             if let Some(fb) = reports[i].fallback.as_mut() {
-                fb.savings_delta_pct = Some(delta);
+                fb.savings_delta_pct = Some(saved - twin_saved);
+                // Savings retention (what fraction of the clean twin's
+                // savings survived the faults) reads best as a ratio;
+                // only meaningful when the twin actually saved carbon.
+                if let Some(rec) = fb.recovery.as_mut() {
+                    rec.retention_pct =
+                        (twin_saved.abs() > 1e-9).then(|| 100.0 * saved / twin_saved);
+                }
             }
         }
     }
@@ -313,6 +323,11 @@ struct ShapedOutcome {
     spatial_moved_gcuh: f64,
     /// Degradation-ladder events whose day falls in the measured window.
     fallbacks: Vec<crate::faults::FallbackEvent>,
+    /// Closed recovery episodes (outage start → next fresh VCC). Warmups
+    /// never engage the fault stream, so these cover the measured window.
+    recovery: RecoveryStats,
+    /// Clusters still inside an open outage when the run ended.
+    open_outages: usize,
 }
 
 /// Resume a warmup checkpoint as one fork unit and simulate the measured
@@ -356,6 +371,8 @@ fn run_fork_unit(
             slo_pauses: sim.slo_states.iter().map(|st| st.pauses_triggered).sum(),
             spatial_moved_gcuh: sim.spatial_totals.0,
             fallbacks: sim.fallbacks_in(window),
+            recovery: sim.recovery_stats(),
+            open_outages: sim.open_outages(),
         }),
     })
 }
@@ -437,10 +454,41 @@ fn make_report(
         for e in &s.fallbacks {
             *causes.entry(e.cause()).or_insert(0usize) += 1;
         }
+        // Recovery-quality columns only for cells that opted into the
+        // PR's robustness features (hour-granular windows, correlated
+        // incidents, or a non-default fallback policy): day-granular
+        // chaos cells under the conservative policy keep their exact
+        // pre-recovery document bytes.
+        let recovery = if cell.cfg.faults.hour_granular
+            || cell.cfg.faults.correlation > 0
+            || cell.policy != crate::faults::DEFAULT_POLICY_SPEC
+        {
+            let depths: Vec<usize> = s
+                .fallbacks
+                .iter()
+                .filter(|e| e.rung != crate::faults::Rung::Degraded)
+                .map(|e| e.rung.depth())
+                .collect();
+            Some(report::RecoveryReport {
+                mean_days_to_fresh: s.recovery.mean_days(),
+                max_days_to_fresh: s.recovery.max_days,
+                unrecovered: s.open_outages,
+                mean_outage_depth: if depths.is_empty() {
+                    0.0
+                } else {
+                    depths.iter().sum::<usize>() as f64 / depths.len() as f64
+                },
+                max_outage_depth: depths.iter().copied().max().unwrap_or(0),
+                retention_pct: None,
+            })
+        } else {
+            None
+        };
         Some(FallbackCellReport {
             fallback_rate: hard.len() as f64 / cluster_days as f64,
             causes: causes.into_iter().collect(),
             savings_delta_pct: None,
+            recovery,
         })
     } else {
         None
@@ -636,10 +684,56 @@ mod tests {
             fb.savings_delta_pct.is_some(),
             "zero-fault twin exists, so the delta must be filled"
         );
+        // day-granular chaos under the default policy keeps its exact
+        // pre-recovery document bytes
+        assert!(fb.recovery.is_none());
         let json = fork.to_json().to_string();
         assert!(json.contains("\"faults\":\"chaos\""));
         assert!(json.contains("\"fallback\""));
+        assert!(!json.contains("\"recovery\""));
         assert!(fork.ascii_table().contains("fb-rate%"));
+        assert!(!fork.ascii_table().contains("recovery"));
+    }
+
+    /// Hour-granular correlated incidents surface the recovery-quality
+    /// block, and the policy axis pairs each faulted cell with a clean
+    /// twin so savings retention can be filled in.
+    #[test]
+    fn incident_cells_report_recovery_quality() {
+        let m = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            faults: vec!["none".into(), "incident".into()],
+            policies: vec!["conservative".into(), "sla-aware".into()],
+            solvers: vec!["native".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let rep = run_sweep(&m, 8, 4).unwrap();
+        assert_eq!(rep.cells.len(), 4);
+        // expansion order: faults outer, policies inner
+        let clean = &rep.cells[0];
+        assert_eq!(clean.faults, "none");
+        assert!(clean.fallback.is_none());
+        for cell in &rep.cells[2..] {
+            assert_eq!(cell.faults, "incident");
+            let fb = cell.fallback.as_ref().expect("incident cells report fallback telemetry");
+            let rec = fb.recovery.as_ref().expect("incident cells report recovery quality");
+            assert!(rec.mean_days_to_fresh >= 0.0);
+            assert!(rec.max_days_to_fresh as f64 >= rec.mean_days_to_fresh);
+            assert!(rec.max_outage_depth <= 4, "depth {} out of ladder", rec.max_outage_depth);
+            assert!(
+                rec.retention_pct.is_some(),
+                "clean twin saved carbon, so retention must be filled"
+            );
+        }
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"recovery\""));
+        assert!(json.contains("\"mean_days_to_fresh\""));
+        assert!(json.contains("\"retention_pct\""));
+        assert!(rep.ascii_table().contains("recovery"));
     }
 
     /// The `mixed` class preset runs end-to-end and surfaces per-class

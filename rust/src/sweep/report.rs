@@ -71,6 +71,10 @@ pub struct FallbackCellReport {
     /// saved%`, negative when faults cost savings. `None` when the matrix
     /// has no zero-fault twin for this cell.
     pub savings_delta_pct: Option<f64>,
+    /// Recovery-quality columns; `None` for cells that use none of the
+    /// hour-granular / correlated / policy features — those keep their
+    /// exact pre-recovery document bytes.
+    pub recovery: Option<RecoveryReport>,
 }
 
 impl FallbackCellReport {
@@ -91,6 +95,48 @@ impl FallbackCellReport {
         ];
         if let Some(delta) = self.savings_delta_pct {
             fields.push(("savings_delta_pct", Json::Num(round(delta, 4))));
+        }
+        if let Some(rec) = &self.recovery {
+            fields.push(("recovery", rec.to_json()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Recovery-quality columns of one faulted cell: how fast clusters get
+/// back to a fresh pushed VCC after an outage opens, how deep into the
+/// degradation ladder the faults pushed them, and how much of the clean
+/// twin's carbon savings survived.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveryReport {
+    /// Mean days from outage start to the next fresh safety-checked VCC
+    /// (closed episodes only; 0 when none closed).
+    pub mean_days_to_fresh: f64,
+    /// Worst closed episode (days).
+    pub max_days_to_fresh: usize,
+    /// Clusters still inside an open outage when the run ended.
+    pub unrecovered: usize,
+    /// Mean degradation-ladder depth over hard fallback events in the
+    /// window (patched-curve 1 … unshaped 4; 0 with no hard events).
+    pub mean_outage_depth: f64,
+    pub max_outage_depth: usize,
+    /// `100 * saved% / twin saved%` — the fraction of the zero-fault
+    /// twin's carbon savings this cell retained under faults. `None`
+    /// without a twin, or when the twin saved nothing to retain.
+    pub retention_pct: Option<f64>,
+}
+
+impl RecoveryReport {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("mean_days_to_fresh", Json::Num(round(self.mean_days_to_fresh, 4))),
+            ("max_days_to_fresh", Json::Num(self.max_days_to_fresh as f64)),
+            ("unrecovered", Json::Num(self.unrecovered as f64)),
+            ("mean_outage_depth", Json::Num(round(self.mean_outage_depth, 4))),
+            ("max_outage_depth", Json::Num(self.max_outage_depth as f64)),
+        ];
+        if let Some(r) = self.retention_pct {
+            fields.push(("retention_pct", Json::Num(round(r, 4))));
         }
         Json::obj(fields)
     }
@@ -313,6 +359,38 @@ impl SweepReport {
                 }
             }
         }
+        // Recovery-quality block (only cells that opted into the
+        // hour-granular / correlated / policy features emit rows, so a
+        // PR-7-era fault report is byte-identical to its old output).
+        if self
+            .cells
+            .iter()
+            .any(|c| c.fallback.as_ref().map_or(false, |f| f.recovery.is_some()))
+        {
+            out.push('\n');
+            out.push_str(&format!(
+                "{:<28} {:>8} {:>7} {:>7} {:>9} {:>9} {:>9}\n",
+                "cell (recovery)", "mean-d", "max-d", "open", "depth-mn", "depth-mx", "retain%"
+            ));
+            out.push_str(&format!("{}\n", "-".repeat(95)));
+            for c in &self.cells {
+                if let Some(rec) = c.fallback.as_ref().and_then(|f| f.recovery.as_ref()) {
+                    let retain = rec
+                        .retention_pct
+                        .map(|r| format!("{r:>8.1}%"))
+                        .unwrap_or_else(|| format!("{:>9}", "n/a"));
+                    out.push_str(&format!(
+                        "{:<28} {:>8.2} {:>7} {:>7} {:>9.2} {:>9} {retain}\n",
+                        c.label,
+                        rec.mean_days_to_fresh,
+                        rec.max_days_to_fresh,
+                        rec.unrecovered,
+                        rec.mean_outage_depth,
+                        rec.max_outage_depth,
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -443,6 +521,7 @@ mod tests {
                 ("feed-outage->stale-vcc".into(), 3),
             ],
             savings_delta_pct: Some(-1.25),
+            recovery: None,
         });
         let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.0), faulted]);
         let json = rep.to_json().to_string();
@@ -459,6 +538,57 @@ mod tests {
         assert!(table.contains("fb-rate%"));
         assert!(table.contains("feed-outage->stale-vcc:3"));
         assert!(table.contains("12.50%"));
+    }
+
+    #[test]
+    fn recovery_columns_only_appear_for_incident_cells() {
+        // a PR-7-era faulted cell (day-granular, conservative) carries
+        // fallback columns but no recovery block — exact old bytes
+        let mut faulted = toy_cell(0, 2.0);
+        faulted.faults = "chaos".into();
+        faulted.fallback = Some(FallbackCellReport {
+            fallback_rate: 0.1,
+            causes: vec![("feed-outage->stale-vcc".into(), 1)],
+            savings_delta_pct: Some(-0.5),
+            recovery: None,
+        });
+        let plain = SweepReport::new(25, 10, vec![faulted.clone()]);
+        assert!(!plain.to_json().to_string().contains("\"recovery\""));
+        assert!(!plain.ascii_table().contains("recovery"));
+
+        let mut incident = toy_cell(1, 1.0);
+        incident.faults = "incident".into();
+        incident.fallback = Some(FallbackCellReport {
+            fallback_rate: 0.2,
+            causes: vec![("feed-outage->patched-curve".into(), 4)],
+            savings_delta_pct: Some(-1.0),
+            recovery: Some(RecoveryReport {
+                mean_days_to_fresh: 1.5,
+                max_days_to_fresh: 3,
+                unrecovered: 1,
+                mean_outage_depth: 2.25,
+                max_outage_depth: 4,
+                retention_pct: Some(66.625),
+            }),
+        });
+        let rep = SweepReport::new(25, 10, vec![faulted, incident]);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"recovery\""));
+        assert!(json.contains("\"mean_days_to_fresh\":1.5"));
+        assert!(json.contains("\"max_days_to_fresh\":3"));
+        assert!(json.contains("\"unrecovered\":1"));
+        assert!(json.contains("\"mean_outage_depth\":2.25"));
+        assert!(json.contains("\"retention_pct\":66.625"));
+        let parsed = Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("fallback").unwrap().get("recovery").is_none());
+        let rec = cells[1].get("fallback").unwrap().get("recovery").unwrap();
+        assert_eq!(rec.f64_or("mean_outage_depth", 0.0), 2.25);
+        assert_eq!(rec.f64_or("max_days_to_fresh", 0.0), 3.0);
+        let table = rep.ascii_table();
+        assert!(table.contains("recovery"));
+        assert!(table.contains("retain%"));
+        assert!(table.contains("66.6%"));
     }
 
     #[test]

@@ -18,7 +18,7 @@ const CAPACITY: usize = 4096;
 /// One recorded warning.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Event {
-    /// Stable category tag: "solver", "safety", "runtime",
+    /// Stable category tag: "solver", "safety", "runtime", "faults",
     /// "snapshot-cache", or "threadpool".
     pub category: &'static str,
     /// The human-readable message, exactly as printed to stderr.

@@ -24,6 +24,7 @@ fn preset_matrix(grid: &str) -> SweepMatrix {
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,

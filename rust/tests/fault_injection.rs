@@ -102,6 +102,7 @@ fn fault_matrix() -> SweepMatrix {
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into(), "chaos".into()],
+        policies: vec!["conservative".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,
@@ -143,6 +144,65 @@ fn fault_injected_sweep_is_byte_deterministic_across_everything() {
     );
     assert!(json.contains("\"faults\":\"chaos\""));
     assert!(json.contains("\"fallback\""));
+}
+
+/// Hour-granular correlated incidents and the fallback-policy axis obey
+/// the same byte-determinism contract as day-granular faults: worker
+/// counts, warmup-sharing modes and tick engines may not move a byte of
+/// the recovery telemetry either.
+#[test]
+fn incident_policy_sweep_is_byte_deterministic_across_everything() {
+    let mut m = fault_matrix();
+    m.flex_classes = vec!["mixed".into()];
+    m.faults = vec!["none".into(), "incident".into()];
+    m.policies = vec!["conservative".into(), "sla-aware".into()];
+    let serial = sweep::run_sweep(&m, 6, 1).unwrap();
+    let wide = sweep::run_sweep(&m, 6, 8).unwrap();
+    let json = serial.to_json().to_string();
+    assert_eq!(json, wide.to_json().to_string(), "1 vs 8 workers");
+    let (per_cell, _) = sweep::run_sweep_mode(&m, 6, 3, WarmupSharing::PerCell).unwrap();
+    assert_eq!(json, per_cell.to_json().to_string(), "fork vs per-cell warmup");
+    let (legacy, _) =
+        sweep::run_sweep_engine(&m, 6, 2, WarmupSharing::Fork, SimEngine::Legacy).unwrap();
+    assert_eq!(json, legacy.to_json().to_string(), "event vs legacy engine");
+
+    // expansion order is faults outer, policies inner: clean conservative,
+    // clean sla-aware, incident conservative, incident sla-aware
+    assert_eq!(serial.cells.len(), 4);
+    for cell in &serial.cells[..2] {
+        assert_eq!(cell.faults, "none");
+        assert!(cell.fallback.is_none(), "clean cells must not grow fault columns");
+    }
+    for cell in &serial.cells[2..] {
+        assert_eq!(cell.faults, "incident");
+        let fb = cell.fallback.as_ref().expect("incident cells report fallback telemetry");
+        assert!(fb.fallback_rate > 0.0, "the incident preset must trip the ladder");
+        let rec = fb.recovery.as_ref().expect("incident cells report recovery quality");
+        assert!(rec.max_outage_depth <= 4, "depth beyond the ladder");
+    }
+    // the sla-aware variant is its own physical scenario
+    assert_ne!(serial.cells[2].seed, serial.cells[3].seed);
+    assert!(serial.cells[3].label.contains("sla-aware"), "label {}", serial.cells[3].label);
+    assert!(json.contains("\"recovery\""));
+    assert!(json.contains("\"mean_days_to_fresh\""));
+}
+
+/// The conservative policy is the byte-pinned default: on a day-granular
+/// chaos sweep it adds no label tag, no JSON keys and no recovery block —
+/// exactly the pre-policy report document — and spelling it out (in any
+/// case, with stray whitespace) changes nothing.
+#[test]
+fn conservative_policy_on_day_granular_faults_keeps_old_bytes() {
+    let m = fault_matrix();
+    let rep = sweep::run_sweep(&m, 6, 2).unwrap();
+    let json = rep.to_json().to_string();
+    assert!(!json.contains("conservative"), "default policy leaves no trace in the report");
+    assert!(!json.contains("\"recovery\""));
+    assert!(!rep.ascii_table().contains("recovery"));
+    let mut explicit = fault_matrix();
+    explicit.policies = vec![" Conservative".into()];
+    let rerun = sweep::run_sweep(&explicit, 6, 2).unwrap();
+    assert_eq!(json, rerun.to_json().to_string(), "explicit default must be invisible");
 }
 
 /// The zero-fault default is byte-compatible with the pre-fault report

@@ -210,6 +210,7 @@ fn quickish_matrix() -> SweepMatrix {
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into(), "mixed".into()],
         faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,

@@ -18,6 +18,7 @@ fn small_matrix() -> SweepMatrix {
         flex_shares: vec![1.0],
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,
