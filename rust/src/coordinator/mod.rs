@@ -196,7 +196,11 @@ impl SimSnapshot {
     /// the byte format of the persistent snapshot cache. The encoding is
     /// canonical: `SimSnapshot::from_bytes(s.to_bytes())` round-trips to
     /// the exact same bytes, and a resumed simulation cannot tell whether
-    /// its snapshot came from memory or from disk.
+    /// its snapshot came from memory or from disk. Large fleets encode
+    /// their per-cluster scheduler sections in parallel (see
+    /// [`crate::util::binio::write_seq_parallel`]); the bytes — and so
+    /// the envelope checksum and the cache's content addresses — are
+    /// identical for every thread count.
     pub fn to_bytes(&self) -> Vec<u8> {
         crate::util::binio::envelope(Self::STATE_VERSION, &crate::util::binio::to_payload(self))
     }
@@ -217,7 +221,15 @@ impl crate::util::binio::Bin for SimSnapshot {
         self.fleet.write(w);
         self.zones.write(w);
         self.workloads.write(w);
-        self.schedulers.write(w);
+        // The schedulers carry the fleet's job slabs — by far the widest
+        // section of a large snapshot — so their per-cluster encodings
+        // fan out over worker threads. Byte-identical to a serial
+        // `Vec::write` by construction (order-preserving concatenation).
+        crate::util::binio::write_seq_parallel(
+            w,
+            &self.schedulers,
+            crate::util::threadpool::ThreadPool::default_size(),
+        );
         self.forecasters.write(w);
         self.slo_guard.write(w);
         self.slo_states.write(w);

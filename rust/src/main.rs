@@ -378,8 +378,9 @@ fn parse_list<T>(flag: &str, raw: &str, parse: impl Fn(&str) -> Option<T>) -> Re
 /// `--no-cache` wins over all of them. The budget bounds the directory
 /// (default 1024 MB); the default directory is `<out>/cache` (i.e.
 /// `reports/cache`). Cached and uncached runs emit byte-identical
-/// reports — the cache only skips redundant warmup simulation
-/// (README §sweep).
+/// reports — the cache only skips redundant simulation: warmups, and
+/// unchanged cells' whole measured windows (`--no-replay` turns the
+/// latter off, re-simulating and re-storing every cell; README §sweep).
 fn open_cache(args: &Args, out: &str) -> Result<Option<cics::sweep::SnapshotCache>> {
     let requested = args.has("cache") || args.has("cache-dir") || args.has("cache-budget-mb");
     if args.has("no-cache") || !requested {
@@ -391,21 +392,29 @@ fn open_cache(args: &Args, out: &str) -> Result<Option<cics::sweep::SnapshotCach
     };
     let disk_budget = args.usize("cache-budget-mb", 1024) as u64 * 1024 * 1024;
     let mem_budget = cics::sweep::cache::DEFAULT_MEM_BUDGET;
-    Ok(Some(cics::sweep::SnapshotCache::open(&dir, disk_budget, mem_budget)?))
+    let mut cache = cics::sweep::SnapshotCache::open(&dir, disk_budget, mem_budget)?;
+    if args.has("no-replay") {
+        cache.disable_replay();
+    }
+    Ok(Some(cache))
 }
 
 /// One-line summary of a run's cache traffic.
 fn cache_summary(c: &cics::sweep::CacheStats) -> String {
     format!(
-        "cache: {} hits / {} incremental / {} misses ({} requests, {:.0}% hit rate), \
+        "cache: {} cells replayed / {} simulated ({:.0}% replay rate); warmups: \
+         {} hits / {} incremental / {} misses ({} requests, {:.0}% hit rate), \
          {:.1} MiB written, {:.1} MiB read",
+        c.cells_replayed,
+        c.cells_simulated,
+        100.0 * c.replay_rate(),
         c.hits,
         c.partial_hits,
         c.misses,
         c.requests,
         100.0 * c.hit_rate(),
-        c.bytes_written as f64 / (1024.0 * 1024.0),
-        c.bytes_read as f64 / (1024.0 * 1024.0),
+        (c.bytes_written + c.result_bytes_written) as f64 / (1024.0 * 1024.0),
+        (c.bytes_read + c.result_bytes_read) as f64 / (1024.0 * 1024.0),
     )
 }
 
@@ -589,6 +598,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let assert_replay_rate: Option<f64> = match args.get("assert-replay-rate") {
+        Some(s) => {
+            cics::ensure!(cache.is_some(), "--assert-replay-rate requires --cache");
+            Some(s.parse().map_err(|_| cics::err!("--assert-replay-rate: cannot parse {s:?}"))?)
+        }
+        None => None,
+    };
 
     println!(
         "cics bench: {} cells, {} warmup + {} measured days, {} worker threads, {} engine{}",
@@ -658,15 +674,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 ("partial_hits", Json::Num(s.partial_hits as f64)),
                 ("misses", Json::Num(s.misses as f64)),
                 ("hit_rate", Json::Num(s.hit_rate())),
-                ("bytes_written", Json::Num(s.bytes_written as f64)),
-                ("bytes_read", Json::Num(s.bytes_read as f64)),
+                ("cells_replayed", Json::Num(s.cells_replayed as f64)),
+                ("cells_simulated", Json::Num(s.cells_simulated as f64)),
+                ("result_replay_rate", Json::Num(s.replay_rate())),
+                ("bytes_written", Json::Num((s.bytes_written + s.result_bytes_written) as f64)),
+                ("bytes_read", Json::Num((s.bytes_read + s.result_bytes_read) as f64)),
                 ("entries_on_disk", Json::Num(c.entry_count() as f64)),
+                ("results_on_disk", Json::Num(c.result_count() as f64)),
                 ("disk_bytes", Json::Num(c.disk_bytes() as f64)),
             ])
         }
     };
     let doc = Json::obj(vec![
-        ("schema", Json::Str("cics-bench-sweep-v2".into())),
+        ("schema", Json::Str("cics-bench-sweep-v3".into())),
         ("cells", Json::Num(m.n_cells() as f64)),
         ("warmup_days", Json::Num(m.warmup_days as f64)),
         ("measure_days", Json::Num(days as f64)),
@@ -679,6 +699,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ("noshare_units_phase_s", Json::Num(noshare_t.units_s)),
         ("speedup", Json::Num(speedup)),
         ("reports_identical", Json::Bool(identical)),
+        // The headline throughput of the SoA per-tick core (the default
+        // event engine) — hoisted to the top level so the perf trajectory
+        // is one stable key per schema, whatever the A/B section grows.
+        ("soa_tick_cluster_days_per_s", Json::Num(tick.event_cd_per_s)),
         ("cache", cache_doc),
         (
             "tick_engine",
@@ -697,6 +721,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let path = std::path::Path::new(&out).join("BENCH_sweep.json");
     std::fs::write(&path, doc.to_string())?;
     println!("  wrote {path:?}");
+    // ...and a root-level copy so the perf trajectory lives in the repo
+    // itself (diffable across commits), not only in CI artifacts.
+    let root_copy = std::path::Path::new("BENCH_sweep.json");
+    std::fs::write(root_copy, doc.to_string())?;
+    println!("  wrote {root_copy:?}");
 
     if let Some(min) = assert_speedup {
         if speedup < min {
@@ -722,6 +751,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
             return Err(cics::err!(
                 "cache hit rate {:.0}% below required {:.0}% — \
                  the warm-cache path re-simulated warmups",
+                100.0 * rate,
+                100.0 * min
+            ));
+        }
+    }
+    if let Some(min) = assert_replay_rate {
+        let s = &fork_t.cache;
+        cics::ensure!(
+            s.cells_replayed + s.cells_simulated > 0,
+            "--assert-replay-rate: no cells went through the result cache, nothing to assert"
+        );
+        let rate = s.replay_rate();
+        if rate < min {
+            return Err(cics::err!(
+                "result-cache replay rate {:.0}% below required {:.0}% — \
+                 an unchanged matrix re-simulated measured windows",
                 100.0 * rate,
                 100.0 * min
             ));
@@ -769,11 +814,14 @@ fn main() {
                  \u{20}      |synthetic:CODE] to put every campus on that backend\n\
                  bench:  [--matrix FILE] [--quick] [--days N] [--warmup N] [--threads N]\n\
                  \u{20}      [--tick-days N] [--assert-speedup X] [--assert-hit-rate X]\n\
-                 \u{20}      [--out DIR]   (times fork vs no-share sweep paths and the\n\
-                 \u{20}      legacy-vs-event tick engines, and writes BENCH_sweep.json)\n\
+                 \u{20}      [--assert-replay-rate X] [--out DIR]   (times fork vs no-share\n\
+                 \u{20}      sweep paths and the legacy-vs-event tick engines, and writes\n\
+                 \u{20}      BENCH_sweep.json to <out>/ and the repo root)\n\
                  cache:  sweep/bench take [--cache] [--cache-dir DIR] [--no-cache]\n\
-                 \u{20}      [--cache-budget-mb N]   (persistent cross-run warmup snapshot\n\
-                 \u{20}      cache under <out>/cache; byte-identical reports either way)"
+                 \u{20}      [--cache-budget-mb N] [--no-replay]   (persistent cross-run\n\
+                 \u{20}      cache under <out>/cache: warmup snapshots + memoized measured-\n\
+                 \u{20}      window results; byte-identical reports either way; --no-replay\n\
+                 \u{20}      re-simulates cells but keeps refreshing stored results)"
             );
             Ok(())
         }

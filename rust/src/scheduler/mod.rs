@@ -463,6 +463,10 @@ impl ClusterScheduler {
         // scheduler and the day-local structures independently.
         let mut s = std::mem::take(&mut self.scratch);
         s.clear(); // defensive: a caller panic mid-day must not leak state
+        // (0) pre-size day-local buffers from previous days' high-water
+        //     marks — a no-op once warm, a single up-front grow after a
+        //     fork (whose cloned-empty buffers carry no capacity)
+        s.reserve_for_day();
         // (1) all of today's arrivals, bucketed by tick — bit-identical
         //     to the per-tick draws, ids consumed in tick order
         model.pregenerate_day(day, flex_scale, &mut self.next_job_id, &mut s.arrivals);
@@ -480,11 +484,9 @@ impl ClusterScheduler {
         // Compact survivors (in admission order) back into the canonical
         // running set and restore the watermark the legacy engine keeps.
         debug_assert!(self.running.is_empty());
-        for slot in s.active.drain(..) {
-            if slot.alive {
-                self.running.push((slot.end, slot.job));
-            }
-        }
+        s.hw_slots = s.hw_slots.max(s.slots.len());
+        s.hw_arrivals = s.hw_arrivals.max(s.arrivals.len());
+        s.slots.drain_survivors_into(&mut self.running);
         self.next_completion =
             self.running.iter().map(|(end, _)| *end).min().unwrap_or(usize::MAX);
         s.clear();
@@ -546,7 +548,7 @@ impl ClusterScheduler {
                     break;
                 }
                 s.heap.pop();
-                if s.active[idx].alive {
+                if s.slots.alive[idx] {
                     s.completing.push(idx);
                 }
             }
@@ -558,13 +560,17 @@ impl ClusterScheduler {
                 s.completing.sort_unstable();
                 let (mut freed_resv, mut freed_usage) = (0.0, 0.0);
                 self.freed_class.iter_mut().for_each(|v| *v = 0.0);
+                // SoA payoff: the batch fold reads three packed numeric
+                // columns (resv/demand/class) and never touches a
+                // `FlexJob`.
                 for &idx in &s.completing {
-                    let slot = &mut s.active[idx];
-                    slot.alive = false;
-                    freed_resv += slot.job.reservation_gcu;
-                    freed_usage += slot.job.demand_gcu;
-                    self.freed_class[slot.job.class] += slot.job.demand_gcu;
-                    outcome.classes[slot.job.class].jobs_completed += 1;
+                    s.slots.alive[idx] = false;
+                    let demand = s.slots.demand[idx];
+                    let class = s.slots.class[idx];
+                    freed_resv += s.slots.resv[idx];
+                    freed_usage += demand;
+                    self.freed_class[class] += demand;
+                    outcome.classes[class].jobs_completed += 1;
                 }
                 let completed = s.completing.len();
                 outcome.jobs_completed += completed;
@@ -590,10 +596,9 @@ impl ClusterScheduler {
         //    legacy path's watermark refresh.
         while resv_if + self.run_resv > cap_now && s.alive > 0 {
             let idx = s.pop_youngest_alive();
-            let slot = &mut s.active[idx];
-            slot.alive = false;
-            let end = slot.end;
-            let mut j = slot.job.clone();
+            s.slots.alive[idx] = false;
+            let end = s.slots.end[idx];
+            let mut j = s.slots.job[idx].clone();
             s.alive -= 1;
             debug_assert!(end > now, "paused job already past its end tick");
             j.remaining_ticks = (end - now).max(1);
@@ -605,12 +610,23 @@ impl ClusterScheduler {
             self.queue.push_front(j);
         }
 
+        // 4b. Compact the heap's lazy-deletion garbage once dead entries
+        //     outnumber alive ones (every alive slot holds exactly one
+        //     heap entry, so dead-in-heap == heap.len() - alive). Safe
+        //     for byte-equality: dead entries only ever produce spurious
+        //     wakes, which are byte-neutral, and `Reverse<(end, idx)>`
+        //     is a total order, so the rebuilt heap pops in the exact
+        //     same sequence regardless of internal arrangement.
+        if s.heap.len() > 2 * s.alive {
+            s.compact_heap();
+        }
+
         // 5. Admission: the shared EDF head-of-line pass, with the
         //    per-candidate hour-range min replaced by an O(1) range-min
         //    table lookup.
         {
             let ClusterScheduler { queue, run_resv, run_usage, run_usage_class, .. } = self;
-            let DayScratch { active, heap, order, alive, range_min, .. } = &mut *s;
+            let DayScratch { slots, heap, order, alive, range_min, .. } = &mut *s;
             admission_pass(
                 queue,
                 &model.classes,
@@ -627,7 +643,7 @@ impl ClusterScheduler {
                     let (first, last) = cap_hour_span(t, j.remaining_ticks);
                     range_min[first][last - first]
                 },
-                |end, job| scratch_admit(active, heap, order, alive, end, job),
+                |end, job| scratch_admit(slots, heap, order, alive, end, job),
             );
         }
 
@@ -808,27 +824,111 @@ fn admission_pass(
     }
 }
 
-/// One entry of the event engine's day-local running set. Slots are
-/// append-only within a day (index order == admission order); pauses and
-/// completions mark them dead instead of removing them.
-#[derive(Clone, Debug)]
-struct ActiveSlot {
-    end: usize,
-    alive: bool,
-    job: FlexJob,
+/// The event engine's day-local job slab in structure-of-arrays form.
+/// One logical slot per admitted (or carried-over) job; slots are
+/// append-only within a day (index order == admission order) and pauses/
+/// completions mark them dead instead of removing them, so every column
+/// stays index-aligned all day.
+///
+/// SoA instead of a `Vec<ActiveSlot>` because the tick core's hot
+/// accesses — the completion batch folding freed reservation/usage, the
+/// throttle walking ends, the alive checks behind lazy deletion — each
+/// touch exactly one narrow attribute of many slots. Split into parallel
+/// `Vec`s, those loops stream over densely packed `f64`/`usize` columns
+/// (cache-line-efficient and auto-vectorizable) instead of striding
+/// through whole `FlexJob`s; the wide `job` column is only dereferenced
+/// at the day boundary and when a pause must reconstruct the queued job.
+/// Byte-equality with the legacy AoS core is pinned by the engine-
+/// equivalence tests (`event_engine_matches_legacy_byte_for_byte`,
+/// `tests/engine_equivalence.rs`) — the layout changes, the fold orders
+/// do not.
+#[derive(Clone, Debug, Default)]
+struct SlotSoa {
+    /// Absolute completion tick per slot.
+    end: Vec<usize>,
+    /// Lazy-deletion flag per slot.
+    alive: Vec<bool>,
+    /// Reservation (admission-cap currency) per slot.
+    resv: Vec<f64>,
+    /// Demand (machine-usage currency) per slot.
+    demand: Vec<f64>,
+    /// Workload-class id per slot (per-class accumulator index).
+    class: Vec<usize>,
+    /// The job itself — cold: read only on pause and at end of day.
+    job: Vec<FlexJob>,
+}
+
+impl SlotSoa {
+    /// Append a slot; returns its index (== admission order).
+    fn push(&mut self, end: usize, job: FlexJob) -> usize {
+        let idx = self.job.len();
+        self.end.push(end);
+        self.alive.push(true);
+        self.resv.push(job.reservation_gcu);
+        self.demand.push(job.demand_gcu);
+        self.class.push(job.class);
+        self.job.push(job);
+        idx
+    }
+
+    fn len(&self) -> usize {
+        self.job.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.job.is_empty()
+    }
+
+    /// Drain the survivors back into the canonical admission-ordered
+    /// running set (end of day), keeping column capacity for reuse.
+    fn drain_survivors_into(&mut self, running: &mut Vec<(usize, FlexJob)>) {
+        for (idx, job) in self.job.drain(..).enumerate() {
+            if self.alive[idx] {
+                running.push((self.end[idx], job));
+            }
+        }
+        self.end.clear();
+        self.alive.clear();
+        self.resv.clear();
+        self.demand.clear();
+        self.class.clear();
+    }
+
+    /// Pre-size every column (the wide `job` column included — it is
+    /// cold to *read*, but admissions append to it all day).
+    fn reserve(&mut self, n: usize) {
+        self.end.reserve(n);
+        self.alive.reserve(n);
+        self.resv.reserve(n);
+        self.demand.reserve(n);
+        self.class.reserve(n);
+        self.job.reserve(n);
+    }
+
+    fn clear(&mut self) {
+        self.end.clear();
+        self.alive.clear();
+        self.resv.clear();
+        self.demand.clear();
+        self.class.clear();
+        self.job.clear();
+    }
 }
 
 /// The event engine's reusable day-local structures. Everything here is
 /// rebuilt from the scheduler's canonical state at the start of a day and
 /// emptied again at the end, so snapshots/forks never see it mid-flight;
 /// buffers keep their capacity across days, making the steady-state tick
-/// loop allocation-free.
+/// loop allocation-free. A *forked* scheduler starts from cloned-empty
+/// buffers with no capacity, so the high-water marks below (plain
+/// counters, which clones keep) let its first day pre-size everything in
+/// one shot instead of regrowing through the morning.
 #[derive(Clone, Debug, Default)]
 struct DayScratch {
     /// Today's pregenerated arrivals, bucketed by tick.
     arrivals: DayArrivals,
-    /// Day-local running set, in admission order (lazy deletion).
-    active: Vec<ActiveSlot>,
+    /// Day-local running set, in admission order (SoA, lazy deletion).
+    slots: SlotSoa,
     /// Min-heap of (end tick, slot index); dead slots are skipped when
     /// they surface.
     heap: BinaryHeap<Reverse<(usize, usize)>>,
@@ -839,6 +939,12 @@ struct DayScratch {
     completing: Vec<usize>,
     /// Alive slot count (mirrors the legacy `running.len()`).
     alive: usize,
+    /// High-water marks of previous days: total slots and pregenerated
+    /// arrivals. Perf hints only (they size buffers, never results), so
+    /// their absence from snapshots is harmless — a decoded scheduler
+    /// just regrows once.
+    hw_slots: usize,
+    hw_arrivals: usize,
     /// Per-hour admission cap: `min(VCC(h), machine capacity)`.
     cap_row: [f64; HOURS_PER_DAY],
     /// `range_min[h][k]` = fold-min of `cap_row[h..=h+k]` (clamped to the
@@ -874,9 +980,9 @@ impl DayScratch {
     /// Move the canonical admission-ordered running set into the
     /// day-local structures (start of day).
     fn load_running(&mut self, running: &mut Vec<(usize, FlexJob)>) {
-        debug_assert!(self.active.is_empty() && self.heap.is_empty() && self.order.is_empty());
+        debug_assert!(self.slots.is_empty() && self.heap.is_empty() && self.order.is_empty());
         for (end, job) in running.drain(..) {
-            scratch_admit(&mut self.active, &mut self.heap, &mut self.order, &mut self.alive, end, job);
+            scratch_admit(&mut self.slots, &mut self.heap, &mut self.order, &mut self.alive, end, job);
         }
     }
 
@@ -886,16 +992,38 @@ impl DayScratch {
     fn pop_youngest_alive(&mut self) -> usize {
         loop {
             let idx = self.order.pop().expect("an alive slot exists below dead stack entries");
-            if self.active[idx].alive {
+            if self.slots.alive[idx] {
                 return idx;
             }
         }
     }
 
-    /// Empty every day-local buffer, keeping capacity for reuse.
+    /// Rebuild the completion heap from its alive entries only. Pop
+    /// order is unchanged — `Reverse<(end, idx)>` is a total order over
+    /// unique entries — and the dead entries dropped here could only
+    /// ever have produced byte-neutral spurious wakes.
+    fn compact_heap(&mut self) {
+        let mut entries = std::mem::take(&mut self.heap).into_vec();
+        let alive = &self.slots.alive;
+        entries.retain(|&Reverse((_, idx))| alive[idx]);
+        self.heap = BinaryHeap::from(entries);
+    }
+
+    /// Pre-size the day-local buffers from previous days' high-water
+    /// marks so a freshly forked scheduler grows them once, up front,
+    /// instead of repeatedly mid-day. No-op on warm buffers.
+    fn reserve_for_day(&mut self) {
+        self.arrivals.reserve(self.hw_arrivals);
+        self.slots.reserve(self.hw_slots);
+        self.heap.reserve(self.hw_slots);
+        self.order.reserve(self.hw_slots);
+    }
+
+    /// Empty every day-local buffer, keeping capacity (and high-water
+    /// marks) for reuse.
     fn clear(&mut self) {
         self.arrivals.clear();
-        self.active.clear();
+        self.slots.clear();
         self.heap.clear();
         self.order.clear();
         self.completing.clear();
@@ -909,15 +1037,14 @@ impl DayScratch {
 /// inserting — used by both [`DayScratch::load_running`] and the
 /// `tick_event` admission closure.
 fn scratch_admit(
-    active: &mut Vec<ActiveSlot>,
+    slots: &mut SlotSoa,
     heap: &mut BinaryHeap<Reverse<(usize, usize)>>,
     order: &mut Vec<usize>,
     alive: &mut usize,
     end: usize,
     job: FlexJob,
 ) {
-    let idx = active.len();
-    active.push(ActiveSlot { end, alive: true, job });
+    let idx = slots.push(end, job);
     order.push(idx);
     heap.push(Reverse((end, idx)));
     *alive += 1;
@@ -1521,5 +1648,58 @@ mod tests {
                 resv[h]
             );
         }
+    }
+
+    #[test]
+    fn heap_compaction_is_pop_order_neutral() {
+        // Fill a scratch with staggered-end slots, kill most of them the
+        // way pauses do, and compact: the heap must shed exactly the
+        // dead entries while the survivors pop in the same (end, idx)
+        // order the uncompacted heap would have produced.
+        let mut s = DayScratch::default();
+        for i in 0..16u64 {
+            let job = FlexJob::new(i, 0, 0, 10.0, 12.0, 12, SimTime::new(0, 0), None);
+            let end = 100 + (i as usize % 5) * 7;
+            scratch_admit(&mut s.slots, &mut s.heap, &mut s.order, &mut s.alive, end, job);
+        }
+        while s.alive > 3 {
+            let idx = s.pop_youngest_alive();
+            s.slots.alive[idx] = false;
+            s.alive -= 1;
+        }
+        let mut expected: Vec<(usize, usize)> = s
+            .slots
+            .alive
+            .iter()
+            .enumerate()
+            .filter(|&(_, &a)| a)
+            .map(|(idx, _)| (s.slots.end[idx], idx))
+            .collect();
+        expected.sort_unstable();
+        assert!(s.heap.len() > 2 * s.alive, "scenario must cross the compaction threshold");
+        s.compact_heap();
+        assert_eq!(s.heap.len(), s.alive, "compaction keeps exactly the alive entries");
+        let mut popped = Vec::new();
+        while let Some(Reverse(e)) = s.heap.pop() {
+            popped.push(e);
+        }
+        assert_eq!(popped, expected, "pop order must be unchanged by compaction");
+    }
+
+    #[test]
+    fn high_water_marks_grow_and_scratch_empties_at_day_boundary() {
+        let (fleet, models) = setup();
+        let c = &fleet.clusters[0];
+        let mut s = ClusterScheduler::new(c.id);
+        let mut rec = ClusterDayRecord::new(c, 0);
+        let mut out = DayOutcome::default();
+        s.run_day(c, &models[0], None, 0, &mut rec, &mut out, 1.0, SimEngine::Event);
+        s.end_day(&mut out);
+        assert!(s.scratch.hw_slots > 0, "a busy day must record a slot high-water mark");
+        assert!(s.scratch.hw_arrivals > 0, "a busy day must record an arrivals high-water mark");
+        assert!(
+            s.scratch.slots.is_empty() && s.scratch.heap.is_empty(),
+            "scratch must be empty at the day boundary"
+        );
     }
 }

@@ -31,13 +31,36 @@
 //! likewise detected (checksum), evicted and re-simulated — the cache
 //! can only ever cost a warmup, never wrong results.
 //!
+//! **Measured-window result memoization.** Warmups are only half the
+//! bill: an unchanged cell's *measured window* is just as deterministic,
+//! so the cache also memoizes full [`CellReport`]s. A result entry is
+//! addressed by `(FNV-1a-64 of the cell's full config encoding + variant
+//! fingerprint, warmup days, measure days)` — the full config this time
+//! (`use_artifact` varies per solver variant and changes measured
+//! windows), plus a fingerprint covering the execution knobs that live
+//! outside the config (solver choice, spatial shifting). Re-running an
+//! edited matrix replays unchanged cells' reports from disk byte-
+//! identically and simulates only the changed cells; a scenario group
+//! whose every member replays skips its warmup too. Reports are stored
+//! *before* the cross-cell twin post-pass (`savings_delta_pct` /
+//! `retention_pct` are filled deterministically over the assembled
+//! report, cached and fresh cells alike), so replay composes with any
+//! matrix edit. Safety mirrors the snapshot path: a post-decode
+//! key-equality guard catches hash collisions, corrupt entries are
+//! evicted and re-simulated, and the envelope version ties entries to
+//! both the result layout and [`SimSnapshot::STATE_VERSION`] — any
+//! simulation-semantics change invalidates them wholesale.
+//!
 //! **Budgets.** Decoded snapshots are kept in an in-process LRU so a
 //! sweep re-forking the same scenario never re-reads disk; when their
 //! total (encoded-size) footprint exceeds the memory budget, the least
 //! recently used are dropped — they *spill to disk*, whence they reload
 //! on demand. The directory itself is bounded by a disk budget with the
-//! same LRU policy (tracked in `cache_index.json`; the file is advisory —
-//! if it is lost, entries survive with reset recency).
+//! same LRU policy shared across snapshot and result entries (tracked in
+//! `cache_index.json`; the file is advisory — if it is lost, entries
+//! survive with reset recency). Results skip the memory LRU: a
+//! `CellReport` is a few hundred bytes and decodes in microseconds — the
+//! win is skipping the simulation, not the read.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -46,7 +69,8 @@ use std::sync::{Arc, Mutex};
 use crate::config::ScenarioConfig;
 use crate::coordinator::{SimOptions, SimSnapshot, Simulation, SolverBackend};
 use crate::scheduler::SimEngine;
-use crate::util::binio::{fnv1a64, to_payload};
+use crate::sweep::report::CellReport;
+use crate::util::binio::{envelope, fnv1a64, open_envelope, to_payload, Bin, BinReader, BinWriter};
 use crate::util::error::Result;
 use crate::util::json::Json;
 
@@ -72,9 +96,19 @@ pub struct CacheStats {
     pub partial_hits: u64,
     /// Full misses — warmup simulated from day 0.
     pub misses: u64,
-    /// Envelope bytes written to / read from disk.
+    /// Envelope bytes written to / read from disk (warmup snapshots; the
+    /// measured-window result traffic has its own counters below so the
+    /// warmup accounting stays exactly what it always was).
     pub bytes_written: u64,
     pub bytes_read: u64,
+    /// Sweep cells whose measured-window `CellReport` was replayed from
+    /// a memoized result entry — no simulation at all.
+    pub cells_replayed: u64,
+    /// Sweep cells simulated (and their fresh results stored).
+    pub cells_simulated: u64,
+    /// Envelope bytes written to / read from disk for result entries.
+    pub result_bytes_written: u64,
+    pub result_bytes_read: u64,
 }
 
 impl CacheStats {
@@ -89,6 +123,19 @@ impl CacheStats {
         }
     }
 
+    /// Fraction of sweep cells served by replaying a memoized measured
+    /// window. 0.0 when no cells went through the cache at all — an idle
+    /// result cache must not read as replaying perfectly
+    /// (`--assert-replay-rate` separately rejects zero-cell runs).
+    pub fn replay_rate(&self) -> f64 {
+        let total = self.cells_replayed + self.cells_simulated;
+        if total == 0 {
+            0.0
+        } else {
+            self.cells_replayed as f64 / total as f64
+        }
+    }
+
     /// Counter delta `self - earlier` (both from the same cache).
     pub fn minus(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
@@ -98,16 +145,30 @@ impl CacheStats {
             misses: self.misses - earlier.misses,
             bytes_written: self.bytes_written - earlier.bytes_written,
             bytes_read: self.bytes_read - earlier.bytes_read,
+            cells_replayed: self.cells_replayed - earlier.cells_replayed,
+            cells_simulated: self.cells_simulated - earlier.cells_simulated,
+            result_bytes_written: self.result_bytes_written - earlier.result_bytes_written,
+            result_bytes_read: self.result_bytes_read - earlier.result_bytes_read,
         }
     }
 }
 
-/// One on-disk entry.
+/// One on-disk warmup-snapshot entry.
 #[derive(Clone, Debug)]
 struct Entry {
     file: String,
     hash: u64,
     warmup: usize,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// One on-disk measured-window result entry. The lookup key is encoded
+/// in the file name (the loader derives it and reads directly), so the
+/// row only carries what the shared LRU accounting needs.
+#[derive(Clone, Debug)]
+struct ResultEntry {
+    file: String,
     bytes: u64,
     last_used: u64,
 }
@@ -119,6 +180,7 @@ struct Entry {
 struct Inner {
     counter: u64,
     entries: Vec<Entry>,
+    results: Vec<ResultEntry>,
     /// Decoded-snapshot LRU, each resident tagged with the encoded size
     /// it was admitted at. `Arc` so the lock only ever guards pointer
     /// clones and bookkeeping — deep snapshot clones (multi-MB telemetry
@@ -138,6 +200,10 @@ pub struct SnapshotCache {
     dir: PathBuf,
     disk_budget: u64,
     mem_budget: u64,
+    /// Measured-window replay switch (`--no-replay` clears it): when off,
+    /// existing result entries are ignored and every cell re-simulates —
+    /// fresh results are still stored, refreshing the entries in place.
+    replay: bool,
     inner: Mutex<Inner>,
 }
 
@@ -154,6 +220,41 @@ fn parse_entry_file(name: &str) -> Option<(u64, usize)> {
     let rest = name.strip_prefix("snap-")?.strip_suffix(".bin")?;
     let (hash_hex, w) = rest.split_once("-w")?;
     Some((u64::from_str_radix(hash_hex, 16).ok()?, w.parse().ok()?))
+}
+
+/// File name of a measured-window result entry: key hash + the full
+/// `(warmup, measure)` window it was measured over.
+fn result_file(hash: u64, warmup: usize, measure: usize) -> String {
+    format!("cell-{hash:016x}-w{warmup}-m{measure}.bin")
+}
+
+/// Parse `cell-<hash>-w<W>-m<M>.bin` back into `(hash, warmup, measure)`.
+fn parse_result_file(name: &str) -> Option<(u64, usize, usize)> {
+    let rest = name.strip_prefix("cell-")?.strip_suffix(".bin")?;
+    let (hash_hex, rest) = rest.split_once("-w")?;
+    let (w, m) = rest.split_once("-m")?;
+    Some((u64::from_str_radix(hash_hex, 16).ok()?, w.parse().ok()?, m.parse().ok()?))
+}
+
+/// Envelope version of result entries: the result-layout revision in the
+/// high half, [`SimSnapshot::STATE_VERSION`] in the low half. Bumping
+/// either — a `CellReport` encoding change, or any simulation-semantics
+/// change that bumps the snapshot version — turns every stored measured
+/// window into a clean decode failure, i.e. a re-simulated cell.
+const RESULT_VERSION: u32 = (1 << 16) | SimSnapshot::STATE_VERSION;
+
+/// Canonical key bytes of a measured-window result: the cell's *full*
+/// config encoding — NOT the warmup-normalized one; `use_artifact`
+/// varies per solver variant and changes measured windows — followed by
+/// the variant fingerprint covering the execution knobs applied at fork
+/// time rather than through the config (solver choice, spatial
+/// shifting). Engines and warmup-sharing modes are byte-equivalent by
+/// contract, so neither belongs in the key.
+fn result_key_bytes(cfg: &ScenarioConfig, fingerprint: &str) -> Vec<u8> {
+    let mut w = BinWriter::new();
+    cfg.write(&mut w);
+    w.put_str(fingerprint);
+    w.into_bytes()
 }
 
 const INDEX_FILE: &str = "cache_index.json";
@@ -183,11 +284,16 @@ impl SnapshotCache {
                 let bytes = f.metadata().map(|m| m.len()).unwrap_or(0);
                 let last_used = recency.get(&name).copied().unwrap_or(0);
                 inner.entries.push(Entry { file: name, hash, warmup, bytes, last_used });
-            } else if name.contains(".bin.tmp.") {
-                // publish-in-progress file: invisible to the index and the
-                // disk budget. Sweep it only once it is clearly stale — a
-                // fresh one may belong to a concurrently publishing run
-                // (whose store degrades to a warning if we race it anyway).
+            } else if parse_result_file(&name).is_some() {
+                let bytes = f.metadata().map(|m| m.len()).unwrap_or(0);
+                let last_used = recency.get(&name).copied().unwrap_or(0);
+                inner.results.push(ResultEntry { file: name, bytes, last_used });
+            } else if name.contains(".tmp.") {
+                // publish-in-progress file (entry or index): invisible to
+                // the index and the disk budget. Sweep it only once it is
+                // clearly stale — a fresh one may belong to a concurrently
+                // publishing run (whose store degrades to a warning if we
+                // race it anyway).
                 let stale = f
                     .metadata()
                     .and_then(|m| m.modified())
@@ -202,28 +308,19 @@ impl SnapshotCache {
         // Enforce the disk budget up front: a lowered budget, or runs
         // that only ever hit (store() is where eviction otherwise runs),
         // must still trim the directory. Keeps the most recently used
-        // entries; a single over-budget entry stays usable.
+        // entries across both kinds; a single over-budget entry stays
+        // usable.
         let mut trimmed = false;
-        loop {
-            let total: u64 = inner.entries.iter().map(|e| e.bytes).sum();
-            if total <= disk_budget || inner.entries.len() <= 1 {
+        while disk_total(&inner) > disk_budget && inner.entries.len() + inner.results.len() > 1 {
+            if !evict_lru(&dir, &mut inner, "") {
                 break;
             }
-            let i = inner
-                .entries
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(i, _)| i)
-                .expect("entries checked non-empty");
-            let e = inner.entries.remove(i);
-            let _ = std::fs::remove_file(dir.join(&e.file));
             trimmed = true;
         }
         if trimmed {
             write_index(&dir, &inner);
         }
-        Ok(SnapshotCache { dir, disk_budget, mem_budget, inner: Mutex::new(inner) })
+        Ok(SnapshotCache { dir, disk_budget, mem_budget, replay: true, inner: Mutex::new(inner) })
     }
 
     /// [`SnapshotCache::open`] with the default budgets.
@@ -240,14 +337,27 @@ impl SnapshotCache {
         self.inner.lock().unwrap().stats
     }
 
-    /// Entries currently on disk.
+    /// Warmup-snapshot entries currently on disk.
     pub fn entry_count(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
     }
 
-    /// Total encoded bytes currently on disk.
+    /// Measured-window result entries currently on disk.
+    pub fn result_count(&self) -> usize {
+        self.inner.lock().unwrap().results.len()
+    }
+
+    /// Total encoded bytes currently on disk (snapshots + results — both
+    /// kinds share the one disk budget).
     pub fn disk_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().entries.iter().map(|e| e.bytes).sum()
+        disk_total(&self.inner.lock().unwrap())
+    }
+
+    /// Disable measured-window replay (`--no-replay`): existing result
+    /// entries are ignored and every cell re-simulates; fresh results
+    /// are still stored, refreshing the entries in place.
+    pub fn disable_replay(&mut self) {
+        self.replay = false;
     }
 
     /// Produce the warmup checkpoint for `cfg`, consulting the cache:
@@ -305,6 +415,139 @@ impl SnapshotCache {
         let mut g = self.inner.lock().unwrap();
         g.stats.misses += 1;
         Ok(snap)
+    }
+
+    /// Replay a cell's memoized measured-window report, if an entry for
+    /// exactly `(config + fingerprint, warmup, measure)` exists and
+    /// survives its integrity guards. Any failure — missing file, bad
+    /// envelope, version drift, key (hash-collision) mismatch — evicts
+    /// the entry and reads as "not cached"; the sweep then simulates the
+    /// cell as if the cache weren't there. The replayed report is the
+    /// pre-twin-pass form `make_report` produced when it was stored, so
+    /// a warm sweep assembles byte-identical output.
+    pub fn load_result(
+        &self,
+        cfg: &ScenarioConfig,
+        fingerprint: &str,
+        warmup: usize,
+        measure: usize,
+    ) -> Option<CellReport> {
+        if !self.replay {
+            return None;
+        }
+        let key = result_key_bytes(cfg, fingerprint);
+        let hash = fnv1a64(&key);
+        let name = result_file(hash, warmup, measure);
+        let bytes = match std::fs::read(self.dir.join(&name)) {
+            Ok(b) => b,
+            Err(_) => {
+                // evicted by another process sharing the directory:
+                // retire the stale accounting row (same rationale as the
+                // snapshot path)
+                let mut g = self.inner.lock().unwrap();
+                if g.results.iter().any(|e| e.file == name) {
+                    g.results.retain(|e| e.file != name);
+                    write_index(&self.dir, &g);
+                }
+                return None;
+            }
+        };
+        let decoded = (|| -> Result<CellReport> {
+            let payload = open_envelope(&bytes, RESULT_VERSION)?;
+            let mut r = BinReader::new(payload);
+            let stored_key: Vec<u8> = Vec::read(&mut r)?;
+            let (w, m) = (r.usize_()?, r.usize_()?);
+            let report = CellReport::read(&mut r)?;
+            r.finish()?;
+            // guard against an FNV collision serving a different cell
+            crate::ensure!(stored_key == key, "cell key mismatch (hash collision)");
+            // ...and against a mislabeled file serving the wrong window
+            crate::ensure!(
+                w == warmup && m == measure,
+                "entry window w{w}-m{m} does not match its label w{warmup}-m{measure}"
+            );
+            Ok(report)
+        })();
+        match decoded {
+            Ok(report) => {
+                let mut g = self.inner.lock().unwrap();
+                g.stats.cells_replayed += 1;
+                g.stats.result_bytes_read += bytes.len() as u64;
+                if !g.results.iter().any(|e| e.file == name) {
+                    let (file, bytes) = (name.clone(), bytes.len() as u64);
+                    g.results.push(ResultEntry { file, bytes, last_used: 0 });
+                }
+                touch_result(&mut g, &name);
+                write_index(&self.dir, &g);
+                Some(report)
+            }
+            Err(e) => {
+                crate::util::log::warn(
+                    "snapshot-cache",
+                    format!("result cache: dropping unusable entry {name}: {e:#}"),
+                );
+                let _ = std::fs::remove_file(self.dir.join(&name));
+                let mut g = self.inner.lock().unwrap();
+                g.stats.result_bytes_read += bytes.len() as u64;
+                g.results.retain(|en| en.file != name);
+                write_index(&self.dir, &g);
+                None
+            }
+        }
+    }
+
+    /// Store a freshly simulated cell's measured-window report (and count
+    /// the simulated cell — the replay-rate denominator — whether or not
+    /// the write lands). Storage failures degrade to a warning exactly
+    /// like [`store_or_warn`]: an unwritable cache may cost the next run
+    /// a cell simulation, never this run its results.
+    pub fn store_result(
+        &self,
+        cfg: &ScenarioConfig,
+        fingerprint: &str,
+        warmup: usize,
+        measure: usize,
+        report: &CellReport,
+    ) {
+        let key = result_key_bytes(cfg, fingerprint);
+        let hash = fnv1a64(&key);
+        let name = result_file(hash, warmup, measure);
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.stats.cells_simulated += 1;
+        }
+        let mut w = BinWriter::new();
+        key.write(&mut w);
+        w.put_usize(warmup);
+        w.put_usize(measure);
+        report.write(&mut w);
+        let bytes = envelope(RESULT_VERSION, &w.into_bytes());
+        let tmp = self.dir.join(format!("{name}.tmp.{}", std::process::id()));
+        let published = std::fs::write(&tmp, &bytes)
+            .map_err(|e| crate::err!("result cache: writing {tmp:?}: {e}"))
+            .and_then(|()| {
+                std::fs::rename(&tmp, self.dir.join(&name))
+                    .map_err(|e| crate::err!("result cache: publishing {name}: {e}"))
+            });
+        if let Err(e) = published {
+            crate::util::log::warn(
+                "snapshot-cache",
+                format!("result cache: could not store {name}: {e:#} (continuing uncached)"),
+            );
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.stats.result_bytes_written += bytes.len() as u64;
+        g.results.retain(|e| e.file != name);
+        g.counter += 1;
+        let last_used = g.counter;
+        g.results.push(ResultEntry { file: name.clone(), bytes: bytes.len() as u64, last_used });
+        while disk_total(&g) > self.disk_budget {
+            if !evict_lru(&self.dir, &mut g, &name) {
+                break;
+            }
+        }
+        write_index(&self.dir, &g);
     }
 
     /// Store an entry, degrading to a warning on failure: the snapshot in
@@ -438,32 +681,58 @@ impl SnapshotCache {
         let len = bytes.len() as u64;
         g.entries.push(Entry { file: name.clone(), hash, warmup, bytes: len, last_used });
         insert_mem(&mut g, self.mem_budget, name.clone(), len, arc);
-        // disk LRU: evict least recently used until under budget; never
-        // the entry just written (the caller holds a reference to it)
-        loop {
-            let total: u64 = g.entries.iter().map(|e| e.bytes).sum();
-            if total <= self.disk_budget {
+        // disk LRU: evict least recently used (of either kind) until
+        // under budget; never the entry just written (the caller holds a
+        // reference to it). A single over-budget entry stays usable.
+        while disk_total(&g) > self.disk_budget {
+            if !evict_lru(&self.dir, &mut g, &name) {
                 break;
-            }
-            let victim = g
-                .entries
-                .iter()
-                .filter(|e| e.file != name)
-                .min_by_key(|e| e.last_used)
-                .map(|e| e.file.clone());
-            match victim {
-                Some(v) => {
-                    let _ = std::fs::remove_file(self.dir.join(&v));
-                    g.entries.retain(|e| e.file != v);
-                    if let Some((b, _)) = g.mem.remove(&v) {
-                        g.mem_bytes = g.mem_bytes.saturating_sub(b);
-                    }
-                }
-                None => break, // a single over-budget entry stays usable
             }
         }
         write_index(&self.dir, &g);
         Ok(())
+    }
+}
+
+/// Total encoded bytes on disk across both entry kinds — the quantity
+/// the shared disk budget binds.
+fn disk_total(g: &Inner) -> u64 {
+    g.entries.iter().map(|e| e.bytes).sum::<u64>()
+        + g.results.iter().map(|e| e.bytes).sum::<u64>()
+}
+
+/// Evict the least recently used on-disk entry — snapshot or result —
+/// excluding `keep`. Returns `false` when nothing evictable remains.
+fn evict_lru(dir: &Path, g: &mut Inner, keep: &str) -> bool {
+    let snap = g
+        .entries
+        .iter()
+        .filter(|e| e.file != keep)
+        .min_by_key(|e| e.last_used)
+        .map(|e| (e.file.clone(), e.last_used));
+    let res = g
+        .results
+        .iter()
+        .filter(|e| e.file != keep)
+        .min_by_key(|e| e.last_used)
+        .map(|e| (e.file.clone(), e.last_used));
+    let victim = match (snap, res) {
+        // on a recency tie prefer evicting the result: a snapshot can be
+        // serving many variants, a result exactly one cell
+        (Some(a), Some(b)) => Some(if b.1 <= a.1 { b.0 } else { a.0 }),
+        (a, b) => a.or(b).map(|(f, _)| f),
+    };
+    match victim {
+        Some(v) => {
+            let _ = std::fs::remove_file(dir.join(&v));
+            g.entries.retain(|e| e.file != v);
+            g.results.retain(|e| e.file != v);
+            if let Some((b, _)) = g.mem.remove(&v) {
+                g.mem_bytes = g.mem_bytes.saturating_sub(b);
+            }
+            true
+        }
+        None => false,
     }
 }
 
@@ -503,6 +772,15 @@ fn touch(g: &mut Inner, name: &str) {
     g.counter += 1;
     let c = g.counter;
     if let Some(e) = g.entries.iter_mut().find(|e| e.file == name) {
+        e.last_used = c;
+    }
+}
+
+/// Bump a result entry's recency under the lock.
+fn touch_result(g: &mut Inner, name: &str) {
+    g.counter += 1;
+    let c = g.counter;
+    if let Some(e) = g.results.iter_mut().find(|e| e.file == name) {
         e.last_used = c;
     }
 }
@@ -558,15 +836,25 @@ fn read_index(path: &Path) -> Option<(u64, HashMap<String, u64>)> {
 
 /// Persist the recency index (best effort — an unwritable index only
 /// costs LRU accuracy on the next open, never correctness).
+///
+/// Snapshot and result rows share one `entries` array: file names are
+/// disjoint by construction (`snap-…` vs `cell-…`), and the reader only
+/// maps file → recency, so one schema covers both kinds. The document
+/// is written to a temp file and renamed into place so a run killed
+/// mid-write can't leave a truncated index that disagrees with the
+/// on-disk entries — the next open would otherwise reset every entry's
+/// recency and evict in arbitrary order.
 fn write_index(dir: &Path, g: &Inner) {
     let entries: Vec<Json> = g
         .entries
         .iter()
-        .map(|e| {
+        .map(|e| (&e.file, e.bytes, e.last_used))
+        .chain(g.results.iter().map(|e| (&e.file, e.bytes, e.last_used)))
+        .map(|(file, bytes, last_used)| {
             Json::obj(vec![
-                ("file", Json::Str(e.file.clone())),
-                ("bytes", Json::Num(e.bytes as f64)),
-                ("last_used", Json::Num(e.last_used as f64)),
+                ("file", Json::Str(file.clone())),
+                ("bytes", Json::Num(bytes as f64)),
+                ("last_used", Json::Num(last_used as f64)),
             ])
         })
         .collect();
@@ -576,7 +864,10 @@ fn write_index(dir: &Path, g: &Inner) {
         ("counter", Json::Num(g.counter as f64)),
         ("entries", Json::Arr(entries)),
     ]);
-    let _ = std::fs::write(dir.join(INDEX_FILE), doc.to_string());
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp.{}", std::process::id()));
+    if std::fs::write(&tmp, doc.to_string()).is_ok() {
+        let _ = std::fs::rename(&tmp, dir.join(INDEX_FILE));
+    }
 }
 
 #[cfg(test)]
@@ -721,6 +1012,147 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.hits, s0.hits + 2);
         assert!(s.bytes_read > s0.bytes_read, "spilled snapshot re-read from disk");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn toy_report(index: usize) -> CellReport {
+        CellReport {
+            index,
+            label: format!("cell-{index}"),
+            grid: "PL".into(),
+            fleet_size: 4,
+            flex_share: 0.3,
+            solver: "native".into(),
+            spatial: false,
+            seed: 42,
+            carbon_baseline_kg: 100.0,
+            carbon_shaped_kg: 90.0,
+            carbon_saved_pct: 10.0,
+            peak_baseline_kw: 50.0,
+            peak_shaped_kw: 45.0,
+            peak_shift_pct: 10.0,
+            slo_pauses: 1,
+            flex_completion: 0.99,
+            shaped_fraction: 0.5,
+            spatial_moved_gcuh: 0.0,
+            classes: Vec::new(),
+            forecast_mape: None,
+            faults: "none".into(),
+            fallback: None,
+        }
+    }
+
+    #[test]
+    fn result_file_name_roundtrips() {
+        let name = result_file(0xDEAD_BEEF_1234_5678, 25, 30);
+        assert_eq!(parse_result_file(&name), Some((0xDEAD_BEEF_1234_5678, 25, 30)));
+        assert_eq!(parse_result_file("cell-zz-w3-m4.bin"), None);
+        assert_eq!(parse_result_file("cell-0000000000000001-w3.bin"), None);
+        assert_eq!(parse_result_file("snap-0000000000000001-w3.bin"), None);
+    }
+
+    #[test]
+    fn result_store_load_roundtrip_and_reopen() {
+        let dir = tmp_dir("result");
+        let cfg = small_cfg(21);
+        let report = toy_report(0);
+        {
+            let cache = SnapshotCache::open_default(&dir).unwrap();
+            assert!(cache.load_result(&cfg, "native+spfalse", 3, 30).is_none());
+            cache.store_result(&cfg, "native+spfalse", 3, 30, &report);
+            let s = cache.stats();
+            assert_eq!((s.cells_replayed, s.cells_simulated), (0, 1));
+            assert!(s.result_bytes_written > 0);
+            let got = cache.load_result(&cfg, "native+spfalse", 3, 30).unwrap();
+            assert_eq!(got, report);
+            assert_eq!(cache.stats().cells_replayed, 1);
+            // a different window or fingerprint is a different entry
+            assert!(cache.load_result(&cfg, "native+spfalse", 3, 31).is_none());
+            assert!(cache.load_result(&cfg, "greedy+spfalse", 3, 30).is_none());
+            // warmup counters never move on the result path
+            assert_eq!(cache.stats().requests, 0);
+        }
+        // a fresh process (new cache object) replays from disk, and the
+        // atomic index rewrite left no temp droppings behind
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        assert_eq!(cache.result_count(), 1);
+        let got = cache.load_result(&cfg, "native+spfalse", 3, 30).unwrap();
+        assert_eq!(got, report);
+        let s = cache.stats();
+        assert_eq!((s.cells_replayed, s.cells_simulated), (1, 0));
+        assert!(s.result_bytes_read > 0);
+        let tmp_leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|f| f.file_name().to_string_lossy().contains(".tmp."))
+            .count();
+        assert_eq!(tmp_leftovers, 0, "index + entries publish via rename");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_result_entry_is_evicted_and_reads_as_uncached() {
+        let dir = tmp_dir("result_corrupt");
+        let cfg = small_cfg(22);
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        cache.store_result(&cfg, "native+spfalse", 2, 30, &toy_report(0));
+        // flip a payload byte in the only result entry on disk
+        let file = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|f| f.path())
+            .find(|p| p.file_name().unwrap().to_string_lossy().starts_with("cell-"))
+            .unwrap();
+        let mut bytes = std::fs::read(&file).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&file, &bytes).unwrap();
+        assert!(cache.load_result(&cfg, "native+spfalse", 2, 30).is_none());
+        assert!(!file.exists(), "corrupt entry evicted from disk");
+        assert_eq!(cache.result_count(), 0);
+        // storing again repairs the cache in place
+        cache.store_result(&cfg, "native+spfalse", 2, 30, &toy_report(0));
+        assert!(cache.load_result(&cfg, "native+spfalse", 2, 30).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disable_replay_ignores_entries_but_still_stores() {
+        let dir = tmp_dir("result_noreplay");
+        let cfg = small_cfg(23);
+        let mut cache = SnapshotCache::open_default(&dir).unwrap();
+        cache.store_result(&cfg, "native+spfalse", 2, 30, &toy_report(0));
+        cache.disable_replay();
+        assert!(cache.load_result(&cfg, "native+spfalse", 2, 30).is_none());
+        assert_eq!(cache.stats().cells_replayed, 0);
+        // the entry itself is untouched — a later run with replay on
+        // (fresh cache object) still serves it
+        drop(cache);
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        assert!(cache.load_result(&cfg, "native+spfalse", 2, 30).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_budget_is_shared_across_snapshots_and_results() {
+        let dir = tmp_dir("result_budget");
+        // store one warmup snapshot, then shrink the budget to snapshot
+        // size only: storing results must evict the LRU entry, whichever
+        // kind it is, and the accounting must cover both kinds
+        let probe = {
+            let cache = SnapshotCache::open_default(&dir).unwrap();
+            cache.warmup(&small_cfg(24), 2, 1, SimEngine::Event).unwrap();
+            cache.disk_bytes()
+        };
+        let cache = SnapshotCache::open(&dir, probe, DEFAULT_MEM_BUDGET).unwrap();
+        assert_eq!((cache.entry_count(), cache.result_count()), (1, 0));
+        cache.store_result(&small_cfg(24), "native+spfalse", 2, 30, &toy_report(0));
+        assert_eq!(
+            (cache.entry_count(), cache.result_count()),
+            (0, 1),
+            "snapshot was the LRU victim once the result pushed past the budget"
+        );
+        assert!(cache.disk_bytes() <= probe);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -131,10 +131,17 @@ pub fn run_sweep_engine(
 /// when present, the [`WarmupSharing::Fork`] warmup phase is served
 /// through the cache (exact hit → decode, shorter cached warmup → resume
 /// + delta, miss → simulate and store), amortizing warmups across
-/// *invocations* instead of merely across a sweep's variants. Cached and
-/// uncached runs emit byte-identical reports — the cache is an execution
-/// strategy like the sharing mode and the engine, and the reference
-/// [`WarmupSharing::PerCell`] path never consults it.
+/// *invocations* instead of merely across a sweep's variants — and the
+/// measured windows themselves are memoized: a cell whose
+/// `(config + variant fingerprint, warmup, measure)` result is cached
+/// replays its [`CellReport`] from disk and simulates nothing at all. A
+/// scenario group whose every member replays skips its warmup and
+/// baseline too, so re-running an edited matrix costs only the changed
+/// cells. Cached and uncached runs emit byte-identical reports — the
+/// cache is an execution strategy like the sharing mode and the engine,
+/// and the reference [`WarmupSharing::PerCell`] path never consults it
+/// (it exists to be timed against the shared/cached path on identical
+/// semantics).
 pub fn run_sweep_cached(
     matrix: &SweepMatrix,
     measure_days: usize,
@@ -151,39 +158,73 @@ pub fn run_sweep_cached(
     let warmup = matrix.warmup_days;
     let groups = plan_groups(&cells);
 
+    // ---- phase 0: replay memoized measured windows (Fork path only —
+    // the PerCell reference must keep simulating everything it is asked
+    // to time). A replayed cell drops out of the unit plan; a group whose
+    // every member replayed drops its baseline and its warmup too.
+    let result_cache = cache.filter(|_| sharing == WarmupSharing::Fork);
+    let mut replayed: Vec<Option<CellReport>> = match result_cache {
+        Some(c) => cells
+            .iter()
+            .map(|cell| c.load_result(&cell.cfg, &cell_fingerprint(cell), warmup, measure_days))
+            .collect(),
+        None => cells.iter().map(|_| None).collect(),
+    };
+    let group_needed: Vec<bool> = groups
+        .iter()
+        .map(|g| g.members.iter().any(|&ci| replayed[ci].is_none()))
+        .collect();
+
     // One task per worker; the per-cluster fan-out inside each simulation
     // gets the leftover parallelism — sized per phase, since the warmup
     // phase has fewer tasks than the unit phase — so a small matrix on a
     // big machine still fills the cores.
-    let inner_for = |tasks: usize| (threads / tasks.min(threads)).max(1);
+    let inner_for = |tasks: usize| (threads / tasks.max(1).min(threads)).max(1);
 
-    // ---- phase 1: one unshaped warmup + checkpoint per physical scenario
-    let snaps: Vec<SimSnapshot> = match sharing {
+    // ---- phase 1: one unshaped warmup + checkpoint per physical
+    // scenario that still has work
+    let snaps: Vec<Option<SimSnapshot>> = match sharing {
         WarmupSharing::Fork => {
-            let inner = inner_for(groups.len());
-            threadpool::parallel_map_dyn(groups.len(), threads, |g| {
-                let rep = &cells[groups[g].rep];
-                match cache {
-                    Some(c) if warmup > 0 => c.warmup(&rep.cfg, warmup, inner, engine),
-                    _ => warmup_snapshot(rep, warmup, inner, engine),
-                }
-            })
-            .into_iter()
-            .collect::<Result<_>>()?
+            let needed: Vec<usize> = (0..groups.len()).filter(|&g| group_needed[g]).collect();
+            let inner = inner_for(needed.len());
+            let warmed: Vec<SimSnapshot> =
+                threadpool::parallel_map_dyn(needed.len(), threads, |i| {
+                    let rep = &cells[groups[needed[i]].rep];
+                    match cache {
+                        Some(c) if warmup > 0 => c.warmup(&rep.cfg, warmup, inner, engine),
+                        _ => warmup_snapshot(rep, warmup, inner, engine),
+                    }
+                })
+                .into_iter()
+                .collect::<Result<_>>()?;
+            let mut snaps: Vec<Option<SimSnapshot>> = groups.iter().map(|_| None).collect();
+            for (g, snap) in needed.into_iter().zip(warmed) {
+                snaps[g] = Some(snap);
+            }
+            snaps
         }
-        WarmupSharing::PerCell => Vec::new(),
+        WarmupSharing::PerCell => groups.iter().map(|_| None).collect(),
     };
     let warmup_s = t_start.elapsed().as_secs_f64();
 
-    // ---- phase 2: equal-sized fork units (baseline + one per variant)
-    let units = plan_units(&groups);
+    // ---- phase 2: equal-sized fork units (baseline + one per variant),
+    // minus everything replay already answered
+    let units: Vec<(usize, Option<usize>)> = plan_units(&groups)
+        .into_iter()
+        .filter(|&(g, cell_idx)| match cell_idx {
+            Some(i) => replayed[i].is_none(),
+            None => group_needed[g],
+        })
+        .collect();
     let t_units = std::time::Instant::now();
     let inner = inner_for(units.len());
     let outcomes: Vec<UnitOutcome> =
         threadpool::parallel_map_dyn(units.len(), threads, |u| -> Result<UnitOutcome> {
             let (g, cell_idx) = units[u];
             let snap = match sharing {
-                WarmupSharing::Fork => snaps[g].clone(),
+                WarmupSharing::Fork => {
+                    snaps[g].clone().expect("groups with live units were warmed")
+                }
                 WarmupSharing::PerCell => {
                     warmup_snapshot(&cells[groups[g].rep], warmup, inner, engine)?
                 }
@@ -210,16 +251,30 @@ pub fn run_sweep_cached(
             group_of[ci] = g;
         }
     }
-    let mut reports: Vec<CellReport> = cells
-        .iter()
-        .map(|cell| {
-            let s = shaped[cell.index].as_ref().expect("every cell ran a shaped unit");
-            let b = baselines[group_of[cell.index]]
-                .as_ref()
-                .expect("every group ran a baseline unit");
-            make_report(cell, s, b, warmup, measure_days)
-        })
-        .collect();
+    // Replayed cells take their memoized report verbatim; freshly
+    // simulated cells report against their group baseline and store the
+    // result for the next invocation. Both kinds are stored/replayed in
+    // the pre-twin-pass form — the cross-cell twin fill below runs over
+    // the assembled vec either way, so replay composes with matrix edits
+    // that change which twin a cell pairs with.
+    let mut reports: Vec<CellReport> = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let report = match replayed[cell.index].take() {
+            Some(r) => r,
+            None => {
+                let s = shaped[cell.index].as_ref().expect("every cell ran a shaped unit");
+                let b = baselines[group_of[cell.index]]
+                    .as_ref()
+                    .expect("every group ran a baseline unit");
+                let r = make_report(cell, s, b, warmup, measure_days);
+                if let Some(c) = result_cache {
+                    c.store_result(&cell.cfg, &cell_fingerprint(cell), warmup, measure_days, &r);
+                }
+                r
+            }
+        };
+        reports.push(report);
+    }
     // Fault-injected cells get a carbon-savings delta against their
     // zero-fault twin — the cell with the same label minus the fault tag
     // (same grid, fleet, flex share, classes, solver, spatial).
@@ -262,6 +317,16 @@ struct PlanGroup {
     rep: usize,
     /// All member cell indices, in expansion order.
     members: Vec<usize>,
+}
+
+/// Variant fingerprint for result-cache keying: the execution knobs a
+/// fork unit applies through [`SimOptions`] rather than through the
+/// cell's config (solver backend, spatial shifting). Everything else
+/// that can change a measured window already lives in the config hash;
+/// engines and sharing modes are byte-equivalent by contract and so
+/// belong in neither.
+fn cell_fingerprint(cell: &SweepCell) -> String {
+    format!("{}+sp{}", cell.solver.name(), cell.spatial)
 }
 
 /// Group cells by physical seed, preserving expansion order.

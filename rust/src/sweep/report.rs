@@ -395,6 +395,137 @@ impl SweepReport {
     }
 }
 
+// ---- binary serialization (util::binio, measured-window result cache) --
+//
+// The canonical encodings behind `sweep::cache`'s result memoization:
+// a replayed `CellReport` must round-trip bit-exactly (f64s travel as
+// IEEE-754 bit patterns) so a warm sweep emits the same JSON bytes as
+// the cold run that stored it. Fields are written in declaration order.
+
+mod binio_impls {
+    use super::*;
+    use crate::util::binio::{Bin, BinReader, BinWriter};
+    use crate::util::error::Result;
+
+    impl Bin for ClassCellReport {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_str(&self.name);
+            w.put_f64(self.submitted_gcuh);
+            w.put_f64(self.completion);
+            w.put_f64(self.miss_rate);
+            w.put_f64(self.miss_rate_baseline);
+            w.put_usize(self.jobs_dropped);
+            w.put_f64(self.mean_delay_ticks);
+            w.put_f64(self.carbon_kg);
+            w.put_f64(self.carbon_baseline_kg);
+        }
+        fn read(r: &mut BinReader) -> Result<ClassCellReport> {
+            Ok(ClassCellReport {
+                name: r.str_()?,
+                submitted_gcuh: r.f64()?,
+                completion: r.f64()?,
+                miss_rate: r.f64()?,
+                miss_rate_baseline: r.f64()?,
+                jobs_dropped: r.usize_()?,
+                mean_delay_ticks: r.f64()?,
+                carbon_kg: r.f64()?,
+                carbon_baseline_kg: r.f64()?,
+            })
+        }
+    }
+
+    impl Bin for RecoveryReport {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_f64(self.mean_days_to_fresh);
+            w.put_usize(self.max_days_to_fresh);
+            w.put_usize(self.unrecovered);
+            w.put_f64(self.mean_outage_depth);
+            w.put_usize(self.max_outage_depth);
+            self.retention_pct.write(w);
+        }
+        fn read(r: &mut BinReader) -> Result<RecoveryReport> {
+            Ok(RecoveryReport {
+                mean_days_to_fresh: r.f64()?,
+                max_days_to_fresh: r.usize_()?,
+                unrecovered: r.usize_()?,
+                mean_outage_depth: r.f64()?,
+                max_outage_depth: r.usize_()?,
+                retention_pct: Option::read(r)?,
+            })
+        }
+    }
+
+    impl Bin for FallbackCellReport {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_f64(self.fallback_rate);
+            self.causes.write(w);
+            self.savings_delta_pct.write(w);
+            self.recovery.write(w);
+        }
+        fn read(r: &mut BinReader) -> Result<FallbackCellReport> {
+            Ok(FallbackCellReport {
+                fallback_rate: r.f64()?,
+                causes: Vec::read(r)?,
+                savings_delta_pct: Option::read(r)?,
+                recovery: Option::read(r)?,
+            })
+        }
+    }
+
+    impl Bin for CellReport {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_usize(self.index);
+            w.put_str(&self.label);
+            w.put_str(&self.grid);
+            w.put_usize(self.fleet_size);
+            w.put_f64(self.flex_share);
+            w.put_str(&self.solver);
+            w.put_bool(self.spatial);
+            w.put_u64(self.seed);
+            w.put_f64(self.carbon_baseline_kg);
+            w.put_f64(self.carbon_shaped_kg);
+            w.put_f64(self.carbon_saved_pct);
+            w.put_f64(self.peak_baseline_kw);
+            w.put_f64(self.peak_shaped_kw);
+            w.put_f64(self.peak_shift_pct);
+            w.put_usize(self.slo_pauses);
+            w.put_f64(self.flex_completion);
+            w.put_f64(self.shaped_fraction);
+            w.put_f64(self.spatial_moved_gcuh);
+            self.classes.write(w);
+            self.forecast_mape.write(w);
+            w.put_str(&self.faults);
+            self.fallback.write(w);
+        }
+        fn read(r: &mut BinReader) -> Result<CellReport> {
+            Ok(CellReport {
+                index: r.usize_()?,
+                label: r.str_()?,
+                grid: r.str_()?,
+                fleet_size: r.usize_()?,
+                flex_share: r.f64()?,
+                solver: r.str_()?,
+                spatial: r.bool_()?,
+                seed: r.u64()?,
+                carbon_baseline_kg: r.f64()?,
+                carbon_shaped_kg: r.f64()?,
+                carbon_saved_pct: r.f64()?,
+                peak_baseline_kw: r.f64()?,
+                peak_shaped_kw: r.f64()?,
+                peak_shift_pct: r.f64()?,
+                slo_pauses: r.usize_()?,
+                flex_completion: r.f64()?,
+                shaped_fraction: r.f64()?,
+                spatial_moved_gcuh: r.f64()?,
+                classes: Vec::read(r)?,
+                forecast_mape: Option::read(r)?,
+                faults: r.str_()?,
+                fallback: Option::read(r)?,
+            })
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -596,5 +727,49 @@ mod tests {
         assert_eq!(round(1.23456789, 4), 1.2346);
         assert_eq!(round(-0.5, 3), -0.5);
         assert_eq!(round(2.0, 6), 2.0);
+    }
+
+    #[test]
+    fn cell_report_binio_roundtrip_is_canonical_across_shapes() {
+        use crate::util::binio::{from_payload, to_payload};
+        // plain cell (all optional blocks absent), plus a maximal cell
+        // exercising classes + forecast + fallback + recovery — the
+        // result cache's whole value space
+        let plain = toy_cell(0, 1.5);
+        let mut maximal = toy_cell(1, 2.0);
+        maximal.classes = vec![ClassCellReport {
+            name: "tight-6h".into(),
+            submitted_gcuh: 500.0,
+            completion: 0.9,
+            miss_rate: 1.0 / 3.0,
+            miss_rate_baseline: 0.05,
+            jobs_dropped: 7,
+            mean_delay_ticks: 3.5,
+            carbon_kg: 42.0,
+            carbon_baseline_kg: 45.0,
+        }];
+        maximal.forecast_mape = Some(12.345);
+        maximal.faults = "incident".into();
+        maximal.fallback = Some(FallbackCellReport {
+            fallback_rate: 0.125,
+            causes: vec![("feed-outage->patched-curve".into(), 4)],
+            savings_delta_pct: None,
+            recovery: Some(RecoveryReport {
+                mean_days_to_fresh: 1.5,
+                max_days_to_fresh: 3,
+                unrecovered: 1,
+                mean_outage_depth: 2.25,
+                max_outage_depth: 4,
+                retention_pct: None,
+            }),
+        });
+        for cell in [plain, maximal] {
+            let bytes = to_payload(&cell);
+            let back: CellReport = from_payload(&bytes).unwrap();
+            assert_eq!(back, cell);
+            // canonical: re-encoding reproduces the exact bytes, so the
+            // cache can content-address and equality-guard entries
+            assert_eq!(to_payload(&back), bytes);
+        }
     }
 }

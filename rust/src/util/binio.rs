@@ -143,6 +143,14 @@ impl BinWriter {
         self.put_usize(s.len());
         self.buf.extend_from_slice(s.as_bytes());
     }
+
+    /// Append pre-encoded bytes verbatim. The splice point for
+    /// [`write_seq_parallel`]: sections encoded into private writers are
+    /// stitched back in index order, so parallelism never reaches the
+    /// wire format.
+    pub fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
 }
 
 /// Cursor over an encoded payload; every read checks bounds.
@@ -385,6 +393,41 @@ impl<T: Bin, const N: usize> Bin for [T; N] {
     }
 }
 
+/// Below this many elements the scoped-thread fan-out of
+/// [`write_seq_parallel`] costs more than it saves; encode inline.
+const PARALLEL_SEQ_MIN: usize = 8;
+
+/// Encode a slice in `Vec<T>`'s exact wire format — length prefix, then
+/// elements in index order — but fan the element encoding over scoped
+/// worker threads. Each chunk encodes into a private [`BinWriter`] and
+/// the buffers are concatenated in chunk order, so the output is
+/// byte-identical to the serial encoding for *every* thread count (the
+/// envelope checksum is computed over the concatenation by the caller,
+/// exactly as for a serial payload). Decoding stays serial: elements are
+/// variable-length, so a reader has no offsets to split on — and decode
+/// is already a single linear pass.
+pub fn write_seq_parallel<T: Bin + Sync>(w: &mut BinWriter, items: &[T], threads: usize) {
+    w.put_usize(items.len());
+    let threads = threads.max(1);
+    if threads == 1 || items.len() < PARALLEL_SEQ_MIN.max(threads) {
+        for v in items {
+            v.write(w);
+        }
+        return;
+    }
+    let chunks: Vec<&[T]> = items.chunks(items.len().div_ceil(threads)).collect();
+    let parts = crate::util::threadpool::parallel_map(chunks.len(), threads, |i| {
+        let mut pw = BinWriter::new();
+        for v in chunks[i] {
+            v.write(&mut pw);
+        }
+        pw.into_bytes()
+    });
+    for part in &parts {
+        w.put_raw(part);
+    }
+}
+
 /// Encode a value to its canonical payload bytes (no envelope).
 pub fn to_payload<T: Bin>(v: &T) -> Vec<u8> {
     let mut w = BinWriter::new();
@@ -484,6 +527,32 @@ mod tests {
         for cut in [0, 7, HEADER_LEN - 1, HEADER_LEN + 3, enc.len() - 1] {
             assert!(open_envelope(&enc[..cut], 2).is_err(), "cut at {cut}");
         }
+    }
+
+    #[test]
+    fn parallel_seq_encode_is_byte_identical_to_serial() {
+        // the parallel encoder is an execution strategy, not a format:
+        // every thread count must reproduce Vec<T>::write's exact bytes,
+        // from the empty slice through sizes that don't divide evenly
+        let strings: Vec<String> = (0..57).map(|i| format!("job-{i}-{}", "x".repeat(i % 13))).collect();
+        let serial = to_payload(&strings);
+        for threads in [1, 2, 3, 8, 64] {
+            let mut w = BinWriter::new();
+            write_seq_parallel(&mut w, &strings, threads);
+            assert_eq!(w.into_bytes(), serial, "{threads} threads");
+        }
+        for n in [0usize, 1, 7, 8, 9] {
+            let v: Vec<u64> = (0..n as u64).map(|i| i * 0x9E37_79B9).collect();
+            let serial = to_payload(&v);
+            let mut w = BinWriter::new();
+            write_seq_parallel(&mut w, &v, 4);
+            assert_eq!(w.into_bytes(), serial, "{n} elements");
+        }
+        // the checksum a caller computes over the concatenation matches
+        // the serial payload's checksum, so envelopes are unchanged too
+        let mut w = BinWriter::new();
+        write_seq_parallel(&mut w, &strings, 5);
+        assert_eq!(fnv1a64(&w.into_bytes()), fnv1a64(&to_payload(&strings)));
     }
 
     #[test]

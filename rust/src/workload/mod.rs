@@ -361,6 +361,14 @@ impl DayArrivals {
         self.jobs.clear();
         self.offsets.clear();
     }
+
+    /// Pre-size for a day expected to draw about `jobs` arrivals (the
+    /// offsets table always ends up `TICKS_PER_DAY + 1` long). Perf hint
+    /// only; buckets grow past the hint as usual.
+    pub fn reserve(&mut self, jobs: usize) {
+        self.jobs.reserve(jobs);
+        self.offsets.reserve(TICKS_PER_DAY + 1);
+    }
 }
 
 // ---- binary serialization (util::binio, snapshot cache) ----------------

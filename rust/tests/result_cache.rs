@@ -1,0 +1,161 @@
+//! The measured-window result cache's correctness contract:
+//!
+//! 1. Replayed cell reports are **byte-identical** to simulated ones —
+//!    across engines, warmup-sharing modes, and fault/fallback cells —
+//!    so memoization can never change a sweep's output, only its cost.
+//! 2. Editing one matrix axis invalidates exactly the affected cells:
+//!    untouched cells replay, new cells simulate.
+//! 3. A corrupted result entry is evicted and falls back to simulation
+//!    with identical bytes — a broken cache costs time, never
+//!    correctness (mirroring the warmup-snapshot cache's contract).
+
+use std::path::PathBuf;
+
+use cics::config::SweepMatrix;
+use cics::scheduler::SimEngine;
+use cics::sweep::{self, SnapshotCache, WarmupSharing};
+
+/// Unique scratch dir per test (no tempfile crate in the offline build).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cics_resultcache_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A two-cell matrix exercising the fault/fallback machinery: one clean
+/// cell and one correlated-incident cell under a non-default policy.
+fn faulty_matrix() -> SweepMatrix {
+    SweepMatrix {
+        seed: 77001,
+        grids: vec!["PL".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into(), "chaos".into()],
+        policies: vec!["sla-aware".into()],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 6,
+    }
+}
+
+#[test]
+fn replayed_reports_are_byte_identical_across_engines_and_sharing() {
+    let dir = tmp_dir("equiv");
+    let m = faulty_matrix();
+    let json = sweep::run_sweep_mode(&m, 2, 2, WarmupSharing::Fork).unwrap().0.to_json().to_string();
+
+    // cold pass under the event engine: everything simulates and stores
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let (cold, cold_t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, SimEngine::Event, Some(&cache))
+            .unwrap();
+    assert_eq!(cold_t.cache.cells_simulated, 2);
+    assert_eq!(cold_t.cache.cells_replayed, 0);
+    assert_eq!(json, cold.to_json().to_string(), "uncached vs cache-cold");
+
+    // warm pass under the *legacy* engine: engines are byte-equivalent
+    // by contract, so the key ignores them and replay must serve both
+    let (warm, warm_t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, SimEngine::Legacy, Some(&cache))
+            .unwrap();
+    assert_eq!(warm_t.cache.cells_replayed, 2);
+    assert_eq!(warm_t.cache.cells_simulated, 0);
+    assert_eq!(json, warm.to_json().to_string(), "uncached vs cache-warm (other engine)");
+
+    // the PerCell reference path never consults the result cache (it
+    // exists to cross-check Fork), yet still produces the same bytes
+    let (percell, percell_t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::PerCell, SimEngine::Event, Some(&cache))
+            .unwrap();
+    assert_eq!(percell_t.cache.cells_replayed, 0);
+    assert_eq!(percell_t.cache.cells_simulated, 0);
+    assert_eq!(json, percell.to_json().to_string(), "uncached vs per-cell reference");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn editing_one_axis_invalidates_exactly_the_affected_cells() {
+    let dir = tmp_dir("invalidate");
+    let mut m = SweepMatrix {
+        seed: 77002,
+        grids: vec!["PL".into(), "FR".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 6,
+    };
+    let engine = SimEngine::default();
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let (_, t) = sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!((t.cache.cells_replayed, t.cache.cells_simulated), (0, 2));
+
+    // widen the solver axis: the two existing (grid, native) cells must
+    // replay untouched, only the two new greedy cells simulate
+    m.solvers.push("greedy".into());
+    let uncached = sweep::run_sweep_mode(&m, 2, 2, WarmupSharing::Fork).unwrap().0;
+    let (rep, t) = sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!(t.cache.cells_replayed, 2, "unchanged cells must replay");
+    assert_eq!(t.cache.cells_simulated, 2, "only the new solver's cells simulate");
+    assert_eq!(rep.to_json().to_string(), uncached.to_json().to_string());
+
+    // narrow back down: the original matrix is fully replayable again
+    m.solvers.pop();
+    let (_, t) = sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!((t.cache.cells_replayed, t.cache.cells_simulated), (2, 0));
+    assert!((t.cache.replay_rate() - 1.0).abs() < 1e-12);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_result_entry_falls_back_to_simulation_with_identical_bytes() {
+    let dir = tmp_dir("corrupt");
+    let m = SweepMatrix {
+        seed: 77003,
+        grids: vec!["PL".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 6,
+    };
+    let engine = SimEngine::default();
+    let first = {
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        let (rep, t) =
+            sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+        assert_eq!(t.cache.cells_simulated, 1);
+        rep.to_json().to_string()
+    };
+    // corrupt the single result entry on disk in place
+    let entry = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .find(|f| f.file_name().to_string_lossy().starts_with("cell-"))
+        .expect("one result entry on disk")
+        .path();
+    let mut bytes = std::fs::read(&entry).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&entry, &bytes).unwrap();
+    // a fresh cache rejects the entry, re-simulates, and repairs it
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let (rep, t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!(t.cache.cells_replayed, 0, "corrupt entry must read as uncached");
+    assert_eq!(t.cache.cells_simulated, 1);
+    assert_eq!(rep.to_json().to_string(), first, "fallback result is still exact");
+    // the repaired entry replays on the next pass
+    let (rep, t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!(t.cache.cells_replayed, 1);
+    assert_eq!(rep.to_json().to_string(), first);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

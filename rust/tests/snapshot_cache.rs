@@ -11,9 +11,12 @@
 //!    simulating `W2 - W1` days produces the same snapshot bytes as a
 //!    fresh `W2` warmup.
 //! 4. Sweep reports are byte-identical across cache-off, cache-cold and
-//!    cache-warm runs, and the warm run serves every warmup from cache
-//!    (hit rate 1.0) — the property CI's cold-then-warm perf-smoke
-//!    asserts on the real `cics bench --quick`.
+//!    cache-warm runs. On an unchanged matrix the warm run replays every
+//!    *measured window* from the result cache (replay rate 1.0), which
+//!    means it never even requests a warmup — the property CI's
+//!    cold-then-warm perf-smoke asserts on the real `cics bench --quick`.
+//!    (Deeper result-cache invalidation coverage lives in
+//!    `tests/result_cache.rs`.)
 
 use std::path::PathBuf;
 
@@ -231,24 +234,33 @@ fn sweep_reports_identical_across_cache_off_cold_and_warm() {
     let json = off.to_json().to_string();
     assert_eq!(json, cold.to_json().to_string(), "cache-off vs cache-cold");
     assert_eq!(json, warm.to_json().to_string(), "cache-off vs cache-warm");
-    // cold pass: every physical scenario missed and was stored
+    // cold pass: every physical scenario missed its warmup, every cell
+    // simulated its measured window, and both kinds were stored
     assert_eq!(cold_t.cache.requests, 2, "two physical scenarios (within-day, mixed)");
     assert_eq!(cold_t.cache.misses, 2);
     assert!(cold_t.cache.bytes_written > 0);
-    // warm pass: 100% exact hits, no simulation, nothing new written
-    assert_eq!(warm_t.cache.requests, 2);
-    assert_eq!(warm_t.cache.hits, 2);
-    assert_eq!(warm_t.cache.misses, 0);
-    assert_eq!(warm_t.cache.partial_hits, 0);
+    assert_eq!(cold_t.cache.cells_simulated, 4, "2 classes x 2 solvers");
+    assert_eq!(cold_t.cache.cells_replayed, 0);
+    assert!(cold_t.cache.result_bytes_written > 0);
+    // warm pass: every measured window replays from the result cache, so
+    // no warmup is even requested and nothing new is written
+    assert_eq!(warm_t.cache.cells_replayed, 4);
+    assert_eq!(warm_t.cache.cells_simulated, 0);
+    assert!((warm_t.cache.replay_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(warm_t.cache.requests, 0, "fully replayed run skips warmups entirely");
     assert_eq!(warm_t.cache.bytes_written, 0);
-    assert!((warm_t.cache.hit_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(warm_t.cache.result_bytes_written, 0);
+    assert!(warm_t.cache.result_bytes_read > 0);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
 fn warm_cache_survives_process_boundaries_via_disk() {
-    // simulate two `cics bench` invocations: separate SnapshotCache
-    // objects over the same directory (the second must hit from disk)
+    // simulate successive `cics bench` invocations: separate
+    // SnapshotCache objects over the same directory. The second run
+    // changes only the measure-day count, so it must *hit* every warmup
+    // from disk while missing the result cache; the third repeats the
+    // first exactly and must replay every measured window from disk.
     let dir = tmp_dir("crossrun");
     let m = quickish_matrix();
     let engine = SimEngine::default();
@@ -257,13 +269,26 @@ fn warm_cache_survives_process_boundaries_via_disk() {
         let (rep, t) =
             sweep::run_sweep_cached(&m, 3, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
         assert_eq!(t.cache.misses, 2);
+        assert_eq!(t.cache.cells_simulated, 4);
         rep.to_json().to_string()
     };
+    {
+        // measure 3 days instead of 2: result keys differ (the window is
+        // part of the key), warmup keys do not
+        let cache = SnapshotCache::open_default(&dir).unwrap();
+        let (_, t) =
+            sweep::run_sweep_cached(&m, 3, 3, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+        assert_eq!(t.cache.hits, 2, "warmups must hit from disk across processes");
+        assert!(t.cache.bytes_read > 0);
+        assert_eq!(t.cache.cells_replayed, 0, "a different window must not replay");
+        assert_eq!(t.cache.cells_simulated, 4);
+    }
     let cache = SnapshotCache::open_default(&dir).unwrap();
     let (rep, t) =
         sweep::run_sweep_cached(&m, 3, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
-    assert_eq!(t.cache.hits, 2, "second run must hit from disk");
-    assert!(t.cache.bytes_read > 0);
-    assert_eq!(rep.to_json().to_string(), first);
+    assert_eq!(t.cache.cells_replayed, 4, "unchanged run must replay from disk");
+    assert_eq!(t.cache.cells_simulated, 0);
+    assert!(t.cache.result_bytes_read > 0);
+    assert_eq!(rep.to_json().to_string(), first, "replayed report must be byte-identical");
     std::fs::remove_dir_all(&dir).unwrap();
 }
