@@ -20,8 +20,7 @@ fn run(grid: GridArchetype, lambda_e: f64, lambda_p: f64, shaped: bool) -> (f64,
     cfg.optimizer.lambda_e = lambda_e;
     cfg.optimizer.lambda_p = lambda_p;
     cfg.optimizer.iters = 250;
-    let mut sim = Simulation::new(cfg);
-    sim.shaping_enabled = shaped;
+    let mut sim = Simulation::builder(cfg).shaping(shaped).build();
     sim.run_days(45).unwrap();
     // average over the last 14 days
     let mut carbon = Vec::new();
@@ -91,8 +90,7 @@ fn main() {
     let days = 45;
     let mut temporal = Simulation::new(cfg.clone());
     temporal.run_days(days).unwrap();
-    let mut spatial = Simulation::new(cfg);
-    spatial.spatial_movable_fraction = Some(0.3);
+    let mut spatial = Simulation::builder(cfg).spatial_movable_fraction(0.3).build();
     spatial.run_days(days).unwrap();
     let carbon = |sim: &Simulation| -> f64 {
         (days - 14..days).filter_map(|d| sim.metrics.fleet_day(d)).map(|(_, kg)| kg).sum()

@@ -2,7 +2,7 @@
 //! run, under both per-tick engines (the event engine is the default;
 //! legacy is the A/B reference — see README §Simulation engine).
 use cics::config::{CampusConfig, GridArchetype, ScenarioConfig};
-use cics::coordinator::{SimOptions, Simulation};
+use cics::coordinator::Simulation;
 use cics::scheduler::SimEngine;
 use std::time::Instant;
 
@@ -22,9 +22,7 @@ fn cfg() -> ScenarioConfig {
 
 fn main() {
     for engine in [SimEngine::Legacy, SimEngine::Event] {
-        let mut sim =
-            Simulation::with_options(cfg(), SimOptions { engine, ..SimOptions::default() });
-        sim.shaping_enabled = false;
+        let mut sim = Simulation::builder(cfg()).engine(engine).shaping(false).build();
         let t0 = Instant::now();
         sim.run_days(30).unwrap();
         println!(

@@ -179,6 +179,10 @@ pub struct OptimizerConfig {
     pub iters: usize,
     /// Use the AOT JAX artifact when available.
     pub use_artifact: bool,
+    /// What the day-ahead solve trades off: carbon vs electricity cost vs
+    /// peak power. The default (pure carbon) reproduces the paper's
+    /// objective byte-for-byte.
+    pub objective: Objective,
 }
 
 impl Default for OptimizerConfig {
@@ -192,7 +196,105 @@ impl Default for OptimizerConfig {
             delta_max: 3.0,
             iters: 400,
             use_artifact: true,
+            objective: Objective::default(),
         }
+    }
+}
+
+/// Multi-objective weights for the day-ahead VCC solve: the hourly shaping
+/// signal becomes `alpha_carbon * intensity + beta_cost * price` (each term
+/// normalized to its daily mean so the weights are unitless), and the peak
+/// penalty is scaled by `gamma_peak`. The default `(1, 0, 1)` is the paper's
+/// pure-carbon objective and leaves every solve untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objective {
+    /// Weight on grid carbon intensity (the paper's only signal).
+    pub alpha_carbon: f64,
+    /// Weight on the spot electricity price (see `grid::price`).
+    pub beta_cost: f64,
+    /// Multiplier on the existing `lambda_p` peak-power penalty.
+    pub gamma_peak: f64,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective { alpha_carbon: 1.0, beta_cost: 0.0, gamma_peak: 1.0 }
+    }
+}
+
+impl Objective {
+    /// The pure-carbon default — the byte-no-op contract hangs off this.
+    pub fn is_default(&self) -> bool {
+        *self == Objective::default()
+    }
+
+    /// Parse one objective spec: `carbon` (default), `cost`, or `a<f>`
+    /// with `f` in [0, 1] blending `f * carbon + (1 - f) * cost`.
+    /// `a1` canonicalizes to the carbon default, `a0` to `cost`.
+    pub fn parse(spec: &str) -> Result<Objective> {
+        let t = spec.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "carbon" => return Ok(Objective::default()),
+            "cost" => {
+                return Ok(Objective { alpha_carbon: 0.0, beta_cost: 1.0, gamma_peak: 1.0 })
+            }
+            _ => {}
+        }
+        let alpha = t
+            .strip_prefix('a')
+            .and_then(|a| a.parse::<f64>().ok())
+            .filter(|a| (0.0..=1.0).contains(a))
+            .ok_or_else(|| {
+                crate::err!(
+                    "unknown value {spec:?} for axis objectives, expected one of \
+                     carbon, cost, a<alpha in [0,1]>, or a<lo>..<hi>:<n>"
+                )
+            })?;
+        Ok(Objective { alpha_carbon: alpha, beta_cost: 1.0 - alpha, gamma_peak: 1.0 })
+    }
+
+    /// Canonical spelling, inverse of [`Objective::parse`]: the default is
+    /// `carbon`, the pure-cost blend is `cost`, everything else `a<alpha>`.
+    pub fn label(&self) -> String {
+        if self.is_default() {
+            "carbon".to_string()
+        } else if *self == (Objective { alpha_carbon: 0.0, beta_cost: 1.0, gamma_peak: 1.0 }) {
+            "cost".to_string()
+        } else {
+            format!("a{}", self.alpha_carbon)
+        }
+    }
+
+    /// Expand a spec that may be a range — `a<lo>..<hi>:<n>` yields `n`
+    /// evenly spaced alpha blends (endpoints included) — into canonical
+    /// single-spec labels. Plain specs pass through canonicalized, so
+    /// parse → label → reparse is the identity on the output.
+    pub fn expand_spec(spec: &str) -> Result<Vec<String>> {
+        let t = spec.trim();
+        let Some(range) = t.strip_prefix('a').filter(|r| r.contains("..")) else {
+            return Ok(vec![Objective::parse(t)?.label()]);
+        };
+        let parsed = range.split_once("..").and_then(|(lo, rest)| {
+            let (hi, n) = rest.split_once(':')?;
+            Some((lo.parse::<f64>().ok()?, hi.parse::<f64>().ok()?, n.parse::<usize>().ok()?))
+        });
+        let Some((lo, hi, n)) = parsed else {
+            crate::bail!(
+                "unknown value {spec:?} for axis objectives, expected one of \
+                 carbon, cost, a<alpha in [0,1]>, or a<lo>..<hi>:<n>"
+            );
+        };
+        crate::ensure!(
+            (0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi) && lo < hi && n >= 2,
+            "objectives range {spec:?}: need 0 <= lo < hi <= 1 and n >= 2"
+        );
+        Ok((0..n)
+            .map(|i| {
+                let alpha = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+                Objective { alpha_carbon: alpha, beta_cost: 1.0 - alpha, gamma_peak: 1.0 }
+                    .label()
+            })
+            .collect())
     }
 }
 
@@ -339,6 +441,12 @@ impl ScenarioConfig {
             cfg.optimizer.delta_max = o.f64_or("delta_max", cfg.optimizer.delta_max);
             cfg.optimizer.iters = o.usize_or("iters", cfg.optimizer.iters);
             cfg.optimizer.use_artifact = o.bool_or("use_artifact", cfg.optimizer.use_artifact);
+            if let Some(v) = o.get("objective") {
+                let spec = v
+                    .as_str()
+                    .ok_or_else(|| crate::err!("optimizer.objective: expected a spec string, got {v}"))?;
+                cfg.optimizer.objective = Objective::parse(spec)?;
+            }
         }
         if let Some(s) = j.get("slo") {
             cfg.slo.trigger_days = s.usize_or("trigger_days", cfg.slo.trigger_days);
@@ -456,6 +564,13 @@ pub struct SweepMatrix {
     /// non-default specs derive their own cell seeds, while the default
     /// `conservative` keeps pre-policy seeds and report bytes.
     pub policies: Vec<String>,
+    /// Objective specs per cell (see [`Objective::parse`]): `carbon`
+    /// (default), `cost`, or `a<alpha>` blends; range specs like
+    /// `a0..1:5` are expanded at parse time. A *variant* axis like
+    /// `solvers`: the objective only changes what the optimizer does
+    /// with the same physical world, so every point on a Pareto front
+    /// shares one warmup checkpoint and one cell seed.
+    pub objectives: Vec<String>,
     /// Solver backends per cell: "native", "greedy" or "artifact".
     pub solvers: Vec<String>,
     /// Spatial-shifting variants (on/off) to sweep.
@@ -475,6 +590,7 @@ impl Default for SweepMatrix {
             flex_classes: vec![classes::DEFAULT_PRESET.into()],
             faults: vec!["none".into()],
             policies: vec![crate::faults::DEFAULT_POLICY_SPEC.into()],
+            objectives: vec!["carbon".into()],
             solvers: vec!["native".into(), "greedy".into()],
             // Both spatial variants by default: the §V extension is part
             // of the paper's headline story, and the four policy variants
@@ -551,6 +667,15 @@ impl SweepMatrix {
         if let Some(v) = axis(&j, "policies", |v| v.as_str().map(str::to_string))? {
             m.policies = v;
         }
+        if let Some(v) = axis(&j, "objectives", |v| v.as_str().map(str::to_string))? {
+            // range specs expand here so n_cells() is exact and validate
+            // only ever sees single specs
+            let mut specs = Vec::with_capacity(v.len());
+            for spec in &v {
+                specs.extend(Objective::expand_spec(spec)?);
+            }
+            m.objectives = specs;
+        }
         if let Some(v) = axis(&j, "solvers", |v| v.as_str().map(str::to_string))? {
             m.solvers = v;
         }
@@ -578,6 +703,10 @@ impl SweepMatrix {
             crate::faults::PolicySpec::parse(spec)
                 .map_err(|e| e.context("sweep matrix: policies"))?;
         }
+        crate::ensure!(!self.objectives.is_empty(), "sweep matrix: no objectives");
+        for spec in &self.objectives {
+            Objective::parse(spec).map_err(|e| e.context("sweep matrix: objectives"))?;
+        }
         crate::ensure!(!self.solvers.is_empty(), "sweep matrix: no solvers");
         crate::ensure!(!self.spatial.is_empty(), "sweep matrix: no spatial variants");
         crate::ensure!(
@@ -599,6 +728,7 @@ impl SweepMatrix {
             * self.flex_classes.len()
             * self.faults.len()
             * self.policies.len()
+            * self.objectives.len()
             * self.solvers.len()
             * self.spatial.len()
     }
@@ -711,6 +841,9 @@ mod binio_impls {
             w.put_f64(self.delta_max);
             w.put_usize(self.iters);
             w.put_bool(self.use_artifact);
+            // appended in STATE_VERSION 5 — new fields go at the end so
+            // the frozen prefix above never moves
+            self.objective.write(w);
         }
 
         fn read(r: &mut BinReader) -> Result<OptimizerConfig> {
@@ -723,6 +856,23 @@ mod binio_impls {
                 delta_max: r.f64()?,
                 iters: r.usize_()?,
                 use_artifact: r.bool_()?,
+                objective: Objective::read(r)?,
+            })
+        }
+    }
+
+    impl Bin for Objective {
+        fn write(&self, w: &mut BinWriter) {
+            w.put_f64(self.alpha_carbon);
+            w.put_f64(self.beta_cost);
+            w.put_f64(self.gamma_peak);
+        }
+
+        fn read(r: &mut BinReader) -> Result<Objective> {
+            Ok(Objective {
+                alpha_carbon: r.f64()?,
+                beta_cost: r.f64()?,
+                gamma_peak: r.f64()?,
             })
         }
     }
@@ -916,6 +1066,65 @@ mod tests {
         assert!(SweepMatrix::from_json(r#"{"policies": []}"#).is_err());
         assert!(SweepMatrix::from_json(r#"{"policies": ["bogus"]}"#).is_err());
         assert!(SweepMatrix::from_json(r#"{"policies": ["sla-aware,stale:x"]}"#).is_err());
+    }
+
+    #[test]
+    fn objective_parses_labels_and_round_trips() {
+        assert!(Objective::default().is_default());
+        assert_eq!(Objective::parse("carbon").unwrap(), Objective::default());
+        assert_eq!(Objective::parse(" Carbon ").unwrap(), Objective::default());
+        assert!(Objective::parse("a1").unwrap().is_default());
+        let cost = Objective::parse("cost").unwrap();
+        assert_eq!(cost, Objective { alpha_carbon: 0.0, beta_cost: 1.0, gamma_peak: 1.0 });
+        assert_eq!(Objective::parse("a0").unwrap(), cost);
+        let half = Objective::parse("a0.5").unwrap();
+        assert_eq!(half.alpha_carbon, 0.5);
+        assert_eq!(half.beta_cost, 0.5);
+        assert_eq!(half.gamma_peak, 1.0);
+        // canonical label round-trips, including the a1/a0 aliases
+        for spec in ["carbon", "cost", "a0.5", "a0.25", "a1", "a0"] {
+            let o = Objective::parse(spec).unwrap();
+            assert_eq!(Objective::parse(&o.label()).unwrap(), o, "spec {spec}");
+        }
+        assert_eq!(Objective::parse("a1").unwrap().label(), "carbon");
+        assert_eq!(Objective::parse("a0").unwrap().label(), "cost");
+        for bad in ["", "energy", "a", "a1.5", "a-0.1", "aNaN", "0.5"] {
+            assert!(Objective::parse(bad).is_err(), "spec {bad:?}");
+        }
+    }
+
+    #[test]
+    fn objective_range_expansion() {
+        let specs = Objective::expand_spec("a0..1:5").unwrap();
+        assert_eq!(specs, vec!["cost", "a0.25", "a0.5", "a0.75", "carbon"]);
+        assert_eq!(Objective::expand_spec("a0.5..1:2").unwrap(), vec!["a0.5", "carbon"]);
+        // plain specs pass through canonicalized
+        assert_eq!(Objective::expand_spec("a1").unwrap(), vec!["carbon"]);
+        for bad in ["a0..1:1", "a1..0:3", "a0..2:3", "a0..:3", "a0..1", "a..1:3"] {
+            assert!(Objective::expand_spec(bad).is_err(), "spec {bad:?}");
+        }
+    }
+
+    #[test]
+    fn objectives_parse_in_config_and_matrix() {
+        // default carries the pure-carbon objective and a single-objective axis
+        assert!(ScenarioConfig::default().optimizer.objective.is_default());
+        assert_eq!(SweepMatrix::default().objectives, vec!["carbon".to_string()]);
+        let cfg =
+            ScenarioConfig::from_json(r#"{"optimizer": {"objective": "a0.5"}}"#).unwrap();
+        assert_eq!(cfg.optimizer.objective.alpha_carbon, 0.5);
+        assert!(ScenarioConfig::from_json(r#"{"optimizer": {"objective": "joules"}}"#).is_err());
+        assert!(ScenarioConfig::from_json(r#"{"optimizer": {"objective": 3}}"#).is_err());
+        // range entries expand in the matrix parser so n_cells is exact
+        let m = SweepMatrix::from_json(r#"{"objectives": ["a0..1:3"]}"#).unwrap();
+        assert_eq!(m.objectives, vec!["cost", "a0.5", "carbon"]);
+        assert_eq!(
+            m.n_cells(),
+            3 * SweepMatrix::default().n_cells(),
+            "a 3-point range triples the default matrix"
+        );
+        assert!(SweepMatrix::from_json(r#"{"objectives": []}"#).is_err());
+        assert!(SweepMatrix::from_json(r#"{"objectives": ["bogus"]}"#).is_err());
     }
 
     #[test]

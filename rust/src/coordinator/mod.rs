@@ -108,6 +108,107 @@ pub struct SimOptions {
     /// solver backend, this is an execution strategy, not state: both
     /// engines are byte-identical, so forks may switch engines freely.
     pub engine: SimEngine,
+    /// Override the scenario's optimization objective
+    /// ([`crate::config::Objective`]): how the day-ahead solve weighs
+    /// carbon against electricity cost and peak power. `None` keeps the
+    /// config's objective. Unlike the knobs above this *is* scenario
+    /// state — it lands in `cfg.optimizer.objective` (and therefore the
+    /// snapshot and every cache key) — but it rides `SimOptions` so the
+    /// sweep engine can fork one warmup checkpoint into a whole Pareto
+    /// front of objective variants.
+    pub objective: Option<crate::config::Objective>,
+}
+
+impl SimOptions {
+    /// Start a [`SimBuilder`] over the default scenario config.
+    pub fn builder() -> SimBuilder {
+        SimBuilder::default()
+    }
+}
+
+/// Fluent construction of a [`Simulation`] — the supported way to set
+/// engine, threads, faults, fallback policy and objective without poking
+/// `Simulation` fields after the fact. `Simulation::new` /
+/// `with_options` remain as thin wrappers over the same path.
+///
+/// ```no_run
+/// use cics::config::ScenarioConfig;
+/// use cics::coordinator::Simulation;
+///
+/// let sim = Simulation::builder(ScenarioConfig::default())
+///     .threads(4)
+///     .shaping(false)
+///     .build();
+/// # let _ = sim;
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct SimBuilder {
+    cfg: ScenarioConfig,
+    opts: SimOptions,
+}
+
+impl SimBuilder {
+    /// Replace the scenario config (the builder starts from
+    /// `ScenarioConfig::default()`).
+    pub fn config(mut self, cfg: ScenarioConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Force a solver backend (see [`SimOptions::backend`]).
+    pub fn backend(mut self, backend: SolverBackend) -> Self {
+        self.opts.backend = Some(backend);
+        self
+    }
+
+    /// Worker threads for the per-cluster fan-outs.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.opts.threads = Some(n);
+        self
+    }
+
+    /// Per-tick simulation core.
+    pub fn engine(mut self, engine: SimEngine) -> Self {
+        self.opts.engine = engine;
+        self
+    }
+
+    /// Master shaping switch (`false` = warmup/control run).
+    pub fn shaping(mut self, enabled: bool) -> Self {
+        self.opts.shaping_disabled = !enabled;
+        self
+    }
+
+    /// Enable the spatial-shifting extension with this movable fraction.
+    pub fn spatial_movable_fraction(mut self, movable: f64) -> Self {
+        self.opts.spatial_movable_fraction = Some(movable);
+        self
+    }
+
+    /// Fault-injection schedule (replaces `cfg.faults` wholesale).
+    pub fn faults(mut self, faults: crate::faults::FaultConfig) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    /// Degradation-ladder fallback policy (keeps the rest of the fault
+    /// config as configured).
+    pub fn fallback_policy(mut self, policy: crate::faults::FallbackPolicy) -> Self {
+        self.cfg.faults.policy = policy;
+        self
+    }
+
+    /// Multi-objective weights for the day-ahead solve.
+    pub fn objective(mut self, objective: crate::config::Objective) -> Self {
+        self.opts.objective = Some(objective);
+        self
+    }
+
+    /// Build the simulation (same construction path as
+    /// [`Simulation::with_options`]).
+    pub fn build(self) -> Simulation {
+        Simulation::with_options(self.cfg, self.opts)
+    }
 }
 
 /// Days of full telemetry kept for training windows.
@@ -179,7 +280,10 @@ impl SimSnapshot {
     ///     archive, per-cluster open-outage markers and closed
     ///     recovery-episode counters; `FaultConfig` itself grew
     ///     hour-granular / correlation / policy / log-cap knobs.
-    pub const STATE_VERSION: u32 = 4;
+    /// v5: multi-objective cost accounting appended — `OptimizerConfig`
+    ///     carries an `Objective`, `ClusterDayRecord` the hourly spot
+    ///     prices, and `DaySummary` the day's electricity spend.
+    pub const STATE_VERSION: u32 = 5;
 
     /// The day boundary this snapshot was taken at (warmup length, for
     /// snapshots taken by the sweep's warmup phase).
@@ -353,10 +457,18 @@ impl Simulation {
         Simulation::with_options(cfg, SimOptions::default())
     }
 
+    /// Start a [`SimBuilder`] over `cfg` — the fluent construction path.
+    pub fn builder(cfg: ScenarioConfig) -> SimBuilder {
+        SimOptions::builder().config(cfg)
+    }
+
     /// Build a simulation headlessly with explicit [`SimOptions`] — the
     /// constructor the sweep engine, tests and benches use to pin the
     /// backend and thread budget without any CLI plumbing.
-    pub fn with_options(cfg: ScenarioConfig, opts: SimOptions) -> Simulation {
+    pub fn with_options(mut cfg: ScenarioConfig, opts: SimOptions) -> Simulation {
+        if let Some(o) = opts.objective {
+            cfg.optimizer.objective = o;
+        }
         let fleet = Fleet::build(&cfg);
         let zones = fleet
             .campuses
@@ -479,7 +591,10 @@ impl Simulation {
     /// artifact directory: the snapshot's config may come from a
     /// representative cell that never asked for the artifact, while the
     /// fork does.
-    pub fn resume(snap: SimSnapshot, opts: SimOptions) -> Simulation {
+    pub fn resume(mut snap: SimSnapshot, opts: SimOptions) -> Simulation {
+        if let Some(o) = opts.objective {
+            snap.cfg.optimizer.objective = o;
+        }
         let runtime = match opts.backend {
             Some(SolverBackend::Native) | Some(SolverBackend::GreedyBaseline) => None,
             Some(SolverBackend::Artifact) => Runtime::load_default(&snap.cfg.artifact_dir),
@@ -654,11 +769,16 @@ impl Simulation {
         // chain — recomputing it per cluster dominated the serial phase)
         let carbon_truth: Vec<[f64; HOURS_PER_DAY]> =
             self.zones.iter().map(|z| z.intensity_day(day)).collect();
+        // spot-price truth alongside it: the day-ahead auction cleared
+        // before delivery, so the planning prices are the settled prices
+        let price_truth: Vec<[f64; HOURS_PER_DAY]> =
+            self.zones.iter().map(|z| crate::grid::price::price_day(z, day)).collect();
         let mut recs = Vec::with_capacity(results.len());
         for (mut rec, outcome) in results {
             let cid = rec.cluster_id;
             let campus = self.fleet.clusters[cid].campus_id;
             rec.carbon_hourly = carbon_truth[campus];
+            rec.price_hourly = price_truth[campus];
             // forecaster bookkeeping (APEs realized against yesterday's
             // prediction for today)
             if let Some(apes) = self.forecasters[cid].observe_day(&rec) {
@@ -726,6 +846,18 @@ impl Simulation {
             .iter()
             .map(|z| self.carbon_fc.day_ahead(z, next).hourly)
             .collect();
+
+        // Multi-objective solves blend day-ahead spot prices into the
+        // hourly signal at problem assembly. The default (pure-carbon)
+        // objective fetches no prices and takes none of the blend
+        // branches below — its planning path is byte-identical to the
+        // pre-multi-objective coordinator.
+        let objective = self.cfg.optimizer.objective;
+        let prices: Vec<[f64; HOURS_PER_DAY]> = if objective.is_default() {
+            Vec::new()
+        } else {
+            self.zones.iter().map(|z| crate::grid::price::price_day(z, next)).collect()
+        };
 
         // Which clusters can possibly shape tomorrow? (master switch,
         // rollout wave, SLO pause, forecaster maturity, treatment gate)
@@ -1021,10 +1153,21 @@ impl Simulation {
                     continue;
                 }
             };
+            // The shared `carbon` curves stay untouched (the spatial pass
+            // and fallback paths read them): non-default objectives blend
+            // a per-cluster signal here, at the problem boundary.
+            let blended;
+            let (eta, lambda_p) = if objective.is_default() {
+                (&carbon[cluster.campus_id], self.cfg.optimizer.lambda_p)
+            } else {
+                blended =
+                    optimizer::blend_signal(&objective, &carbon[zid], &prices[zid]);
+                (&blended, self.cfg.optimizer.lambda_p * objective.gamma_peak)
+            };
             match optimizer::assemble(
                 cid,
                 &fc,
-                &carbon[cluster.campus_id],
+                eta,
                 tau,
                 cluster_power[cid]
                     .as_ref()
@@ -1032,7 +1175,7 @@ impl Simulation {
                     .to_single_pwl(cluster.capacity_gcu),
                 cluster.power_cap_gcu,
                 cluster.capacity_gcu,
-                self.cfg.optimizer.lambda_p,
+                lambda_p,
                 self.cfg.optimizer.delta_min,
                 self.cfg.optimizer.delta_max,
                 nondeferrable_share,
@@ -1434,6 +1577,7 @@ mod tests {
             shaping_disabled: true,
             spatial_movable_fraction: None,
             engine,
+            objective: None,
         };
         let mut uninterrupted = Simulation::with_options(small_cfg(), opts(2, SimEngine::Event));
         uninterrupted.run_days(8).unwrap();
@@ -1557,6 +1701,7 @@ mod tests {
                 shaping_disabled: false,
                 spatial_movable_fraction: None,
                 engine: SimEngine::Legacy,
+                objective: None,
             },
         );
         b.run_days(40).unwrap();
@@ -1720,12 +1865,58 @@ mod tests {
                 shaping_disabled: false,
                 spatial_movable_fraction: None,
                 engine: SimEngine::Legacy,
+                objective: None,
             },
         );
         b.run_days(40).unwrap();
         assert_eq!(a.fallbacks, b.fallbacks);
         assert_eq!(a.today_vccs, b.today_vccs);
         assert_eq!(a.recovery_stats(), b.recovery_stats());
+    }
+
+    #[test]
+    fn builder_constructs_and_objective_rides_options_into_forks() {
+        let sim = Simulation::builder(small_cfg())
+            .backend(SolverBackend::Native)
+            .threads(2)
+            .engine(SimEngine::Event)
+            .shaping(false)
+            .objective(crate::config::Objective::parse("a0.5").unwrap())
+            .build();
+        assert_eq!(sim.backend, SolverBackend::Native);
+        assert_eq!(sim.threads(), 2);
+        assert!(!sim.shaping_enabled);
+        assert!((sim.cfg.optimizer.objective.alpha_carbon - 0.5).abs() < 1e-12);
+        // the fork half: resume applies a different objective over the
+        // snapshot's config, so one warmup serves a whole Pareto front
+        let resumed = Simulation::resume(
+            sim.snapshot(),
+            SimOptions {
+                objective: Some(crate::config::Objective::parse("cost").unwrap()),
+                ..SimOptions::default()
+            },
+        );
+        assert_eq!(resumed.cfg.optimizer.objective.alpha_carbon, 0.0);
+        // and None keeps whatever the snapshot carried
+        let kept = Simulation::resume(sim.snapshot(), SimOptions::default());
+        assert!((kept.cfg.optimizer.objective.alpha_carbon - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_weights_steer_the_day_ahead_plan() {
+        let mut carbon_only = Simulation::new(small_cfg());
+        carbon_only.run_days(30).unwrap();
+        let mut cost_only = Simulation::builder(small_cfg())
+            .objective(crate::config::Objective::parse("cost").unwrap())
+            .build();
+        cost_only.run_days(30).unwrap();
+        // shaping is live by day 30 and price and carbon curves have
+        // different diurnal shapes, so the plans must diverge
+        assert!(carbon_only.unshaped_fraction() < 1.0);
+        assert_ne!(carbon_only.today_vccs, cost_only.today_vccs);
+        // spend is accounted either way (truth prices land in summaries)
+        let agg = carbon_only.metrics.window_aggregate(0..30);
+        assert!(agg.cost_usd > 0.0);
     }
 
     #[test]

@@ -36,6 +36,8 @@ pub struct DaySummary {
     /// for the default taxonomy). A one-day [`ClassAggregate`]; window
     /// aggregation just [`ClassAggregate::accumulate`]s these.
     pub class_stats: Vec<ClassAggregate>,
+    /// Electricity spend for the day (USD) — hourly power × spot price.
+    pub daily_cost_usd: f64,
 }
 
 /// Fleetwide metrics store: summaries plus forecast bookkeeping.
@@ -108,6 +110,7 @@ impl FleetMetrics {
             jobs_paused: out.jobs_paused,
             mean_start_delay_ticks: out.mean_start_delay_ticks,
             class_stats,
+            daily_cost_usd: rec.daily_cost_usd(),
         };
         self.per_cluster[rec.cluster_id].push(s);
     }
@@ -167,6 +170,7 @@ impl FleetMetrics {
                 }
                 agg.flex_done_gcuh += s.flex_done_gcuh;
                 agg.flex_submitted_gcuh += s.flex_submitted_gcuh;
+                agg.cost_usd += s.daily_cost_usd;
                 if agg.classes.len() < s.class_stats.len() {
                     agg.classes.resize(s.class_stats.len(), ClassAggregate::default());
                 }
@@ -218,6 +222,8 @@ pub struct WindowAggregate {
     /// Flexible work completed / submitted over the window (GCU-h).
     pub flex_done_gcuh: f64,
     pub flex_submitted_gcuh: f64,
+    /// Total fleet electricity spend over the window (USD).
+    pub cost_usd: f64,
     /// Shaped cluster-days vs all cluster-days in the window.
     pub shaped_cluster_days: usize,
     pub cluster_days: usize,
@@ -370,6 +376,9 @@ mod binio_impls {
             w.put_usize(self.jobs_paused);
             w.put_f64(self.mean_start_delay_ticks);
             self.class_stats.write(w);
+            // appended in STATE_VERSION 5 — new fields go at the end so
+            // the frozen prefix above never moves
+            w.put_f64(self.daily_cost_usd);
         }
 
         fn read(r: &mut BinReader) -> Result<DaySummary> {
@@ -392,6 +401,7 @@ mod binio_impls {
                 jobs_paused: r.usize_()?,
                 mean_start_delay_ticks: r.f64()?,
                 class_stats: Vec::read(r)?,
+                daily_cost_usd: r.f64()?,
             })
         }
     }
@@ -450,6 +460,7 @@ mod tests {
                 rec.record_tick(c, 1, t, 1000.0, 500.0, 1200.0, 600.0);
             }
             rec.carbon_hourly = [0.4; crate::timebase::HOURS_PER_DAY];
+            rec.price_hourly = [0.05; crate::timebase::HOURS_PER_DAY];
             rec.flex_done_gcuh = 100.0;
             rec.flex_submitted_gcuh = 110.0;
             rec.shaped = day >= 2;
@@ -462,6 +473,10 @@ mod tests {
         assert!(agg.carbon_kg > 0.0);
         assert!(agg.mean_daily_peak_kw > 0.0);
         assert!((agg.flex_completion() - 100.0 / 110.0).abs() < 1e-9);
+        assert!(agg.cost_usd > 0.0);
+        // cost aggregation mirrors carbon: 3 window days of identical spend
+        let one_day = m.all(0)[0].daily_cost_usd;
+        assert!((agg.cost_usd - 3.0 * one_day).abs() < 1e-9);
         assert!((agg.shaped_fraction() - 2.0 / 3.0).abs() < 1e-9);
         assert_eq!(m.fleet_peak_kw(5), None);
         assert!(m.fleet_peak_kw(0).unwrap() > 0.0);

@@ -39,9 +39,8 @@ pub fn run_controlled(
     measure: usize,
 ) -> Result<ExperimentResult> {
     let seed = cfg.seed;
-    let mut sim = Simulation::new(cfg);
     // Warmup: shaping disabled so the forecasters mature on natural load.
-    sim.shaping_enabled = false;
+    let mut sim = Simulation::builder(cfg).shaping(false).build();
     sim.run_days(warmup)?;
     // Measurement: randomized treatment per (cluster, day).
     sim.shaping_enabled = true;

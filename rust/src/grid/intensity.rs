@@ -241,6 +241,17 @@ impl GridZone {
     pub fn is_series_backed(&self) -> bool {
         self.series.is_some() || self.profile.is_some()
     }
+
+    /// Scenario seed the zone's keyed draws are rooted at (read-only; the
+    /// price layer keys its own streams off the same identity).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Zone id (= campus id) for keyed draws, read-only like [`Self::seed`].
+    pub fn zone_id(&self) -> u64 {
+        self.zone_id
+    }
 }
 
 // ---- binary serialization (util::binio, snapshot cache) ----------------

@@ -5,11 +5,13 @@
 pub mod forecast;
 pub mod generation;
 pub mod intensity;
+pub mod price;
 pub mod trace;
 
 pub use forecast::{CarbonForecast, CarbonForecaster};
 pub use generation::{Source, WeatherDay, WeatherProcess};
 pub use intensity::GridZone;
+pub use price::PriceProfile;
 pub use trace::{SyntheticProfile, TraceSeries};
 
 use crate::config::{CampusConfig, GridSource};

@@ -20,6 +20,7 @@ use cics::coordinator::{SimOptions, Simulation};
 use cics::experiment;
 use cics::report;
 use cics::scheduler::SimEngine;
+use cics::sweep::AxisSpec;
 use cics::timebase::HOURS_PER_DAY;
 use cics::util::error::Result;
 
@@ -149,11 +150,12 @@ fn drain_warnings(verbose: bool) {
 
 /// `--engine legacy|event` (default: the event engine). Both engines are
 /// byte-identical; legacy exists for A/B timing and equivalence pinning.
+/// Parsed through the unified [`AxisSpec`] grammar so the rejection
+/// message matches every other axis flag.
 fn parse_engine(args: &Args) -> Result<SimEngine> {
     match args.get("engine") {
         None => Ok(SimEngine::default()),
-        Some(s) => SimEngine::parse(s)
-            .ok_or_else(|| cics::err!("--engine: expected legacy|event, got {s:?}")),
+        Some(s) => cics::sweep::EngineAxis::parse(s).map_err(|e| e.context("--engine")),
     }
 }
 
@@ -372,6 +374,32 @@ fn parse_list<T>(flag: &str, raw: &str, parse: impl Fn(&str) -> Option<T>) -> Re
         .collect()
 }
 
+/// Split one sweep-axis flag value into axis entries. Every axis shares
+/// the unified `;`-separated grammar; `colon_binds_spec` marks the axes
+/// whose specs embed ':' (fault rates, policy knobs, objective ranges),
+/// where a ';'-less ':'-carrying value is ONE spec; and every axis keeps
+/// its legacy comma-list spelling for values without either.
+fn axis_entries(raw: &str, colon_binds_spec: bool) -> Vec<String> {
+    if raw.contains(';') {
+        raw.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
+    } else if colon_binds_spec && raw.contains(':') {
+        vec![raw.trim().to_string()]
+    } else {
+        raw.split(',').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
+    }
+}
+
+/// Validate a sweep axis's entries through its [`AxisSpec`], surfacing
+/// the uniform "unknown value … for axis …, expected one of …" error at
+/// flag-parse time instead of mid-expansion.
+fn checked_axis<A: AxisSpec>(flag: &str, entries: Vec<String>) -> Result<Vec<String>> {
+    cics::ensure!(!entries.is_empty(), "--{flag}: no axis values given");
+    for e in &entries {
+        A::parse(e).map(|_| ()).map_err(|err| err.context(format!("--{flag}")))?;
+    }
+    Ok(entries)
+}
+
 /// Open the persistent cross-run snapshot cache when requested:
 /// `--cache` enables it (as does configuring it via `--cache-dir DIR` or
 /// `--cache-budget-mb N` — a cache setting implies wanting the cache),
@@ -430,8 +458,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // must fail loudly, not silently fall back to the default
         m.seed = s.parse().map_err(|_| cics::err!("--seed: cannot parse {s:?}"))?;
     }
+    // Every axis flag goes through its AxisSpec: same list grammar, same
+    // "unknown value … for axis …" rejection, validated here instead of
+    // mid-expansion.
     if let Some(s) = args.get("grids") {
-        m.grids = parse_list("grids", s, |x| Some(x.to_string()))?;
+        m.grids = checked_axis::<cics::sweep::GridAxis>("grids", axis_entries(s, false))?;
     }
     if let Some(s) = args.get("fleets") {
         m.fleet_sizes = parse_list("fleets", s, |x| x.parse().ok())?;
@@ -440,10 +471,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         m.flex_shares = parse_list("flex", s, |x| x.parse().ok())?;
     }
     if let Some(s) = args.get("classes") {
-        m.flex_classes = parse_list("classes", s, |x| Some(x.to_string()))?;
+        m.flex_classes =
+            checked_axis::<cics::sweep::ClassesAxis>("classes", axis_entries(s, false))?;
     }
     if let Some(s) = args.get("solvers") {
-        m.solvers = parse_list("solvers", s, |x| Some(x.to_string()))?;
+        m.solvers = checked_axis::<cics::sweep::SolverAxis>("solvers", axis_entries(s, false))?;
     }
     if let Some(s) = args.get("spatial") {
         m.spatial = parse_list("spatial", s, |x| match x {
@@ -457,31 +489,32 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // `FaultConfig::parse` syntax), so axis entries are separated by ';'
     // when any spec carries rates: `--faults none;chaos` sweeps a clean
     // and a chaotic variant. A value with neither ';' nor ':' is a plain
-    // preset list, comma-separated like every other axis. Specs are
-    // validated at matrix expansion.
+    // preset list, comma-separated like every other axis.
     if let Some(s) = args.get("faults") {
-        m.faults = if s.contains(';') {
-            s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
-        } else if s.contains(':') {
-            vec![s.trim().to_string()]
-        } else {
-            parse_list("faults", s, |x| Some(x.to_string()))?
-        };
-        cics::ensure!(!m.faults.is_empty(), "--faults: no fault specs given");
+        m.faults = checked_axis::<cics::sweep::FaultAxis>("faults", axis_entries(s, true))?;
     }
     // Fallback-policy axis, same ';' vs ',' convention as --faults: one
     // spec may carry comma-joined knobs (`aggressive,stale:6` is ONE
     // spec), so ';' separates axis entries whenever a spec carries knobs;
     // a value with neither ';' nor ':' is a plain name list.
     if let Some(s) = args.get("fault-policy") {
-        m.policies = if s.contains(';') {
-            s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
-        } else if s.contains(':') {
-            vec![s.trim().to_string()]
-        } else {
-            parse_list("fault-policy", s, |x| Some(x.to_string()))?
-        };
-        cics::ensure!(!m.policies.is_empty(), "--fault-policy: no policy specs given");
+        m.policies =
+            checked_axis::<cics::sweep::PolicyAxis>("fault-policy", axis_entries(s, true))?;
+    }
+    // Objective axis, same convention again (`a0..1:5` range specs embed
+    // ':'). Ranges expand here into canonical single specs, so one flag
+    // value can fan a whole Pareto front out of one warmup: every
+    // weighting of a physical scenario shares its seed and checkpoint.
+    if let Some(s) = args.get("objectives") {
+        let mut specs = Vec::new();
+        for e in axis_entries(s, true) {
+            specs.extend(
+                cics::config::Objective::expand_spec(&e)
+                    .map_err(|err| err.context("--objectives"))?,
+            );
+        }
+        cics::ensure!(!specs.is_empty(), "--objectives: no axis values given");
+        m.objectives = specs;
     }
     m.warmup_days = args.usize("warmup", m.warmup_days);
     m.validate()?;
@@ -497,7 +530,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     println!(
         "cics sweep: {} cells ({} grids x {} fleets x {} flex x {} classes x {} faults x \
-         {} policies x {} solvers x {} spatial), {} warmup + {} measured days, \
+         {} policies x {} objectives x {} solvers x {} spatial), {} warmup + {} measured days, \
          {} worker threads, {} engine{}",
         m.n_cells(),
         m.grids.len(),
@@ -506,6 +539,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         m.flex_classes.len(),
         m.faults.len(),
         m.policies.len(),
+        m.objectives.len(),
         m.solvers.len(),
         m.spatial.len(),
         m.warmup_days,
@@ -562,6 +596,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         m.flex_classes = vec!["within-day".into(), "mixed".into()];
         m.solvers = vec!["native".into(), "greedy".into()];
         m.spatial = vec![false, true];
+        // One mixed weighting next to the pure-carbon default keeps the
+        // blended-signal solve path perf-tracked (and the Pareto pairing
+        // exercised) without blowing up the CI matrix.
+        m.objectives = vec!["carbon".into(), "a0.5".into()];
         m.warmup_days = 24;
     }
     if let Some(s) = args.get("classes") {
@@ -806,6 +844,11 @@ fn main() {
                  \u{20}      (fallback-policy axis — conservative|sla-aware|aggressive plus\n\
                  \u{20}      stale:N / retries:N knobs; same ';' vs ',' rule as --faults;\n\
                  \u{20}      simulate takes the same flag as a single spec)\n\
+                 \u{20}      [--objectives carbon,cost | --objectives a0..1:5]\n\
+                 \u{20}      (objective axis — carbon (default) | cost | a<alpha in [0,1]>\n\
+                 \u{20}      blending alpha*carbon + (1-alpha)*price, or an a<lo>..<hi>:<n>\n\
+                 \u{20}      range fanning a Pareto front from one shared warmup; same\n\
+                 \u{20}      ';' vs ',' rule as --faults)\n\
                  \u{20}      [--verbose]   (list each buffered warning at end of run)\n\
                  grids:  archetype presets (FR|CA|DE|PL), real hourly traces\n\
                  \u{20}      (trace:SE..ZA — see data/carbon_intensity/) or calibrated\n\

@@ -9,4 +9,4 @@ pub mod campus;
 pub mod pgd;
 pub mod problem;
 
-pub use problem::{assemble, ClusterProblem, ClusterSolution, Unshapeable};
+pub use problem::{assemble, blend_signal, ClusterProblem, ClusterSolution, Unshapeable};

@@ -7,9 +7,46 @@
 //! by the rust-native solver, by the baselines and (after f32 flattening)
 //! by the AOT JAX artifact.
 
+use crate::config::Objective;
 use crate::forecast::DayAheadForecast;
 use crate::power::{PwlModel, K_SEGMENTS};
 use crate::timebase::HOURS_PER_DAY;
+
+/// Blend the day-ahead carbon and price curves into the single hourly
+/// cost signal the solvers minimize, per the [`Objective`] weights.
+///
+/// Each curve is first normalized to its daily mean so the weights are
+/// unitless: `alpha_carbon` and `beta_cost` trade *relative* diurnal
+/// shape, not kg-vs-dollar magnitudes. The blend is linear, so the
+/// solvers consume it through the existing `eta` slot untouched —
+/// [`pgd`](crate::optimizer::pgd) stays a projected gradient over a
+/// per-hour linear energy term, and the greedy baseline still just sorts
+/// hours by the signal. A degenerate all-zero curve normalizes by 1.0
+/// instead of its mean, keeping the output finite.
+///
+/// The default objective never reaches this function: the coordinator
+/// passes the raw carbon forecast straight through (byte-for-byte the
+/// pre-multi-objective behavior).
+pub fn blend_signal(
+    obj: &Objective,
+    carbon: &[f64; HOURS_PER_DAY],
+    price: &[f64; HOURS_PER_DAY],
+) -> [f64; HOURS_PER_DAY] {
+    let mean = |s: &[f64; HOURS_PER_DAY]| {
+        let m = s.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+        if m.abs() > 1e-12 {
+            m
+        } else {
+            1.0
+        }
+    };
+    let (cm, pm) = (mean(carbon), mean(price));
+    let mut out = [0.0; HOURS_PER_DAY];
+    for h in 0..HOURS_PER_DAY {
+        out[h] = obj.alpha_carbon * carbon[h] / cm + obj.beta_cost * price[h] / pm;
+    }
+    out
+}
 
 /// One cluster's slice of the fleetwide day-ahead problem.
 #[derive(Clone, Debug)]
@@ -345,6 +382,34 @@ mod tests {
         assert!((obj - manual).abs() < 1e-9);
         // flat eta + flat usage: power flat, peak == each hour's power
         assert!((sol.peak_kw - sol.power_kw[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blend_signal_mixes_normalized_shapes() {
+        let mut carbon = [0.4; HOURS_PER_DAY];
+        carbon[12] = 0.1; // clean noon
+        let mut price = [0.060; HOURS_PER_DAY];
+        price[19] = 0.120; // evening ramp
+        let pure_carbon = blend_signal(&Objective::parse("carbon").unwrap(), &carbon, &price);
+        let pure_cost = blend_signal(&Objective::parse("cost").unwrap(), &carbon, &price);
+        let mid = blend_signal(&Objective::parse("a0.5").unwrap(), &carbon, &price);
+        let cm = carbon.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+        let pm = price.iter().sum::<f64>() / HOURS_PER_DAY as f64;
+        for h in 0..HOURS_PER_DAY {
+            assert!((pure_carbon[h] - carbon[h] / cm).abs() < 1e-12);
+            assert!((pure_cost[h] - price[h] / pm).abs() < 1e-12);
+            // the blend is linear in alpha
+            assert!((mid[h] - 0.5 * (pure_carbon[h] + pure_cost[h])).abs() < 1e-12);
+        }
+        // normalization makes both signals unit-mean, so the preferred
+        // hours flip with the weights: carbon loves the clean noon, cost
+        // avoids the expensive evening
+        assert!(pure_carbon[12] < pure_carbon[0]);
+        assert!((pure_cost[12] - pure_cost[0]).abs() < 1e-12);
+        assert!(pure_cost[19] > pure_cost[0]);
+        // degenerate all-zero curves stay finite
+        let z = blend_signal(&Objective::parse("a0.5").unwrap(), &[0.0; HOURS_PER_DAY], &price);
+        assert!(z.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -241,7 +241,7 @@ fn parse_result_file(name: &str) -> Option<(u64, usize, usize)> {
 /// either — a `CellReport` encoding change, or any simulation-semantics
 /// change that bumps the snapshot version — turns every stored measured
 /// window into a clean decode failure, i.e. a re-simulated cell.
-const RESULT_VERSION: u32 = (1 << 16) | SimSnapshot::STATE_VERSION;
+const RESULT_VERSION: u32 = (2 << 16) | SimSnapshot::STATE_VERSION;
 
 /// Canonical key bytes of a measured-window result: the cell's *full*
 /// config encoding — NOT the warmup-normalized one; `use_artifact`
@@ -736,18 +736,21 @@ fn evict_lru(dir: &Path, g: &mut Inner, keep: &str) -> bool {
     }
 }
 
-/// Canonical warmup scenario config: normalize away the one config bit
-/// that varies across solver variants of the same physical scenario
-/// (`use_artifact` is set per solver by matrix expansion) but cannot
-/// influence a warmup — warmups force the native backend, and every fork
-/// resumes with an explicit backend. Hashing and storing the normalized
-/// config is what makes one cache entry serve every variant, whichever
-/// cell happens to be the group's representative; `sweep` applies the
-/// same normalization on its uncached path so snapshots are
+/// Canonical warmup scenario config: normalize away the config bits
+/// that vary across solver/objective variants of the same physical
+/// scenario (`use_artifact` is set per solver, `objective` per
+/// weighting, by matrix expansion) but cannot influence a warmup —
+/// warmups force the native backend with shaping disabled, so neither
+/// knob is ever consulted, and every fork resumes with its own explicit
+/// backend and objective. Hashing and storing the normalized config is
+/// what makes one cache entry serve every variant, whichever cell
+/// happens to be the group's representative; `sweep` applies the same
+/// normalization on its uncached path so snapshots are
 /// representative-independent either way.
 pub(crate) fn warmup_cfg(cfg: &ScenarioConfig) -> ScenarioConfig {
     let mut cfg = cfg.clone();
     cfg.optimizer.use_artifact = false;
+    cfg.optimizer.objective = crate::config::Objective::default();
     cfg
 }
 
@@ -764,6 +767,7 @@ pub(crate) fn warmup_options(inner_threads: usize, engine: SimEngine) -> SimOpti
         shaping_disabled: true,
         spatial_movable_fraction: None,
         engine,
+        objective: None,
     }
 }
 
@@ -1039,6 +1043,10 @@ mod tests {
             forecast_mape: None,
             faults: "none".into(),
             fallback: None,
+            objective: "carbon".into(),
+            cost_baseline_usd: 80.0,
+            cost_shaped_usd: 80.0,
+            cost_delta_pct: 0.0,
         }
     }
 

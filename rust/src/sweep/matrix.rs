@@ -9,14 +9,301 @@
 
 use crate::config::classes::DEFAULT_PRESET;
 use crate::config::{
-    CampusConfig, FlexClasses, GridArchetype, GridSource, ScenarioConfig, SweepMatrix,
+    CampusConfig, FlexClasses, GridArchetype, GridSource, Objective, ScenarioConfig, SweepMatrix,
 };
 use crate::faults::{FaultConfig, PolicySpec, DEFAULT_POLICY_SPEC};
-use crate::util::error::Result;
+use crate::scheduler::SimEngine;
+use crate::util::error::{Error, Result};
 use crate::util::rng::splitmix64;
 
 /// The inert fault-axis value (no injection, no label tag, no seed fold).
 const NO_FAULTS: &str = "none";
+
+/// One sweep axis behind the unified CLI grammar. Every axis flag
+/// (`--grids`, `--classes`, `--faults`, `--fault-policy`, `--engine`,
+/// `--objectives`) shares the same `;`-separated list syntax, the same
+/// "unknown value …" rejection shape, and the same three obligations:
+///
+/// - [`parse`](AxisSpec::parse) validates one spec token into the axis's
+///   value type, accepting every legacy spelling;
+/// - [`canonical_label`](AxisSpec::canonical_label) is the spelling cell
+///   labels and reports print — reparsing it is the identity;
+/// - [`fold_seed`](AxisSpec::fold_seed) is the value's contribution to
+///   the physical cell seed. Variant axes (solver, engine, objectives)
+///   and every physical axis's byte-pinned default leave the hash
+///   untouched, so legacy sweeps keep their exact seeds — and their
+///   report bytes.
+pub trait AxisSpec {
+    /// Parsed value for one spec token.
+    type Value;
+    /// Axis name as the CLI spells it (quoted by the uniform error).
+    const AXIS: &'static str;
+    /// Accepted values, quoted by the uniform error.
+    const EXPECTED: &'static str;
+
+    fn parse(spec: &str) -> Result<Self::Value>;
+    fn canonical_label(value: &Self::Value) -> String;
+
+    /// Fold the value into the physical seed hash. Default: variant
+    /// axis, hash untouched.
+    fn fold_seed(_value: &Self::Value, h: u64) -> u64 {
+        h
+    }
+
+    /// The uniform rejection every axis shares.
+    fn unknown(spec: &str) -> Error {
+        crate::err!(
+            "unknown value {spec:?} for axis {}, expected one of {}",
+            Self::AXIS,
+            Self::EXPECTED
+        )
+    }
+
+    /// Parse a `;`-separated CLI list under the shared axis-list grammar:
+    /// items trimmed, empty items dropped (so a trailing `;` is
+    /// harmless), an all-empty list rejected.
+    fn parse_list(raw: &str) -> Result<Vec<Self::Value>> {
+        let specs: Vec<&str> = raw.split(';').map(str::trim).filter(|s| !s.is_empty()).collect();
+        if specs.is_empty() {
+            return Err(Self::unknown(raw));
+        }
+        specs.into_iter().map(Self::parse).collect()
+    }
+}
+
+/// Fold a string's bytes into a seed hash (the shared per-axis step).
+fn fold_bytes(h: u64, s: &str) -> u64 {
+    s.bytes().fold(h, |a, b| splitmix64(a ^ b as u64))
+}
+
+/// Label tag an axis value contributes to a cell label: empty for the
+/// axis's byte-pinned default (legacy labels keep their exact bytes),
+/// `"{label} "` otherwise.
+fn axis_tag<A: AxisSpec>(value: &A::Value, default_label: &str) -> String {
+    let label = A::canonical_label(value);
+    if label == default_label {
+        String::new()
+    } else {
+        format!("{label} ")
+    }
+}
+
+/// `--grids`: region/archetype codes plus the `trace:` / `synthetic:`
+/// series backends. Physical axis.
+pub struct GridAxis;
+
+/// A parsed grid-axis value: the canonical uppercase code (what labels
+/// print and seeds fold) plus the resolved portfolio and source.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub code: String,
+    pub grid: GridArchetype,
+    pub source: GridSource,
+}
+
+impl AxisSpec for GridAxis {
+    type Value = GridSpec;
+    const AXIS: &'static str = "grids";
+    const EXPECTED: &'static str =
+        "FR, CA, DE, PL, MIX, a raw GridArchetype name, trace:REGION, or synthetic:REGION";
+
+    fn parse(spec: &str) -> Result<GridSpec> {
+        let (grid, source) = grid_source_preset(spec).ok_or_else(|| Self::unknown(spec))?;
+        // Resolve trace regions / synthetic profiles eagerly so a typo'd
+        // region fails the whole sweep up front, not mid-run.
+        match &source {
+            GridSource::Dispatch => {}
+            GridSource::Trace(region) => {
+                crate::grid::trace::embedded(region)
+                    .map(|_| ())
+                    .map_err(|e| e.context(format!("axis grids, value {spec:?}")))?;
+            }
+            GridSource::Synthetic(profile) => {
+                crate::grid::trace::SyntheticProfile::calibrated(profile)
+                    .map(|_| ())
+                    .map_err(|e| e.context(format!("axis grids, value {spec:?}")))?;
+            }
+        }
+        Ok(GridSpec { code: spec.to_ascii_uppercase(), grid, source })
+    }
+
+    fn canonical_label(v: &GridSpec) -> String {
+        v.code.clone()
+    }
+
+    fn fold_seed(v: &GridSpec, h: u64) -> u64 {
+        fold_bytes(h, &v.code)
+    }
+}
+
+/// `--classes`: workload-class taxonomy presets. Physical axis; the
+/// default preset folds nothing.
+pub struct ClassesAxis;
+
+/// A parsed class-preset value: canonical lowercase name + the taxonomy.
+#[derive(Clone, Debug)]
+pub struct ClassesSpec {
+    pub name: String,
+    pub classes: FlexClasses,
+}
+
+impl AxisSpec for ClassesAxis {
+    type Value = ClassesSpec;
+    const AXIS: &'static str = "classes";
+    const EXPECTED: &'static str = "within-day, tight-6h, multi-day-3d, mixed";
+
+    fn parse(spec: &str) -> Result<ClassesSpec> {
+        let name = spec.trim().to_ascii_lowercase();
+        let classes = FlexClasses::preset(&name).ok_or_else(|| Self::unknown(spec))?;
+        Ok(ClassesSpec { name, classes })
+    }
+
+    fn canonical_label(v: &ClassesSpec) -> String {
+        v.name.clone()
+    }
+
+    fn fold_seed(v: &ClassesSpec, h: u64) -> u64 {
+        if v.name == DEFAULT_PRESET {
+            h
+        } else {
+            fold_bytes(h, &v.name)
+        }
+    }
+}
+
+/// `--faults`: fault-injection specs. Physical axis; the inert `none`
+/// folds nothing. Salted so a fault spec can never collide with a class
+/// preset of the same spelling.
+pub struct FaultAxis;
+
+/// A parsed fault-axis value: canonical lowercase spec + the config.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub spec: String,
+    pub cfg: FaultConfig,
+}
+
+impl AxisSpec for FaultAxis {
+    type Value = FaultSpec;
+    const AXIS: &'static str = "faults";
+    const EXPECTED: &'static str =
+        "none, chaos, incident, or a comma list of kind:rate (e.g. feed-outage:0.1)";
+
+    fn parse(spec: &str) -> Result<FaultSpec> {
+        let canon = spec.trim().to_ascii_lowercase();
+        let cfg = FaultConfig::parse(&canon)
+            .map_err(|e| e.context(format!("unknown value {spec:?} for axis faults")))?;
+        Ok(FaultSpec { spec: canon, cfg })
+    }
+
+    fn canonical_label(v: &FaultSpec) -> String {
+        v.spec.clone()
+    }
+
+    fn fold_seed(v: &FaultSpec, h: u64) -> u64 {
+        if v.spec == NO_FAULTS {
+            h
+        } else {
+            fold_bytes(splitmix64(h ^ 0xFA17), &v.spec)
+        }
+    }
+}
+
+/// `--fault-policy`: degradation-ladder fallback policies. Physical
+/// axis; the default `conservative` folds nothing. Own salt, disjoint
+/// from the fault axis.
+pub struct PolicyAxis;
+
+/// A parsed policy-axis value: canonical lowercase spec + the policy.
+#[derive(Clone, Debug)]
+pub struct PolicyValue {
+    pub spec: String,
+    pub policy: PolicySpec,
+}
+
+impl AxisSpec for PolicyAxis {
+    type Value = PolicyValue;
+    const AXIS: &'static str = "fault-policy";
+    const EXPECTED: &'static str =
+        "conservative, sla-aware, aggressive (each with optional ,stale:N / ,retries:N)";
+
+    fn parse(spec: &str) -> Result<PolicyValue> {
+        let canon = spec.trim().to_ascii_lowercase();
+        let policy = PolicySpec::parse(&canon)
+            .map_err(|e| e.context(format!("unknown value {spec:?} for axis fault-policy")))?;
+        Ok(PolicyValue { spec: canon, policy })
+    }
+
+    fn canonical_label(v: &PolicyValue) -> String {
+        v.spec.clone()
+    }
+
+    fn fold_seed(v: &PolicyValue, h: u64) -> u64 {
+        if v.spec == DEFAULT_POLICY_SPEC {
+            h
+        } else {
+            fold_bytes(splitmix64(h ^ 0x7011C7), &v.spec)
+        }
+    }
+}
+
+/// `--solvers`: solver backend per cell. Variant axis (policy, not
+/// physics): never folds into the seed.
+pub struct SolverAxis;
+
+impl AxisSpec for SolverAxis {
+    type Value = SolverChoice;
+    const AXIS: &'static str = "solvers";
+    const EXPECTED: &'static str = "native (pgd), greedy, artifact (pjrt)";
+
+    fn parse(spec: &str) -> Result<SolverChoice> {
+        SolverChoice::parse(spec).ok_or_else(|| Self::unknown(spec))
+    }
+
+    fn canonical_label(v: &SolverChoice) -> String {
+        v.name().to_string()
+    }
+}
+
+/// `--engine`: the per-tick simulation core. Variant axis — both engines
+/// are byte-identical by contract, so it never folds into the seed.
+pub struct EngineAxis;
+
+impl AxisSpec for EngineAxis {
+    type Value = SimEngine;
+    const AXIS: &'static str = "engine";
+    const EXPECTED: &'static str = "legacy, event";
+
+    fn parse(spec: &str) -> Result<SimEngine> {
+        SimEngine::parse(spec.trim()).ok_or_else(|| Self::unknown(spec))
+    }
+
+    fn canonical_label(v: &SimEngine) -> String {
+        v.name().to_string()
+    }
+}
+
+/// `--objectives`: multi-objective weights for the day-ahead solve.
+/// Variant axis — every objective variant of a physical scenario
+/// simulates the same world and forks from the same warmup, so it never
+/// folds into the seed. Range specs (`a0..1:5`) are expanded to single
+/// specs before they reach this parser (see [`Objective::expand_spec`]).
+pub struct ObjectiveAxis;
+
+impl AxisSpec for ObjectiveAxis {
+    type Value = Objective;
+    const AXIS: &'static str = "objectives";
+    const EXPECTED: &'static str = "carbon, cost, a<alpha in [0,1]>, or a<lo>..<hi>:<n>";
+
+    fn parse(spec: &str) -> Result<Objective> {
+        // Objective::parse already emits this axis's uniform error.
+        Objective::parse(spec)
+    }
+
+    fn canonical_label(v: &Objective) -> String {
+        v.label()
+    }
+}
 
 /// Solver backend choice for one cell.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +391,9 @@ pub struct SweepCell {
     /// Fallback-policy spec of the cell (canonical lowercase form;
     /// `"conservative"` for the byte-pinned default ladder).
     pub policy: String,
+    /// Objective label of the cell (canonical form of
+    /// [`Objective::label`]; `"carbon"` for the byte-pinned default).
+    pub objective: String,
     pub solver: SolverChoice,
     pub spatial: bool,
     /// Per-cell seed, derived from the *physical* scenario axes only
@@ -117,168 +407,139 @@ pub struct SweepCell {
 
 /// Derive a well-separated seed from the base seed and the physical
 /// scenario key (exact flex bits — no decimal rounding, no collisions).
-/// The class preset and the fault spec are physical axes too (they
-/// change the simulated world), but their defaults (`within-day`,
-/// `none`) contribute nothing to the hash, so pre-existing sweeps keep
-/// their seeds — and their report bytes.
+/// Each physical axis contributes through its [`AxisSpec::fold_seed`];
+/// the class/fault/policy defaults (`within-day`, `none`,
+/// `conservative`) contribute nothing, so pre-existing sweeps keep
+/// their seeds — and their report bytes. Variant axes (solver, spatial,
+/// engine, objectives) never reach this function.
 fn cell_seed(
     base: u64,
-    grid_code: &str,
+    grid: &GridSpec,
     fleet_size: usize,
     flex_share: f64,
-    classes: &str,
-    faults: &str,
-    policy: &str,
+    classes: &ClassesSpec,
+    faults: &FaultSpec,
+    policy: &PolicyValue,
 ) -> u64 {
-    let mut h = grid_code
-        .to_ascii_uppercase()
-        .bytes()
-        .fold(0xC1C5u64, |a, b| splitmix64(a ^ b as u64));
+    let mut h = GridAxis::fold_seed(grid, 0xC1C5);
     h = splitmix64(h ^ fleet_size as u64);
     h = splitmix64(h ^ flex_share.to_bits());
-    if classes != DEFAULT_PRESET {
-        h = classes.bytes().fold(h, |a, b| splitmix64(a ^ b as u64));
-    }
-    if faults != NO_FAULTS {
-        h = faults.bytes().fold(splitmix64(h ^ 0xFA17), |a, b| splitmix64(a ^ b as u64));
-    }
-    if policy != DEFAULT_POLICY_SPEC {
-        h = policy.bytes().fold(splitmix64(h ^ 0x7011C7), |a, b| splitmix64(a ^ b as u64));
-    }
+    h = ClassesAxis::fold_seed(classes, h);
+    h = FaultAxis::fold_seed(faults, h);
+    h = PolicyAxis::fold_seed(policy, h);
     splitmix64(base ^ h)
 }
 
 /// Expand the matrix into cells (cartesian product, fixed axis order:
 /// grids, fleet sizes, flex shares, class presets, fault specs, fallback
-/// policies, solvers, spatial — solvers and spatial innermost, so the
-/// policy variants of a physical scenario stay contiguous and share one
-/// warmup fork group).
+/// policies, objectives, solvers, spatial — the variant axes innermost,
+/// so all policy/objective variants of a physical scenario stay
+/// contiguous and share one warmup fork group).
 pub fn expand(matrix: &SweepMatrix) -> Result<Vec<SweepCell>> {
     matrix.validate()?;
+    // Parse every axis up front through its AxisSpec, so a bad value
+    // anywhere fails the whole sweep before any cell runs.
+    let grids: Vec<GridSpec> =
+        matrix.grids.iter().map(|s| GridAxis::parse(s)).collect::<Result<_>>()?;
+    let class_presets: Vec<ClassesSpec> =
+        matrix.flex_classes.iter().map(|s| ClassesAxis::parse(s)).collect::<Result<_>>()?;
+    let fault_specs: Vec<FaultSpec> =
+        matrix.faults.iter().map(|s| FaultAxis::parse(s)).collect::<Result<_>>()?;
+    let policy_specs: Vec<PolicyValue> =
+        matrix.policies.iter().map(|s| PolicyAxis::parse(s)).collect::<Result<_>>()?;
+    let objectives: Vec<Objective> =
+        matrix.objectives.iter().map(|s| ObjectiveAxis::parse(s)).collect::<Result<_>>()?;
+    let solvers: Vec<SolverChoice> =
+        matrix.solvers.iter().map(|s| SolverAxis::parse(s)).collect::<Result<_>>()?;
     let mut cells = Vec::with_capacity(matrix.n_cells());
-    for grid_code in &matrix.grids {
-        let (grid, grid_source) = grid_source_preset(grid_code)
-            .ok_or_else(|| crate::err!("unknown grid preset {grid_code:?}"))?;
-        // Resolve trace regions / synthetic profiles once per grid code so
-        // a typo'd region fails the whole sweep up front, not mid-run.
-        match &grid_source {
-            GridSource::Dispatch => {}
-            GridSource::Trace(region) => {
-                crate::grid::trace::embedded(region)
-                    .map(|_| ())
-                    .map_err(|e| e.context(format!("grid {grid_code:?}")))?;
-            }
-            GridSource::Synthetic(profile) => {
-                crate::grid::trace::SyntheticProfile::calibrated(profile)
-                    .map(|_| ())
-                    .map_err(|e| e.context(format!("grid {grid_code:?}")))?;
-            }
-        }
+    for g in &grids {
         for &fleet_size in &matrix.fleet_sizes {
             for &flex_share in &matrix.flex_shares {
-                for classes_code in &matrix.flex_classes {
-                    let classes_code = classes_code.to_ascii_lowercase();
-                    let flex_classes = FlexClasses::preset(&classes_code).ok_or_else(|| {
-                        crate::err!("unknown flex_classes preset {classes_code:?}")
-                    })?;
-                    // The default preset stays invisible in labels (and
-                    // in seeds), so pre-taxonomy sweep reports keep
+                for cp in &class_presets {
+                    // Each axis's default stays invisible in labels (and
+                    // in seeds), so pre-existing sweep reports keep
                     // their exact bytes.
-                    let class_tag = if classes_code == DEFAULT_PRESET {
-                        String::new()
-                    } else {
-                        format!("{classes_code} ")
-                    };
-                    for faults_spec in &matrix.faults {
-                        let faults_spec = faults_spec.trim().to_ascii_lowercase();
-                        let fault_cfg = FaultConfig::parse(&faults_spec)?;
-                        // Like the class preset, the inert default stays
-                        // invisible in labels and seeds, so fault-free
-                        // sweeps keep their exact bytes.
-                        let fault_tag = if faults_spec == NO_FAULTS {
-                            String::new()
-                        } else {
-                            format!("{faults_spec} ")
-                        };
-                        for policy_spec in &matrix.policies {
-                            let policy_spec = policy_spec.trim().to_ascii_lowercase();
-                            let policy = PolicySpec::parse(&policy_spec)?;
-                            let mut policy_faults = fault_cfg.clone();
-                            policy.apply(&mut policy_faults);
-                            // Like the fault spec, the default policy stays
-                            // invisible in labels and seeds, so pre-policy
-                            // sweeps keep their exact bytes.
-                            let policy_tag = if policy_spec == DEFAULT_POLICY_SPEC {
-                                String::new()
-                            } else {
-                                format!("{policy_spec} ")
-                            };
-                            for solver_name in &matrix.solvers {
-                                let solver = SolverChoice::parse(solver_name).ok_or_else(
-                                    || crate::err!("unknown solver {solver_name:?}"),
-                                )?;
-                                for &spatial in &matrix.spatial {
-                                    let label = format!(
-                                        "{} f{} x{} {}{}{}{} sp-{}",
-                                        grid_code.to_ascii_uppercase(),
-                                        fleet_size,
-                                        flex_share,
-                                        class_tag,
-                                        fault_tag,
-                                        policy_tag,
-                                        solver.name(),
-                                        if spatial { "on" } else { "off" }
-                                    );
-                                    let seed = cell_seed(
-                                        matrix.seed,
-                                        grid_code,
-                                        fleet_size,
-                                        flex_share,
-                                        &classes_code,
-                                        &faults_spec,
-                                        &policy_spec,
-                                    );
-                                    let mut cfg = ScenarioConfig {
-                                        seed,
-                                        campuses: vec![CampusConfig {
-                                            name: format!(
-                                                "sweep-{}",
-                                                grid_code.to_ascii_lowercase()
-                                            ),
-                                            grid,
-                                            grid_source: grid_source.clone(),
-                                            clusters: fleet_size,
-                                            contract_limit_kw: f64::INFINITY,
-                                            // flex_share of clusters are archetype X
-                                            // (large flexible share); the rest are Z.
-                                            archetype_mix: (flex_share, 0.0, 1.0 - flex_share),
-                                        }],
-                                        flex_classes: flex_classes.clone(),
-                                        faults: policy_faults.clone(),
-                                        ..ScenarioConfig::default()
-                                    };
-                                    // Sweeps run many scenarios: trimmed solver
-                                    // budget (quality plateaus well before 400
-                                    // iterations — see the optimizer_hotpath
-                                    // ablation) and no artifact probing unless
-                                    // the cell asks for it.
-                                    cfg.optimizer.iters = 200;
-                                    cfg.optimizer.use_artifact =
-                                        solver == SolverChoice::Artifact;
-                                    cells.push(SweepCell {
-                                        index: cells.len(),
-                                        label,
-                                        grid_code: grid_code.to_ascii_uppercase(),
-                                        fleet_size,
-                                        flex_share,
-                                        classes: classes_code.clone(),
-                                        faults: faults_spec.clone(),
-                                        policy: policy_spec.clone(),
-                                        solver,
-                                        spatial,
-                                        seed,
-                                        cfg,
-                                    });
+                    let class_tag = axis_tag::<ClassesAxis>(cp, DEFAULT_PRESET);
+                    for fs in &fault_specs {
+                        let fault_tag = axis_tag::<FaultAxis>(fs, NO_FAULTS);
+                        for ps in &policy_specs {
+                            let mut policy_faults = fs.cfg.clone();
+                            ps.policy.apply(&mut policy_faults);
+                            let policy_tag = axis_tag::<PolicyAxis>(ps, DEFAULT_POLICY_SPEC);
+                            let seed = cell_seed(
+                                matrix.seed,
+                                g,
+                                fleet_size,
+                                flex_share,
+                                cp,
+                                fs,
+                                ps,
+                            );
+                            for objective in &objectives {
+                                let objective_tag =
+                                    axis_tag::<ObjectiveAxis>(objective, "carbon");
+                                for &solver in &solvers {
+                                    for &spatial in &matrix.spatial {
+                                        let label = format!(
+                                            "{} f{} x{} {}{}{}{}{} sp-{}",
+                                            g.code,
+                                            fleet_size,
+                                            flex_share,
+                                            class_tag,
+                                            fault_tag,
+                                            policy_tag,
+                                            objective_tag,
+                                            solver.name(),
+                                            if spatial { "on" } else { "off" }
+                                        );
+                                        let mut cfg = ScenarioConfig {
+                                            seed,
+                                            campuses: vec![CampusConfig {
+                                                name: format!(
+                                                    "sweep-{}",
+                                                    g.code.to_ascii_lowercase()
+                                                ),
+                                                grid: g.grid,
+                                                grid_source: g.source.clone(),
+                                                clusters: fleet_size,
+                                                contract_limit_kw: f64::INFINITY,
+                                                // flex_share of clusters are archetype X
+                                                // (large flexible share); the rest are Z.
+                                                archetype_mix: (
+                                                    flex_share,
+                                                    0.0,
+                                                    1.0 - flex_share,
+                                                ),
+                                            }],
+                                            flex_classes: cp.classes.clone(),
+                                            faults: policy_faults.clone(),
+                                            ..ScenarioConfig::default()
+                                        };
+                                        // Sweeps run many scenarios: trimmed solver
+                                        // budget (quality plateaus well before 400
+                                        // iterations — see the optimizer_hotpath
+                                        // ablation) and no artifact probing unless
+                                        // the cell asks for it.
+                                        cfg.optimizer.iters = 200;
+                                        cfg.optimizer.use_artifact =
+                                            solver == SolverChoice::Artifact;
+                                        cfg.optimizer.objective = *objective;
+                                        cells.push(SweepCell {
+                                            index: cells.len(),
+                                            label,
+                                            grid_code: g.code.clone(),
+                                            fleet_size,
+                                            flex_share,
+                                            classes: cp.name.clone(),
+                                            faults: fs.spec.clone(),
+                                            policy: ps.spec.clone(),
+                                            objective: objective.label(),
+                                            solver,
+                                            spatial,
+                                            seed,
+                                            cfg,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -456,6 +717,107 @@ mod tests {
         let mut bad = SweepMatrix::default();
         bad.policies = vec!["heroic".into()];
         assert!(expand(&bad).is_err());
+    }
+
+    #[test]
+    fn objectives_are_a_variant_axis() {
+        let mut m = SweepMatrix::default();
+        m.grids = vec!["PL".into()];
+        m.solvers = vec!["native".into()];
+        m.spatial = vec![false];
+        m.objectives = vec!["carbon".into(), "a0.5".into(), "cost".into()];
+        let cells = expand(&m).unwrap();
+        assert_eq!(cells.len(), 3);
+        // the default objective keeps the pre-objective label shape
+        assert_eq!(cells[0].objective, "carbon");
+        assert_eq!(cells[0].label, "PL f4 x0.5 native sp-off");
+        assert!(cells[0].cfg.optimizer.objective.is_default());
+        // non-default objectives are tagged but simulate the SAME world:
+        // all three cells share one physical seed (and one warmup fork)
+        assert_eq!(cells[1].label, "PL f4 x0.5 a0.5 native sp-off");
+        assert_eq!(cells[1].cfg.optimizer.objective.alpha_carbon, 0.5);
+        assert_eq!(cells[1].cfg.optimizer.objective.beta_cost, 0.5);
+        assert_eq!(cells[2].label, "PL f4 x0.5 cost native sp-off");
+        assert_eq!(cells[2].cfg.optimizer.objective.alpha_carbon, 0.0);
+        assert_eq!(cells[2].cfg.optimizer.objective.beta_cost, 1.0);
+        assert_eq!(cells[0].seed, cells[1].seed);
+        assert_eq!(cells[0].seed, cells[2].seed);
+        assert_eq!(cells[0].cfg.seed, cells[2].cfg.seed);
+        for c in &cells {
+            c.cfg.validate().unwrap();
+        }
+        // bad weights fail loudly with the uniform axis error
+        let mut bad = SweepMatrix::default();
+        bad.objectives = vec!["a1.5".into()];
+        let err = expand(&bad).unwrap_err().to_string();
+        assert!(err.contains("axis objectives"), "{err}");
+    }
+
+    #[test]
+    fn axis_labels_reparse_to_themselves() {
+        // canonical_label -> parse -> canonical_label is the identity on
+        // every axis (the round-trip contract of the unified grammar)
+        for spec in ["PL", "fr", "trace:DE", "synthetic:CA", "MIX"] {
+            let v = GridAxis::parse(spec).unwrap();
+            let label = GridAxis::canonical_label(&v);
+            let re = GridAxis::parse(&label).unwrap();
+            assert_eq!(GridAxis::canonical_label(&re), label);
+        }
+        for spec in ["within-day", "Tight-6H", "mixed"] {
+            let v = ClassesAxis::parse(spec).unwrap();
+            let label = ClassesAxis::canonical_label(&v);
+            assert_eq!(
+                ClassesAxis::canonical_label(&ClassesAxis::parse(&label).unwrap()),
+                label
+            );
+        }
+        for spec in ["none", "chaos", "Feed-Outage:0.1"] {
+            let v = FaultAxis::parse(spec).unwrap();
+            let label = FaultAxis::canonical_label(&v);
+            assert_eq!(FaultAxis::canonical_label(&FaultAxis::parse(&label).unwrap()), label);
+        }
+        for spec in ["conservative", "SLA-Aware", "aggressive,stale:6"] {
+            let v = PolicyAxis::parse(spec).unwrap();
+            let label = PolicyAxis::canonical_label(&v);
+            assert_eq!(
+                PolicyAxis::canonical_label(&PolicyAxis::parse(&label).unwrap()),
+                label
+            );
+        }
+        for spec in ["native", "pgd", "greedy", "artifact", "pjrt"] {
+            let v = SolverAxis::parse(spec).unwrap();
+            let label = SolverAxis::canonical_label(&v);
+            assert_eq!(
+                SolverAxis::canonical_label(&SolverAxis::parse(&label).unwrap()),
+                label
+            );
+        }
+        for spec in ["legacy", "event"] {
+            let v = EngineAxis::parse(spec).unwrap();
+            assert_eq!(EngineAxis::canonical_label(&v), spec);
+        }
+        for spec in ["carbon", "cost", "a0.5", "a1", "a0"] {
+            let v = ObjectiveAxis::parse(spec).unwrap();
+            let label = ObjectiveAxis::canonical_label(&v);
+            assert_eq!(
+                ObjectiveAxis::canonical_label(&ObjectiveAxis::parse(&label).unwrap()),
+                label
+            );
+        }
+    }
+
+    #[test]
+    fn parse_list_shares_the_axis_grammar() {
+        let grids = GridAxis::parse_list("PL; fr ;trace:DE;").unwrap();
+        assert_eq!(grids.len(), 3);
+        assert_eq!(grids[0].code, "PL");
+        assert_eq!(grids[1].code, "FR");
+        assert_eq!(grids[2].code, "TRACE:DE");
+        // all-empty lists and unknown values reject with the uniform error
+        assert!(GridAxis::parse_list(" ; ;").is_err());
+        let err = SolverAxis::parse_list("native;quantum").unwrap_err().to_string();
+        assert!(err.contains("unknown value \"quantum\" for axis solvers"), "{err}");
+        assert!(err.contains("expected one of"), "{err}");
     }
 
     #[test]

@@ -48,7 +48,11 @@ pub mod matrix;
 pub mod report;
 
 pub use cache::{CacheStats, SnapshotCache};
-pub use matrix::{expand, grid_preset, SolverChoice, SweepCell};
+pub use matrix::{
+    expand, grid_preset, AxisSpec, ClassesAxis, ClassesSpec, EngineAxis, FaultAxis, FaultSpec,
+    GridAxis, GridSpec, ObjectiveAxis, PolicyAxis, PolicyValue, SolverAxis, SolverChoice,
+    SweepCell,
+};
 pub use report::{CellReport, FallbackCellReport, RecoveryReport, SweepReport};
 
 use crate::config::SweepMatrix;
@@ -321,12 +325,20 @@ struct PlanGroup {
 
 /// Variant fingerprint for result-cache keying: the execution knobs a
 /// fork unit applies through [`SimOptions`] rather than through the
-/// cell's config (solver backend, spatial shifting). Everything else
-/// that can change a measured window already lives in the config hash;
-/// engines and sharing modes are byte-equivalent by contract and so
-/// belong in neither.
+/// cell's config (solver backend, spatial shifting, and the cell's
+/// objective — warmups are objective-normalized, so the objective rides
+/// the fork options and must be keyed here or a re-weighted sweep would
+/// replay stale cells). Everything else that can change a measured
+/// window already lives in the config hash; engines and sharing modes
+/// are byte-equivalent by contract and so belong in neither. The
+/// default (pure-carbon) objective keeps the pre-objective fingerprint
+/// bytes, so existing caches stay warm.
 fn cell_fingerprint(cell: &SweepCell) -> String {
-    format!("{}+sp{}", cell.solver.name(), cell.spatial)
+    if cell.objective == "carbon" {
+        format!("{}+sp{}", cell.solver.name(), cell.spatial)
+    } else {
+        format!("{}+sp{}+{}", cell.solver.name(), cell.spatial, cell.objective)
+    }
 }
 
 /// Group cells by physical seed, preserving expansion order.
@@ -397,7 +409,9 @@ struct ShapedOutcome {
 
 /// Resume a warmup checkpoint as one fork unit and simulate the measured
 /// window. `cell: None` continues unshaped (the shared baseline); `Some`
-/// applies the variant's solver backend and spatial setting.
+/// applies the variant's solver backend, spatial setting, and objective
+/// (warmup snapshots are objective-normalized so every weighting forks
+/// from the same checkpoint — the cell's objective re-enters here).
 fn run_fork_unit(
     snap: SimSnapshot,
     cell: Option<&SweepCell>,
@@ -413,6 +427,7 @@ fn run_fork_unit(
             shaping_disabled: true,
             spatial_movable_fraction: None,
             engine,
+            objective: None,
         },
         Some(cell) => SimOptions {
             backend: Some(match cell.solver {
@@ -424,6 +439,8 @@ fn run_fork_unit(
             shaping_disabled: false,
             spatial_movable_fraction: cell.spatial.then_some(SPATIAL_MOVABLE_FRACTION),
             engine,
+            objective: (!cell.cfg.optimizer.objective.is_default())
+                .then_some(cell.cfg.optimizer.objective),
         },
     };
     let mut sim = Simulation::resume(snap, opts);
@@ -581,6 +598,16 @@ fn make_report(
         forecast_mape,
         faults: cell.faults.clone(),
         fallback,
+        objective: cell.objective.clone(),
+        cost_baseline_usd: b.cost_usd,
+        cost_shaped_usd: s.agg.cost_usd,
+        // positive = shaping raised the electricity bill (the price the
+        // objective trades carbon savings against)
+        cost_delta_pct: if b.cost_usd.abs() > 1e-9 {
+            100.0 * (s.agg.cost_usd - b.cost_usd) / b.cost_usd
+        } else {
+            0.0
+        },
     }
 }
 
@@ -882,5 +909,63 @@ mod tests {
     #[test]
     fn rejects_zero_days() {
         assert!(run_sweep(&SweepMatrix::default(), 0, 4).is_err());
+    }
+
+    /// The multi-objective contract end to end: spelling out the default
+    /// objective is a byte no-op, the alpha=1 endpoint of an objective
+    /// sweep equals the carbon-only cell exactly, every objective variant
+    /// forks from the shared physical warmup, and the report grows a
+    /// Pareto front only when a non-carbon cell exists.
+    #[test]
+    fn objective_sweep_pins_carbon_endpoint_and_emits_pareto_front() {
+        let base = SweepMatrix {
+            grids: vec!["PL".into()],
+            fleet_sizes: vec![2],
+            flex_shares: vec![1.0],
+            solvers: vec!["native".into()],
+            spatial: vec![false],
+            warmup_days: 24,
+            ..SweepMatrix::default()
+        };
+        let plain = run_sweep(&base, 3, 2).unwrap();
+        let plain_json = plain.to_json().to_string();
+        // the default axis spelled out explicitly changes nothing
+        let mut explicit = base.clone();
+        explicit.objectives = vec!["carbon".into()];
+        assert_eq!(
+            plain_json,
+            run_sweep(&explicit, 3, 2).unwrap().to_json().to_string(),
+            "explicit carbon objective must be a byte no-op"
+        );
+        assert!(!plain_json.contains("\"pareto\""));
+        assert!(!plain_json.contains("\"objective\""));
+        assert!(!plain.ascii_table().contains("pareto front"));
+
+        let mut multi = base.clone();
+        multi.objectives = vec!["carbon".into(), "a0.5".into(), "cost".into()];
+        let rep = run_sweep(&multi, 3, 2).unwrap();
+        assert_eq!(rep.cells.len(), 3);
+
+        // alpha=1 endpoint: the same row the carbon-only sweep produced
+        let carbon = &rep.cells[0];
+        assert_eq!(carbon.objective, "carbon");
+        assert_eq!(carbon.label, "PL f2 x1 native sp-off");
+        let mut pinned = plain.cells[0].clone();
+        pinned.index = carbon.index;
+        assert_eq!(*carbon, pinned, "alpha=1 cell diverged from the carbon-only cell");
+
+        // objective variants share the physical scenario: one seed, one
+        // baseline, one warmup checkpoint
+        assert!(rep.cells.iter().all(|c| c.seed == carbon.seed));
+        assert!(rep.cells.iter().all(|c| c.carbon_baseline_kg == carbon.carbon_baseline_kg));
+        let cost = &rep.cells[2];
+        assert_eq!(cost.objective, "cost");
+        assert!(cost.label.contains("cost"), "label {}", cost.label);
+        assert!(cost.cost_baseline_usd > 0.0);
+
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"pareto\""));
+        assert!(json.contains("\"cost_delta_pct\""));
+        assert!(rep.ascii_table().contains("pareto front"));
     }
 }

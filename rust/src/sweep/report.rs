@@ -54,6 +54,18 @@ pub struct CellReport {
     /// Degradation-ladder telemetry; `None` for zero-fault cells with a
     /// clean run (same byte-compatibility rule as `classes`).
     pub fallback: Option<FallbackCellReport>,
+    /// Objective label of the cell (`"carbon"` for the byte-pinned
+    /// pure-carbon default — those cells emit exactly the pre-objective
+    /// document, byte for byte).
+    pub objective: String,
+    /// Fleet electricity spend over the window (USD), unshaped baseline
+    /// vs shaped run.
+    pub cost_baseline_usd: f64,
+    pub cost_shaped_usd: f64,
+    /// 100 * (shaped - baseline) / baseline — positive when shaping
+    /// raised the electricity bill (the price the objective trades
+    /// carbon savings against).
+    pub cost_delta_pct: f64,
 }
 
 /// Degradation-ladder columns of one cell (see `crate::faults`).
@@ -231,7 +243,85 @@ impl CellReport {
         if let Some(fb) = &self.fallback {
             fields.push(("fallback", fb.to_json()));
         }
+        // And only weighted-objective cells carry the objective/cost keys
+        // — pure-carbon cells serialize to the exact pre-objective bytes.
+        if self.objective != "carbon" {
+            fields.push(("objective", Json::Str(self.objective.clone())));
+            fields.push(("cost_baseline_usd", Json::Num(round(self.cost_baseline_usd, 3))));
+            fields.push(("cost_shaped_usd", Json::Num(round(self.cost_shaped_usd, 3))));
+            fields.push(("cost_delta_pct", Json::Num(round(self.cost_delta_pct, 4))));
+        }
         Json::obj(fields)
+    }
+}
+
+/// One point of a Pareto-front group: a cell's position in the
+/// carbon / cost / peak / deadline trade space, plus whether another
+/// objective variant of the same physical scenario dominates it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Index of the cell this point summarizes.
+    pub index: usize,
+    pub objective: String,
+    pub carbon_saved_pct: f64,
+    /// Positive = shaping raised the bill (lower is better).
+    pub cost_delta_pct: f64,
+    pub peak_shift_pct: f64,
+    /// Flexible-work deadline miss rate (`1 - flex_completion`).
+    pub miss_rate: f64,
+    /// True when some other point of the group is at least as good on
+    /// every metric and strictly better on one — this weighting buys
+    /// nothing the frontier doesn't already offer.
+    pub dominated: bool,
+}
+
+impl ParetoPoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("objective", Json::Str(self.objective.clone())),
+            ("carbon_saved_pct", Json::Num(round(self.carbon_saved_pct, 4))),
+            ("cost_delta_pct", Json::Num(round(self.cost_delta_pct, 4))),
+            ("peak_shift_pct", Json::Num(round(self.peak_shift_pct, 4))),
+            ("miss_rate", Json::Num(round(self.miss_rate, 6))),
+            ("dominated", Json::Bool(self.dominated)),
+        ])
+    }
+
+    /// `self` dominates `other`: at least as good on every metric
+    /// (more carbon saved, cheaper, more peak shaved, fewer misses) and
+    /// strictly better on at least one.
+    fn dominates(&self, other: &ParetoPoint) -> bool {
+        let ge = self.carbon_saved_pct >= other.carbon_saved_pct
+            && self.cost_delta_pct <= other.cost_delta_pct
+            && self.peak_shift_pct >= other.peak_shift_pct
+            && self.miss_rate <= other.miss_rate;
+        let strict = self.carbon_saved_pct > other.carbon_saved_pct
+            || self.cost_delta_pct < other.cost_delta_pct
+            || self.peak_shift_pct > other.peak_shift_pct
+            || self.miss_rate < other.miss_rate;
+        ge && strict
+    }
+}
+
+/// The objective variants of one physical scenario, assembled into a
+/// Pareto front.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoGroup {
+    /// Cell label minus the objective tag — the scenario all points
+    /// share (same grid, fleet, flex share, classes, faults, policy,
+    /// solver, spatial; only the weighting differs).
+    pub scenario: String,
+    /// One point per objective variant, in expansion order.
+    pub points: Vec<ParetoPoint>,
+}
+
+impl ParetoGroup {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("points", Json::Arr(self.points.iter().map(ParetoPoint::to_json).collect())),
+        ])
     }
 }
 
@@ -257,15 +347,63 @@ impl SweepReport {
             .max_by(|a, b| a.carbon_saved_pct.total_cmp(&b.carbon_saved_pct))
     }
 
+    /// Group the report's objective variants into Pareto fronts: cells
+    /// whose labels differ only in the objective tag form one group, and
+    /// every group with at least two weightings becomes a front with
+    /// dominated points flagged. Empty for objective-less sweeps — the
+    /// `pareto` key (and ASCII block) appear only when the matrix swept
+    /// `objectives`, keeping default reports byte-identical.
+    pub fn pareto_groups(&self) -> Vec<ParetoGroup> {
+        if self.cells.iter().all(|c| c.objective == "carbon") {
+            return Vec::new();
+        }
+        let mut groups: Vec<ParetoGroup> = Vec::new();
+        for c in &self.cells {
+            let scenario = if c.objective == "carbon" {
+                c.label.clone()
+            } else {
+                c.label.replace(&format!("{} ", c.objective), "")
+            };
+            let point = ParetoPoint {
+                index: c.index,
+                objective: c.objective.clone(),
+                carbon_saved_pct: c.carbon_saved_pct,
+                cost_delta_pct: c.cost_delta_pct,
+                peak_shift_pct: c.peak_shift_pct,
+                miss_rate: 1.0 - c.flex_completion,
+                dominated: false,
+            };
+            match groups.iter_mut().find(|g| g.scenario == scenario) {
+                Some(g) => g.points.push(point),
+                None => groups.push(ParetoGroup { scenario, points: vec![point] }),
+            }
+        }
+        groups.retain(|g| g.points.len() >= 2);
+        for g in &mut groups {
+            for i in 0..g.points.len() {
+                g.points[i].dominated = (0..g.points.len())
+                    .any(|j| j != i && g.points[j].dominates(&g.points[i]));
+            }
+        }
+        groups
+    }
+
     /// Deterministic JSON document (BTreeMap-backed objects: key order is
     /// sorted; cell order is the expansion order).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str("cics-sweep-v1".into())),
             ("warmup_days", Json::Num(self.warmup_days as f64)),
             ("measure_days", Json::Num(self.measure_days as f64)),
             ("cells", Json::Arr(self.cells.iter().map(CellReport::to_json).collect())),
-        ])
+        ];
+        // Pareto fronts only when the matrix swept objectives — default
+        // reports keep their exact pre-objective bytes.
+        let pareto = self.pareto_groups();
+        if !pareto.is_empty() {
+            fields.push(("pareto", Json::Arr(pareto.iter().map(ParetoGroup::to_json).collect())));
+        }
+        Json::obj(fields)
     }
 
     /// Fixed-width ASCII comparison table, one row per cell.
@@ -391,6 +529,34 @@ impl SweepReport {
                 }
             }
         }
+        // Pareto-front block (only objective-swept reports emit it, so a
+        // pure-carbon report is byte-identical to pre-objective output).
+        // Each scenario's weightings line up as a frontier: dominated
+        // rows — some other weighting is at least as good everywhere —
+        // are flagged, frontier rows starred.
+        let pareto = self.pareto_groups();
+        if !pareto.is_empty() {
+            out.push('\n');
+            out.push_str(&format!(
+                "{:<28} {:>9} {:>9} {:>8} {:>7}  {}\n",
+                "pareto front", "saved%", "dCost%", "peak%", "miss%", "front"
+            ));
+            out.push_str(&format!("{}\n", "-".repeat(95)));
+            for g in &pareto {
+                out.push_str(&format!("{}:\n", g.scenario));
+                for p in &g.points {
+                    out.push_str(&format!(
+                        "  {:<26} {:>8.2}% {:>8.2}% {:>7.2}% {:>6.2}%  {}\n",
+                        p.objective,
+                        p.carbon_saved_pct,
+                        p.cost_delta_pct,
+                        p.peak_shift_pct,
+                        100.0 * p.miss_rate,
+                        if p.dominated { "dominated" } else { "*" },
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -496,6 +662,12 @@ mod binio_impls {
             self.forecast_mape.write(w);
             w.put_str(&self.faults);
             self.fallback.write(w);
+            // appended in RESULT_VERSION 2 — new fields go at the end so
+            // the frozen prefix above never moves
+            w.put_str(&self.objective);
+            w.put_f64(self.cost_baseline_usd);
+            w.put_f64(self.cost_shaped_usd);
+            w.put_f64(self.cost_delta_pct);
         }
         fn read(r: &mut BinReader) -> Result<CellReport> {
             Ok(CellReport {
@@ -521,6 +693,10 @@ mod binio_impls {
                 forecast_mape: Option::read(r)?,
                 faults: r.str_()?,
                 fallback: Option::read(r)?,
+                objective: r.str_()?,
+                cost_baseline_usd: r.f64()?,
+                cost_shaped_usd: r.f64()?,
+                cost_delta_pct: r.f64()?,
             })
         }
     }
@@ -554,6 +730,10 @@ mod tests {
             forecast_mape: None,
             faults: "none".into(),
             fallback: None,
+            objective: "carbon".into(),
+            cost_baseline_usd: 800.0,
+            cost_shaped_usd: 800.0,
+            cost_delta_pct: 0.0,
         }
     }
 
@@ -723,6 +903,82 @@ mod tests {
     }
 
     #[test]
+    fn objective_and_cost_columns_only_appear_for_weighted_cells() {
+        let plain = SweepReport::new(25, 10, vec![toy_cell(0, 1.0)]);
+        let plain_json = plain.to_json().to_string();
+        assert!(!plain_json.contains("\"objective\""));
+        assert!(!plain_json.contains("\"cost_baseline_usd\""));
+        assert!(!plain_json.contains("\"pareto\""));
+        assert!(!plain.ascii_table().contains("pareto front"));
+
+        let mut weighted = toy_cell(1, 2.0);
+        weighted.label = "PL f4 x0.5 a0.5 native sp-off".into();
+        weighted.objective = "a0.5".into();
+        weighted.cost_baseline_usd = 800.0;
+        weighted.cost_shaped_usd = 780.0;
+        weighted.cost_delta_pct = -2.5;
+        let rep = SweepReport::new(25, 10, vec![toy_cell(0, 1.0), weighted]);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"objective\":\"a0.5\""));
+        assert!(json.contains("\"cost_baseline_usd\":800"));
+        assert!(json.contains("\"cost_shaped_usd\":780"));
+        assert!(json.contains("\"cost_delta_pct\":-2.5"));
+        let parsed = Json::parse(&json).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("objective").is_none());
+        assert_eq!(cells[1].str_or("objective", ""), "a0.5");
+        assert_eq!(cells[1].f64_or("cost_delta_pct", 0.0), -2.5);
+    }
+
+    #[test]
+    fn pareto_block_groups_variants_and_flags_dominated_points() {
+        // three weightings of ONE physical scenario: the pure-carbon
+        // default, a strictly-worse-on-everything mid point, and a
+        // cheap-but-dirtier cost point
+        let mut carbon = toy_cell(0, 5.0);
+        carbon.label = "PL f4 x0.5 native sp-off".into();
+        carbon.cost_delta_pct = 3.0;
+        let mut mid = toy_cell(1, 4.0);
+        mid.label = "PL f4 x0.5 a0.5 native sp-off".into();
+        mid.objective = "a0.5".into();
+        mid.cost_delta_pct = 3.5; // saves less AND costs more than carbon
+        let mut cost = toy_cell(2, 1.0);
+        cost.label = "PL f4 x0.5 cost native sp-off".into();
+        cost.objective = "cost".into();
+        cost.cost_delta_pct = -2.0;
+        let rep = SweepReport::new(25, 10, vec![carbon, mid, cost]);
+        let groups = rep.pareto_groups();
+        assert_eq!(groups.len(), 1);
+        let g = &groups[0];
+        assert_eq!(g.scenario, "PL f4 x0.5 native sp-off");
+        assert_eq!(g.points.len(), 3);
+        assert!(!g.points[0].dominated, "carbon endpoint is on the frontier");
+        assert!(g.points[1].dominated, "mid point loses on both axes");
+        assert!(!g.points[2].dominated, "cost endpoint is on the frontier");
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"pareto\""));
+        assert!(json.contains("\"scenario\":\"PL f4 x0.5 native sp-off\""));
+        assert!(json.contains("\"dominated\":true"));
+        let parsed = Json::parse(&json).unwrap();
+        let pareto = parsed.get("pareto").unwrap().as_arr().unwrap();
+        let points = pareto[0].get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[2].str_or("objective", ""), "cost");
+        let table = rep.ascii_table();
+        assert!(table.contains("pareto front"));
+        assert!(table.contains("dominated"));
+        // singleton groups never form a front
+        let lone = SweepReport::new(25, 10, vec![{
+            let mut c = toy_cell(0, 1.0);
+            c.objective = "cost".into();
+            c.label = "PL f4 x0.5 cost native sp-off".into();
+            c
+        }]);
+        assert!(lone.pareto_groups().is_empty());
+        assert!(!lone.to_json().to_string().contains("\"pareto\""));
+    }
+
+    #[test]
     fn rounding_is_exact_on_round_numbers() {
         assert_eq!(round(1.23456789, 4), 1.2346);
         assert_eq!(round(-0.5, 3), -0.5);
@@ -750,6 +1006,10 @@ mod tests {
         }];
         maximal.forecast_mape = Some(12.345);
         maximal.faults = "incident".into();
+        maximal.objective = "a0.25".into();
+        maximal.cost_baseline_usd = 812.5;
+        maximal.cost_shaped_usd = 790.0 + 1.0 / 3.0;
+        maximal.cost_delta_pct = -2.728;
         maximal.fallback = Some(FallbackCellReport {
             fallback_rate: 0.125,
             causes: vec![("feed-outage->patched-curve".into(), 4)],

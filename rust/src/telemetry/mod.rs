@@ -30,6 +30,8 @@ pub struct ClusterDayRecord {
     pub pd_usage: Vec<Vec<f64>>,
     /// Grid average carbon intensity per hour (truth, for accounting).
     pub carbon_hourly: [f64; HOURS_PER_DAY],
+    /// Spot electricity price per hour ($/kWh, truth, for accounting).
+    pub price_hourly: [f64; HOURS_PER_DAY],
     /// Flexible work left queued at end of day (GCU-h) — SLO signal.
     pub flex_backlog_gcuh: f64,
     /// Flexible work completed during the day (GCU-h).
@@ -52,6 +54,7 @@ impl ClusterDayRecord {
             pd_power: vec![vec![0.0; TICKS_PER_DAY]; cluster.pds.len()],
             pd_usage: vec![vec![0.0; TICKS_PER_DAY]; cluster.pds.len()],
             carbon_hourly: [0.0; HOURS_PER_DAY],
+            price_hourly: [0.0; HOURS_PER_DAY],
             flex_backlog_gcuh: 0.0,
             flex_done_gcuh: 0.0,
             flex_submitted_gcuh: 0.0,
@@ -165,6 +168,15 @@ impl ClusterDayRecord {
             .map(|(&p, &ci)| p * ci)
             .sum()
     }
+
+    /// Electricity cost of the day ($): hourly power x spot price.
+    pub fn daily_cost_usd(&self) -> f64 {
+        self.hourly_power()
+            .iter()
+            .zip(self.price_hourly.iter())
+            .map(|(&p, &pr)| p * pr)
+            .sum()
+    }
 }
 
 /// Telemetry store for the whole fleet: `records[cluster][day]`.
@@ -237,6 +249,9 @@ mod binio_impls {
             w.put_f64(self.flex_done_gcuh);
             w.put_f64(self.flex_submitted_gcuh);
             w.put_bool(self.shaped);
+            // appended in STATE_VERSION 5 — new fields go at the end so
+            // the frozen prefix above never moves
+            self.price_hourly.write(w);
         }
 
         fn read(r: &mut BinReader) -> Result<ClusterDayRecord> {
@@ -254,6 +269,7 @@ mod binio_impls {
                 flex_done_gcuh: r.f64()?,
                 flex_submitted_gcuh: r.f64()?,
                 shaped: r.bool_()?,
+                price_hourly: <[f64; HOURS_PER_DAY]>::read(r)?,
             })
         }
     }
@@ -358,5 +374,19 @@ mod tests {
         let kg = rec.daily_carbon_kg();
         let power_sum: f64 = rec.hourly_power().iter().sum();
         assert!((kg - 0.5 * power_sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_accounting_mirrors_carbon() {
+        let (fleet, mut rec) = setup();
+        let c = &fleet.clusters[0];
+        for t in 0..TICKS_PER_DAY {
+            rec.record_tick(c, 1, t, 1000.0, 0.0, 1000.0, 0.0);
+        }
+        assert_eq!(rec.daily_cost_usd(), 0.0, "zeroed prices cost nothing");
+        rec.price_hourly = [0.06; HOURS_PER_DAY];
+        let usd = rec.daily_cost_usd();
+        let power_sum: f64 = rec.hourly_power().iter().sum();
+        assert!((usd - 0.06 * power_sum).abs() < 1e-6);
     }
 }

@@ -1,0 +1,152 @@
+//! The unified axis-spec grammar's contract, for every sweep axis:
+//!
+//! 1. **Golden spellings**: each documented value (including every legacy
+//!    spelling) parses, and lands on its canonical label.
+//! 2. **Round trip**: `parse → canonical_label → parse` is the identity —
+//!    a label printed in a report row or a `--objectives` expansion can
+//!    always be fed back in as a spec.
+//! 3. **Uniform errors**: every axis rejects junk with the same
+//!    `unknown value {spec:?} for axis {name}, expected one of ...` shape.
+//! 4. **No panics**: hostile random input is rejected with `Err`, never a
+//!    panic — and anything that *does* parse still round-trips.
+
+use cics::config::Objective;
+use cics::sweep::{
+    AxisSpec, ClassesAxis, EngineAxis, FaultAxis, GridAxis, ObjectiveAxis, PolicyAxis, SolverAxis,
+};
+use cics::util::prop;
+use cics::util::rng::Pcg;
+
+/// parse → label → parse → label must be the identity from the first
+/// label onward, for any spec the axis accepts.
+fn roundtrip<A: AxisSpec>(spec: &str) -> String {
+    let label = A::canonical_label(&A::parse(spec).unwrap());
+    let again = A::canonical_label(
+        &A::parse(&label).unwrap_or_else(|e| panic!("{}: label {label:?} must reparse: {e}", A::AXIS)),
+    );
+    assert_eq!(label, again, "{}: canonical label is not a fixed point", A::AXIS);
+    label
+}
+
+#[test]
+fn golden_spellings_land_on_canonical_labels() {
+    // grids: presets, raw archetype names, and series-backed sources
+    assert_eq!(roundtrip::<GridAxis>("PL"), "PL");
+    assert_eq!(roundtrip::<GridAxis>("pl"), "PL");
+    assert_eq!(roundtrip::<GridAxis>("fossil_peaker"), "FOSSIL_PEAKER");
+    assert_eq!(roundtrip::<GridAxis>("trace:de"), "TRACE:DE");
+    assert_eq!(roundtrip::<GridAxis>("synthetic:FR"), "SYNTHETIC:FR");
+    // classes: presets are case-insensitive
+    assert_eq!(roundtrip::<ClassesAxis>("within-day"), "within-day");
+    assert_eq!(roundtrip::<ClassesAxis>("Tight-6H"), "tight-6h");
+    assert_eq!(roundtrip::<ClassesAxis>("mixed"), "mixed");
+    // faults: presets and raw kind:rate lists
+    assert_eq!(roundtrip::<FaultAxis>("none"), "none");
+    assert_eq!(roundtrip::<FaultAxis>("chaos"), "chaos");
+    assert_eq!(roundtrip::<FaultAxis>("incident"), "incident");
+    roundtrip::<FaultAxis>("feed-outage:0.1");
+    // fault policies, with and without overrides
+    assert_eq!(roundtrip::<PolicyAxis>("conservative"), "conservative");
+    assert_eq!(roundtrip::<PolicyAxis>("SLA-Aware"), "sla-aware");
+    roundtrip::<PolicyAxis>("aggressive,stale:6");
+    // solvers: legacy aliases collapse onto the canonical names
+    assert_eq!(roundtrip::<SolverAxis>("native"), "native");
+    assert_eq!(roundtrip::<SolverAxis>("pgd"), "native");
+    assert_eq!(roundtrip::<SolverAxis>("greedy"), "greedy");
+    assert_eq!(roundtrip::<SolverAxis>("pjrt"), "artifact");
+    // engines
+    assert_eq!(roundtrip::<EngineAxis>("legacy"), "legacy");
+    assert_eq!(roundtrip::<EngineAxis>("event"), "event");
+    // objectives: named endpoints and alpha blends (a1/a0 canonicalize)
+    assert_eq!(roundtrip::<ObjectiveAxis>("carbon"), "carbon");
+    assert_eq!(roundtrip::<ObjectiveAxis>("cost"), "cost");
+    assert_eq!(roundtrip::<ObjectiveAxis>("a0.5"), "a0.5");
+    assert_eq!(roundtrip::<ObjectiveAxis>("a1"), "carbon");
+    assert_eq!(roundtrip::<ObjectiveAxis>("a0"), "cost");
+}
+
+#[test]
+fn every_axis_rejects_junk_with_the_uniform_error() {
+    // every axis leads with the same `unknown value {spec:?} for axis
+    // {name}` shape, so a typo'd flag always names the axis it hit
+    fn prefix<A: AxisSpec>() -> String {
+        let e = A::parse("definitely-not-a-value").unwrap_err().to_string();
+        assert!(
+            e.contains(&format!("unknown value \"definitely-not-a-value\" for axis {}", A::AXIS)),
+            "{}: {e}",
+            A::AXIS
+        );
+        e
+    }
+    // closed-vocabulary axes also quote their full accepted set...
+    fn check_closed<A: AxisSpec>() {
+        let e = prefix::<A>();
+        assert!(e.contains("expected one of"), "{}: {e}", A::AXIS);
+        assert!(e.contains(A::EXPECTED), "{}: error must quote the accepted values: {e}", A::AXIS);
+    }
+    check_closed::<GridAxis>();
+    check_closed::<ClassesAxis>();
+    check_closed::<SolverAxis>();
+    check_closed::<EngineAxis>();
+    check_closed::<ObjectiveAxis>();
+    // ...while the sub-grammar axes append the sub-parser's detail
+    let e = prefix::<FaultAxis>();
+    assert!(e.contains("faults:"), "fault detail missing: {e}");
+    let e = prefix::<PolicyAxis>();
+    assert!(e.contains("policy"), "policy detail missing: {e}");
+}
+
+#[test]
+fn objective_ranges_expand_to_canonical_specs() {
+    assert_eq!(
+        Objective::expand_spec("a0..1:5").unwrap(),
+        vec!["cost", "a0.25", "a0.5", "a0.75", "carbon"]
+    );
+    assert_eq!(Objective::expand_spec("a0.2..0.8:2").unwrap(), vec!["a0.2", "a0.8"]);
+    // plain specs pass through canonicalized
+    assert_eq!(Objective::expand_spec("a1").unwrap(), vec!["carbon"]);
+    // malformed ranges fail loudly with the range-specific bound message
+    for bad in ["a0.8..0.2:3", "a0..1:1", "a0..2:3", "a..1:3", "a0..1:x"] {
+        let e = Objective::expand_spec(bad).unwrap_err().to_string();
+        assert!(
+            e.contains("objectives"),
+            "{bad:?}: error must name the axis: {e}"
+        );
+    }
+    // every expanded label reparses to itself (the sweep feeds these
+    // straight into the objectives axis)
+    for label in Objective::expand_spec("a0..1:7").unwrap() {
+        assert_eq!(roundtrip::<ObjectiveAxis>(&label), label);
+    }
+}
+
+#[test]
+fn hostile_specs_never_panic_and_accepted_ones_roundtrip() {
+    // random strings over the grammar's own alphabet — digits, separators
+    // and prefix letters — hit the parsers' edge cases far more often
+    // than uniform bytes would
+    const PALETTE: &[u8] = b"acostrbngld0123456789.:,-_ ;eAZ";
+    let gen = |rng: &mut Pcg| {
+        let n = rng.below(12) as usize;
+        (0..n).map(|_| PALETTE[rng.below(PALETTE.len() as u64) as usize] as char).collect::<String>()
+    };
+    fn survives<A: AxisSpec>(spec: &str) -> bool {
+        match A::parse(spec) {
+            Err(_) => true, // rejection is the expected outcome, panics are not
+            Ok(v) => {
+                let label = A::canonical_label(&v);
+                A::parse(&label).map(|w| A::canonical_label(&w) == label).unwrap_or(false)
+            }
+        }
+    }
+    prop::for_all_cases(2026, 512, gen, |s: &String| {
+        survives::<GridAxis>(s)
+            && survives::<ClassesAxis>(s)
+            && survives::<FaultAxis>(s)
+            && survives::<PolicyAxis>(s)
+            && survives::<SolverAxis>(s)
+            && survives::<EngineAxis>(s)
+            && survives::<ObjectiveAxis>(s)
+            && Objective::expand_spec(s).map(|v| !v.is_empty()).unwrap_or(true)
+    });
+}

@@ -25,6 +25,7 @@ fn preset_matrix(grid: &str) -> SweepMatrix {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,

@@ -103,6 +103,7 @@ fn fault_matrix() -> SweepMatrix {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into(), "chaos".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 24,

@@ -78,6 +78,7 @@ fn assert_fork_matches_fresh(
             shaping_disabled: true,
             spatial_movable_fraction: None,
             engine: fork_engine,
+            objective: None,
         },
     );
     fresh.run_days(WARMUP).unwrap();
@@ -96,6 +97,7 @@ fn assert_fork_matches_fresh(
             shaping_disabled: true,
             spatial_movable_fraction: None,
             engine: warmup_engine,
+            objective: None,
         },
     );
     warm.run_days(WARMUP).unwrap();
@@ -107,6 +109,7 @@ fn assert_fork_matches_fresh(
             shaping_disabled: false,
             spatial_movable_fraction: spatial,
             engine: fork_engine,
+            objective: None,
         },
     );
     forked.run_days(MEASURE).unwrap();
@@ -220,6 +223,7 @@ fn serialized_and_incremental_checkpoints_fork_byte_identically() {
         shaping_disabled: true,
         spatial_movable_fraction: None,
         engine: SimEngine::Event,
+        objective: None,
     };
     // one uninterrupted warmup vs (shorter warmup → serialize → resume →
     // delta days → serialize): checkpoint bytes must agree exactly
@@ -245,6 +249,7 @@ fn serialized_and_incremental_checkpoints_fork_byte_identically() {
         shaping_disabled: false,
         spatial_movable_fraction: None,
         engine: SimEngine::Event,
+        objective: None,
     };
     let mut live = Simulation::resume(full.snapshot(), fork_opts.clone());
     let mut thawed =

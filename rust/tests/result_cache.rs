@@ -33,6 +33,7 @@ fn faulty_matrix() -> SweepMatrix {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into(), "chaos".into()],
         policies: vec!["sla-aware".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 6,
@@ -85,6 +86,7 @@ fn editing_one_axis_invalidates_exactly_the_affected_cells() {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 6,
@@ -122,6 +124,7 @@ fn corrupt_result_entry_falls_back_to_simulation_with_identical_bytes() {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into()],
         spatial: vec![false],
         warmup_days: 6,
@@ -157,5 +160,46 @@ fn corrupt_result_entry_falls_back_to_simulation_with_identical_bytes() {
         sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
     assert_eq!(t.cache.cells_replayed, 1);
     assert_eq!(rep.to_json().to_string(), first);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn changing_the_objective_invalidates_exactly_the_reweighted_cell() {
+    let dir = tmp_dir("objective");
+    let mut m = SweepMatrix {
+        seed: 77004,
+        grids: vec!["PL".into()],
+        fleet_sizes: vec![2],
+        flex_shares: vec![1.0],
+        flex_classes: vec!["within-day".into()],
+        faults: vec!["none".into()],
+        policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into(), "a0.5".into()],
+        solvers: vec!["native".into()],
+        spatial: vec![false],
+        warmup_days: 6,
+    };
+    let engine = SimEngine::default();
+    let cache = SnapshotCache::open_default(&dir).unwrap();
+    let (_, t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!((t.cache.cells_replayed, t.cache.cells_simulated), (0, 2));
+
+    // moving alpha re-keys the weighted cell: the untouched carbon cell
+    // replays, the re-weighted cell must simulate — a stale a0.5 result
+    // served for a0.75 would silently falsify the Pareto front
+    m.objectives = vec!["carbon".into(), "a0.75".into()];
+    let uncached = sweep::run_sweep_mode(&m, 2, 2, WarmupSharing::Fork).unwrap().0;
+    let (rep, t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!(t.cache.cells_replayed, 1, "only the untouched carbon cell replays");
+    assert_eq!(t.cache.cells_simulated, 1, "the re-weighted cell must not serve stale bytes");
+    assert_eq!(rep.to_json().to_string(), uncached.to_json().to_string());
+
+    // the original pair is still fully warm under its own keys
+    m.objectives = vec!["carbon".into(), "a0.5".into()];
+    let (_, t) =
+        sweep::run_sweep_cached(&m, 2, 2, WarmupSharing::Fork, engine, Some(&cache)).unwrap();
+    assert_eq!((t.cache.cells_replayed, t.cache.cells_simulated), (2, 0));
     std::fs::remove_dir_all(&dir).unwrap();
 }

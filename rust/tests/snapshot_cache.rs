@@ -48,6 +48,7 @@ fn warmup_opts(engine: SimEngine) -> SimOptions {
         shaping_disabled: true,
         spatial_movable_fraction: None,
         engine,
+        objective: None,
     }
 }
 
@@ -102,6 +103,7 @@ fn resume_from_disk_equals_resume_from_memory() {
         shaping_disabled: false,
         spatial_movable_fraction: None,
         engine: SimEngine::Event,
+        objective: None,
     };
     let mut a = Simulation::resume(snap_mem, opts.clone());
     let mut b = Simulation::resume(snap_disk, opts);
@@ -214,6 +216,7 @@ fn quickish_matrix() -> SweepMatrix {
         flex_classes: vec!["within-day".into(), "mixed".into()],
         faults: vec!["none".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,

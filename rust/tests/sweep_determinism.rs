@@ -19,6 +19,7 @@ fn small_matrix() -> SweepMatrix {
         flex_classes: vec!["within-day".into()],
         faults: vec!["none".into()],
         policies: vec!["conservative".into()],
+        objectives: vec!["carbon".into()],
         solvers: vec!["native".into(), "greedy".into()],
         spatial: vec![false],
         warmup_days: 24,
